@@ -1,0 +1,43 @@
+"""Paper Fig. 10: kernel latency breakdown (GEMM vs attention vs activations).
+
+Uses the tagged FLOP attribution from the HLO parser (attention / mlp / ce /
+other=projections+embeddings) for GPT-J and GPT3-XL in fp32 and fp8, NAR and
+AR modes.  Paper validation: GEMM-class work dominates; normalization /
+activation layers are negligible; the attention share grows at fp8 (its
+fp32 softmax doesn't scale down).
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import ART, cell, write_csv
+
+
+def main():
+    print("== Fig.10: kernel FLOP breakdown (share of per-step FLOPs) ==")
+    rows = []
+    for arch in ("gpt-j", "gpt3-xl"):
+        for mode, shape in (("NAR", "prefill:1024:1"),
+                            ("AR", "decode:1024:1")):
+            for pol in ("fp32", "fp8_e4m3"):
+                rec = cell(arch, shape, mesh="none", policy=pol,
+                           tag=f"breakdown_{mode}_{pol}")
+                if not rec.get("ok"):
+                    continue
+                tags = rec["roofline"]["flops_by_tag"]
+                total = max(sum(tags.values()), 1.0)
+                row = [arch, mode, pol]
+                for t in ("attention", "mlp", "ce", "other"):
+                    row.append(f"{tags.get(t, 0.0) / total * 100:.1f}%")
+                rows.append(row)
+    header = ["arch", "mode", "policy", "attention", "mlp", "ce",
+              "proj/other"]
+    print("  " + " | ".join(f"{h:>12s}" for h in header))
+    for r in rows:
+        print("  " + " | ".join(f"{str(x):>12s}" for x in r))
+    write_csv(os.path.join(ART, "fig10_breakdown.csv"), header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

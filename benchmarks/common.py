@@ -1,0 +1,77 @@
+"""Shared benchmark infrastructure.
+
+Every benchmark variant is one dry-run cell (lower + compile + roofline) run
+in a subprocess with a distinct tag; results are cached as JSON under
+artifacts/bench/.  This container is CPU-only, so throughput numbers are
+ROOFLINE-PROJECTED for TPU v5e (step_time = max of the three terms) — the
+honest stand-in for wall-clock, per EXPERIMENTS.md §Methodology.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+V5E_TDP_W = 170.0          # per-chip board power estimate (public v5e figure)
+
+
+def cell(arch: str, shape: str, *, mesh: str = "none", policy: str = "",
+         tag: str = "baseline", naive: bool = False, reduce: str = "ring",
+         timeout: int = 1200) -> dict:
+    """Run (or fetch cached) one dry-run cell; returns its record."""
+    os.makedirs(ART, exist_ok=True)
+    safe = shape.replace(":", "-")
+    fname = os.path.join(ART, f"{arch}__{safe}__{mesh}__{tag}.json")
+    if os.path.exists(fname):
+        return json.load(open(fname))
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", ART, "--tag", tag,
+           "--reduce", reduce]
+    if policy:
+        cmd += ["--policy", policy]
+    if naive:
+        cmd += ["--naive"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if not os.path.exists(fname):
+        return {"arch": arch, "shape": shape, "mesh": mesh, "tag": tag,
+                "ok": False, "error": (p.stderr or "")[-1500:]}
+    return json.load(open(fname))
+
+
+def step_time(rec: dict) -> float:
+    return rec["roofline"]["step_time_s"]
+
+
+def tokens_per_step(rec: dict) -> float:
+    kind, seq, batch = _shape_parts(rec["shape"])
+    if kind in ("prefill", "train"):
+        return seq * batch
+    return batch                      # decode: one token per sequence
+
+
+def _shape_parts(shape: str):
+    from repro.configs import SHAPES
+    if shape in SHAPES:
+        s = SHAPES[shape]
+        return s.kind, s.seq_len, s.global_batch
+    kind, seq, batch = shape.split(":")
+    return kind, int(seq), int(batch)
+
+
+def throughput(rec: dict) -> float:
+    """tokens/s (roofline-projected)."""
+    return tokens_per_step(rec) / max(step_time(rec), 1e-12)
+
+
+def write_csv(path: str, header: list, rows: list):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    print(f"  -> {path}")

@@ -1,0 +1,47 @@
+"""Paper Table III: per-precision utilization & efficiency (GPT-J, S=1024).
+
+CPU container => no power rail; we report the roofline analogs:
+  FPU util  -> compute_fraction (compute term / binding term)
+  GFLOPS/W  -> useful model FLOPs / step_time / (chips x 170 W v5e TDP)
+Paper validation shape: NAR compute-heavy and rising with precision width;
+AR utilization <10% at every precision (memory-roofline property).
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import ART, V5E_TDP_W, cell, write_csv
+from repro.configs import get_config
+
+
+def main():
+    print("== Table III: precision sweep, GPT-J S=1024 (1 chip) ==")
+    rows = []
+    cfg = get_config("gpt-j")
+    n = cfg.n_active_params() - cfg.padded_vocab * cfg.d_model * 2
+    for mode, shape, useful in (
+            ("NAR", "prefill:1024:1", 2.0 * n * 1024),
+            ("AR", "decode:1024:1", 2.0 * n)):
+        for pol in ("fp32", "bf16", "fp8_serve"):
+            rec = cell(arch="gpt-j", shape=shape, mesh="none", policy=pol,
+                       tag=f"prec_{mode}_{pol}")
+            if not rec.get("ok"):
+                rows.append(["gpt-j", mode, pol, "FAIL", "", ""])
+                continue
+            r = rec["roofline"]
+            st = r["step_time_s"]
+            gflops_w = useful / st / V5E_TDP_W / 1e9
+            rows.append(["gpt-j", mode, pol,
+                         f"{r['compute_fraction']*100:.1f}%",
+                         f"{gflops_w:.1f}", r["bound"]])
+    header = ["arch", "mode", "policy", "mxu_util(analog)", "GFLOPS/W",
+              "bound"]
+    print("  " + " | ".join(f"{h:>16s}" for h in header))
+    for r in rows:
+        print("  " + " | ".join(f"{str(x):>16s}" for x in r))
+    write_csv(os.path.join(ART, "tab3_precision.csv"), header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

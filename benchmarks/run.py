@@ -1,0 +1,53 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig9seq,...]
+
+Each module lowers+compiles real step functions (subprocess-cached under
+artifacts/bench/) and reports TPU-v5e roofline-projected numbers — see
+EXPERIMENTS.md §Methodology for why wall-clock is not measurable here.
+CSV outputs land next to the JSON cells in artifacts/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig7,fig8,fig9seq,fig9chip,fig10,"
+                         "tab3,tab4")
+    args = ap.parse_args(argv)
+    want = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import ablation, breakdown, precision_table, scaling, \
+        seq_scaling, soa_table
+
+    jobs = [
+        ("fig7+fig8", ("fig7", "fig8"), ablation.main),
+        ("fig9-seq", ("fig9seq",), seq_scaling.main),
+        ("fig9-chip", ("fig9chip",), scaling.main),
+        ("fig10", ("fig10",), breakdown.main),
+        ("tab3", ("tab3",), precision_table.main),
+        ("tab4", ("tab4",), soa_table.main),
+    ]
+    failures = 0
+    for name, keys, fn in jobs:
+        if want is not None and not (want & set(keys)):
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name}] done in {time.time()-t0:.0f}s\n")
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"[{name}] FAILED: {e}\n")
+    print("benchmarks complete" + (f" ({failures} FAILED)" if failures
+                                   else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Paper Fig. 9 (right): scaling with compute-unit count.
+
+The paper scales ViT images/s over 1->16 Snitch clusters; the TPU analog
+scales one workload over mesh sizes 1 -> 256 chips (data x model) and checks
+near-linear roofline-projected throughput (close-to-perfect scalability =
+collective term stays subdominant).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import ART, write_csv
+
+# weak scaling grows the DATA axis at fixed tp=4 (the paper replicates
+# clusters over images the same way; the model axis adds per-layer gather
+# wire ∝ tp, so tp is held at its sweet spot — DESIGN.md §4)
+MESHES = [(1, 4), (2, 4), (4, 4), (16, 4), (64, 4)]
+
+
+def scale_cell(arch: str, shape: str, mesh_shape, *, tag: str,
+               timeout: int = 1200) -> dict:
+    os.makedirs(ART, exist_ok=True)
+    fname = os.path.join(
+        ART, f"{arch}__{shape.replace(':', '-')}__scale{mesh_shape[0]}x"
+        f"{mesh_shape[1]}__{tag}.json")
+    if os.path.exists(fname):
+        return json.load(open(fname))
+    n = mesh_shape[0] * mesh_shape[1]
+    prog = textwrap.dedent(f"""
+        import os, json
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {os.path.join(os.path.dirname(__file__), '..', 'src')!r})
+        import numpy as np
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch import steps
+        from repro.launch.dryrun import _parse_shape
+        from repro.configs import get_config
+        from repro.analysis.hlo import parse_hlo
+        from repro.analysis.roofline import roofline_from_summary
+
+        cfg = get_config({arch!r})
+        shape = _parse_shape({shape!r})
+        mesh = (None if {n} == 1
+                else make_test_mesh({mesh_shape!r}, ("data", "model")))
+        bundle = steps.make_prefill_step(cfg, shape, mesh)
+        compiled = bundle.lower().compile()
+        dt = "bf16"
+        s = parse_hlo(compiled.as_text(), default_dot_dtype=dt)
+        r = roofline_from_summary(s)
+        rec = dict(arch={arch!r}, shape={shape!r}, chips={n},
+                   step_time_s=r.step_time_s, bound=r.bound,
+                   roofline=r.as_dict())
+        json.dump(rec, open({fname!r}, "w"), indent=1)
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    if not os.path.exists(fname):
+        raise RuntimeError(f"scale cell failed: {p.stderr[-1500:]}")
+    return json.load(open(fname))
+
+
+def main():
+    """Weak scaling (the paper's regime: per-cluster work held constant as
+    clusters grow): batch scales with the chip count; ideal = constant
+    tokens/s/chip."""
+    print("== Fig.9-right: chip-count weak scaling (gpt3-xl prefill 2048, "
+          "batch = chips) ==")
+    rows = []
+    base = None
+    for ms in MESHES:
+        n = ms[0] * ms[1]
+        batch = 2 * ms[0]                     # 2 sequences per data shard
+        rec = scale_cell("gpt3-xl", f"prefill:2048:{batch}", ms,
+                         tag="chipscale_weak2")
+        tput = 2048 * batch / max(rec["step_time_s"], 1e-12)
+        per_chip = tput / n
+        base = base or per_chip
+        rows.append(["gpt3-xl", n, f"{tput:.0f}", f"{per_chip:.0f}",
+                     f"{per_chip/base:.2f}", rec["bound"]])
+    for r in rows:
+        print("  " + " | ".join(f"{str(x):>12s}" for x in r))
+    write_csv(os.path.join(ART, "fig9_chip_scaling.csv"),
+              ["arch", "chips", "tokens_per_s", "tokens_per_s_per_chip",
+               "efficiency", "bound"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 9 (left): sequence-length scaling of the GPT class.
+
+NAR tokens/s should degrade with ~constant slope (complexity growth, no
+memory cliff); AR tokens/s degrades linearly in attention only.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import ART, cell, throughput, write_csv
+
+SEQS = (128, 256, 512, 1024, 2048)
+
+
+def main():
+    print("== Fig.9-left: sequence scaling (roofline-projected, 1 chip) ==")
+    rows = []
+    for arch in ("gpt3-xl", "gpt-j"):
+        for mode, shape_fmt in (("NAR", "prefill:{s}:1"),
+                                ("AR", "decode:{s}:1")):
+            for s in SEQS:
+                rec = cell(arch, shape_fmt.format(s=s), mesh="none",
+                           policy="bf16", tag=f"seqscale_{mode}_{s}")
+                if not rec.get("ok"):
+                    rows.append([arch, mode, s, "FAIL", ""])
+                    continue
+                rows.append([arch, mode, s, f"{throughput(rec):.2f}",
+                             rec["roofline"]["bound"]])
+    for r in rows:
+        print("  " + " | ".join(f"{str(x):>14s}" for x in r))
+    write_csv(os.path.join(ART, "fig9_seq_scaling.csv"),
+              ["arch", "mode", "seq", "tokens_per_s", "bound"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

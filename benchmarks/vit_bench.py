@@ -1,0 +1,72 @@
+"""ViT single-chip lowering + roofline (Fig. 8 backend).
+
+The encoder-only ViT runs one pass per classification (the paper's images/s
+metric).  Lowered with jit on one device, parsed with the trip-count-aware
+HLO analyzer, projected with the v5e roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import ART
+
+
+def vit_cell(name: str, *, batch: int = 8, tag: str = "s2_bf16",
+             policy: str = "bf16", naive: bool = False,
+             timeout: int = 900) -> dict:
+    os.makedirs(ART, exist_ok=True)
+    fname = os.path.join(ART, f"{name}__vit{batch}__{tag}.json")
+    if os.path.exists(fname):
+        return json.load(open(fname))
+    prog = textwrap.dedent(f"""
+        import os, json
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {os.path.join(os.path.dirname(__file__), '..', 'src')!r})
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import PAPER_MODELS
+        from repro.core.precision import get_policy
+        from repro.models import vit
+        from repro.sharding.plan import UNSHARDED
+        from repro.analysis.hlo import parse_hlo
+        from repro.analysis.roofline import roofline_from_summary
+
+        cfg = PAPER_MODELS[{name!r}]
+        policy = get_policy({policy!r})
+        plan = dataclasses.replace(UNSHARDED, naive_attention={naive},
+                                   gelu_impl="gelu_exact" if {naive}
+                                   else "i_gelu")
+        params = jax.eval_shape(
+            lambda k: vit.init_vit(k, cfg, policy.param_dtype),
+            jax.random.key(0))
+        patches = jax.ShapeDtypeStruct(
+            ({batch}, cfg.image_seq - 1, vit.PATCH_DIM), jnp.float32)
+
+        def fwd(params, patches):
+            return vit.forward_vit(params, patches, cfg=cfg, policy=policy,
+                                   plan=plan)
+        compiled = jax.jit(fwd).lower(params, patches).compile()
+        dt = {{"float32": "f32", "bfloat16": "bf16",
+              "float8_e4m3fn": "f8e4m3fn"}}[
+                  np.dtype(policy.compute_dtype).name]
+        s = parse_hlo(compiled.as_text(), default_dot_dtype=dt)
+        r = roofline_from_summary(s)
+        rec = dict(model={name!r}, tag={tag!r}, batch={batch},
+                   bound=r.bound, step_time_s=r.step_time_s,
+                   images_per_s={batch} / max(r.step_time_s, 1e-12),
+                   roofline=r.as_dict())
+        json.dump(rec, open({fname!r}, "w"), indent=1)
+        print("ok")
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    if not os.path.exists(fname):
+        raise RuntimeError(f"vit cell failed: {p.stderr[-1500:]}")
+    return json.load(open(fname))

@@ -1,0 +1,54 @@
+"""Long-context decode with an attention-free SSM (the long_500k story).
+
+    PYTHONPATH=src python examples/long_context_mamba.py
+
+Decodes with mamba2 (reduced) far past the context where a quadratic
+attention cache would grow: the SSM state is O(1) per layer regardless of
+how many tokens have been consumed — the property that qualifies SSM/hybrid
+archs for the 512k-token cell (DESIGN.md §5).
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.precision import BF16
+from repro.models import lm
+from repro.sharding.plan import UNSHARDED
+
+
+def main():
+    cfg = get_config("mamba2-2.7b").reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    prompt = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (1, 32), dtype=np.int32))}
+
+    tok, caches, pos = lm.forward_prefill(params, prompt, plan=UNSHARDED,
+                                          cfg=cfg, policy=BF16, max_seq=1 << 20)
+    state_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(caches))
+    print(f"SSM state total: {state_bytes/1024:.1f} KiB "
+          f"(constant — no KV growth)")
+
+    decode = jax.jit(lambda p, t, po, c: lm.forward_decode(
+        p, t, po, c, plan=UNSHARDED, cfg=cfg, policy=BF16))
+    t, p = tok, pos
+    t0 = time.perf_counter()
+    n = 64
+    for i in range(n):
+        t, caches = decode(params, t, p, caches)
+        p = p + 1
+    jax.block_until_ready(t)
+    dt = time.perf_counter() - t0
+    print(f"decoded {n} tokens to position {int(p[0])} "
+          f"at {n/dt:.1f} tok/s; per-step cost is position-independent")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: train a tiny assigned-architecture model and generate from it.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch phi4-mini-3.8b]
+
+Runs in ~2 minutes on one CPU: 40 train steps on a reduced config (loss
+drops), then greedy generation through the serving engine — the same code
+paths the production mesh uses (launch/steps.py), just unsharded.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticStream
+from repro.launch import steps
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"arch={cfg.name}  params={cfg.n_params():,}")
+
+    # -- train ------------------------------------------------------------
+    shape = ShapeConfig("quickstart", "train", 64, 4)
+    bundle = steps.make_train_step(cfg, shape, None,
+                                   lr_fn=lambda s: jnp.asarray(1e-3))
+    state = bundle.aux["init_state"](0)
+    stream = SyntheticStream(cfg, global_batch=4, seq_len=64, seed=0)
+    batch = stream.batch(0)               # overfit one batch for the demo
+    for step in range(args.steps):
+        state, metrics = bundle.fn(state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:3d}  loss {float(metrics['loss']):.4f}")
+
+    # -- serve ------------------------------------------------------------
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, state["params"])
+    engine = ServingEngine(cfg, params, batch_size=2, max_seq=96,
+                           prompt_len=16)
+    rng = np.random.default_rng(0)
+    for uid in range(3):
+        engine.submit(Request(uid=uid,
+                              prompt=rng.integers(0, cfg.vocab, 16,
+                                                  dtype=np.int32),
+                              max_new_tokens=8))
+    for req in engine.run():
+        print(f"request {req.uid}: generated {req.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,489 @@
+"""Post-optimization HLO text analysis (trip-count-aware).
+
+`compiled.cost_analysis()` counts `while` bodies ONCE, under-reporting deep
+scanned models by ~n_layers x (verified in DESIGN.md).  This parser walks the
+scheduled per-partition HLO module instead:
+
+  * builds the computation call graph (while bodies weighted by
+    `known_trip_count`, fusions/calls by call-site count),
+  * accumulates dot FLOPs from output shape x contracting dims, keyed by
+    operand dtype (the MXU peak differs per dtype),
+  * accumulates per-collective *wire bytes per device* with
+    replica-group-aware ring-traffic conversion,
+  * accumulates fusion-level memory traffic (operands + outputs of scheduled
+    top-level ops) as the HBM-bytes proxy.
+
+All shapes in an SPMD module are per-partition, so every number this module
+reports is PER DEVICE.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+    "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_NAME_RE = re.compile(r"^(ENTRY\s+)?%?([\w.$\-]+)")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*(\([^)]*\)|[a-z0-9]+"
+                       r"\[[0-9,]*\](?:\{[^}]*\})?)")
+
+
+def _split_header(line: str):
+    """Computation header: '%name (params...) -> ret {' (params may contain
+    nested tuple types).  Returns (is_entry, name, params_str) or None."""
+    s = line.strip()
+    if not s.endswith("{") or "->" not in s:
+        return None
+    m = _COMP_NAME_RE.match(s)
+    if not m:
+        return None
+    i = s.find("(")
+    if i < 0:
+        return None
+    depth, j = 0, i
+    for j in range(i, len(s)):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    return bool(m.group(1)), m.group(2), s[i + 1:j]
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|computation)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_DOT_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_type(t: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """'f32[2,3]{...}' or '(f32[2], bf16[3,4])' -> [(dtype, dims), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(t):
+        dims = tuple(int(x) for x in m.group(2).split(",") if x)
+        out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _nelems(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclass
+class CompStats:
+    """Per-computation local (un-weighted) statistics."""
+    dot_flops: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    dot_flops_by_tag: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    mem_bytes: float = 0.0
+    # (callee, multiplier, counts_mem): fusion bodies execute in VMEM/regs —
+    # their HBM traffic is the fusion call site's operands+outputs, so
+    # fusion-edge mem doesn't propagate (counts_mem=False)
+    calls: List[Tuple[str, float, bool]] = field(default_factory=list)
+
+
+@dataclass
+class HloSummary:
+    """Whole-module totals, per device."""
+    flops_by_dtype: Dict[str, float]
+    flops_by_tag: Dict[str, float]
+    collective_bytes: Dict[str, float]     # per collective kind
+    mem_bytes: float
+    debug_items: Optional[list] = None     # (bytes, comp, op, name) rows
+
+    @property
+    def total_flops(self) -> float:
+        return sum(self.flops_by_dtype.values())
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _tag_of(op_name: str) -> str:
+    """Coarse layer attribution for the kernel-breakdown benchmark."""
+    s = op_name.lower()
+    for key, tag in (("flash", "attention"), ("attention", "attention"),
+                     ("ssd", "ssm"), ("ssm", "ssm"), ("moe", "moe"),
+                     ("ffn", "mlp"), ("mlp", "mlp"), ("swiglu", "mlp"),
+                     ("norm", "norm"), ("gelu", "mlp"), ("embed", "embed"),
+                     ("ce_", "ce"), ("logits", "ce"), ("unemb", "ce")):
+        if key in s:
+            return tag
+    return "other"
+
+
+_SLICING_OPS = ("dynamic-slice", "gather", "slice")
+_ELEMENTWISE = ("copy", "transpose", "reshape", "convert", "reduce",
+                "select", "add", "multiply", "subtract", "divide",
+                "exponential", "pad", "concatenate", "rsqrt", "tanh")
+# pure data movement: a fusion made only of these streams its data once
+_MOVEMENT_OPS = {"dynamic-slice", "slice", "bitcast", "convert", "copy",
+                 "transpose", "reshape", "broadcast", "parameter",
+                 "get-tuple-element", "tuple", "gather", "pad", "iota",
+                 "constant", "concatenate"}
+
+
+def _operands(rest: str):
+    return re.findall(r"%([\w.\-]+)", rest.split(")")[0])
+
+
+def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
+              debug: bool = False, debug_min_bytes: float = 8e6,
+              act_bytes: Optional[int] = None,
+              param_bytes: Optional[int] = None,
+              gather_act_bytes: Optional[int] = None) -> HloSummary:
+    """`default_dot_dtype`: attribute every dot to this dtype (the policy's
+    compute dtype) except dots inside a `ce_f32` named scope.  Needed because
+    the CPU backend's float-normalization pass rewrites bf16 dots as
+    convert+f32-dot+convert, erasing the dtype the TPU backend would use.
+
+    HBM-traffic accounting reads *effective* operand bytes: an operand that
+    is only sliced (dynamic-slice/gather — e.g. one layer's weights out of a
+    scan's stacked parameter) costs its slice outputs, not its full size;
+    dynamic-update-slice costs 2x the update, not the whole buffer.  Fusion
+    call sites charge operands via the fused computation's per-parameter
+    access costs."""
+    # ---- pass 1: collect computations --------------------------------------
+    comp_instrs: Dict[str, list] = {}
+    comp_params: Dict[str, list] = {}
+    comp_syms: Dict[str, dict] = {}
+    comp_producer: Dict[str, dict] = {}
+    entry: Optional[str] = None
+    cur_name: Optional[str] = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.startswith("HloModule"):
+            continue
+        hdr = _split_header(line)
+        if hdr is not None:
+            is_entry, name, params = hdr
+            cur_name = name
+            comp_instrs[name] = []
+            comp_params[name] = []
+            comp_syms[name] = {}
+            if is_entry:
+                entry = name
+            for pm in _PARAM_RE.finditer(params):
+                comp_syms[name][pm.group(1)] = _parse_type(pm.group(2))
+                comp_params[name].append(pm.group(1))
+            continue
+        if cur_name is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        nm, type_str, opcode, rest = mi.groups()
+        shapes = _parse_type(type_str)
+        comp_syms[cur_name][nm] = shapes
+        comp_instrs[cur_name].append((nm, shapes, opcode, rest))
+        callee = None
+        if opcode == "fusion":
+            mcal = re.search(r"calls=%?([\w.\-]+)", rest)
+            callee = mcal.group(1) if mcal else None
+        ops0 = _operands(rest)
+        comp_producer.setdefault(cur_name, {})[nm] = (
+            opcode, callee, ops0[0] if ops0 else None)
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # ---- per-computation parameter access costs ----------------------------
+    # param accessed only through slicing ops -> cost = sum of slice outputs;
+    # param used only as a dynamic-update-slice BUFFER (aliased in-place,
+    # e.g. the KV cache) -> 2 x the update size, not the whole buffer
+    param_cost: Dict[str, Dict[str, float]] = {}
+    pure_movement: Dict[str, bool] = {}
+    dus_bytes: Dict[str, float] = {}       # in-place update fusions (caches)
+    for cname, instrs in comp_instrs.items():
+        syms = comp_syms[cname]
+        pure_movement[cname] = all(op in _MOVEMENT_OPS
+                                   for _, _, op, _ in instrs)
+        dus = [(shapes, rest) for _, shapes, op, rest in instrs
+               if op == "dynamic-update-slice"]
+        if dus:
+            total = 0.0
+            for _, rest_ in dus:
+                ops_ = _operands(rest_)
+                upd = ops_[1] if len(ops_) > 1 else None
+                total += 2.0 * _nbytes(syms.get(upd, []))
+            dus_bytes[cname] = total
+        uses: Dict[str, list] = {p: [] for p in comp_params[cname]}
+        for nm, shapes, opcode, rest in instrs:
+            for on in _operands(rest):
+                if on in uses:
+                    uses[on].append((opcode, shapes, rest))
+        costs = {}
+        for p in comp_params[cname]:
+            full = float(_nbytes(syms.get(p, [])))
+            cheap = 0.0
+            ok = bool(uses[p])
+            for op, sh, rest_ in uses[p]:
+                ops_ = _operands(rest_)
+                if op in _SLICING_OPS and ops_[:1] == [p]:
+                    cheap += _nbytes(sh)
+                elif op == "dynamic-update-slice" and ops_[:1] == [p]:
+                    upd = ops_[1] if len(ops_) > 1 else None
+                    cheap += 2.0 * _nbytes(syms.get(upd, []))
+                else:
+                    ok = False
+                    break
+            costs[p] = min(full, cheap) if ok else full
+        param_cost[cname] = costs
+
+    def operand_cost(cname, rest, syms):
+        """Effective operand bytes at a fusion/dot call site."""
+        callee = None
+        mc = re.search(r"calls=%?([\w.\-]+)", rest)
+        if mc:
+            callee = mc.group(1)
+        total = 0.0
+        ops = _operands(rest)
+        for j, on in enumerate(ops):
+            full = _nbytes(syms.get(on, []))
+            if callee and callee in param_cost:
+                pnames = comp_params.get(callee, [])
+                if j < len(pnames):
+                    total += min(full, param_cost[callee][pnames[j]])
+                    continue
+            total += full
+        return total
+
+    # per-computation majority vmemk vote: optimization strips metadata from
+    # some instructions; inside a kernel-scoped loop body they inherit it
+    comp_vmemk: Dict[str, bool] = {}
+    for cname, instrs in comp_instrs.items():
+        votes = []
+        for _, _, _, rest in instrs:
+            mon = _OPNAME_RE.search(rest)
+            if mon:
+                votes.append("vmemk" in mon.group(1))
+        comp_vmemk[cname] = bool(votes) and sum(votes) > len(votes) / 2
+
+    # ---- pass 2: accounting -------------------------------------------------
+    comps: Dict[str, CompStats] = {}
+    debug_items: list = []
+    for cname, instrs in comp_instrs.items():
+        cur = comps.setdefault(cname, CompStats())
+        syms = comp_syms[cname]
+        for nm, shapes, opcode, rest in instrs:
+            mem_before = cur.mem_bytes
+            # CPU float-normalization artifact: the backend upcasts every
+            # bf16/fp8 parameter to f32 via "wrapped_convert" fusions before
+            # use.  The TPU backend computes natively — skip the artifact.
+            if nm.startswith("wrapped_convert"):
+                continue
+            mon = _OPNAME_RE.search(rest)
+            op_name = mon.group(1) if mon else ""
+            # "vmemk_*" scopes: math the Pallas kernels keep in VMEM — FLOPs
+            # count, HBM traffic doesn't (dots still stream their operands)
+            vmemk = ("vmemk" in op_name) if op_name else comp_vmemk[cname]
+
+            if opcode == "dot":
+                ml = _DOT_LHS_C.search(rest)
+                cdims = ([int(x) for x in ml.group(1).split(",") if x]
+                         if ml else [])
+                mo = re.match(r"%?([\w.\-]+)", rest)
+                lhs_shapes = syms.get(mo.group(1), []) if mo else []
+                k = 1
+                if lhs_shapes:
+                    ldims = lhs_shapes[0][1]
+                    for c in cdims:
+                        if c < len(ldims):
+                            k *= ldims[c]
+                out_elems = sum(_nelems(d) for _, d in shapes)
+                lhs_dt = lhs_shapes[0][0] if lhs_shapes else shapes[0][0]
+                if default_dot_dtype is not None:
+                    lhs_dt = ("f32" if "ce_f32" in op_name
+                              else default_dot_dtype)
+                flops = 2.0 * out_elems * k
+                cur.dot_flops[lhs_dt] += flops
+                cur.dot_flops_by_tag[_tag_of(op_name)] += flops
+                # width correction: the CPU backend normalized narrow dots to
+                # f32; count the traffic at the dtype the TPU would stream
+                lowered_dt = lhs_shapes[0][0] if lhs_shapes else "f32"
+                scale = min(1.0, _DTYPE_BYTES.get(lhs_dt, 4)
+                            / max(_DTYPE_BYTES.get(lowered_dt, 4), 1))
+                if not vmemk:
+                    cur.mem_bytes += _nbytes(shapes) * scale
+                    cur.mem_bytes += operand_cost(cname, rest, syms) * scale
+                else:
+                    # kernel-interior dot: operands stream from HBM only if
+                    # they come from outside the kernel (params / slices of
+                    # outside tensors); tensors produced by scoped compute
+                    # (probabilities, decay masks, accumulators) are VMEM
+                    prod = comp_producer.get(cname, {})
+                    for on in _operands(rest):
+                        po = prod.get(on)
+                        streams = (
+                            po is None or po[0] == "parameter"
+                            or po[0] in _MOVEMENT_OPS
+                            or (po[0] == "fusion"
+                                and pure_movement.get(po[1], False)))
+                        if streams:
+                            cur.mem_bytes += _nbytes(syms.get(on, [])) * scale
+            elif opcode in COLLECTIVES:
+                g = 1
+                mg = _GROUPS_RE.search(rest)
+                if mg:
+                    g = len(mg.group(1).split(","))
+                else:
+                    mgi = _GROUPS_IOTA_RE.search(rest)
+                    if mgi:
+                        g = int(mgi.group(2))
+                # effective-width correction: the CPU backend carries the
+                # whole program float-normalized (f32), but the TPU moves
+                # activations at act_bytes and weights at param_bytes.
+                # Weights are rank<=2, activations rank>=3 (batch, seq, ...).
+                own_w = max((_DTYPE_BYTES.get(dt, 4) for dt, _ in shapes),
+                            default=4)
+                eff_w = own_w
+                rank = max((len(dims) for _, dims in shapes), default=0)
+                if rank <= 2:
+                    hint = param_bytes
+                elif opcode == "all-gather" and gather_act_bytes:
+                    hint = gather_act_bytes      # deliberate fp8 gathers
+                else:
+                    hint = act_bytes
+                if hint:
+                    eff_w = min(own_w, hint)
+                size = _nbytes(shapes) * (eff_w / max(own_w, 1))
+                if opcode == "all-gather":
+                    wire = size * (g - 1) / max(g, 1)
+                elif opcode == "reduce-scatter":
+                    wire = size * (g - 1)
+                elif opcode == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / max(g, 1)
+                elif opcode == "all-to-all":
+                    wire = size * (g - 1) / max(g, 1)
+                else:                           # collective-permute
+                    wire = size
+                cur.coll_bytes[opcode] += wire
+                cur.mem_bytes += size
+            elif opcode == "while":
+                mt = _TRIP_RE.search(rest)
+                trips = float(mt.group(1)) if mt else 1.0
+                mb = re.search(r"body=%?([\w.\-]+)", rest)
+                if mb:
+                    cur.calls.append((mb.group(1), trips, True))
+                mcond = _COND_RE.search(rest)
+                if mcond:
+                    cur.calls.append((mcond.group(1), trips + 1, True))
+            elif opcode in ("fusion", "call", "conditional", "async-start"):
+                counts_mem = opcode != "fusion"
+                callee = None
+                for mc2 in re.finditer(_CALL_RE, rest):
+                    callee = mc2.group(1)
+                    cur.calls.append((callee, 1.0, counts_mem))
+                if opcode == "fusion" and not vmemk:
+                    if callee in dus_bytes:
+                        # in-place update (KV cache / scan-stacked outputs):
+                        # the buffer is aliased — charge the update twice
+                        cur.mem_bytes += dus_bytes[callee]
+                    elif (callee and pure_movement.get(callee)
+                          and all(_nbytes(syms.get(on, [])) <= 64
+                                  for on in _operands(rest))):
+                        # broadcast-from-scalar (zeros init): fuses into its
+                        # consumer on TPU; no stream
+                        pass
+                    elif callee and pure_movement.get(callee):
+                        # slice/convert-only fusion (e.g. the CPU backend's
+                        # weight upcast): one stream at the narrowest width
+                        widths = [
+                            _DTYPE_BYTES.get(dt, 4)
+                            for dt, _ in shapes] + [
+                            _DTYPE_BYTES.get(dt, 4)
+                            for p in comp_params.get(callee, [])
+                            for dt, _ in comp_syms[callee].get(p, [])]
+                        narrow = min(widths) if widths else 4
+                        elems = sum(_nelems(d) for _, d in shapes)
+                        cur.mem_bytes += elems * narrow
+                    else:
+                        cur.mem_bytes += _nbytes(shapes)
+                        cur.mem_bytes += operand_cost(cname, rest, syms)
+            elif opcode in _SLICING_OPS or opcode == "broadcast":
+                if not vmemk:
+                    cur.mem_bytes += 2 * _nbytes(shapes)   # read slice + write
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                if not vmemk:
+                    ops_ = _operands(rest)
+                    upd = ops_[1] if len(ops_) > 1 else None
+                    cur.mem_bytes += 2 * _nbytes(syms.get(upd, [])) \
+                        if upd else _nbytes(shapes)
+            elif opcode in _ELEMENTWISE:
+                if opcode == "copy" and cname == entry:
+                    # entry-level copies are donation/output-aliasing
+                    # plumbing the TPU backend elides (input_output_alias
+                    # is declared for state/caches) — CPU artifact
+                    continue
+                if not vmemk:
+                    cur.mem_bytes += _nbytes(shapes)
+                    cur.mem_bytes += operand_cost(cname, rest, syms)
+            if debug and cur.mem_bytes - mem_before > debug_min_bytes:
+                debug_items.append((cur.mem_bytes - mem_before, cname,
+                                    opcode, nm))
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # roll up through the call graph (memoized; weights multiply)
+    memo: Dict[str, Tuple[Dict, Dict, Dict, float]] = {}
+
+    def visit(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return ({}, {}, {}, 0.0)
+        c = comps[name]
+        fd = defaultdict(float, c.dot_flops)
+        ft = defaultdict(float, c.dot_flops_by_tag)
+        cb = defaultdict(float, c.coll_bytes)
+        mb = c.mem_bytes
+        for callee, mult, counts_mem in c.calls:
+            sfd, sft, scb, smb = visit(callee, stack + (name,))
+            for k, v in sfd.items():
+                fd[k] += v * mult
+            for k, v in sft.items():
+                ft[k] += v * mult
+            for k, v in scb.items():
+                cb[k] += v * mult
+            if counts_mem:
+                mb += smb * mult
+        memo[name] = (dict(fd), dict(ft), dict(cb), mb)
+        return memo[name]
+
+    fd, ft, cb, mb = visit(entry)
+    return HloSummary(flops_by_dtype=fd, flops_by_tag=ft,
+                      collective_bytes=cb, mem_bytes=mb,
+                      debug_items=sorted(debug_items, reverse=True)
+                      if debug else None)

@@ -1,0 +1,103 @@
+"""Roofline report generation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
+
+Emits the per-(arch x shape) baseline table (all three terms, dominant
+bottleneck, useful-FLOPs ratio, HBM/device) and flags the three hillclimb
+candidates: worst compute fraction, most collective-bound, most
+representative of the paper's technique.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str, mesh: str = "single", tag: str = "baseline"):
+    recs = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh or r.get("tag") != tag:
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_row(r):
+    if r.get("skipped"):
+        return None
+    rf = r["roofline"]
+    note = ""
+    return [
+        r["arch"], r["shape"],
+        f"{rf['compute_s']*1e3:.1f}", f"{rf['memory_s']*1e3:.1f}",
+        f"{rf['collective_s']*1e3:.1f}", rf["bound"],
+        f"{rf['compute_fraction']:.2f}",
+        f"{r['useful_flops_ratio']:.2f}",
+        f"{r['hbm_per_device_gb']:.1f}",
+    ]
+
+
+HEADER = ["arch", "shape", "compute(ms)", "memory(ms)", "collective(ms)",
+          "bound", "comp-frac", "useful/HLO", "HBM GB/dev"]
+
+
+def markdown_table(rows):
+    out = ["| " + " | ".join(HEADER) + " |",
+           "|" + "|".join("---" for _ in HEADER) + "|"]
+    for row in rows:
+        out.append("| " + " | ".join(row) + " |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(recs):
+    """(worst compute fraction, most collective-bound, most representative)."""
+    live = [(k, r) for k, r in recs.items() if r.get("ok")]
+    worst = min(live, key=lambda kv: kv[1]["roofline"]["compute_fraction"])
+    coll = max(live, key=lambda kv: (kv[1]["roofline"]["collective_s"]
+                                     / max(kv[1]["roofline"]["step_time_s"],
+                                           1e-12)))
+    # most representative of the paper: decoder-only GQA dense prefill (the
+    # paper's NAR GPT benchmark at scale) — deepseek-67b prefill_32k
+    rep = recs.get(("deepseek-67b", "prefill_32k"))
+    return worst, coll, (("deepseek-67b", "prefill_32k"), rep)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh, args.tag)
+    rows = []
+    for (arch, shape) in sorted(recs, key=lambda k: (k[0],
+                                                     SHAPE_ORDER.index(k[1])
+                                                     if k[1] in SHAPE_ORDER
+                                                     else 9)):
+        row = fmt_row(recs[(arch, shape)])
+        if row:
+            rows.append(row)
+    print(markdown_table(rows))
+    skipped = [(a, s) for (a, s), r in sorted(recs.items())
+               if r.get("skipped")]
+    if skipped:
+        print("\nskipped (long_500k needs sub-quadratic attention): "
+              + ", ".join(f"{a}" for a, _ in skipped))
+    worst, coll, rep = pick_hillclimb(recs)
+    print("\nhillclimb candidates:")
+    print(f"  worst compute fraction: {worst[0]} "
+          f"({worst[1]['roofline']['compute_fraction']:.3f})")
+    print(f"  most collective-bound:  {coll[0]} "
+          f"(coll {coll[1]['roofline']['collective_s']*1e3:.1f}ms of "
+          f"{coll[1]['roofline']['step_time_s']*1e3:.1f}ms)")
+    print(f"  paper-representative:   {rep[0]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Config registry: ``get_config(arch_id)`` for every assigned architecture
+(+ the paper's own five models)."""
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, TRAIN_4K,
+                                PREFILL_32K, DECODE_32K, LONG_500K,
+                                supports_shape)
+from repro.configs.phi4_mini_3_8b import CONFIG as PHI4_MINI
+from repro.configs.chatglm3_6b import CONFIG as CHATGLM3
+from repro.configs.deepseek_67b import CONFIG as DEEPSEEK67B
+from repro.configs.gemma3_27b import CONFIG as GEMMA3_27B
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.mixtral_8x7b import CONFIG as MIXTRAL_8X7B
+from repro.configs.internvl2_76b import CONFIG as INTERNVL2_76B
+from repro.configs.hymba_1_5b import CONFIG as HYMBA_1_5B
+from repro.configs.mamba2_2_7b import CONFIG as MAMBA2_2_7B
+from repro.configs.whisper_base import CONFIG as WHISPER_BASE
+from repro.configs.paper_models import PAPER_MODELS
+
+ASSIGNED = {
+    c.name: c for c in (
+        PHI4_MINI, CHATGLM3, DEEPSEEK67B, GEMMA3_27B, MIXTRAL_8X22B,
+        MIXTRAL_8X7B, INTERNVL2_76B, HYMBA_1_5B, MAMBA2_2_7B, WHISPER_BASE,
+    )
+}
+
+REGISTRY = dict(ASSIGNED)
+REGISTRY.update(PAPER_MODELS)
+
+# CLI-friendly aliases (--arch <id>)
+ALIASES = {
+    "phi4-mini-3.8b": "phi4-mini-3.8b",
+    "phi4_mini_3_8b": "phi4-mini-3.8b",
+    "chatglm3-6b": "chatglm3-6b",
+    "chatglm3_6b": "chatglm3-6b",
+    "deepseek-67b": "deepseek-67b",
+    "deepseek_67b": "deepseek-67b",
+    "gemma3-27b": "gemma3-27b",
+    "gemma3_27b": "gemma3-27b",
+    "mixtral-8x22b": "mixtral-8x22b",
+    "mixtral_8x22b": "mixtral-8x22b",
+    "mixtral-8x7b": "mixtral-8x7b",
+    "mixtral_8x7b": "mixtral-8x7b",
+    "internvl2-76b": "internvl2-76b",
+    "internvl2_76b": "internvl2-76b",
+    "hymba-1.5b": "hymba-1.5b",
+    "hymba_1_5b": "hymba-1.5b",
+    "mamba2-2.7b": "mamba2-2.7b",
+    "mamba2_2_7b": "mamba2-2.7b",
+    "whisper-base": "whisper-base",
+    "whisper_base": "whisper-base",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    key = ALIASES.get(arch, arch)
+    if key not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[key]
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "supports_shape", "get_config", "REGISTRY",
+    "ASSIGNED", "PAPER_MODELS",
+]

@@ -1,0 +1,249 @@
+"""Model & shape configuration system.
+
+Every assigned architecture is a `ModelConfig`; every benchmark shape is a
+`ShapeConfig`.  Layer heterogeneity (gemma3's 5:1 local:global pattern,
+hymba's 3 global layers, whisper's encoder/decoder split) is expressed as a
+*segment schedule*: an ordered tuple of ``(kind, count)`` segments.  Each
+segment is executed as one `lax.scan` over `count` stacked layers, keeping the
+HLO compact for deep models (deepseek-67b: 95 layers -> one while loop).
+
+Layer kinds
+-----------
+``attn``          global attention + dense MLP
+``local``         sliding-window attention + dense MLP
+``moe``           global attention + mixture-of-experts FFN
+``moe_local``     sliding-window attention + MoE FFN
+``ssm``           Mamba2 SSD block (attention-free)
+``hybrid_attn``   parallel attention + SSM heads (global attn), dense MLP
+``hybrid_local``  parallel attention + SSM heads (sliding window), dense MLP
+``enc``           bidirectional attention + MLP (encoder)
+``dec``           causal self-attention + cross-attention + MLP (decoder)
+``vit``           bidirectional attention + MLP (encoder-only classifier)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+Schedule = Tuple[Tuple[str, int], ...]
+
+ATTN_KINDS = ("attn", "local", "moe", "moe_local", "hybrid_attn",
+              "hybrid_local", "enc", "dec", "vit")
+LOCAL_KINDS = ("local", "moe_local", "hybrid_local")
+SSM_KINDS = ("ssm", "hybrid_attn", "hybrid_local")
+MOE_KINDS = ("moe", "moe_local")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | vlm | hybrid | ssm | encdec | vit
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    schedule: Schedule
+    # -- attention ----------------------------------------------------------
+    sliding_window: int = 0          # 0 = no SWA anywhere
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0       # chatglm3 2d-RoPE rotates half the dims
+    causal: bool = True
+    # -- mlp / norm ---------------------------------------------------------
+    mlp_act: str = "swiglu"          # swiglu | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    # -- moe ----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # -- ssm (mamba2 SSD) ---------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    d_inner: int = 0                 # 0 -> 2*d_model when SSM present
+    conv_width: int = 4
+    # -- encoder/decoder ----------------------------------------------------
+    n_enc_layers: int = 0
+    enc_schedule: Schedule = ()
+    enc_seq: int = 0                 # whisper: 1500 precomputed frames
+    # -- vlm ----------------------------------------------------------------
+    n_patches: int = 0               # prefix patch embeddings in the sequence
+    # -- vit classifier -----------------------------------------------------
+    n_classes: int = 0
+    image_seq: int = 0               # ViT: number of patches (+1 cls token)
+    # -- systems knobs ------------------------------------------------------
+    attention_sharding: str = "head_tp"   # head_tp | seq_sp
+    tie_embeddings: bool = False
+    max_seq: int = 32_768            # default cache/rope horizon
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return max(1, self.n_heads // max(1, self.n_kv_heads))
+
+    @property
+    def ssm_heads(self) -> int:
+        di = self.d_inner or 2 * self.d_model
+        return di // self.ssm_head_dim if self.ssm_state else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocabulary padded to a multiple of 256 so the unembedding shards
+        16-way over `model` (and 16-way over `data` for FSDP).  Megatron-style;
+        padded logit columns are masked to -inf in CE and sampling."""
+        return -(-self.vocab // 256) * 256 if self.vocab else 0
+
+    def padded_ssm_heads(self, tp: int = 16) -> int:
+        """SSM heads padded up so they divide the tp axis (hymba: 50 -> 64).
+        Pad heads have zero out-projection rows => output-exact."""
+        if not self.ssm_state:
+            return 0
+        h = self.ssm_heads
+        return -(-h // tp) * tp if h % tp else h
+
+    def padded_d_inner(self, tp: int = 16) -> int:
+        return self.padded_ssm_heads(tp) * self.ssm_head_dim
+
+    @property
+    def enc_seq_padded(self) -> int:
+        """Encoder frames padded so the sequence shards 16-way; pad frames
+        are zero embeddings attended like real ones (systems-equivalent,
+        DESIGN.md §5)."""
+        return -(-self.enc_seq // 16) * 16 if self.enc_seq else 0
+
+    @property
+    def has_attention(self) -> bool:
+        return any(k in ATTN_KINDS for k, _ in self.schedule)
+
+    @property
+    def has_ssm(self) -> bool:
+        return any(k in SSM_KINDS for k, _ in self.schedule)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True when no layer does full-length quadratic *global* attention —
+        or when global layers are rare enough that decode stays tractable
+        (SWA-dominant archs keep window-bounded caches on local layers)."""
+        kinds = [k for k, _ in self.schedule]
+        return all(k in LOCAL_KINDS + ("ssm",) for k in kinds)
+
+    @property
+    def long_context_capable(self) -> bool:
+        """Eligible for the long_500k cell: SSM / hybrid / SWA-dominant."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        n_local = sum(c for k, c in self.schedule if k in LOCAL_KINDS)
+        n_total = sum(c for _, c in self.schedule)
+        return n_local >= n_total // 2 and n_local > 0   # SWA-dominant
+
+    def n_params(self) -> int:
+        """Parameter count (embedding + blocks + head), exact per family."""
+        E, F, V = self.d_model, self.d_ff, self.vocab
+        hd, H, KV = self.head_dim, self.n_heads, self.n_kv_heads
+        total = V * E                           # embedding
+        if not self.tie_embeddings:
+            total += E * V                      # unembedding
+        if self.n_classes:
+            total = self.image_seq * E + E * self.n_classes  # vit: pos + head
+        per_kind = {}
+        for kind, count in self.schedule + self.enc_schedule:
+            if kind in per_kind:
+                total += per_kind[kind] * count
+                continue
+            p = 2 * E                           # two norms
+            if kind in ATTN_KINDS:
+                p += E * (H * hd) + 2 * E * (KV * hd) + (H * hd) * E
+                if kind == "dec":               # cross attention + its norm
+                    p += E * (H * hd) + 2 * E * (KV * hd) + (H * hd) * E + E
+            if kind in SSM_KINDS or kind == "ssm":
+                di = self.d_inner or 2 * E
+                nh = di // self.ssm_head_dim
+                p += E * (2 * di + 2 * self.ssm_state + nh)  # in_proj
+                p += di * self.conv_width + nh + nh          # conv, A, D
+                p += di * E                                  # out_proj
+            if kind in MOE_KINDS:
+                gated = 3 if self.mlp_act == "swiglu" else 2
+                p += E * self.n_experts + self.n_experts * gated * E * F
+            elif kind not in ("ssm",):
+                gated = 3 if self.mlp_act == "swiglu" else 2
+                p += gated * E * F
+            per_kind[kind] = p
+            total += p * count
+        return total
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only top_k experts count)."""
+        if not self.n_experts:
+            return self.n_params()
+        E, F = self.d_model, self.d_ff
+        gated = 3 if self.mlp_act == "swiglu" else 2
+        n_moe_layers = sum(c for k, c in self.schedule if k in MOE_KINDS)
+        inactive = (self.n_experts - self.top_k) * gated * E * F * n_moe_layers
+        return self.n_params() - inactive
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests (preserves schedule
+        structure, shrinks widths/depths/vocab)."""
+        def shrink(sched: Schedule, cap: int = 2) -> Schedule:
+            return tuple((k, min(c, cap)) for k, c in sched[:3])
+        hd = 16
+        H = min(self.n_heads, 4) if self.n_heads else 0
+        KV = max(1, min(self.n_kv_heads, 2)) if self.n_heads else 0
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=sum(c for _, c in shrink(self.schedule)),
+            d_model=64,
+            n_heads=H,
+            n_kv_heads=KV,
+            head_dim=hd,
+            d_ff=128,
+            vocab=256,
+            schedule=shrink(self.schedule),
+            enc_schedule=shrink(self.enc_schedule) if self.enc_schedule else (),
+            n_enc_layers=sum(c for _, c in shrink(self.enc_schedule)) if self.enc_schedule else 0,
+            sliding_window=min(self.sliding_window, 8) if self.sliding_window else 0,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else self.ssm_head_dim,
+            d_inner=128 if self.ssm_state else 0,
+            enc_seq=min(self.enc_seq, 12) if self.enc_seq else 0,
+            n_patches=min(self.n_patches, 4) if self.n_patches else 0,
+            n_classes=min(self.n_classes, 16) if self.n_classes else 0,
+            image_seq=min(self.image_seq, 17) if self.image_seq else 0,
+            max_seq=128,
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4_096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524_288, 1)
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Assignment rules: long_500k only for sub-quadratic-capable archs;
+    encoder-only archs have no decode step."""
+    if cfg.family == "vit":
+        return shape.kind == "train" or shape.kind == "prefill"
+    if shape.name == "long_500k":
+        return cfg.long_context_capable
+    return True
+
+
+def uniform_schedule(kind: str, n: int) -> Schedule:
+    return ((kind, n),)

@@ -1,0 +1,20 @@
+"""deepseek-67b  [dense]  95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400 — llama-arch  [arXiv:2401.02954; hf]"""
+from repro.configs.base import ModelConfig, uniform_schedule
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22_016,
+    vocab=102_400,
+    schedule=uniform_schedule("attn", 95),
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    rope_theta=10_000.0,
+    attention_sharding="head_tp",
+)

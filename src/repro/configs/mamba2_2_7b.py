@@ -1,0 +1,27 @@
+"""mamba2-2.7b  [ssm]  64L d_model=2560 (attn-free) d_ff=0 vocab=50280,
+ssm_state=128 — SSD (state-space duality)  [arXiv:2405.21060; unverified]
+
+Attention-free: the paper's FlashAttention technique (T2) is inapplicable —
+the SSD chunk kernel takes its place; the fused output-projection reduction
+(T3) still applies to the SSD head outputs.  long_500k RUN: O(1) state."""
+from repro.configs.base import ModelConfig, uniform_schedule
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab=50_280,
+    schedule=uniform_schedule("ssm", 64),
+    ssm_state=128,
+    ssm_head_dim=64,
+    d_inner=5120,
+    conv_width=4,
+    norm="rmsnorm",
+    causal=True,
+    attention_sharding="seq_sp",
+)

@@ -1,0 +1,28 @@
+"""whisper-base  [audio]  6L d_model=512 8H d_ff=2048 vocab=51865 —
+enc-dec, conv frontend (stub)  [arXiv:2212.04356; unverified]
+
+Backbone only: the conv/mel frontend is a STUB — input_specs() supplies
+precomputed frame embeddings (1500 x d_model).  6 encoder + 6 decoder layers.
+decode_32k is lowered mechanically per the assignment (real whisper caps the
+target length at 448).  8 heads don't divide 16 -> seq_sp."""
+from repro.configs.base import ModelConfig, uniform_schedule
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab=51_865,
+    schedule=uniform_schedule("dec", 6),
+    enc_schedule=uniform_schedule("enc", 6),
+    n_enc_layers=6,
+    enc_seq=1500,
+    mlp_act="gelu",
+    norm="layernorm",
+    rope_theta=0.0,          # whisper uses learned/sinusoidal positions
+    attention_sharding="seq_sp",
+)

@@ -1,0 +1,50 @@
+"""Activation functions, including the paper's i-GELU polynomial (T5).
+
+The paper avoids costly tanh/division on Snitch by using the I-BERT
+second-order polynomial approximation of GELU (Kim et al. [46]).  On TPU the
+VPU evaluates tanh natively, but the polynomial is still cheaper (2 mul + 2
+add vs a transcendental) and we keep it as the optimized-path default so the
+ablation benchmark can toggle exact vs i-GELU like the paper does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# I-BERT constants: L(x) = sign(x) [a (clip(|x|, max=-b) + b)^2 + 1]
+_A = -0.2888
+_B = -1.769
+
+
+def i_gelu(x):
+    """Second-order polynomial GELU (I-BERT).  Max abs err ~0.01."""
+    xf = x.astype(jnp.float32)
+    arg = xf * (1.0 / jnp.sqrt(2.0).astype(jnp.float32))
+    sgn = jnp.sign(arg)
+    a = jnp.minimum(jnp.abs(arg), -_B)
+    erf_approx = sgn * (_A * (a + _B) ** 2 + 1.0)
+    return (0.5 * xf * (1.0 + erf_approx)).astype(x.dtype)
+
+
+def gelu_exact(x):
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=False).astype(x.dtype)
+
+
+def gelu_tanh(x):
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def silu(x):
+    return jax.nn.silu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+ACTIVATIONS = {
+    "gelu": gelu_tanh,
+    "gelu_exact": gelu_exact,
+    "i_gelu": i_gelu,
+    "silu": silu,
+}
+
+
+def get_activation(name: str):
+    return ACTIVATIONS[name]

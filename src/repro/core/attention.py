@@ -1,0 +1,375 @@
+"""Multi-head attention in manual-SPMD form (paper T2 + T3 + T4).
+
+All functions run *inside* the step's `shard_map` (launch/steps.py) and
+consult the static `Plan` for axis names.  With an empty plan (no mesh) every
+collective degrades to identity, so the same code runs unsharded in tests.
+
+Sharding schemes (train / prefill):
+  head_tp   residual seq-sharded -> all-gather x over `model` (Megatron-SP),
+            Q heads sharded over `model`, K/V computed column-sharded and
+            re-gathered (cheap under GQA), flash attention per head shard,
+            out-projection contracted on local heads -> reduce-scatter back
+            to sequence-sharded.  The concatenated head tensor never exists
+            (paper T3); the reduce-scatter *is* the paper's log-tree
+            cluster-to-cluster reduction (a literal binary-tree schedule is
+            selectable via core.collectives.set_reduce_method("tree")).
+  seq_sp    for n_heads % tp != 0 (phi4 24H, hymba 25H, whisper 8H):
+            Q stays sequence-sharded with full weights, K/V all-gathered over
+            the sequence axis, flash attention with a query-position offset.
+
+Decode (AR): the KV cache is *sequence-sharded* over `plan.cache_axes`; every
+device attends its cache chunk producing online-softmax partials (m, l, o)
+which are merged with the cross-device distributed-softmax rule (paper T4).
+Weights stay tensor-parallel; only O(B·H·hd) activations cross the wire.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as col
+from repro.core.nn import act_dtype, gather_w, pdot
+from repro.core.precision import Policy
+from repro.core.rope import apply_rope
+from repro.kernels import ops
+from repro.sharding.plan import Plan
+
+NEG_INF = -1e30
+CACHE_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def attention_param_dims(cfg) -> dict:
+    return {"wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"),
+            "wv": ("fsdp", "tp"), "wo": ("tp", "fsdp")}
+
+
+def attention_param_shapes(cfg) -> dict:
+    E, H, hd, KV = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.n_kv_heads
+    return {"wq": (E, H * hd), "wk": (E, KV * hd),
+            "wv": (E, KV * hd), "wo": (H * hd, E)}
+
+
+def init_attention(key, cfg, dtype):
+    shapes = attention_param_shapes(cfg)
+    ks = jax.random.split(key, len(shapes))
+    return {n: (jax.random.normal(k, s) * 0.02).astype(dtype)
+            for (n, s), k in zip(sorted(shapes.items()), ks)}
+
+
+# --------------------------------------------------------------------------
+# static head layout
+# --------------------------------------------------------------------------
+
+class KVLayout(NamedTuple):
+    n_kv_loc: int       # kv heads each device holds for attention
+    aligned: bool       # True: the column shard of wk IS the local kv heads
+
+
+def kv_layout(cfg, tp: int) -> KVLayout:
+    H, KV, G = cfg.n_heads, cfg.n_kv_heads, cfg.q_per_kv
+    if tp == 1:
+        return KVLayout(KV, True)
+    assert H % tp == 0, (H, tp)
+    if KV % tp == 0:
+        return KVLayout(KV // tp, True)
+    h_loc = H // tp
+    n_loc = max(1, h_loc // G)
+    for i in range(tp):           # no q-head group may straddle kv shards
+        lo, hi = (i * h_loc) // G, (i * h_loc + h_loc - 1) // G
+        assert hi - lo + 1 <= n_loc, (
+            f"kv heads straddle shards: tp={tp} H={H} KV={KV}")
+    return KVLayout(n_loc, False)
+
+
+def _first_kv(cfg, tp, tp_axes):
+    """Traced index of this device's first kv head (unaligned layout)."""
+    h_loc = cfg.n_heads // tp
+    return (col.axis_index(tp_axes) * h_loc) // cfg.q_per_kv
+
+
+def _attention_fn(plan: Plan):
+    """Flash kernel (optimized, T2) or naive full-materialization reference
+    (the paper's baseline implementation — benchmarks/ablation)."""
+    if plan.naive_attention:
+        from repro.kernels.ref import attention_ref
+        return attention_ref
+    return ops.flash_attention
+
+
+# --------------------------------------------------------------------------
+# distributed softmax merge (T4) — manual-SPMD variant
+# --------------------------------------------------------------------------
+
+def merge_partials(o, m, l, axes):
+    """Merge per-shard online-softmax partials across `axes`.
+    o: [..., D] unnormalized; m, l: [...] running max / sum-exp (fp32)."""
+    if not axes:
+        return o / jnp.maximum(l, 1e-30)[..., None]
+    m_all = col.pmax(jax.lax.stop_gradient(m), axes)   # stabilizer only
+    corr = jnp.exp(m - m_all)
+    l_all = col.psum(l * corr, axes)
+    o_all = col.psum(o * corr[..., None], axes)
+    return o_all / jnp.maximum(l_all, 1e-30)[..., None]
+
+
+def decode_partials(q, k_loc, v_loc, valid, *, sm_scale):
+    """One-token attention over a local cache chunk -> (o, m, l) partials.
+    q: [B, H, D]; k/v_loc: [B, Sl, KV, D]; valid: [B, Sl] bool.  GEMMs in
+    operand dtype (fp32 accumulation), statistics fp32 (paper T6)."""
+    B, H, D = q.shape
+    KV = k_loc.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_loc.astype(q.dtype),
+                   preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype),
+                   v_loc.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H)
+
+
+# --------------------------------------------------------------------------
+# KV-cache construction (prefill)
+# --------------------------------------------------------------------------
+
+def ring_from_full(k_full, window: int):
+    """Arrange the last `window` positions of [B, S, KV, hd] into ring-buffer
+    order (slot = pos % window).  S < window pads at the tail (masked by pos
+    validity at decode)."""
+    B, S = k_full.shape[:2]
+    if S >= window:
+        tail = k_full[:, S - window:]
+        return jnp.roll(tail, shift=S % window, axis=1)
+    pad = window - S
+    return jnp.pad(k_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+def cache_slice(k_full, plan: Plan):
+    """Slice this device's cache-sequence chunk from a fully-gathered
+    [B, W, KV, hd] tensor."""
+    W = k_full.shape[1]
+    shards = plan.cache_shards
+    chunk = W // shards
+    start = col.axis_index(plan.cache_axes) * chunk
+    return jax.lax.dynamic_slice_in_dim(k_full, start, chunk, axis=1)
+
+
+def build_cache(k_full, v_full, plan: Plan, *, window: int, cache_len: int):
+    """-> {"k","v"} local shards [B, cache_len/shards, KV, hd]
+    (plan.kv_cache_dtype).  window > 0 => ring cache of `window` slots."""
+    S = k_full.shape[1]
+    if window > 0:
+        k_full = ring_from_full(k_full, window)
+        v_full = ring_from_full(v_full, window)
+    elif S < cache_len:
+        pad = cache_len - S
+        k_full = jnp.pad(k_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_full = jnp.pad(v_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cd = jnp.dtype(plan.kv_cache_dtype)
+    return {"k": cache_slice(k_full.astype(cd), plan),
+            "v": cache_slice(v_full.astype(cd), plan)}
+
+
+# --------------------------------------------------------------------------
+# full-sequence attention (train / prefill / encoder)
+# --------------------------------------------------------------------------
+
+def attn_full(p, x, *, plan: Plan, cfg, policy: Policy, causal: bool,
+              window: int, with_cache: bool = False, cache_len: int = 0,
+              memory=None, memory_len: int = 0):
+    """x: [B, S_loc, E] sequence-sharded.  `memory`: cross-attention source
+    [B, Sm_loc, E] (whisper decoder).  Returns (y [B, S_loc, E], cache|None).
+    """
+    scheme = plan.attention_sharding
+    if memory is not None or scheme == "seq_sp" or plan.tp == 1:
+        return _attn_seq_sp(p, x, plan=plan, cfg=cfg, policy=policy,
+                            causal=causal, window=window,
+                            with_cache=with_cache, cache_len=cache_len,
+                            memory=memory, memory_len=memory_len)
+    return _attn_head_tp(p, x, plan=plan, cfg=cfg, policy=policy,
+                         causal=causal, window=window,
+                         with_cache=with_cache, cache_len=cache_len)
+
+
+def _attn_head_tp(p, x, *, plan, cfg, policy, causal, window,
+                  with_cache, cache_len):
+    tp, tp_ax = plan.tp, plan.tp_axes
+    B, S_loc, E = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h_loc = H // tp
+    ad = act_dtype(policy)
+    lay = kv_layout(cfg, tp)
+
+    gather = col.all_gather_fp8 if plan.comm_fp8 else col.all_gather
+    x_full = gather(x, plan.seq_axes, axis=1)                  # [B, S, E]
+    S = x_full.shape[1]
+    positions = jnp.arange(S)
+
+    wq = gather_w(p["wq"], plan)                               # [E, h_loc*hd]
+    q = pdot(x_full, wq, policy).reshape(B, S, h_loc, hd)
+    q = apply_rope(q, positions, theta=cfg.rope_theta,
+                   fraction=cfg.rope_fraction)
+
+    kp = pdot(x_full, gather_w(p["wk"], plan), policy)         # [B,S,KVhd/tp]
+    vp = pdot(x_full, gather_w(p["wv"], plan), policy)
+    need_full_kv = with_cache or not lay.aligned
+    if need_full_kv and tp > 1:
+        k_full = col.all_gather(kp, tp_ax, axis=-1).reshape(B, S, KV, hd)
+        v_full = col.all_gather(vp, tp_ax, axis=-1).reshape(B, S, KV, hd)
+    else:
+        k_full = kp.reshape(B, S, -1, hd)
+        v_full = vp.reshape(B, S, -1, hd)
+    k_full = apply_rope(k_full, positions, theta=cfg.rope_theta,
+                        fraction=cfg.rope_fraction)
+
+    if lay.aligned and not (need_full_kv and tp > 1):
+        k_loc, v_loc = k_full, v_full
+    elif lay.aligned:
+        i = col.axis_index(tp_ax)
+        k_loc = jax.lax.dynamic_slice_in_dim(
+            k_full, i * lay.n_kv_loc, lay.n_kv_loc, axis=2)
+        v_loc = jax.lax.dynamic_slice_in_dim(
+            v_full, i * lay.n_kv_loc, lay.n_kv_loc, axis=2)
+    else:
+        first = _first_kv(cfg, tp, tp_ax)
+        k_loc = jax.lax.dynamic_slice_in_dim(k_full, first, lay.n_kv_loc, axis=2)
+        v_loc = jax.lax.dynamic_slice_in_dim(v_full, first, lay.n_kv_loc, axis=2)
+
+    out = _attention_fn(plan)(q.astype(ad), k_loc.astype(ad),
+                              v_loc.astype(ad), causal=causal, window=window)
+    o = out.reshape(B, S, h_loc * hd)
+
+    wo = col.all_gather(p["wo"], plan.fsdp_axes, axis=1)       # [h_loc*hd, E]
+    part = pdot(o, wo, policy)                                 # partial over tp
+    y = col.psum_scatter(part, tp_ax, scatter_dimension=1)     # T3
+
+    cache = None
+    if with_cache:
+        cache = build_cache(k_full, v_full, plan, window=window,
+                            cache_len=cache_len)
+    return y, cache
+
+
+def _attn_seq_sp(p, x, *, plan, cfg, policy, causal, window, with_cache,
+                 cache_len, memory=None, memory_len=0):
+    sp_ax = plan.seq_axes
+    B, S_loc, E = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ad = act_dtype(policy)
+
+    off = col.axis_index(sp_ax) * S_loc
+    q_pos = jnp.arange(S_loc) + off
+
+    wq = gather_w(p["wq"], plan, tp_dim=1)                     # full [E, H*hd]
+    q = pdot(x, wq, policy).reshape(B, S_loc, H, hd)
+    q = apply_rope(q, q_pos, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+
+    src = x if memory is None else memory
+    Sm_loc = src.shape[1]
+    k_loc = pdot(src, gather_w(p["wk"], plan, tp_dim=1), policy)
+    v_loc = pdot(src, gather_w(p["wv"], plan, tp_dim=1), policy)
+    k_loc = k_loc.reshape(B, Sm_loc, KV, hd)
+    v_loc = v_loc.reshape(B, Sm_loc, KV, hd)
+    if memory is None:
+        k_loc = apply_rope(k_loc, q_pos, theta=cfg.rope_theta,
+                           fraction=cfg.rope_fraction)
+    gather = col.all_gather_fp8 if plan.comm_fp8 else col.all_gather
+    k_full = gather(k_loc, sp_ax, axis=1)                      # [B, Sm, KV, hd]
+    v_full = gather(v_loc, sp_ax, axis=1)
+
+    out = _attention_fn(plan)(q.astype(ad), k_full.astype(ad),
+                              v_full.astype(ad), causal=causal,
+                              window=window, q_offset=off)
+    o = out.reshape(B, S_loc, H * hd)
+
+    wo = gather_w(p["wo"], plan, fsdp_dim=1, tp_dim=0)         # full [H*hd, E]
+    y = pdot(o, wo, policy)                                    # stays sharded
+
+    cache = None
+    if with_cache:
+        cache = build_cache(k_full, v_full, plan, window=window,
+                            cache_len=cache_len)
+    return y, cache
+
+
+# --------------------------------------------------------------------------
+# AR decode (T4: sequence-sharded cache + distributed softmax)
+# --------------------------------------------------------------------------
+
+def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
+                window: int, cross: bool = False, memory_len: int = 0):
+    """One decode step.  x: [B, E] (replicated over tp); pos: [B] int32 —
+    position index of the token being written; cache: {"k","v"} local shards
+    [B, W_loc, KV, hd].  Returns (y [B, E], updated cache)."""
+    tp, tp_ax, c_ax = plan.tp, plan.tp_axes, plan.cache_axes
+    B, E = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ad = act_dtype(policy)
+    sm_scale = float(1.0 / (hd ** 0.5))
+
+    W_loc = cache["k"].shape[1]
+    W = W_loc * plan.cache_shards                  # global cache slots
+    ring = window > 0 and W == window
+
+    qp = pdot(x, gather_w(p["wq"], plan), policy)              # [B, Hhd/tp]
+    q = col.all_gather(qp, tp_ax, axis=-1).reshape(B, H, hd)
+    q = apply_rope(q[:, None], pos[:, None], theta=cfg.rope_theta,
+                   fraction=cfg.rope_fraction)[:, 0]
+
+    if not cross:
+        kp = pdot(x, gather_w(p["wk"], plan), policy)
+        vp = pdot(x, gather_w(p["wv"], plan), policy)
+        k_new = col.all_gather(kp, tp_ax, axis=-1).reshape(B, KV, hd)
+        v_new = col.all_gather(vp, tp_ax, axis=-1).reshape(B, KV, hd)
+        k_new = apply_rope(k_new[:, None], pos[:, None], theta=cfg.rope_theta,
+                           fraction=cfg.rope_fraction)[:, 0]
+        slot = pos % W if ring else pos
+        start = col.axis_index(c_ax) * W_loc
+        loc = slot - start
+        # negative indices WRAP in .at[] before mode="drop" applies — route
+        # non-owned slots to an out-of-bounds positive index instead
+        loc = jnp.where((loc >= 0) & (loc < W_loc), loc, W_loc)
+        rows = jnp.arange(B)
+        cache = {
+            "k": cache["k"].at[rows, loc].set(
+                k_new.astype(cache["k"].dtype), mode="drop"),
+            "v": cache["v"].at[rows, loc].set(
+                v_new.astype(cache["v"].dtype), mode="drop"),
+        }
+    else:
+        start = col.axis_index(c_ax) * W_loc
+
+    # validity of local slots
+    gidx = jnp.arange(W_loc)[None, :] + start                  # [1, W_loc]
+    if cross:
+        valid = jnp.broadcast_to(gidx < memory_len, (B, W_loc))
+    elif ring:
+        # slot s holds abs position pos - ((pos - s) mod W); valid if >= 0
+        valid = (pos[:, None] + 1 >= W) | (gidx <= pos[:, None])
+    else:
+        valid = gidx <= pos[:, None]
+        if window > 0:
+            valid &= gidx > (pos[:, None] - window)
+
+    o, m, l = decode_partials(q.astype(ad), cache["k"], cache["v"], valid,
+                              sm_scale=sm_scale)
+    merged = merge_partials(o, m, l, c_ax).reshape(B, H * hd)  # T4 merge
+
+    rows_loc = (H * hd) // tp
+    i = col.axis_index(tp_ax)
+    o_loc = jax.lax.dynamic_slice_in_dim(
+        merged.astype(ad), i * rows_loc, rows_loc, axis=1)
+    wo = gather_w(p["wo"], plan, fsdp_dim=1)                   # [Hhd/tp, E]
+    part = pdot(o_loc, wo, policy, out_dtype=jnp.float32)
+    y = col.psum(part, tp_ax).astype(ad)
+    return y, cache

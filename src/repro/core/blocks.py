@@ -1,0 +1,230 @@
+"""Transformer blocks: one assembly per layer kind (configs.base docstring).
+
+Every block is pre-norm residual.  `block_full` handles train / prefill /
+encoder passes (sequence-sharded x); `block_decode` handles one AR step
+(x: [B, E]).  Both are `lax.scan`-compatible: stacked layer params in,
+stacked caches out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as attn
+from repro.core import mlp as mlp_mod
+from repro.core import ssm as ssm_mod
+from repro.kernels import ops
+from repro.sharding.plan import Plan
+
+ATTN_KINDS = ("attn", "local", "moe", "moe_local", "hybrid_attn",
+              "hybrid_local", "enc", "dec", "vit")
+SSM_KINDS = ("ssm", "hybrid_attn", "hybrid_local")
+MOE_KINDS = ("moe", "moe_local")
+MLP_KINDS = ("attn", "local", "hybrid_attn", "hybrid_local", "enc", "dec",
+             "vit")
+LOCAL_KINDS = ("local", "moe_local", "hybrid_local")
+BIDIR_KINDS = ("enc", "vit")
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def _norm_shapes(cfg):
+    E = cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": (E,)}
+    return {"scale": (E,), "bias": (E,)}
+
+
+def _norm_dims(cfg):
+    return {k: (None,) for k in _norm_shapes(cfg)}
+
+
+def _init_norm(cfg, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def block_param_shapes(kind: str, cfg) -> dict:
+    out = {"ln1": _norm_shapes(cfg)}
+    if kind in ATTN_KINDS:
+        out["attn"] = attn.attention_param_shapes(cfg)
+    if kind in SSM_KINDS or kind == "ssm":
+        out["ssm"] = ssm_mod.ssm_param_shapes(cfg)
+    if kind == "dec":
+        out["lnx"] = _norm_shapes(cfg)
+        out["xattn"] = attn.attention_param_shapes(cfg)
+    if kind in MOE_KINDS:
+        out["ln2"] = _norm_shapes(cfg)
+        out["moe"] = mlp_mod.moe_param_shapes(cfg)
+    elif kind in MLP_KINDS:
+        out["ln2"] = _norm_shapes(cfg)
+        out["mlp"] = mlp_mod.mlp_param_shapes(cfg)
+    return out
+
+
+def block_param_dims(kind: str, cfg) -> dict:
+    out = {"ln1": _norm_dims(cfg)}
+    if kind in ATTN_KINDS:
+        out["attn"] = attn.attention_param_dims(cfg)
+    if kind in SSM_KINDS or kind == "ssm":
+        out["ssm"] = ssm_mod.ssm_param_dims(cfg)
+    if kind == "dec":
+        out["lnx"] = _norm_dims(cfg)
+        out["xattn"] = attn.attention_param_dims(cfg)
+    if kind in MOE_KINDS:
+        out["ln2"] = _norm_dims(cfg)
+        out["moe"] = mlp_mod.moe_param_dims(cfg)
+    elif kind in MLP_KINDS:
+        out["ln2"] = _norm_dims(cfg)
+        out["mlp"] = mlp_mod.mlp_param_dims(cfg)
+    return out
+
+
+def init_block(key, kind: str, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    out = {"ln1": _init_norm(cfg, dtype)}
+    if kind in ATTN_KINDS:
+        out["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    if kind in SSM_KINDS or kind == "ssm":
+        out["ssm"] = ssm_mod.init_ssm(ks[1], cfg, dtype)
+    if kind == "dec":
+        out["lnx"] = _init_norm(cfg, dtype)
+        out["xattn"] = attn.init_attention(ks[2], cfg, dtype)
+    if kind in MOE_KINDS:
+        out["ln2"] = _init_norm(cfg, dtype)
+        out["moe"] = mlp_mod.init_moe(ks[3], cfg, dtype)
+    elif kind in MLP_KINDS:
+        out["ln2"] = _init_norm(cfg, dtype)
+        out["mlp"] = mlp_mod.init_mlp(ks[3], cfg, dtype)
+    return out
+
+
+# --------------------------------------------------------------------------
+# static per-kind attention attributes
+# --------------------------------------------------------------------------
+
+def kind_window(kind: str, cfg) -> int:
+    return cfg.sliding_window if kind in LOCAL_KINDS else 0
+
+
+def kind_causal(kind: str, cfg) -> bool:
+    if kind in BIDIR_KINDS:
+        return False
+    return cfg.causal
+
+
+def kind_cache_len(kind: str, cfg, max_seq: int) -> int:
+    """Global KV-cache slots for this kind (ring caches: the window)."""
+    w = kind_window(kind, cfg)
+    return min(w, max_seq) if w > 0 and w < max_seq else max_seq
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def block_full(kind: str, p, x, *, plan: Plan, cfg, policy,
+               with_cache: bool = False, max_seq: int = 0, memory=None,
+               memory_len: int = 0):
+    """x: [B, S_loc, E] -> (x', cache | None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    causal = kind_causal(kind, cfg)
+    window = kind_window(kind, cfg)
+    cache_len = kind_cache_len(kind, cfg, max_seq) if with_cache else 0
+
+    h = ops.norm(x, p["ln1"], cfg.norm)
+    if kind == "ssm":
+        y, sc = ssm_mod.ssm_full(p["ssm"], h, plan=plan, cfg=cfg,
+                                 policy=policy, with_cache=with_cache)
+        if with_cache:
+            cache.update(sc)
+        return x + y, (cache if with_cache else None), aux
+
+    y, kv = attn.attn_full(p["attn"], h, plan=plan, cfg=cfg, policy=policy,
+                           causal=causal, window=window,
+                           with_cache=with_cache, cache_len=cache_len)
+    if with_cache:
+        cache.update(kv)
+    if kind in ("hybrid_attn", "hybrid_local"):
+        s, sc = ssm_mod.ssm_full(p["ssm"], h, plan=plan, cfg=cfg,
+                                 policy=policy, with_cache=with_cache)
+        y = (y + s) * 0.5
+        if with_cache:
+            cache.update(sc)
+    x = x + y
+
+    if kind == "dec":
+        hx = ops.norm(x, p["lnx"], cfg.norm)
+        yx, xkv = attn.attn_full(p["xattn"], hx, plan=plan, cfg=cfg,
+                                 policy=policy, causal=False, window=0,
+                                 with_cache=with_cache,
+                                 cache_len=memory.shape[1] * plan.sp
+                                 if memory is not None else 0,
+                                 memory=memory, memory_len=memory_len)
+        x = x + yx
+        if with_cache:
+            cache["ck"], cache["cv"] = xkv["k"], xkv["v"]
+
+    if kind in MOE_KINDS:
+        h2 = ops.norm(x, p["ln2"], cfg.norm)
+        y2, aux = mlp_mod.moe_full(p["moe"], h2, plan=plan, cfg=cfg,
+                                   policy=policy)
+        x = x + y2
+    elif kind in MLP_KINDS:
+        h2 = ops.norm(x, p["ln2"], cfg.norm)
+        y2 = mlp_mod.mlp_full(p["mlp"], h2, plan=plan, cfg=cfg, policy=policy)
+        x = x + y2
+    return x, (cache if with_cache else None), aux
+
+
+def block_decode(kind: str, p, x, pos, cache, *, plan: Plan, cfg, policy,
+                 memory_len: int = 0):
+    """x: [B, E]; pos: [B]; cache: this layer's cache dict.
+    Returns (x', updated cache)."""
+    window = kind_window(kind, cfg)
+    new_cache = dict(cache)
+
+    h = ops.norm(x, p["ln1"], cfg.norm)
+    if kind == "ssm":
+        y, sc = ssm_mod.ssm_decode(p["ssm"], h,
+                                   {k: cache[k] for k in ("h", "cx", "cbc")},
+                                   plan=plan, cfg=cfg, policy=policy)
+        new_cache.update(sc)
+        return x + y, new_cache
+
+    y, kv = attn.attn_decode(p["attn"], h, pos,
+                             {"k": cache["k"], "v": cache["v"]},
+                             plan=plan, cfg=cfg, policy=policy, window=window)
+    new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+    if kind in ("hybrid_attn", "hybrid_local"):
+        s, sc = ssm_mod.ssm_decode(p["ssm"], h,
+                                   {k: cache[k] for k in ("h", "cx", "cbc")},
+                                   plan=plan, cfg=cfg, policy=policy)
+        y = (y + s) * 0.5
+        new_cache.update(sc)
+    x = x + y
+
+    if kind == "dec":
+        hx = ops.norm(x, p["lnx"], cfg.norm)
+        yx, _ = attn.attn_decode(p["xattn"], hx, pos,
+                                 {"k": cache["ck"], "v": cache["cv"]},
+                                 plan=plan, cfg=cfg, policy=policy, window=0,
+                                 cross=True, memory_len=memory_len)
+        x = x + yx
+
+    if kind in MOE_KINDS:
+        h2 = ops.norm(x, p["ln2"], cfg.norm)
+        y2, _ = mlp_mod.moe_decode(p["moe"], h2, plan=plan, cfg=cfg,
+                                   policy=policy)
+        x = x + y2
+    elif kind in MLP_KINDS:
+        h2 = ops.norm(x, p["ln2"], cfg.norm)
+        y2 = mlp_mod.mlp_decode(p["mlp"], h2, plan=plan, cfg=cfg,
+                                policy=policy)
+        x = x + y2
+    return x, new_cache

@@ -1,0 +1,188 @@
+"""Distributed Softmax primitives (paper T4 / title claim).
+
+Two cross-device online-softmax features built on one merge rule:
+
+1. `merge_partials` — combine per-shard flash partials (o, m, l):
+       m* = max_i m_i;  l* = sum_i l_i e^{m_i - m*};  o* = sum_i o_i e^{m_i-m*} / l*
+   Used by the sequence-sharded KV-cache decode path: each device attends
+   its cache chunk, partials meet over the tp axis (the paper distributes
+   exactly these row statistics across clusters).
+
+2. `distributed_cross_entropy` — vocabulary-sharded stable log-softmax CE:
+   the logits all-gather never happens; only the scalar statistics cross
+   the wire (max + sum-exp + the label logit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.context import get_ctx
+
+NEG_INF = -1e30
+
+
+def merge_partials(o, m, l, axis_name: str):
+    """o: [..., D] partial unnormalized output; m, l: [...] running max /
+    sum-exp.  All shards return the merged, normalized output."""
+    m_all = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_all)
+    l_all = jax.lax.psum(l * corr, axis_name)
+    o_all = jax.lax.psum(o * corr[..., None], axis_name)
+    return o_all / jnp.maximum(l_all, 1e-30)[..., None]
+
+
+def local_decode_partials(q, k_loc, v_loc, valid, *, sm_scale):
+    """One-token attention over a local cache chunk -> (o, m, l) partials.
+
+    q: [B, H, D] fp-any; k_loc/v_loc: [B, Sl, KV, D]; valid: [B, Sl] bool.
+    fp32 statistics (paper invariant)."""
+    B, H, D = q.shape
+    KV = k_loc.shape[2]
+    G = H // KV
+    qf = (q.astype(jnp.float32) * sm_scale).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_loc.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)                                   # [B, KV, G]
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_loc.astype(jnp.float32))
+    return o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H)
+
+
+def distributed_decode_attention(q, k_cache, v_cache, pos, *, window=0,
+                                 out_dtype=None):
+    """Decode attention over a sequence-sharded KV cache (tp axis shards S).
+
+    q: [B, H, D]; caches: [B, S, KV, D] (S sharded over tp); pos: [B] int32 —
+    index of the *current* token (cache entries 0..pos are valid).
+    Degrades to single-shard attention when no mesh."""
+    ctx = get_ctx()
+    out_dtype = out_dtype or q.dtype
+    B, H, D = q.shape
+    S = k_cache.shape[1]
+    sm_scale = float(1.0 / (D ** 0.5))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+    def local(q, k_loc, v_loc, pos, s0):
+        Sl = k_loc.shape[1]
+        idx = jnp.arange(Sl)[None, :] + s0
+        valid = idx <= pos[:, None]
+        if window > 0:
+            valid &= idx > pos[:, None] - window
+        return local_decode_partials(q, k_loc, v_loc, valid,
+                                     sm_scale=sm_scale)
+
+    if ctx.mesh is None or ctx.tp == 1:
+        o, m, l = local(q, k_cache, v_cache, pos, 0)
+        return (o / jnp.maximum(l, 1e-30)[..., None]).astype(out_dtype)
+
+    tp_axis = ctx.axis_names("tp")[0]
+    dp_spec = ctx.pspec("dp")[0]
+
+    def inner(q, k_loc, v_loc, pos):
+        n = jax.lax.axis_size(tp_axis)
+        i = jax.lax.axis_index(tp_axis)
+        s0 = i * (S // n)
+        o, m, l = local(q, k_loc, v_loc, pos, s0)
+        merged = merge_partials(o, m, l, tp_axis)
+        return merged.astype(out_dtype)
+
+    return jax.shard_map(
+        inner, mesh=ctx.mesh,
+        in_specs=(P(dp_spec, None, None), P(dp_spec, tp_axis, None, None),
+                  P(dp_spec, tp_axis, None, None), P(dp_spec)),
+        out_specs=P(dp_spec, None, None), check_vma=False,
+    )(q, k_cache, v_cache, pos)
+
+
+def distributed_cross_entropy(x, unemb, labels, *, mask=None, chunk=1024,
+                              logit_dtype=jnp.float32):
+    """Mean CE over tokens with the vocabulary sharded over tp.
+
+    x: [B, T, E] (residual stream, sequence-sharded is fine — the shard_map
+    runs over tp with x's sequence gathered chunk-by-chunk);
+    unemb: [E, V] sharded (fsdp, tp); labels: [B, T] int32.
+    Returns (mean_loss, n_tokens).  Never materializes [B, T, V] at once:
+    iterates sequence chunks of `chunk` tokens."""
+    ctx = get_ctx()
+    B, T, E = x.shape
+    V = unemb.shape[1]
+    if mask is None:
+        mask = jnp.ones((B, T), bool)
+
+    def ce_of_chunk(xc, lc, mc, w, v0):
+        # xc: [B, C, E]; w: [E, Vl]; v0: local vocab offset
+        z = jax.lax.dot_general(xc, w, (((2,), (0,)), ((), ())),
+                                preferred_element_type=logit_dtype)
+        m_loc = z.max(axis=-1)
+        lse_loc_m = m_loc
+        # label logit if owned by this shard
+        owned = (lc >= v0) & (lc < v0 + w.shape[1])
+        lidx = jnp.clip(lc - v0, 0, w.shape[1] - 1)
+        lab = jnp.take_along_axis(z, lidx[..., None], axis=-1)[..., 0]
+        lab = jnp.where(owned, lab, 0.0)
+        return z, lse_loc_m, lab
+
+    if ctx.mesh is None or ctx.tp == 1:
+        def body(carry, xs):
+            xc, lc, mc = xs
+            z, _, _ = ce_of_chunk(xc, lc, mc, unemb, 0)
+            lse = jax.nn.logsumexp(z, axis=-1)
+            lab = jnp.take_along_axis(z, lc[..., None], axis=-1)[..., 0]
+            loss = jnp.where(mc, lse - lab, 0.0).sum()
+            return carry + loss, None
+
+        nchunk = max(1, T // min(chunk, T))
+        Tc = T // nchunk
+        assert T % nchunk == 0, (T, nchunk)
+        xs = (x.reshape(B, nchunk, Tc, E).swapaxes(0, 1),
+              labels.reshape(B, nchunk, Tc).swapaxes(0, 1),
+              mask.reshape(B, nchunk, Tc).swapaxes(0, 1))
+        total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32), xs)
+        n = jnp.maximum(mask.sum(), 1)
+        return total / n, n
+
+    tp_axis = ctx.axis_names("tp")[0]
+    dp_spec = ctx.pspec("dp")[0]
+    fsdp_axis = (ctx.axis_names("fsdp") or (None,))[0]
+
+    def inner(x, labels, mask, w):
+        # w arrives (E, V/tp) but still sharded over fsdp on E -> gather it
+        if fsdp_axis is not None:
+            w = jax.lax.all_gather(w, fsdp_axis, axis=0, tiled=True)
+        n = jax.lax.axis_size(tp_axis)
+        i = jax.lax.axis_index(tp_axis)
+        v0 = i * (V // n)
+
+        def body(carry, xs):
+            xc, lc, mc = xs
+            z, m_loc, lab = ce_of_chunk(xc, lc, mc, w, v0)
+            m_all = jax.lax.pmax(m_loc, tp_axis)
+            se = jnp.exp(z - m_all[..., None]).sum(-1)
+            se_all = jax.lax.psum(se, tp_axis)
+            lab_all = jax.lax.psum(lab, tp_axis)
+            lse = m_all + jnp.log(se_all)
+            loss = jnp.where(mc, lse - lab_all, 0.0).sum()
+            return carry + loss, None
+
+        Bl, Tl = labels.shape
+        nchunk = max(1, Tl // max(1, min(chunk, Tl)))
+        Tc = Tl // nchunk
+        xs = (x.reshape(Bl, nchunk, Tc, E).swapaxes(0, 1),
+              labels.reshape(Bl, nchunk, Tc).swapaxes(0, 1),
+              mask.reshape(Bl, nchunk, Tc).swapaxes(0, 1))
+        total, _ = jax.lax.scan(jax.checkpoint(body),
+                                jnp.zeros((), jnp.float32), xs)
+        return total[None]
+
+    totals = jax.shard_map(
+        inner, mesh=ctx.mesh,
+        in_specs=(P(dp_spec, None, None), P(dp_spec, None), P(dp_spec, None),
+                  P(fsdp_axis, tp_axis)),
+        out_specs=P(dp_spec), check_vma=False,
+    )(x, labels, mask, unemb)
+    total = totals.sum()
+    n = jnp.maximum(mask.sum(), 1)
+    return total / n, n

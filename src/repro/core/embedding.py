@@ -1,0 +1,142 @@
+"""Vocabulary-sharded embedding, distributed cross-entropy, greedy sampling.
+
+Embedding table [Vp, E]: vocab sharded over tp, embed dim over fsdp — lookup
+takes locally-owned rows and psums over tp (exactly one owner per id).
+
+CE (paper T4 generalized): the unembedding is vocab-sharded; the [*, V]
+logits are never gathered — only fp32 scalar statistics (max, sum-exp, label
+logit) cross the wire, chunked over the local sequence under `lax.scan`
+with rematerialization so no logits chunk survives to the backward pass.
+
+Vocabularies are padded to multiples of 256 (configs.base.padded_vocab);
+padded columns are masked to -inf everywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as col
+from repro.core.nn import act_dtype, pdot
+from repro.sharding.plan import Plan
+
+NEG_INF = -1e30
+
+
+def embedding_param_shapes(cfg) -> dict:
+    Vp, E = cfg.padded_vocab, cfg.d_model
+    return {"embed": (Vp, E), "unemb": (E, Vp)}
+
+
+def embedding_param_dims(cfg) -> dict:
+    return {"embed": ("tp", "fsdp"), "unemb": ("fsdp", "tp")}
+
+
+def init_embedding(key, cfg, dtype):
+    shapes = embedding_param_shapes(cfg)
+    k1, k2 = jax.random.split(key)
+    return {"embed": (jax.random.normal(k1, shapes["embed"]) * 0.02
+                      ).astype(dtype),
+            "unemb": (jax.random.normal(k2, shapes["unemb"]) * 0.02
+                      ).astype(dtype)}
+
+
+def _owned_rows(emb, ids, plan: Plan, policy):
+    """Rows for locally-owned vocab ids, zero elsewhere.  Gathers the table's
+    fsdp-sharded embed dim first (weight gather — batch-independent)."""
+    w = col.all_gather(emb, plan.fsdp_axes, axis=1)            # [Vp/tp, E]
+    v_loc = w.shape[0]
+    off = col.axis_index(plan.tp_axes) * v_loc
+    idx = ids - off
+    owned = (idx >= 0) & (idx < v_loc)
+    rows = jnp.take(w, jnp.clip(idx, 0, v_loc - 1), axis=0)
+    return jnp.where(owned[..., None], rows, 0).astype(act_dtype(policy))
+
+
+def embed_sequence(emb, ids, *, plan: Plan, policy):
+    """emb: local [Vp/tp, E/fsdp]; ids: [B, S_tot] — the FULL sequence.
+    Returns [B, S_loc, E] sequence-sharded.
+
+    Megatron-SP embedding: every tp peer computes the rows its vocab shard
+    owns for the *whole* sequence (exactly one owner per id, so the combine
+    is exact even in bf16), then one reduce-scatter both sums the vocab
+    partials and lands the result sequence-sharded."""
+    rows = _owned_rows(emb, ids, plan, policy)                 # [B, S_tot, E]
+    return col.psum_scatter(rows, plan.tp_axes, scatter_dimension=1)
+
+
+def embed_token(emb, ids, *, plan: Plan, policy):
+    """ids: [B] (decode) -> [B, E] replicated over tp."""
+    rows = _owned_rows(emb, ids, plan, policy)                 # [B, E]
+    return col.psum(rows.astype(jnp.float32),
+                    plan.tp_axes).astype(act_dtype(policy))
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return max(c, 1)
+
+
+def ce_loss(x, unemb, labels, valid, *, plan: Plan, cfg, policy,
+            chunk: int = 2048):
+    """x: [B, S_loc, E] sequence-sharded; unemb: local [E/fsdp, Vp/tp];
+    labels/valid: [B, S_tot] — FULL sequence (vocab-parallel CE needs every
+    tp peer on the same positions).  Returns (loss_sum, token_count), both
+    fp32, replicated over tp; caller psums over the batch axes only."""
+    x = col.all_gather(x, plan.seq_axes, axis=1)               # [B, S_tot, E]
+    B, T, E = x.shape
+    w = col.all_gather(unemb, plan.fsdp_axes, axis=0)          # [E, Vp/tp]
+    v_loc = w.shape[1]
+    v0 = col.axis_index(plan.tp_axes) * v_loc
+    col_real = (jnp.arange(v_loc)[None, None, :] + v0) < cfg.vocab
+
+    tc = _pick_chunk(T, chunk)
+    nc = T // tc
+    xs = (x.reshape(B, nc, tc, E).swapaxes(0, 1),
+          labels.reshape(B, nc, tc).swapaxes(0, 1),
+          valid.reshape(B, nc, tc).swapaxes(0, 1))
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        with jax.named_scope("ce_f32"):
+            z = pdot(xc, w, policy, out_dtype=jnp.float32)     # [B, tc, Vl]
+        z = jnp.where(col_real, z, NEG_INF)
+        m = z.max(axis=-1)
+        # stabilizer only — exact lse gradient doesn't depend on it
+        m_all = col.pmax(jax.lax.stop_gradient(m), plan.tp_axes)
+        se = jnp.exp(z - m_all[..., None]).sum(-1)
+        se_all = col.psum(se, plan.tp_axes)
+        lse = m_all + jnp.log(se_all)
+        lidx = lc - v0
+        own = (lidx >= 0) & (lidx < v_loc)
+        lab = jnp.take_along_axis(
+            z, jnp.clip(lidx, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+        lab = jnp.where(own, lab, 0.0)
+        lab_all = col.psum(lab, plan.tp_axes)
+        loss = jnp.where(mc, lse - lab_all, 0.0).sum()
+        return carry + loss, None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body),
+                            jnp.zeros((), jnp.float32), xs)
+    count = valid.sum().astype(jnp.float32)
+    return total, count
+
+
+def logits_local(x, unemb, *, plan: Plan, cfg, policy):
+    """x: [B, E] -> (z [B, Vp/tp] fp32 with padded cols masked, v0)."""
+    w = col.all_gather(unemb, plan.fsdp_axes, axis=0)
+    v_loc = w.shape[1]
+    v0 = col.axis_index(plan.tp_axes) * v_loc
+    with jax.named_scope("ce_f32"):
+        z = pdot(x, w, policy, out_dtype=jnp.float32)
+    z = jnp.where((jnp.arange(v_loc)[None, :] + v0) < cfg.vocab, z, NEG_INF)
+    return z, v0
+
+
+def greedy_token(x, unemb, *, plan: Plan, cfg, policy):
+    """x: [B, E] -> next token ids [B] (global argmax over sharded vocab)."""
+    z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy)
+    _, tok = col.pargmax(z, plan.tp_axes, index_offset=v0)
+    return tok

@@ -1,0 +1,78 @@
+"""Fused head-concat + output projection (paper T3) — first-class feature.
+
+The paper computes the MHA output projection on per-cluster head shards
+(K-dim spatial tiling of the GEMM) and combines the partial S x E tiles with
+a logarithmic cluster-to-cluster reduction, never materializing the
+concatenated head tensor in main memory.
+
+TPU form: the contraction input lives head-sharded (or d_ff-sharded) over
+the `tp` axis; each device contracts its local shard against its weight
+slice and the partial outputs are combined with
+  * ``reduce_scatter``  — psum_scatter over tp, output lands sequence-sharded
+                          (Megatron-SP style; XLA lowers to ICI reduce-scatter)
+  * ``tree``            — the paper's literal binary-tree schedule
+                          (core.tree_reduce, recursive halving)
+  * ``all_reduce``      — plain psum (the unfused upper bound; baseline)
+
+Runs inside shard_map over the tp axis; degrades to a plain matmul when the
+tp axis is absent/size-1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.tree_reduce import tree_psum_scatter
+from repro.sharding.context import get_ctx
+
+
+def _local_contract(x, w, accum_dtype=jnp.float32):
+    """x: [..., Kl], w: [Kl, N] -> [..., N] partial (fp32 accum)."""
+    y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=accum_dtype)
+    return y
+
+
+def fused_output_projection(x, w, *, method: str = "reduce_scatter",
+                            seq_dim: int = 1, out_dtype=None):
+    """y = concat_heads(x) @ w with the concat never materialized.
+
+    x: [B, S, K] where K (= H*hd or d_ff) is logically sharded over tp;
+    w: [K, E] sharded over tp on dim 0.  Returns y sequence-sharded over tp
+    (spec: (dp, sp, None)) — the residual-stream layout.
+    """
+    ctx = get_ctx()
+    out_dtype = out_dtype or x.dtype
+    if ctx.mesh is None or ctx.tp == 1:
+        y = _local_contract(x, w)
+        return y.astype(out_dtype)
+
+    tp_axes = ctx.axis_names("tp")
+    tp_axis = tp_axes[0]
+    dp_spec = ctx.pspec("dp")[0]
+
+    def inner(xl, wl):
+        part = _local_contract(xl, wl)          # [B, Sl(=S), E] partial
+        if method == "all_reduce":
+            full = jax.lax.psum(part, tp_axis)
+            # slice this device's sequence chunk to land in (dp, sp, None)
+            n = jax.lax.axis_size(tp_axis)
+            idx = jax.lax.axis_index(tp_axis)
+            chunk = part.shape[seq_dim] // n
+            y = jax.lax.dynamic_slice_in_dim(full, idx * chunk, chunk, seq_dim)
+        elif method == "reduce_scatter":
+            y = jax.lax.psum_scatter(part, tp_axis, scatter_dimension=seq_dim,
+                                     tiled=True)
+        elif method == "tree":
+            y = tree_psum_scatter(part, tp_axis, scatter_dim=seq_dim)
+        else:
+            raise ValueError(method)
+        return y.astype(out_dtype)
+
+    in_specs = (P(dp_spec, None, tp_axis), P(tp_axis, None))
+    out_specs = P(dp_spec, tp_axis, None)
+    return jax.shard_map(inner, mesh=ctx.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(x, w)

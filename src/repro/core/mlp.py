@@ -1,0 +1,224 @@
+"""Dense MLP and Mixture-of-Experts FFN in manual-SPMD form.
+
+Dense (paper T1 + T5): Megatron-SP — x all-gathered over the sequence axis,
+d_ff sharded over tp, activation fused into the first GEMM (i-GELU / SwiGLU,
+paper T5), second GEMM produces partials that reduce-scatter back to the
+sequence-sharded residual (paper T3 again — same primitive as attention).
+
+MoE (Mixtral): router + capacity-based scatter dispatch per data shard.
+Experts are replicated over tp with d_ff sharded *inside* each expert
+(8 experts don't divide the 16-way model axis — DESIGN.md §5): after the
+residual all-gather every tp peer sees the same tokens, so dispatch is
+collective-free and the expert GEMMs are plain d_ff tensor parallelism.
+Token chunks are processed under `lax.scan` to bound the dispatch buffers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as col
+from repro.core.activations import get_activation
+from repro.core.nn import act_dtype, gather_w, pdot
+from repro.kernels import ops
+from repro.sharding.plan import Plan
+
+MOE_CHUNK = 8192       # max tokens dispatched at once (bounds buffer memory)
+
+
+# --------------------------------------------------------------------------
+# dense MLP
+# --------------------------------------------------------------------------
+
+def mlp_param_shapes(cfg) -> dict:
+    E, F = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return {"wg": (E, F), "wu": (E, F), "w2": (F, E)}
+    return {"w1": (E, F), "w2": (F, E)}
+
+
+def mlp_param_dims(cfg) -> dict:
+    if cfg.mlp_act == "swiglu":
+        return {"wg": ("fsdp", "tp"), "wu": ("fsdp", "tp"),
+                "w2": ("tp", "fsdp")}
+    return {"w1": ("fsdp", "tp"), "w2": ("tp", "fsdp")}
+
+
+def init_mlp(key, cfg, dtype):
+    shapes = mlp_param_shapes(cfg)
+    ks = jax.random.split(key, len(shapes))
+    return {n: (jax.random.normal(k, s) * 0.02).astype(dtype)
+            for (n, s), k in zip(sorted(shapes.items()), ks)}
+
+
+def _ffn_local(xt, p, plan: Plan, cfg, policy):
+    """xt: [T, E] -> [T, E] partial (d_ff sharded over tp).  2-D so the
+    Pallas fused-GEMM kernels apply directly."""
+    ad = act_dtype(policy)
+    cd = policy.compute_dtype
+    if cfg.mlp_act == "swiglu":
+        wg = gather_w(p["wg"], plan)
+        wu = gather_w(p["wu"], plan)
+        h = ops.matmul_swiglu(xt.astype(cd), wg.astype(cd), wu.astype(cd),
+                              out_dtype=ad)
+    else:
+        w1 = gather_w(p["w1"], plan)
+        h = pdot(xt, w1, policy)
+        h = get_activation(plan.gelu_impl)(h).astype(ad)     # T5 fused epilogue
+    w2 = gather_w(p["w2"], plan, fsdp_dim=1)
+    return pdot(h, w2, policy)                               # partial over tp
+
+
+def mlp_full(p, x, *, plan: Plan, cfg, policy):
+    """x: [B, S_loc, E] sequence-sharded -> same."""
+    if plan.mlp_weight_stationary and plan.tp > 1:
+        # §Perf P3d: x never moves — gather the weights across tp instead
+        # (cheap at fp8) and compute the whole FFN on the local seq chunk
+        B, S_loc, E = x.shape
+        ad = act_dtype(policy)
+        cd = policy.compute_dtype
+        xt = x.reshape(B * S_loc, E)
+        if cfg.mlp_act == "swiglu":
+            wg = gather_w(p["wg"], plan, tp_dim=1)
+            wu = gather_w(p["wu"], plan, tp_dim=1)
+            h = ops.matmul_swiglu(xt.astype(cd), wg.astype(cd),
+                                  wu.astype(cd), out_dtype=ad)
+        else:
+            w1 = gather_w(p["w1"], plan, tp_dim=1)
+            h = pdot(xt, w1, policy)
+            h = get_activation(plan.gelu_impl)(h).astype(ad)
+        w2 = gather_w(p["w2"], plan, fsdp_dim=1, tp_dim=0)
+        return pdot(h, w2, policy).reshape(B, S_loc, E)
+    gather = col.all_gather_fp8 if plan.comm_fp8 else col.all_gather
+    x_full = gather(x, plan.seq_axes, axis=1)
+    B, S, E = x_full.shape
+    part = _ffn_local(x_full.reshape(B * S, E), p, plan, cfg, policy)
+    part = part.reshape(B, S, E)
+    return col.psum_scatter(part, plan.tp_axes, scatter_dimension=1)
+
+
+def mlp_decode(p, x, *, plan: Plan, cfg, policy):
+    """x: [B, E] replicated over tp -> same."""
+    part = _ffn_local(x, p, plan, cfg, policy)
+    return col.psum(part.astype(jnp.float32), plan.tp_axes).astype(
+        act_dtype(policy))
+
+
+# --------------------------------------------------------------------------
+# MoE FFN
+# --------------------------------------------------------------------------
+
+def moe_param_shapes(cfg) -> dict:
+    E, F, NE = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {"wr": (E, NE), "wg": (NE, E, F), "wu": (NE, E, F),
+            "w2": (NE, F, E)}
+
+
+def moe_param_dims(cfg) -> dict:
+    return {"wr": (None, None), "wg": (None, "fsdp", "tp"),
+            "wu": (None, "fsdp", "tp"), "w2": (None, "tp", "fsdp")}
+
+
+def init_moe(key, cfg, dtype):
+    shapes = moe_param_shapes(cfg)
+    ks = jax.random.split(key, len(shapes))
+    return {n: (jax.random.normal(k, s) * 0.02).astype(dtype)
+            for (n, s), k in zip(sorted(shapes.items()), ks)}
+
+
+def _bdot(a, b, policy, *, out_dtype=None):
+    """Batched expert GEMM: a [NE, C, K] @ b [NE, K, N] (MXU fp32 accum)."""
+    cd = policy.compute_dtype
+    return jax.lax.dot_general(a.astype(cd), b.astype(cd),
+                               (((2,), (1,)), ((0,), (0,))),
+                               preferred_element_type=(out_dtype
+                                                       or act_dtype(policy)))
+
+
+def moe_ffn_chunk(xc, p, *, plan: Plan, cfg, policy, capacity: int):
+    """xc: [Tc, E] -> ([Tc, E] partial over tp, aux loss scalar).
+
+    Scatter-based capacity dispatch: each (token, k) computes its slot in the
+    expert buffer via a running per-expert count; overflow drops (standard
+    Switch semantics).  No [T, NE, C] one-hot tensor is materialized.
+    """
+    Tc, E = xc.shape
+    NE, K = cfg.n_experts, cfg.top_k
+    ad = act_dtype(policy)
+
+    logits = pdot(xc, p["wr"], policy, out_dtype=jnp.float32)   # [Tc, NE]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(-1)                                  # [Tc*K]
+    flat_w = top_w.reshape(-1)
+    onehot = (flat_e[:, None] == jnp.arange(NE)[None, :]).astype(jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot              # exclusive
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    slot = jnp.where(slot < capacity, slot, capacity)           # cap -> OOB
+
+    x_rep = jnp.repeat(xc, K, axis=0)                           # [Tc*K, E]
+    xe = jnp.zeros((NE, capacity, E), ad).at[flat_e, slot].add(
+        x_rep.astype(ad), mode="drop")
+
+    wg = gather_w(p["wg"], plan, fsdp_dim=1)                    # [NE,E,F/tp]
+    wu = gather_w(p["wu"], plan, fsdp_dim=1)
+    w2 = gather_w(p["w2"], plan, fsdp_dim=2)                    # [NE,F/tp,E]
+    g = _bdot(xe, wg, policy)
+    u = _bdot(xe, wu, policy)
+    h = (jax.nn.silu(g.astype(jnp.float32))
+         * u.astype(jnp.float32)).astype(ad)
+    ye = _bdot(h, w2, policy)                                   # [NE, C, E]
+
+    y_tok = ye.at[flat_e, slot].get(mode="fill", fill_value=0)  # [Tc*K, E]
+    y = (y_tok.astype(jnp.float32) * flat_w[:, None]).reshape(Tc, K, E).sum(1)
+
+    # Switch load-balance loss: NE * sum_e f_e * p_e
+    f_e = onehot.astype(jnp.float32).mean(0) * (Tc * K) / Tc / K
+    p_e = probs.mean(0)
+    aux = NE * jnp.sum(f_e * p_e)
+    return y.astype(ad), aux
+
+
+def _chunks(T: int) -> int:
+    nc = max(1, math.ceil(T / MOE_CHUNK))
+    while T % nc:
+        nc += 1
+    return nc
+
+
+def moe_full(p, x, *, plan: Plan, cfg, policy):
+    """x: [B, S_loc, E] -> ([B, S_loc, E], aux)."""
+    gather = col.all_gather_fp8 if plan.comm_fp8 else col.all_gather
+    x_full = gather(x, plan.seq_axes, axis=1)
+    B, S, E = x_full.shape
+    T = B * S
+    nc = _chunks(T)
+    Tc = T // nc
+    capacity = int(math.ceil(Tc * cfg.top_k / cfg.n_experts
+                             * cfg.capacity_factor))
+    xs = x_full.reshape(nc, Tc, E)
+
+    def body(carry, xc):
+        y, aux = moe_ffn_chunk(xc, p, plan=plan, cfg=cfg, policy=policy,
+                               capacity=capacity)
+        return carry + aux, y
+
+    aux, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    part = ys.reshape(B, S, E)
+    y = col.psum_scatter(part, plan.tp_axes, scatter_dimension=1)
+    return y, aux / nc
+
+
+def moe_decode(p, x, *, plan: Plan, cfg, policy):
+    """x: [B, E] -> ([B, E], aux)."""
+    B = x.shape[0]
+    capacity = max(1, int(math.ceil(B * cfg.top_k / cfg.n_experts
+                                    * cfg.capacity_factor)))
+    y, aux = moe_ffn_chunk(x, p, plan=plan, cfg=cfg, policy=policy,
+                           capacity=capacity)
+    y = col.psum(y.astype(jnp.float32), plan.tp_axes)
+    return y.astype(act_dtype(policy)), aux

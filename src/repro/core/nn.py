@@ -1,0 +1,52 @@
+"""Shared numeric helpers for manual-SPMD layer code.
+
+Precision rules (paper T6): GEMM operands in the policy compute dtype,
+accumulation in fp32, softmax/normalization statistics in fp32.  Activations
+are carried in `policy.act_dtype` (bf16 for fp8 policies — the paper's
+pack/unpack conversions around low-precision GEMMs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as col
+from repro.core.precision import Policy
+
+
+def act_dtype(policy: Policy):
+    cd = jnp.dtype(policy.compute_dtype)
+    if cd in (jnp.dtype(jnp.float8_e4m3fn), jnp.dtype(jnp.float8_e5m2)):
+        return jnp.bfloat16
+    return policy.compute_dtype
+
+
+def pdot(x, w, policy: Policy, *, out_dtype=None):
+    """x: [..., K] @ w: [K, N] in the policy compute dtype.
+
+    The dot's element type is the OUTPUT dtype directly (no f32->cast pair):
+    the MXU accumulates fp32 internally either way, and emitting the narrow
+    dtype keeps the *backward* dots narrow too (the cast transpose would
+    otherwise promote every cotangent to f32).  Paper T6: conversions sit at
+    GEMM outputs.  Explicit out_dtype=f32 (CE logits) accumulates visibly."""
+    cd = policy.compute_dtype
+    od = out_dtype or act_dtype(policy)
+    return jax.lax.dot_general(
+        x.astype(cd), w.astype(cd),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=od)
+
+
+def gather_w(w, plan, *, fsdp_dim=0, tp_dim=None):
+    """FSDP all-gather of a weight shard along `fsdp_dim`; when `tp_dim` is
+    given also un-shards the tensor-parallel dim (seq_sp attention needs the
+    full weight on every device)."""
+    w = col.all_gather(w, plan.fsdp_axes, axis=fsdp_dim)
+    if tp_dim is not None:
+        w = col.all_gather(w, plan.tp_axes, axis=tp_dim)
+    return w
+
+
+def sum_sq(x):
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf)

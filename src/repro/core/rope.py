@@ -1,0 +1,50 @@
+"""Rotary position embeddings (+ sinusoidal absolute for whisper/vit).
+
+`rope_fraction` < 1 rotates only the leading fraction of head dims
+(chatglm3's 2d-RoPE rotates half).  Positions are supplied explicitly so
+sequence-parallel shards and decode steps rotate correctly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, *, theta: float, fraction: float = 1.0):
+    """x: [B, S, H, D]; positions: [S] or [B, S] int32."""
+    if theta <= 0:
+        return x
+    D = x.shape[-1]
+    inv, rot = rope_freqs(D, fraction, theta)
+    if rot == 0:
+        return x
+    pos = jnp.asarray(positions, jnp.float32)
+    if pos.ndim == 1:
+        ang = pos[:, None] * inv[None, :]              # [S, rot/2]
+        ang = ang[None, :, None, :]                    # [1, S, 1, rot/2]
+    else:
+        ang = pos[:, :, None] * inv[None, None, :]     # [B, S, rot/2]
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x[..., :rot].shape)
+    return jnp.concatenate(
+        [rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_positions(n: int, d: int, offset=0):
+    """Classic transformer sinusoidal table [n, d] (whisper-style)."""
+    pos = jnp.arange(n, dtype=jnp.float32) + offset
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = pos[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]

@@ -1,0 +1,317 @@
+"""Mamba2 SSD block in manual-SPMD form (the attention-free arch's analogue
+of the paper's flash/fusion stack — DESIGN.md §5).
+
+The SSD head dimension is a pure batch dimension of the state recurrence, so
+heads shard freely over tp without collectives; the out-projection produces
+tp-partials that reduce-scatter back to the sequence-sharded residual — the
+paper's fused-projection tree reduction (T3) applies unchanged to SSM heads.
+
+Head padding: architectures whose head count doesn't divide the 16-way model
+axis (hymba: 50 -> 64) run with padded heads whose out-projection rows are
+zero — output-exact, noted in DESIGN.md §5.  The gated-RMSNorm statistics
+mask the padded dims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as col
+from repro.core.nn import act_dtype, gather_w, pdot
+from repro.kernels import ops
+from repro.sharding.plan import Plan
+
+TP_PAD = 16     # heads padded to multiples of this (= production model axis)
+
+
+def _dims(cfg):
+    Hp = cfg.padded_ssm_heads(TP_PAD)
+    P = cfg.ssm_head_dim
+    return Hp, P, Hp * P, cfg.ssm_state, cfg.conv_width
+
+
+def ssm_param_shapes(cfg) -> dict:
+    E = cfg.d_model
+    Hp, P, dip, N, cw = _dims(cfg)
+    return {
+        "w_x": (E, dip), "w_z": (E, dip), "w_bc": (E, 2 * N),
+        "w_dt": (E, Hp), "dt_bias": (Hp,), "a_log": (Hp,), "d_skip": (Hp,),
+        "conv_x": (cw, dip), "conv_bc": (cw, 2 * N),
+        "norm_scale": (dip,), "w_out": (dip, E),
+    }
+
+
+def ssm_param_dims(cfg) -> dict:
+    return {
+        "w_x": ("fsdp", "tp"), "w_z": ("fsdp", "tp"), "w_bc": ("fsdp", None),
+        "w_dt": ("fsdp", "tp"), "dt_bias": ("tp",), "a_log": ("tp",),
+        "d_skip": ("tp",),
+        "conv_x": (None, "tp"), "conv_bc": (None, None),
+        "norm_scale": ("tp",), "w_out": ("tp", "fsdp"),
+    }
+
+
+def init_ssm(key, cfg, dtype):
+    E = cfg.d_model
+    Hp, P, dip, N, cw = _dims(cfg)
+    real_dip = cfg.ssm_heads * P
+    ks = jax.random.split(key, 8)
+    w_out = (jax.random.normal(ks[0], (dip, E)) * 0.02)
+    if real_dip < dip:          # zero pad-head rows => output exact
+        w_out = w_out.at[real_dip:].set(0.0)
+    # dt in [1e-3, 0.1] at init (standard mamba)
+    dt = jnp.exp(jax.random.uniform(ks[1], (Hp,),
+                                    minval=jnp.log(1e-3), maxval=jnp.log(0.1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))      # inverse softplus
+    a_log = jnp.log(jax.random.uniform(ks[2], (Hp,), minval=1.0, maxval=16.0))
+    return {
+        "w_x": (jax.random.normal(ks[3], (E, dip)) * 0.02).astype(dtype),
+        "w_z": (jax.random.normal(ks[4], (E, dip)) * 0.02).astype(dtype),
+        "w_bc": (jax.random.normal(ks[5], (E, 2 * N)) * 0.02).astype(dtype),
+        "w_dt": (jax.random.normal(ks[6], (E, Hp)) * 0.02).astype(dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "a_log": a_log.astype(dtype),
+        "d_skip": jnp.ones((Hp,), dtype),
+        "conv_x": (jax.random.normal(ks[7], (cw, dip)) * 0.1).astype(dtype),
+        "conv_bc": jnp.zeros((cw, 2 * N), dtype).at[-1].set(1.0),
+        "norm_scale": jnp.ones((dip,), dtype),
+        "w_out": w_out.astype(dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv.  x: [B, S, D]; w: [cw, D]."""
+    cw = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    wf = w.astype(jnp.float32)
+    y = sum(xp[:, j:j + S].astype(jnp.float32) * wf[j] for j in range(cw))
+    return jax.nn.silu(y).astype(x.dtype)
+
+
+def _conv_step(x_t, state, w):
+    """x_t: [B, D]; state: [B, cw-1, D] (previous inputs).  Returns
+    (y_t [B, D], new_state)."""
+    window = jnp.concatenate([state, x_t[:, None]], axis=1)      # [B, cw, D]
+    y = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return jax.nn.silu(y).astype(x_t.dtype), window[:, 1:]
+
+
+def _masked_rmsnorm(y, z, scale, plan: Plan, real_dip: int, *, eps=1e-6):
+    """Gated RMSNorm over the (tp-sharded, possibly padded) d_inner dim:
+    y <- rmsnorm(y * silu(z)) * scale with statistics over real dims only,
+    psum'd across tp shards."""
+    dip_loc = y.shape[-1]
+    start = col.axis_index(plan.tp_axes) * dip_loc
+    real = (jnp.arange(dip_loc) + start) < real_dip
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = jnp.where(real, g, 0.0)
+    ssq = col.psum(jnp.sum(g * g, axis=-1, keepdims=True), plan.tp_axes)
+    var = ssq / real_dip
+    out = g * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def _shard_state_scan(D, h, axes):
+    """Exclusive associative scan of the SSD state recurrence across seq
+    shards (beyond-paper, §Perf P2).
+
+    Per shard: h_out = D * h_in + h_local, where D [B, H] is the shard's
+    total decay and h_local [B, H, P, N] its zero-init state.  The combine
+    op((Da,ha),(Db,hb)) = (Da*Db, Db*ha + hb) is associative, so a
+    Hillis-Steele scan over the (single) seq axis costs log2(n) ppermutes of
+    a few MB — replacing the full-sequence all-gather.  Returns h_in."""
+    if not axes:
+        return jnp.zeros_like(h)
+    assert len(axes) == 1, "seq-parallel SSD expects one mesh axis"
+    axis = axes[0]
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    Dc, hc = D, h                         # running inclusive scan
+    k = 1
+    while k < n:
+        perm = [(i, i + k) for i in range(n - k)]
+        D_l = jax.lax.ppermute(Dc, axis, perm)     # from idx-k (0 at edges)
+        h_l = jax.lax.ppermute(hc, axis, perm)
+        take = idx >= k
+        # combine(left, self): D = D_l*D_self; h = D_self ⊙ h_l + h_self
+        h_new = Dc[..., None, None] * h_l + hc
+        D_new = D_l * Dc
+        Dc = jnp.where(take, D_new, Dc)
+        hc = jnp.where(take, h_new, hc)
+        k *= 2
+    # exclusive: shift the inclusive scan right by one shard
+    return jax.lax.ppermute(hc, axis, [(i, i + 1) for i in range(n - 1)])
+
+
+def ssm_full(p, x, *, plan: Plan, cfg, policy, with_cache: bool = False):
+    """x: [B, S_loc, E] sequence-sharded.  Returns (y [B, S_loc, E],
+    cache | None) where cache = {"h", "cx", "cbc"} local shards."""
+    if plan.ssm_seq_parallel and plan.sp > 1:
+        return _ssm_full_seqp(p, x, plan=plan, cfg=cfg, policy=policy,
+                              with_cache=with_cache)
+    Hp, P, dip, N, cw = _dims(cfg)
+    tp = plan.tp
+    H_loc, dip_loc = Hp // tp, dip // tp
+    ad = act_dtype(policy)
+
+    x_full = col.all_gather(x, plan.seq_axes, axis=1)            # [B, S, E]
+    B, S, E = x_full.shape
+
+    xs_raw = pdot(x_full, gather_w(p["w_x"], plan), policy)      # [B,S,dip/tp]
+    z = pdot(x_full, gather_w(p["w_z"], plan), policy)
+    bc_raw = pdot(x_full, gather_w(p["w_bc"], plan), policy)     # [B,S,2N]
+    dt_raw = pdot(x_full, gather_w(p["w_dt"], plan), policy,
+                  out_dtype=jnp.float32)
+
+    xs = _causal_conv(xs_raw, p["conv_x"])
+    bc = _causal_conv(bc_raw, p["conv_bc"])
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                 # [H_loc]
+
+    y, h = ops.ssd(xs.reshape(B, S, H_loc, P).astype(ad), dt, A,
+                   Bm.astype(ad), Cm.astype(ad),
+                   p["d_skip"].astype(jnp.float32))
+    y = y.reshape(B, S, dip_loc)
+
+    y = _masked_rmsnorm(y, z, p["norm_scale"], plan,
+                        real_dip=cfg.ssm_heads * P)
+    part = pdot(y, gather_w(p["w_out"], plan, fsdp_dim=1), policy)
+    out = col.psum_scatter(part, plan.tp_axes, scatter_dimension=1)   # T3
+
+    cache = None
+    if with_cache:
+        # conv state = the last cw-1 *pre-conv* inputs of each stream
+        cache = {"h": h.astype(jnp.float32),                     # [B,H_loc,P,N]
+                 "cx": xs_raw[:, S - (cw - 1):].astype(ad),
+                 "cbc": bc_raw[:, S - (cw - 1):].astype(ad)}
+    return out, cache
+
+
+def _ssm_full_seqp(p, x, *, plan: Plan, cfg, policy, with_cache: bool):
+    """Sequence-parallel SSD (beyond-paper, §Perf P2).
+
+    x stays sequence-sharded: every shard computes ALL heads over its local
+    chunk (weights un-sharded at use — tens of MB), the state recurrence
+    crosses shards via `_shard_state_scan` (log2(sp) ppermutes of [B,Hp,P,N]
+    states), the boundary conv taps come from one neighbour ppermute, and
+    the out-projection needs NO collective (full d_inner locally).  Replaces
+    ~650 MB/layer of all-gather + reduce-scatter with ~25 MB/layer."""
+    Hp, P, dip, N, cw = _dims(cfg)
+    ad = act_dtype(policy)
+    B, S_loc, E = x.shape
+    sp_ax = plan.seq_axes
+    sp = plan.sp
+    idx = col.axis_index(sp_ax)
+
+    w_x = gather_w(p["w_x"], plan, tp_dim=1)         # full [E, dip]
+    w_z = gather_w(p["w_z"], plan, tp_dim=1)
+    w_bc = gather_w(p["w_bc"], plan)
+    w_dt = gather_w(p["w_dt"], plan, tp_dim=1)       # full [E, Hp]
+    dt_bias = col.all_gather(p["dt_bias"], plan.tp_axes, axis=0)
+    a_log = col.all_gather(p["a_log"], plan.tp_axes, axis=0)
+    d_skip = col.all_gather(p["d_skip"], plan.tp_axes, axis=0)
+    conv_x = col.all_gather(p["conv_x"], plan.tp_axes, axis=1)
+    norm_scale = col.all_gather(p["norm_scale"], plan.tp_axes, axis=0)
+    w_out = gather_w(p["w_out"], plan, fsdp_dim=1, tp_dim=0)   # [dip, E]
+
+    xs_raw = pdot(x, w_x, policy)                    # [B, S_loc, dip]
+    z = pdot(x, w_z, policy)
+    bc_raw = pdot(x, w_bc, policy)                   # [B, S_loc, 2N]
+    dt_raw = pdot(x, w_dt, policy, out_dtype=jnp.float32)
+
+    # boundary conv: prepend the left neighbour's last cw-1 raw inputs
+    def conv_with_halo(raw, w):
+        tail = raw[:, S_loc - (cw - 1):]
+        halo = jax.lax.ppermute(tail, sp_ax[0],
+                                [(i, i + 1) for i in range(sp - 1)])
+        ext = jnp.concatenate([halo, raw], axis=1)   # [B, S_loc+cw-1, D]
+        return _causal_conv(ext, w)[:, cw - 1:]
+    xs = conv_with_halo(xs_raw, conv_x)
+    bc = conv_with_halo(bc_raw, p["conv_bc"])
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(dt_raw + dt_bias.astype(jnp.float32))
+    A = -jnp.exp(a_log.astype(jnp.float32))          # [Hp]
+
+    # local SSD with zero inbound state + cross-shard state composition
+    y, h_local = ops.ssd(xs.reshape(B, S_loc, Hp, P).astype(ad), dt, A,
+                         Bm.astype(ad), Cm.astype(ad),
+                         d_skip.astype(jnp.float32))
+    cum = jnp.cumsum(dt * A[None, None, :], axis=1)  # [B, S_loc, Hp]
+    D_shard = jnp.exp(cum[:, -1])                    # [B, Hp]
+    h_in = _shard_state_scan(D_shard, h_local, sp_ax)
+    # inbound-state contribution: y_t += C_t . (exp(cum_t) * h_in)
+    y = y + jnp.einsum("bln,blh,bhpn->blhp", Cm.astype(jnp.float32),
+                       jnp.exp(cum), h_in).astype(y.dtype)
+    y = y.reshape(B, S_loc, dip)
+
+    # gated norm (full dip locally -> plain, unmasked-psum-free stats over
+    # real dims only)
+    real = jnp.arange(dip) < cfg.ssm_heads * P
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = jnp.where(real, g, 0.0)
+    var = jnp.sum(g * g, axis=-1, keepdims=True) / (cfg.ssm_heads * P)
+    y = (g * jax.lax.rsqrt(var + 1e-6)
+         * norm_scale.astype(jnp.float32)).astype(ad)
+
+    out = pdot(y, w_out, policy)                     # stays seq-sharded
+
+    cache = None
+    if with_cache:
+        # final state (decode layout: heads tp-sharded): last shard owns the
+        # inclusive total; broadcast and slice this device's head range
+        h_tot = D_shard[..., None, None] * h_in + h_local
+        last = jnp.where(idx == sp - 1, 1.0, 0.0).astype(jnp.float32)
+        h_fin = col.psum(h_tot * last, sp_ax)
+        tail_x = col.psum(xs_raw[:, S_loc - (cw - 1):].astype(jnp.float32)
+                          * last, sp_ax)
+        tail_bc = col.psum(bc_raw[:, S_loc - (cw - 1):].astype(jnp.float32)
+                           * last, sp_ax)
+        tp_i = col.axis_index(plan.tp_axes)
+        H_loc = Hp // plan.tp
+        dip_loc = dip // plan.tp
+        cache = {
+            "h": jax.lax.dynamic_slice_in_dim(h_fin, tp_i * H_loc, H_loc,
+                                              axis=1),
+            "cx": jax.lax.dynamic_slice_in_dim(
+                tail_x, tp_i * dip_loc, dip_loc, axis=2).astype(ad),
+            "cbc": tail_bc.astype(ad),
+        }
+    return out, cache
+
+
+def ssm_decode(p, x, cache, *, plan: Plan, cfg, policy):
+    """One decode step.  x: [B, E]; cache: {"h","cx","cbc"} local shards.
+    Returns (y [B, E], updated cache)."""
+    Hp, P, dip, N, cw = _dims(cfg)
+    tp = plan.tp
+    H_loc = Hp // tp
+    ad = act_dtype(policy)
+    B = x.shape[0]
+
+    xs = pdot(x, gather_w(p["w_x"], plan), policy)               # [B, dip/tp]
+    z = pdot(x, gather_w(p["w_z"], plan), policy)
+    bc = pdot(x, gather_w(p["w_bc"], plan), policy)
+    dt_raw = pdot(x, gather_w(p["w_dt"], plan), policy,
+                  out_dtype=jnp.float32)
+
+    xs, cx = _conv_step(xs, cache["cx"], p["conv_x"])
+    bc, cbc = _conv_step(bc, cache["cbc"], p["conv_bc"])
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    y, h = ops.ssd_decode(xs.reshape(B, H_loc, P).astype(jnp.float32), dt, A,
+                          Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                          p["d_skip"].astype(jnp.float32),
+                          cache["h"])
+    y = y.reshape(B, dip // tp).astype(ad)
+
+    y = _masked_rmsnorm(y, z, p["norm_scale"], plan,
+                        real_dip=cfg.ssm_heads * P)
+    part = pdot(y, gather_w(p["w_out"], plan, fsdp_dim=1), policy,
+                out_dtype=jnp.float32)
+    out = col.psum(part, plan.tp_axes).astype(ad)
+    return out, {"h": h, "cx": cx, "cbc": cbc}

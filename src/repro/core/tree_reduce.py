@@ -1,0 +1,75 @@
+"""Binary-tree cross-device reduction (paper T3/T9, literal form).
+
+The paper aggregates partial output-projection tiles with a log2(C*G)-depth
+binary reduction over the cluster-to-cluster interconnect, never touching
+HBM.  XLA's `psum`/`psum_scatter` already lower to near-optimal ICI
+ring/tree collectives; this module provides the *literal* recursive-halving
+tree built from `ppermute` so §Perf can compare the two schedules on equal
+terms (the dry-run counts their link bytes separately).
+
+recursive halving (reduce-scatter flavor): at step d each device exchanges
+half of its working segment with a partner 2^d away and accumulates —
+log2(N) steps, (N-1)/N of the data volume total, the same asymptotics as a
+ring reduce-scatter but with log-depth latency (the paper's argument).
+Must run inside shard_map over `axis_name`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_psum_scatter(x, axis_name: str, *, scatter_dim: int = 0):
+    """Reduce-scatter via recursive halving.  x: identical-shape partial on
+    every device; returns the device's 1/N chunk of sum(x) along
+    `scatter_dim` (size must divide by the axis size)."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    assert n & (n - 1) == 0, f"tree reduction needs power-of-two axis, got {n}"
+    idx = jax.lax.axis_index(axis_name)
+    size = x.shape[scatter_dim]
+    assert size % n == 0, (size, n)
+
+    # work on the full buffer, halving the active window each step
+    buf = x
+    offset = jnp.zeros((), jnp.int32)          # window start (dynamic)
+    width = size
+    step = n // 2
+    while step >= 1:
+        width //= 2
+        partner_delta = step
+        # devices whose bit is 0 keep the low half, bit-1 devices the high half
+        bit = (idx // step) % 2
+        my_off = offset + bit * width
+        their_off = offset + (1 - bit) * width
+        send = jax.lax.dynamic_slice_in_dim(buf, their_off, width, scatter_dim)
+        perm = []
+        for i in range(n):
+            b = (i // step) % 2
+            perm.append((i, i + partner_delta if b == 0 else i - partner_delta))
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        mine = jax.lax.dynamic_slice_in_dim(buf, my_off, width, scatter_dim)
+        buf = jax.lax.dynamic_update_slice_in_dim(
+            buf, mine + recv, my_off, scatter_dim)
+        offset = my_off
+        step //= 2
+    return jax.lax.dynamic_slice_in_dim(buf, offset, width, scatter_dim)
+
+
+def tree_psum(x, axis_name: str):
+    """All-reduce as recursive halving + recursive doubling (allgather).
+    Exposed for completeness; psum_scatter covers the fused-projection use."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = -flat.shape[0] % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunk = tree_psum_scatter(flat, axis_name, scatter_dim=0)
+    full = jax.lax.all_gather(chunk, axis_name, axis=0, tiled=True)
+    if pad:
+        full = full[: flat.shape[0] - pad]
+    return full.reshape(shape)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticStream, FileStream, make_stream

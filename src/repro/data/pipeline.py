@@ -1,0 +1,102 @@
+"""Deterministic, step-indexed data pipeline.
+
+Restart-exact: batch(step) is a pure function of (seed, step, host), so a
+restore-at-step-k run is bitwise identical to the uninterrupted one (the
+fault-tolerance contract in runtime/fault_tolerance.py).  Two sources:
+
+  SyntheticStream  hash-seeded token batches (benchmarks, dry-runs, tests)
+  FileStream       binary token file (uint16/uint32) via np.memmap, sharded
+                   by host and strided by step
+
+Both emit the `frontends.batch_struct` layout (tokens/labels + stub patch /
+frame embeddings for VLM/audio archs).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class SyntheticStream:
+    def __init__(self, cfg: ModelConfig, *, global_batch: int, seq_len: int,
+                 seed: int = 0, kind: str = "train",
+                 host_id: int = 0, n_hosts: int = 1):
+        self.cfg = cfg
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.kind = kind
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id]))
+        s_text = self.seq_len - (cfg.n_patches or 0)
+        b = self.global_batch // self.n_hosts
+        toks = rng.integers(0, max(cfg.vocab, 2), (b, s_text + 1),
+                            dtype=np.int32)
+        out = {"tokens": jnp.asarray(toks[:, :-1])}
+        if self.kind == "train":
+            out["labels"] = jnp.asarray(toks[:, 1:])
+        if cfg.n_patches:
+            out["patches"] = jnp.asarray(rng.standard_normal(
+                (b, cfg.n_patches, cfg.d_model), dtype=np.float32),
+                jnp.bfloat16)
+        if cfg.enc_schedule:
+            fr = np.zeros((b, cfg.enc_seq_padded, cfg.d_model), np.float32)
+            fr[:, :cfg.enc_seq] = rng.standard_normal(
+                (b, cfg.enc_seq, cfg.d_model), dtype=np.float32)
+            out["frames"] = jnp.asarray(fr, jnp.bfloat16)
+        return out
+
+
+class FileStream:
+    """Binary token file -> LM batches.  The file is one flat token array;
+    batch(step) reads a deterministic window: restart-exact and host-sharded.
+    """
+    def __init__(self, cfg: ModelConfig, path: str, *, global_batch: int,
+                 seq_len: int, dtype=np.uint16, kind: str = "train",
+                 host_id: int = 0, n_hosts: int = 1):
+        self.cfg = cfg
+        self.path = path
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.kind = kind
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.tokens = np.memmap(path, dtype=dtype, mode="r")
+        need = (global_batch // n_hosts) * (seq_len + 1)
+        assert len(self.tokens) >= need, (
+            f"{path}: {len(self.tokens)} tokens < one batch ({need})")
+
+    def batch(self, step: int) -> dict:
+        b = self.global_batch // self.n_hosts
+        width = self.seq_len + 1
+        n_windows = len(self.tokens) // width
+        rows = []
+        for i in range(b):
+            w = (step * self.global_batch + self.host_id * b + i) % n_windows
+            rows.append(np.asarray(self.tokens[w * width:(w + 1) * width],
+                                   dtype=np.int32))
+        toks = np.clip(np.stack(rows), 0, self.cfg.vocab - 1)
+        out = {"tokens": jnp.asarray(toks[:, :-1])}
+        if self.kind == "train":
+            out["labels"] = jnp.asarray(toks[:, 1:])
+        return out
+
+
+def make_stream(cfg: ModelConfig, *, global_batch: int, seq_len: int,
+                path: Optional[str] = None, seed: int = 0,
+                kind: str = "train") -> object:
+    if path and os.path.exists(path):
+        return FileStream(cfg, path, global_batch=global_batch,
+                          seq_len=seq_len, kind=kind)
+    return SyntheticStream(cfg, global_batch=global_batch, seq_len=seq_len,
+                           seed=seed, kind=kind)

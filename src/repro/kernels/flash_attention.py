@@ -1,0 +1,149 @@
+"""FlashAttention-2 forward Pallas TPU kernel (paper T2, adapted).
+
+Paper mapping (Snitch -> TPU):
+  * head-per-cluster            -> grid dims (batch, kv_head): each TensorCore
+                                   grid cell owns one (batch, kv-head) slice,
+                                   GQA query groups folded into the Q-block rows.
+  * SPM temporal tiling         -> BlockSpec VMEM tiles (block_q x d, block_kv x d),
+                                   KV iterated as the innermost ("arbitrary")
+                                   grid dimension with (m, l, acc) carried in
+                                   VMEM scratch — the exact FA-2 dataflow.
+  * DMA double buffering        -> Pallas pipelines the HBM->VMEM block copies
+                                   across grid steps automatically.
+  * fp32 softmax invariant      -> Q.K^T accumulates in fp32; m/l/acc scratch
+                                   is fp32 regardless of input dtype.
+
+Supports: causal masking, sliding-window (SWA), GQA, a query-position offset
+(for sequence-parallel Q shards), bf16/fp32/fp8 inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               causal: bool, window: int, q_offset: int, block_q: int,
+               block_kv: int, sm_scale: float, kv_len: int):
+    """Grid: (B, KV, num_q_blocks, num_kv_blocks); kv innermost.
+
+    q_ref:   [1, 1, G, block_q, D]   (G = query group size)
+    k_ref:   [1, 1, block_kv, D]
+    v_ref:   [1, 1, block_kv, D]
+    o_ref:   [1, 1, G, block_q, D]
+    scratch: m/l [G*block_q], acc [G*block_q, D]  — fp32.
+    """
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = q_ref.shape[2]
+    d = q_ref.shape[-1]
+    # GEMMs in the operand dtype (MXU-native), statistics in fp32 (paper T6)
+    q = q_ref[0, 0].reshape(g * block_q, d)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    # row r of the folded block is query (r % block_q) of this q block
+    row = jax.lax.broadcasted_iota(jnp.int32, (g * block_q, block_kv), 0)
+    q_pos = (row % block_q) + qi * block_q + q_offset
+    col = jax.lax.broadcasted_iota(jnp.int32, (g * block_q, block_kv), 1)
+    k_pos = col + ki * block_kv
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.reshape(g, block_q, d).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_kv",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    block_q=128, block_kv=128, interpret=False):
+    """q: [B, Sq, H, D]; k, v: [B, Skv, KV, D] -> [B, Sq, H, D].
+
+    Block sizes are clamped to the actual sequence lengths and padded shapes
+    are handled by in-kernel masking (kv_len) + index clamping on Q.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    sm_scale = float(1.0 / (D ** 0.5))
+
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Skv, block_kv)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_kv - Skv
+    # [B, KV, G, Sq, D] layout so a q block is one (b, kv) slice
+    qr = q.reshape(B, Sq, KV, G, D).transpose(0, 2, 3, 1, 4)
+    if pad_q:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kr = k.transpose(0, 2, 1, 3)
+    vr = v.transpose(0, 2, 1, 3)
+    if pad_k:
+        kr = jnp.pad(kr, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_kv=block_kv, sm_scale=sm_scale, kv_len=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, block_q, D),
+                         lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, block_q, D),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, nq * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q,), jnp.float32),
+            pltpu.VMEM((G * block_q,), jnp.float32),
+            pltpu.VMEM((G * block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out[:, :, :, :Sq]                    # drop q padding
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)

@@ -1,0 +1,112 @@
+"""Split-KV decode attention kernel — the paper's *distributed Softmax
+primitive* (T4) at chip scope.
+
+AR decode computes one query token against a long KV cache: a pure
+memory-bound matrix-vector pass (the paper's <10%-FPU-utilization regime).
+The cache is split into chunks; every chunk produces partial online-softmax
+statistics (m, l, o) which are merged in a second stage — the same
+max/rescale/sum tree the paper distributes across clusters.  The identical
+merge rule combines *cross-chip* partials in core/distributed_softmax.py,
+so chip-local and pod-level softmax use one primitive.
+
+Grid: (B, KV, n_chunks) with the chunk dim innermost; partials are merged
+in-kernel through VMEM scratch (single pass over the cache)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, block_kv: int, window: int, sm_scale: float):
+    """q_ref: [1, 1, G, D]; k/v_ref: [1, block_kv, 1, D];
+    len_ref: scalar-prefetch [B] valid lengths; o_ref: [1, 1, G, D]."""
+    b = pl.program_id(0)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g, d = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0]                                     # [G, D]
+    k = k_ref[:, :, 0, :][0]                            # [block_kv, D]
+    v = v_ref[:, :, 0, :][0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    length = len_ref[b]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (g, block_kv), 1) + ci * block_kv
+    mask = pos < length
+    if window > 0:
+        mask &= pos >= length - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, *, window=0, block_kv=512,
+                     interpret=False):
+    """q: [B, H, D]; caches: [B, S, KV, D]; length: [B] or scalar valid
+    lengths.  Returns [B, H, D]."""
+    B, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    block_kv = min(block_kv, S)
+    sm_scale = float(1.0 / (D ** 0.5))
+    pad = -S % block_kv
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = k_cache.shape[1] // block_kv
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    qr = q.reshape(B, KV, G, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, D),
+                         lambda b, h, c, len_ref: (b, c, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D),
+                         lambda b, h, c, len_ref: (b, c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, c, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_kv=block_kv, window=window,
+                          sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(length, qr, k_cache, v_cache)
+    return out.reshape(B, H, D)

@@ -1,0 +1,199 @@
+"""Kernel dispatch layer: Pallas TPU kernels <-> pure-jnp references.
+
+Every model-facing op goes through this module.  Dispatch modes:
+
+  ``auto``    (default) Pallas on TPU, reference elsewhere.  The reference
+              implementations compute the *same math in the same precision*
+              (fp32 accumulation / fp32 softmax), so CPU dry-run lowering
+              produces representative FLOP/byte counts while TPU execution
+              hits the hand-tiled kernels.
+  ``pallas``            force compiled Pallas (TPU only).
+  ``interpret``         force Pallas interpret mode (CPU correctness runs).
+  ``ref``               force the jnp oracle.
+
+Set with `repro.kernels.ops.set_mode(...)` or env `REPRO_KERNEL_MODE`.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+from repro.kernels import matmul as _mm
+from repro.kernels import rmsnorm as _norm
+from repro.kernels import ssd as _ssd
+
+_STATE = threading.local()
+_VALID = ("auto", "pallas", "interpret", "ref")
+
+
+def _default_mode() -> str:
+    return os.environ.get("REPRO_KERNEL_MODE", "auto")
+
+
+def get_mode() -> str:
+    return getattr(_STATE, "mode", None) or _default_mode()
+
+
+def set_mode(mode: str) -> None:
+    assert mode in _VALID, mode
+    _STATE.mode = mode
+
+
+@contextlib.contextmanager
+def kernel_mode(mode: str):
+    prev = getattr(_STATE, "mode", None)
+    set_mode(mode)
+    try:
+        yield
+    finally:
+        _STATE.mode = prev
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    mode = get_mode()
+    if mode == "ref":
+        return False, False
+    if mode == "pallas":
+        return True, False
+    if mode == "interpret":
+        return True, True
+    on_tpu = jax.default_backend() == "tpu"
+    return (True, False) if on_tpu else (False, False)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    block_q=128, block_kv=128):
+    """q: [B, Sq, H, D]; k, v: [B, Skv, KV, D] -> [B, Sq, H, D].
+
+    `q_offset` may be a traced scalar (sequence-parallel shards); the Pallas
+    kernel requires it static, so traced offsets route to the online-softmax
+    reference — which mirrors the FA-2 dataflow (KV-block scan, no S^2
+    materialization), keeping dry-run FLOP/byte counts representative.
+    """
+    use, interp = _use_pallas()
+    if use and isinstance(q_offset, int):
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, block_q=block_q,
+                                   block_kv=block_kv, interpret=interp)
+    # "vmemk": score/probability intermediates live in VMEM in the Pallas
+    # kernel — analysis/hlo.py zeroes their HBM-traffic contribution
+    with jax.named_scope("vmemk_flash"):
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                        q_offset=q_offset,
+                                        block_kv=max(block_kv, 512))
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=0, block_kv=512):
+    """q: [B, H, D]; caches: [B, S, KV, D]; length: [B] valid entries."""
+    use, interp = _use_pallas()
+    if use:
+        return _fd.decode_attention(q, k_cache, v_cache, length,
+                                    window=window, block_kv=block_kv,
+                                    interpret=interp)
+    return _ref.decode_attention_ref(q, k_cache, v_cache, length,
+                                     window=window)
+
+
+# --------------------------------------------------------------------------
+# GEMM + fused epilogues (T1/T5)
+# --------------------------------------------------------------------------
+
+def matmul(a, b, *, activation="none", out_dtype=None,
+           block_m=128, block_n=128, block_k=512):
+    use, interp = _use_pallas()
+    if use and a.ndim == 2:
+        return _mm.matmul(a, b, activation=activation, out_dtype=out_dtype,
+                          block_m=block_m, block_n=block_n, block_k=block_k,
+                          interpret=interp)
+    return _ref.matmul_ref(a, b, activation=activation, out_dtype=out_dtype)
+
+
+def matmul_swiglu(a, b_gate, b_up, *, out_dtype=None,
+                  block_m=128, block_n=128, block_k=512):
+    """o = silu(A @ Bg) * (A @ Bu), single fused pass."""
+    use, interp = _use_pallas()
+    if use and a.ndim == 2:
+        return _mm.matmul_swiglu(a, b_gate, b_up, out_dtype=out_dtype,
+                                 block_m=block_m, block_n=block_n,
+                                 block_k=block_k, interpret=interp)
+    out_dtype = out_dtype or a.dtype
+    with jax.named_scope("vmemk_mlp"):
+        g = _ref.matmul_ref(a, b_gate, activation="none", out_dtype=out_dtype)
+        u = _ref.matmul_ref(a, b_up, activation="none", out_dtype=out_dtype)
+        return (jax.nn.silu(g.astype(jnp.float32))
+                * u.astype(jnp.float32)).astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, *, eps=1e-6):
+    use, interp = _use_pallas()
+    if use:
+        return _norm.rmsnorm(x, gamma, eps=eps, interpret=interp)
+    return _ref.rmsnorm_ref(x, gamma, eps=eps)
+
+
+def layernorm(x, gamma, beta, *, eps=1e-5):
+    use, interp = _use_pallas()
+    if use:
+        return _norm.layernorm(x, gamma, beta, eps=eps, interpret=interp)
+    return _ref.layernorm_ref(x, gamma, beta, eps=eps)
+
+
+def norm(x, params, kind: str):
+    """Dispatch on the config's norm kind; params: {"scale": ...[, "bias"]}"""
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD
+# --------------------------------------------------------------------------
+
+def ssd(x, dt, A, B, C, D, *, chunk=128):
+    """x: [Bt, S, H, P] -> (y, h_final).  Chunked state-space-duality scan.
+
+    TPU dispatch prefers the v2 multi-head kernel (grid (B, chunks), all
+    heads per cell: B/C stream once per chunk — §Perf P2 kernel design);
+    falls back to the per-head grid when the [H,P,N] state would overflow
+    VMEM."""
+    use, interp = _use_pallas()
+    if use and x.shape[1] % min(chunk, x.shape[1]) == 0:
+        H, P = x.shape[2], x.shape[3]
+        N = B.shape[-1]
+        c = min(chunk, x.shape[1])
+        vmem = 4 * (H * P * N + c * c * H + 2 * c * H * P)
+        if vmem < 12 * 2**20:
+            return _ssd.ssd_multihead(x, dt, A, B, C, D, chunk=c,
+                                      interpret=interp)
+        return _ssd.ssd(x, dt, A, B, C, D, chunk=c, interpret=interp)
+    with jax.named_scope("vmemk_ssd"):
+        return _ref.ssd_chunked_ref(x, dt, A, B, C, D,
+                                    chunk=_best_chunk(x.shape[1], chunk))
+
+
+def _best_chunk(S: int, chunk: int) -> int:
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    return max(c, 1)
+
+
+def ssd_decode(x, dt, A, B, C, D, h):
+    """Single-step SSD state update (no kernel needed — pure VPU math)."""
+    return _ref.ssd_decode_ref(x, dt, A, B, C, D, h)

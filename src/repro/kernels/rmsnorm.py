@@ -1,0 +1,76 @@
+"""Fused RMSNorm / LayerNorm Pallas kernels.
+
+Paper mapping: LayerNorm is spatially tiled on rows across clusters with
+row statistics accumulated via streamed SSR loops (V-A3).  Here: rows are
+grid cells, each block reduces its rows in fp32 in VMEM and writes the
+normalized output once (no separate mean/var pass over HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, g_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...].astype(jnp.float32)
+                  + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, gamma, *, eps=1e-6, block_rows=256, interpret=False):
+    """x: [..., D] -> same shape; statistics in fp32."""
+    shape = x.shape
+    D = shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    block_rows = min(block_rows, R)
+    pad = -R % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=(xf.shape[0] // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, gamma)
+    return out[:R].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def layernorm(x, gamma, beta, *, eps=1e-5, block_rows=256, interpret=False):
+    shape = x.shape
+    D = shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    block_rows = min(block_rows, R)
+    pad = -R % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(xf.shape[0] // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, gamma, beta)
+    return out[:R].reshape(shape)

@@ -1,0 +1,204 @@
+"""Mamba2 SSD (state-space duality) chunk kernel.
+
+The SSD form computes, per chunk of L timesteps, an attention-like
+quadratic intra-chunk term (two MXU matmuls through a decay-masked L x L
+matrix) plus a rank-N inter-chunk state recurrence.  This is the natural
+TPU adaptation of the paper's FlashAttention dataflow for the attention-free
+assigned arch (mamba2-2.7b): chunk tiles live in VMEM, the running state
+h [P, N] is carried across the innermost grid dim in fp32 scratch exactly
+like FA-2's (m, l, acc).
+
+Grid: (B, H, n_chunks) — chunks innermost, heads are "parallel" (the
+head dim is a pure batch dim of the recurrence; it shards freely across
+chips, DESIGN.md §4)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
+                h_ref, *, chunk: int):
+    """Blocks per (b, h, c): x [1,L,1,P], dt [1,L,1], A [1], B/C [1,L,N],
+    D [1]; y [1,L,1,P]; hout [1,1,P,N]; scratch h [P,N] fp32."""
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    L = chunk
+    x = x_ref[0, :, 0, :].astype(jnp.float32)            # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # [L]
+    A = a_ref[0].astype(jnp.float32)                     # scalar
+    Bm = b_ref[0].astype(jnp.float32)                    # [L, N]
+    Cm = c_ref[0].astype(jnp.float32)                    # [L, N]
+    D = d_ref[0].astype(jnp.float32)
+
+    da = dt * A                                          # [L]
+    cum = jnp.cumsum(da)                                 # inclusive
+    # intra-chunk: y[t] = sum_{s<=t} exp(cum_t - cum_s) * (C_t.B_s) * dt_s * x[s]
+    seg = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)            # [L, L]
+    g = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [L, L]
+    m = g * decay
+    y = jax.lax.dot_general(m, x * dt[:, None], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the incoming state
+    in_decay = jnp.exp(cum)                              # [L]
+    ch = jax.lax.dot_general(Cm, h_ref[...], (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, P]
+    y = y + ch * in_decay[:, None]
+
+    # state update: h' = exp(sum da) h + sum_s exp(cum_L - cum_s) dt_s x_s B_s^T
+    b_decay = jnp.exp(cum[-1] - cum)                     # [L]
+    xw = x * (dt * b_decay)[:, None]                     # [L, P]
+    h_new = h_ref[...] * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xw, Bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_ref[...] = h_new
+
+    y_ref[0, :, 0, :] = (y + D * x).astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(2) - 1)
+    def _finish():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def _ssd_mh_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref,
+                   hout_ref, h_ref, *, chunk: int):
+    """Multi-head SSD chunk kernel (v2, §Perf P2 kernel design).
+
+    One grid cell = (batch, chunk) with ALL heads vectorized inside: B/C
+    stream from HBM ONCE per chunk instead of once per (head, chunk) —
+    H x less B/C traffic than the v1 head-parallel grid.  VMEM at the
+    production shapes (L=128, H<=80, P=64, N=128): decay [L,L,H] 5.2 MB +
+    state [H,P,N] 2.6 MB + blocks — fits the ~16 MB budget.
+
+    Blocks: x [1,L,H,P], dt [1,L,H], A [H], B/C [1,L,N], D [H];
+    y [1,L,H,P]; hout [1,H,P,N]; scratch h [H,P,N] fp32."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    L = chunk
+    x = x_ref[0].astype(jnp.float32)                     # [L, H, P]
+    dt = dt_ref[0].astype(jnp.float32)                   # [L, H]
+    A = a_ref[...].astype(jnp.float32)                   # [H]
+    Bm = b_ref[0].astype(jnp.float32)                    # [L, N]
+    Cm = c_ref[0].astype(jnp.float32)                    # [L, N]
+    D = d_ref[...].astype(jnp.float32)                   # [H]
+
+    da = dt * A[None, :]                                 # [L, H]
+    cum = jnp.cumsum(da, axis=0)
+    seg = cum[:, None, :] - cum[None, :, :]              # [L, L, H]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    decay = jnp.where(tri[..., None], jnp.exp(seg), 0.0)  # [L, L, H]
+    g = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [L, L]
+    w = g[..., None] * decay * dt[None, :, :]            # [L, L, H]
+
+    # intra-chunk: y[l,h,p] = sum_m w[l,m,h] x[m,h,p]  (batched over H)
+    wT = w.transpose(2, 0, 1)                            # [H, L, L]
+    xT = x.transpose(1, 0, 2)                            # [H, L, P]
+    y = jax.lax.dot_general(wT, xT, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)  # [H, L, P]
+
+    # inter-chunk: y += exp(cum)[l,h] * (C @ h[h]^T)
+    h = h_ref[...]                                       # [H, P, N]
+    ch = jax.lax.dot_general(Cm, h, (((1,), (2,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, H, P]
+    y = y + (jnp.exp(cum)[:, :, None] * ch).transpose(1, 0, 2)
+
+    # state update
+    b_decay = jnp.exp(cum[-1][None, :] - cum)            # [L, H]
+    xw = x * (dt * b_decay)[..., None]                   # [L, H, P]
+    dh = jax.lax.dot_general(xw.transpose(1, 2, 0), Bm,
+                             (((2,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [H, P, N]
+    h_new = h * jnp.exp(cum[-1])[:, None, None] + dh
+    h_ref[...] = h_new
+
+    y_ref[0] = (y.transpose(1, 0, 2)
+                + D[None, :, None] * x).astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _finish():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_multihead(x, dt, A, B, C, D, *, chunk=128, interpret=False):
+    """v2 kernel: x [Bt, S, H, P] -> (y, h_final); grid (Bt, S/chunk)."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    out, hout = pl.pallas_call(
+        functools.partial(_ssd_mh_kernel, chunk=chunk),
+        grid=(Bt, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)
+    return out, hout
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, D, *, chunk=128, interpret=False):
+    """x: [Bt, S, H, P], dt: [Bt, S, H], A/D: [H], B/C: [Bt, S, N].
+    Returns (y [Bt, S, H, P], h_final [Bt, H, P, N])."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    out, hout = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(Bt, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)
+    return out, hout

@@ -1,0 +1,415 @@
+"""Step builders: jit(shard_map(...)) train / prefill / decode steps.
+
+This is the distribution boundary.  Each builder:
+  1. derives the `Plan` for (arch, shape, mesh, mode),
+  2. resolves every parameter / cache / batch leaf's logical dims to a
+     PartitionSpec,
+  3. wraps the manual-SPMD model forward in one `shard_map`,
+  4. returns a `StepBundle` with the jitted fn + fully-sharded
+     ShapeDtypeStructs — exactly what the dry-run `.lower().compile()`s and
+     what train.py / serve.py execute.
+
+Gradient synchronization (train): gradients are taken *inside* the
+shard_map, so collective transposes handle the fsdp/tp reductions and the
+remaining replication axes (the pure-DP `pod` axis, tp-replicated scalars)
+are reduced explicitly by `grad_sync` — the hook where int8 error-feedback
+compression applies to the cross-pod hop (optim/compression.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import blocks
+from repro.core import collectives as col
+from repro.core.attention import CACHE_DTYPE
+from repro.core.nn import act_dtype
+from repro.core.precision import BF16, FP8_SERVE, Policy, get_policy
+from repro.models import frontends, lm
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule)
+from repro.optim.compression import ef_compressed_psum
+from repro.sharding.plan import Plan, make_plan
+
+IS_DIMS = lambda x: isinstance(x, tuple) and all(
+    isinstance(d, (str, type(None))) for d in x)
+
+
+# --------------------------------------------------------------------------
+# spec resolution
+# --------------------------------------------------------------------------
+
+def resolve_pspecs(dims_tree, plan: Plan):
+    return jax.tree.map(lambda d: plan.pspec(*d), dims_tree, is_leaf=IS_DIMS)
+
+
+def to_shardings(spec_tree, mesh: Optional[Mesh]):
+    if mesh is None:
+        return jax.tree.map(lambda s: None, spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_shardings(struct_tree, spec_tree, mesh: Optional[Mesh]):
+    """Attach NamedShardings to ShapeDtypeStructs (dry-run inputs)."""
+    if mesh is None:
+        return struct_tree
+    return jax.tree.map(
+        lambda st, sp: jax.ShapeDtypeStruct(st.shape, st.dtype,
+                                            sharding=NamedSharding(mesh, sp)),
+        struct_tree, spec_tree)
+
+
+def _sharded_axes(dims, plan: Plan):
+    spec = plan.pspec(*dims)
+    out = []
+    for entry in spec:
+        if entry is None:
+            continue
+        out.extend(entry if isinstance(entry, tuple) else (entry,))
+    return tuple(out)
+
+
+def shard_axes_list(dims_tree, plan: Plan):
+    """Flat list (aligned with jax.tree.leaves of the params) of mesh-axis
+    tuples each leaf is SHARDED over."""
+    return [_sharded_axes(d, plan)
+            for d in jax.tree.leaves(dims_tree, is_leaf=IS_DIMS)]
+
+
+def replication_axes_list(dims_tree, plan: Plan):
+    """Flat list of mesh-axis tuples each leaf is REPLICATED over."""
+    if plan.mesh is None:
+        return [() for _ in jax.tree.leaves(dims_tree, is_leaf=IS_DIMS)]
+    all_axes = tuple(plan.mesh.axis_names)
+    return [tuple(a for a in all_axes if a not in sh)
+            for sh in shard_axes_list(dims_tree, plan)]
+
+
+# --------------------------------------------------------------------------
+# policies
+# --------------------------------------------------------------------------
+
+def default_policy(cfg: ModelConfig, mode: str) -> Policy:
+    if mode == "train":
+        return BF16
+    if cfg.name == "mixtral-8x22b":
+        return FP8_SERVE          # fp8 storage: fits the 16-chip TP column
+    return BF16
+
+
+# --------------------------------------------------------------------------
+# cache layout
+# --------------------------------------------------------------------------
+
+def cache_layout(cfg: ModelConfig, plan: Plan, global_batch: int,
+                 max_seq: int, policy: Policy):
+    """(struct tree, logical-dims tree) mirroring the prefill cache pytree."""
+    B = global_batch
+    kv_dtype = jnp.dtype(plan.kv_cache_dtype)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    Hp, Pd, N = cfg.padded_ssm_heads(), cfg.ssm_head_dim, cfg.ssm_state
+    cw, dip = cfg.conv_width, cfg.padded_d_inner()
+    ad = act_dtype(policy)
+    structs, dims = [], []
+    for kind, count in cfg.schedule:
+        d, dm = {}, {}
+        if kind in blocks.ATTN_KINDS:
+            W = blocks.kind_cache_len(kind, cfg, max_seq)
+            kv_dims = (None, "batch", "cache", None, None)
+            d["k"] = jax.ShapeDtypeStruct((count, B, W, KV, hd), kv_dtype)
+            d["v"] = jax.ShapeDtypeStruct((count, B, W, KV, hd), kv_dtype)
+            dm["k"] = dm["v"] = kv_dims
+            if kind == "dec":
+                We = cfg.enc_seq_padded
+                d["ck"] = jax.ShapeDtypeStruct((count, B, We, KV, hd),
+                                               kv_dtype)
+                d["cv"] = jax.ShapeDtypeStruct((count, B, We, KV, hd),
+                                               kv_dtype)
+                dm["ck"] = dm["cv"] = kv_dims
+        if kind in blocks.SSM_KINDS or kind == "ssm":
+            d["h"] = jax.ShapeDtypeStruct((count, B, Hp, Pd, N), jnp.float32)
+            dm["h"] = (None, "batch", "tp", None, None)
+            d["cx"] = jax.ShapeDtypeStruct((count, B, cw - 1, dip), ad)
+            dm["cx"] = (None, "batch", None, "tp")
+            d["cbc"] = jax.ShapeDtypeStruct((count, B, cw - 1, 2 * N), ad)
+            dm["cbc"] = (None, "batch", None, None)
+        structs.append(d)
+        dims.append(dm)
+    return tuple(structs), tuple(dims)
+
+
+def batch_dims(cfg: ModelConfig, shape_kind: str):
+    out = {"tokens": ("batch", None)}
+    if shape_kind == "train":
+        out["labels"] = ("batch", None)
+    if cfg.n_patches:
+        out["patches"] = ("batch", None, None)
+    if cfg.enc_schedule:
+        out["frames"] = ("batch", None, None)
+    return out
+
+
+# --------------------------------------------------------------------------
+# bundles
+# --------------------------------------------------------------------------
+
+@dataclass
+class StepBundle:
+    fn: Any                       # jitted step function
+    plan: Plan
+    policy: Policy
+    cfg: ModelConfig
+    in_structs: tuple             # ShapeDtypeStructs with shardings (dry-run)
+    in_specs: tuple = ()
+    aux: dict = field(default_factory=dict)
+
+    def lower(self):
+        return self.fn.lower(*self.in_structs)
+
+
+def _maybe_shard_map(fn, mesh, in_specs, out_specs):
+    if mesh is None:
+        return fn
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def _param_struct(cfg, dtype):
+    return jax.eval_shape(
+        functools.partial(lm.init_lm, cfg=cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                    mesh: Optional[Mesh], *,
+                    policy: Optional[Policy] = None,
+                    lr_fn: Optional[Callable] = None,
+                    max_grad_norm: float = 1.0,
+                    grad_compression: Optional[str] = None,
+                    reduce_method: str = "ring",
+                    gelu_impl: str = "i_gelu",
+                    naive_attention: bool = False,
+                    ssm_seq_parallel: bool = False) -> StepBundle:
+    import dataclasses
+    policy = policy or default_policy(cfg, "train")
+    lr_fn = lr_fn or cosine_schedule(3e-4, 100, 10_000)
+    plan = make_plan(cfg, shape, mesh, mode="train",
+                     reduce_method=reduce_method)
+    plan = dataclasses.replace(plan, gelu_impl=gelu_impl,
+                               naive_attention=naive_attention,
+                               ssm_seq_parallel=ssm_seq_parallel)
+
+    p_dims = lm.lm_param_dims(cfg)
+    p_specs = resolve_pspecs(p_dims, plan)
+    p_struct = _param_struct(cfg, jnp.float32)
+    rep_axes = replication_axes_list(p_dims, plan)
+    shard_axes = shard_axes_list(p_dims, plan)
+    compress_pod = (grad_compression == "int8"
+                    and plan.mesh is not None
+                    and "pod" in plan.mesh.axis_names)
+
+    state_specs = {"step": P(), "params": p_specs,
+                   "opt": {"m": p_specs, "v": p_specs}}
+    if compress_pod:
+        state_specs["ef"] = p_specs
+    b_dims = batch_dims(cfg, "train")
+    b_specs = resolve_pspecs(b_dims, plan)
+    b_struct = frontends.batch_struct(cfg, "train", shape.global_batch,
+                                      shape.seq_len)
+    metric_specs = {"loss": P(), "ce": P(), "grad_norm": P(), "lr": P(),
+                    "tokens": P()}
+    if cfg.n_experts:
+        metric_specs["aux"] = P()
+
+    def body(state, batch):
+        col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
+
+        def loss_fn(params_f32):
+            params_c = jax.tree.map(
+                lambda x: x.astype(policy.param_dtype)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, params_f32)
+            loss, metrics = lm.forward_train(params_c, batch, plan=plan,
+                                             cfg=cfg, policy=policy)
+            return loss, metrics
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+
+        # explicit sync over replication axes (pod DP hop optionally int8)
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_rep = rep_axes
+        assert len(flat_g) == len(flat_rep), (len(flat_g), len(flat_rep))
+        flat_ef = (jax.tree.leaves(state["ef"]) if compress_pod
+                   else [None] * len(flat_g))
+        new_g, new_ef = [], []
+        for g, rep, ef in zip(flat_g, flat_rep, flat_ef):
+            if compress_pod and "pod" in rep:
+                g, ef = ef_compressed_psum(g, ef, "pod")
+                rep = tuple(a for a in rep if a != "pod")
+            new_ef.append(ef)
+            new_g.append(col.psum(g.astype(jnp.float32), rep))
+        grads = jax.tree.unflatten(tdef, new_g)
+        grads, gnorm = clip_by_global_norm(grads, shard_axes, max_grad_norm)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = adamw_update(state["params"], grads,
+                                           state["opt"], step=state["step"],
+                                           lr=lr)
+        new_state = {"step": state["step"] + 1, "params": new_params,
+                     "opt": new_opt}
+        if compress_pod:
+            new_state["ef"] = jax.tree.unflatten(tdef, new_ef)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_state, metrics
+
+    sm = _maybe_shard_map(body, mesh,
+                          in_specs=(state_specs, b_specs),
+                          out_specs=(state_specs, metric_specs))
+    fn = jax.jit(sm, donate_argnums=(0,))
+
+    opt_struct = jax.eval_shape(adamw_init, p_struct)
+    state_struct = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                    "params": p_struct, "opt": opt_struct}
+    if compress_pod:
+        state_struct["ef"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_struct)
+    in_structs = (with_shardings(state_struct, state_specs, mesh),
+                  with_shardings(b_struct, b_specs, mesh))
+
+    def init_state(seed: int = 0):
+        def build():
+            params = lm.init_lm(jax.random.key(seed), cfg, jnp.float32)
+            return {"step": jnp.zeros((), jnp.int32), "params": params,
+                    "opt": adamw_init(params),
+                    **({"ef": jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+                       if compress_pod else {})}
+        if mesh is None:
+            return build()
+        shardings = to_shardings(state_specs, mesh)
+        return jax.jit(build, out_shardings=shardings)()
+
+    return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
+                      in_structs=in_structs,
+                      in_specs=(state_specs, b_specs),
+                      aux={"init_state": init_state,
+                           "state_specs": state_specs,
+                           "batch_specs": b_specs,
+                           "param_dims": p_dims})
+
+
+# --------------------------------------------------------------------------
+# prefill step (NAR)
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                      mesh: Optional[Mesh], *,
+                      policy: Optional[Policy] = None,
+                      max_seq: Optional[int] = None,
+                      reduce_method: str = "ring",
+                      naive_attention: bool = False,
+                      ssm_seq_parallel: bool = False,
+                      kv_cache_dtype: str = "bfloat16",
+                      attention_sharding: str = "",
+                      comm_fp8: bool = False,
+                      mlp_weight_stationary: bool = False) -> StepBundle:
+    import dataclasses
+    policy = policy or default_policy(cfg, "serve")
+    plan = make_plan(cfg, shape, mesh, mode="serve",
+                     reduce_method=reduce_method)
+    plan = dataclasses.replace(
+        plan, naive_attention=naive_attention,
+        ssm_seq_parallel=ssm_seq_parallel, kv_cache_dtype=kv_cache_dtype,
+        attention_sharding=attention_sharding or plan.attention_sharding,
+        comm_fp8=comm_fp8, mlp_weight_stationary=mlp_weight_stationary)
+    max_seq = max_seq or shape.seq_len
+
+    p_dims = lm.lm_param_dims(cfg)
+    p_specs = resolve_pspecs(p_dims, plan)
+    p_struct = _param_struct(cfg, policy.param_dtype)
+    b_dims = batch_dims(cfg, "prefill")
+    b_specs = resolve_pspecs(b_dims, plan)
+    b_struct = frontends.batch_struct(cfg, "prefill", shape.global_batch,
+                                      shape.seq_len)
+    c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
+                                    policy)
+    c_specs = resolve_pspecs(c_dims, plan)
+    tok_spec = plan.pspec("batch")
+
+    def body(params, batch):
+        col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
+        tok, caches, pos = lm.forward_prefill(params, batch, plan=plan,
+                                              cfg=cfg, policy=policy,
+                                              max_seq=max_seq)
+        return tok, caches, pos
+
+    sm = _maybe_shard_map(body, mesh, in_specs=(p_specs, b_specs),
+                          out_specs=(tok_spec, c_specs, tok_spec))
+    fn = jax.jit(sm)
+    in_structs = (with_shardings(p_struct, p_specs, mesh),
+                  with_shardings(b_struct, b_specs, mesh))
+    return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
+                      in_structs=in_structs, in_specs=(p_specs, b_specs),
+                      aux={"param_specs": p_specs, "cache_struct": c_struct,
+                           "cache_specs": c_specs, "max_seq": max_seq,
+                           "param_dims": p_dims})
+
+
+# --------------------------------------------------------------------------
+# decode step (AR)
+# --------------------------------------------------------------------------
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
+                     mesh: Optional[Mesh], *,
+                     policy: Optional[Policy] = None,
+                     max_seq: Optional[int] = None,
+                     reduce_method: str = "ring",
+                     kv_cache_dtype: str = "bfloat16") -> StepBundle:
+    import dataclasses
+    policy = policy or default_policy(cfg, "serve")
+    plan = make_plan(cfg, shape, mesh, mode="serve",
+                     reduce_method=reduce_method)
+    plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype)
+    max_seq = max_seq or shape.seq_len
+
+    p_dims = lm.lm_param_dims(cfg)
+    p_specs = resolve_pspecs(p_dims, plan)
+    p_struct = _param_struct(cfg, policy.param_dtype)
+    c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
+                                    policy)
+    c_specs = resolve_pspecs(c_dims, plan)
+    tok_spec = plan.pspec("batch")
+    d_struct = frontends.decode_struct(shape.global_batch)
+
+    def body(params, token, pos, caches):
+        tok, caches = lm.forward_decode(params, token, pos, caches, plan=plan,
+                                        cfg=cfg, policy=policy)
+        return tok, pos + 1, caches
+
+    sm = _maybe_shard_map(body, mesh,
+                          in_specs=(p_specs, tok_spec, tok_spec, c_specs),
+                          out_specs=(tok_spec, tok_spec, c_specs))
+    fn = jax.jit(sm, donate_argnums=(3,))
+    in_structs = (with_shardings(p_struct, p_specs, mesh),
+                  with_shardings(d_struct["token"], tok_spec, mesh),
+                  with_shardings(d_struct["pos"], tok_spec, mesh),
+                  with_shardings(c_struct, c_specs, mesh))
+    return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
+                      in_structs=in_structs,
+                      in_specs=(p_specs, tok_spec, tok_spec, c_specs),
+                      aux={"param_specs": p_specs, "cache_struct": c_struct,
+                           "cache_specs": c_specs, "max_seq": max_seq,
+                           "param_dims": p_dims})

@@ -1,0 +1,63 @@
+"""Modality frontend STUBS + `input_specs()` builders (assignment contract).
+
+[vlm]/[audio] entries specify the transformer BACKBONE only: the InternViT
+patch encoder and the Whisper conv/mel frontend are stubs — `input_specs()`
+supplies precomputed patch/frame embeddings as ShapeDtypeStructs (dry-run)
+and `make_batch()` materializes deterministic synthetic ones (tests/bench).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+EMBED_DTYPE = jnp.bfloat16
+
+
+def batch_struct(cfg: ModelConfig, shape_kind: str, global_batch: int,
+                 seq_len: int) -> dict:
+    """ShapeDtypeStruct stand-ins for one full-sequence step's data batch.
+    `seq_len` counts the TOTAL sequence (VLM patch prefix included)."""
+    s_text = seq_len - (cfg.n_patches or 0)
+    assert s_text > 0, (seq_len, cfg.n_patches)
+    out = {"tokens": jax.ShapeDtypeStruct((global_batch, s_text), jnp.int32)}
+    if shape_kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((global_batch, s_text),
+                                             jnp.int32)
+    if cfg.n_patches:
+        out["patches"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_patches, cfg.d_model), EMBED_DTYPE)
+    if cfg.enc_schedule:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.enc_seq_padded, cfg.d_model), EMBED_DTYPE)
+    return out
+
+
+def decode_struct(global_batch: int) -> dict:
+    return {"token": jax.ShapeDtypeStruct((global_batch,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((global_batch,), jnp.int32)}
+
+
+def make_batch(cfg: ModelConfig, shape_kind: str, global_batch: int,
+               seq_len: int, *, seed: int = 0) -> dict:
+    """Deterministic synthetic batch matching `batch_struct` (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    s_text = seq_len - (cfg.n_patches or 0)
+    toks = rng.integers(0, max(cfg.vocab, 2), (global_batch, s_text + 1),
+                        dtype=np.int32)
+    out = {"tokens": jnp.asarray(toks[:, :-1])}
+    if shape_kind == "train":
+        out["labels"] = jnp.asarray(toks[:, 1:])
+    if cfg.n_patches:
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((global_batch, cfg.n_patches, cfg.d_model),
+                                dtype=np.float32), EMBED_DTYPE)
+    if cfg.enc_schedule:
+        frames = np.zeros((global_batch, cfg.enc_seq_padded, cfg.d_model),
+                          np.float32)
+        frames[:, :cfg.enc_seq] = rng.standard_normal(
+            (global_batch, cfg.enc_seq, cfg.d_model), dtype=np.float32)
+        out["frames"] = jnp.asarray(frames, EMBED_DTYPE)
+    return out

@@ -1,0 +1,299 @@
+"""Decoder-only / encoder-decoder language model over the segment schedule.
+
+The model is a list of *segments* (configs.base): each segment is one
+`lax.scan` over `count` stacked layers of one kind, keeping the HLO compact
+for deep models (deepseek-67b: one 95-trip while loop).  All forwards run
+inside the step's `shard_map` (launch/steps.py) and follow the manual-SPMD
+contract: x is [B_loc, S_loc, E] (batch over `plan.batch_axes`, sequence
+over `plan.seq_axes`).
+
+Modes
+-----
+train     full sequence, remat per layer, distributed-CE loss (NAR math)
+prefill   full sequence + KV-cache construction, greedy next token (NAR)
+decode    one token per call against the sequence-sharded cache (AR, T4)
+
+Modality frontends are stubs per the assignment: VLM patch embeddings and
+audio frames arrive as precomputed [*, E] inputs (models/frontends.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks
+from repro.core import collectives as col
+from repro.core.embedding import (ce_loss, embed_sequence, embed_token,
+                                  embedding_param_dims,
+                                  embedding_param_shapes, greedy_token,
+                                  init_embedding)
+from repro.core.nn import act_dtype
+from repro.core.rope import sinusoidal_positions
+from repro.kernels import ops
+from repro.sharding.plan import Plan
+
+AUX_WEIGHT = 0.01      # MoE load-balance loss weight
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def _stack_dims(dims):
+    return jax.tree.map(lambda d: (None,) + tuple(d), dims,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def lm_param_dims(cfg) -> dict:
+    out = {
+        "embedding": embedding_param_dims(cfg),
+        "final_norm": blocks._norm_dims(cfg),
+        "segments": tuple(_stack_dims(blocks.block_param_dims(kind, cfg))
+                          for kind, _ in cfg.schedule),
+    }
+    if cfg.enc_schedule:
+        out["enc_segments"] = tuple(
+            _stack_dims(blocks.block_param_dims(kind, cfg))
+            for kind, _ in cfg.enc_schedule)
+        out["enc_final_norm"] = blocks._norm_dims(cfg)
+    return out
+
+
+def init_lm(key, cfg, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 4)
+
+    def init_segment(k, kind, count):
+        ks = jax.random.split(k, count)
+        return jax.vmap(lambda kk: blocks.init_block(kk, kind, cfg, dtype))(ks)
+
+    segs = []
+    for i, (kind, count) in enumerate(cfg.schedule):
+        segs.append(init_segment(jax.random.fold_in(keys[0], i), kind, count))
+    out = {
+        "embedding": init_embedding(keys[1], cfg, dtype),
+        "final_norm": blocks._init_norm(cfg, dtype),
+        "segments": tuple(segs),
+    }
+    if cfg.enc_schedule:
+        enc = []
+        for i, (kind, count) in enumerate(cfg.enc_schedule):
+            enc.append(init_segment(jax.random.fold_in(keys[2], i), kind,
+                                    count))
+        out["enc_segments"] = tuple(enc)
+        out["enc_final_norm"] = blocks._init_norm(cfg, dtype)
+    return out
+
+
+# --------------------------------------------------------------------------
+# sequence assembly
+# --------------------------------------------------------------------------
+
+def total_seq(cfg, s_text: int) -> int:
+    return s_text + (cfg.n_patches or 0)
+
+
+def _embed_sequence(params, batch, *, plan: Plan, cfg, policy,
+                    with_labels: bool):
+    """Local residual stream [B_loc, S_loc, E]; labels/valid cover the FULL
+    sequence (vocab-parallel CE contract, core/embedding.py)."""
+    tokens = batch["tokens"]                       # [B_loc, S_text]
+    B, S_text = tokens.shape
+    n_p = cfg.n_patches if (cfg.n_patches and "patches" in batch) else 0
+    S_tot = S_text + n_p
+    ids_full = tokens
+    if n_p:                                        # patch positions: dummy id
+        ids_full = jnp.concatenate(
+            [jnp.zeros((B, n_p), tokens.dtype), tokens], axis=1)
+    x = embed_sequence(params["embedding"]["embed"], ids_full, plan=plan,
+                       policy=policy)              # [B, S_loc, E]
+
+    S_loc = S_tot // plan.sp
+    off = col.axis_index(plan.seq_axes) * S_loc
+    gpos = jnp.arange(S_loc) + off                 # [S_loc] global positions
+    if n_p:                                        # overwrite patch prefix
+        prow = jnp.take(batch["patches"], jnp.clip(gpos, 0, n_p - 1), axis=1)
+        x = jnp.where((gpos < n_p)[None, :, None], prow.astype(x.dtype), x)
+    if cfg.rope_theta == 0:                        # whisper: sinusoidal abs
+        pos_tab = sinusoidal_positions(S_tot, cfg.d_model)
+        x = x + jnp.take(pos_tab, gpos, axis=0)[None].astype(x.dtype)
+
+    if not with_labels:
+        return x, None, None
+    labels = batch["labels"]
+    valid = jnp.ones((B, S_text), bool)
+    if "valid" in batch:
+        valid &= batch["valid"]
+    if n_p:
+        labels = jnp.concatenate(
+            [jnp.zeros((B, n_p), labels.dtype), labels], axis=1)
+        valid = jnp.concatenate([jnp.zeros((B, n_p), bool), valid], axis=1)
+    return x, labels, valid
+
+
+def _run_encoder(params, batch, *, plan: Plan, cfg, policy):
+    """Whisper encoder over stub frame embeddings -> [B, S_enc_loc, E]."""
+    frames = batch["frames"]                       # [B, S_enc_pad, E]
+    S_enc = frames.shape[1]
+    S_loc = S_enc // plan.sp
+    off = col.axis_index(plan.seq_axes) * S_loc
+    x = jax.lax.dynamic_slice_in_dim(frames, off, S_loc, axis=1)
+    pos_tab = sinusoidal_positions(S_enc, cfg.d_model)
+    x = (x + jnp.take(pos_tab, jnp.arange(S_loc) + off, axis=0)[None]
+         ).astype(act_dtype(policy))
+    for (kind, _), p_seg in zip(cfg.enc_schedule, params["enc_segments"]):
+        def body(carry, p_layer):
+            y, _, _ = blocks.block_full(kind, p_layer, carry, plan=plan,
+                                        cfg=cfg, policy=policy)
+            return y, None
+        x, _ = jax.lax.scan(body, x, p_seg)
+    return ops.norm(x, params["enc_final_norm"], cfg.norm)
+
+
+# --------------------------------------------------------------------------
+# segment runners
+# --------------------------------------------------------------------------
+
+def _run_segments_train(params, x, *, plan, cfg, policy, memory, memory_len):
+    aux = jnp.zeros((), jnp.float32)
+    for (kind, _), p_seg in zip(cfg.schedule, params["segments"]):
+        def body(carry, p_layer, _kind=kind):
+            h, a = carry
+            h2, _, da = blocks.block_full(_kind, p_layer, h, plan=plan,
+                                          cfg=cfg, policy=policy,
+                                          memory=memory,
+                                          memory_len=memory_len)
+            return (h2, a + da), None
+        (x, aux), _ = jax.lax.scan(jax.checkpoint(body), (x, aux), p_seg)
+    return x, aux
+
+
+def _run_segments_prefill(params, x, *, plan, cfg, policy, max_seq,
+                          memory, memory_len):
+    caches = []
+    for (kind, _), p_seg in zip(cfg.schedule, params["segments"]):
+        def body(h, p_layer, _kind=kind):
+            h2, cache, _ = blocks.block_full(_kind, p_layer, h, plan=plan,
+                                             cfg=cfg, policy=policy,
+                                             with_cache=True, max_seq=max_seq,
+                                             memory=memory,
+                                             memory_len=memory_len)
+            return h2, cache
+        x, seg_cache = jax.lax.scan(body, x, p_seg)
+        caches.append(seg_cache)
+    return x, tuple(caches)
+
+
+def _run_segments_decode(params, x, pos, caches, *, plan, cfg, policy,
+                         memory_len):
+    new_caches = []
+    for (kind, _), p_seg, c_seg in zip(cfg.schedule, params["segments"],
+                                       caches):
+        def body(h, inp, _kind=kind):
+            p_layer, c_layer = inp
+            h2, c2 = blocks.block_decode(_kind, p_layer, h, pos, c_layer,
+                                         plan=plan, cfg=cfg, policy=policy,
+                                         memory_len=memory_len)
+            return h2, c2
+        x, c_new = jax.lax.scan(body, x, (p_seg, c_seg))
+        new_caches.append(c_new)
+    return x, tuple(new_caches)
+
+
+# --------------------------------------------------------------------------
+# entry points (called inside shard_map)
+# --------------------------------------------------------------------------
+
+def forward_train(params, batch, *, plan: Plan, cfg, policy):
+    """-> (loss_for_grad, metrics).
+
+    `loss_for_grad` is THIS DEVICE's contribution to the global mean loss
+    (manual-SPMD contract: differentiating a psum'd scalar inside shard_map
+    would scale every gradient by the device count, since each device would
+    return the same global sum).  The psum'd global loss lives in
+    `metrics["loss"]`.  With no mesh the two coincide."""
+    x, labels, valid = _embed_sequence(params, batch, plan=plan, cfg=cfg,
+                                       policy=policy, with_labels=True)
+    memory = memory_len = None
+    if cfg.enc_schedule:
+        memory = _run_encoder(params, batch, plan=plan, cfg=cfg,
+                              policy=policy)
+        memory_len = cfg.enc_seq_padded
+    x, aux = _run_segments_train(params, x, plan=plan, cfg=cfg, policy=policy,
+                                 memory=memory, memory_len=memory_len)
+    x = ops.norm(x, params["final_norm"], cfg.norm)
+    loss_sum, cnt = ce_loss(x, params["embedding"]["unemb"], labels, valid,
+                            plan=plan, cfg=cfg, policy=policy)
+    # CE is computed redundantly on every tp peer (x gathered over seq): each
+    # copy is scaled by 1/tp so that, summed over devices, the total counts
+    # every token exactly once — the manual-SPMD "loss = sum of per-device
+    # contributions" contract that makes the collective transposes exact.
+    sp = max(plan.sp, 1)
+    tok_axes = plan.batch_axes + plan.seq_axes
+    n = jnp.maximum(col.psum(cnt / sp, tok_axes), 1.0)
+    contrib = (loss_sum / sp) / n               # this device's share
+    ce = col.psum(contrib, tok_axes)            # global mean (metrics)
+    loss_for_grad = contrib
+    metrics = {"ce": ce, "tokens": n}
+    if cfg.n_experts:
+        n_moe = sum(c for k, c in cfg.schedule if k in blocks.MOE_KINDS)
+        aux_share = aux / sp / max(plan.dp, 1) / max(n_moe, 1)
+        loss_for_grad = loss_for_grad + AUX_WEIGHT * aux_share
+        metrics["aux"] = col.psum(aux_share, tok_axes)
+    metrics["loss"] = ce + (AUX_WEIGHT * metrics["aux"]
+                            if cfg.n_experts else 0.0)
+    return loss_for_grad, metrics
+
+
+def _last_position(x, plan: Plan):
+    """x: [B, S_loc, E] sequence-sharded -> [B, E] residual of the final
+    global position (owned by the last seq shard; psum'd to everyone)."""
+    if not plan.seq_axes:
+        return x[:, -1]
+    i = col.axis_index(plan.seq_axes)
+    n = plan.sp
+    mine = jnp.where(i == n - 1, 1.0, 0.0).astype(jnp.float32)
+    return col.psum(x[:, -1].astype(jnp.float32) * mine,
+                    plan.seq_axes).astype(x.dtype)
+
+
+def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int):
+    """NAR prompt pass.  -> (next_token [B], caches, pos [B], memory_len)."""
+    x, _, _ = _embed_sequence(params, batch, plan=plan, cfg=cfg,
+                              policy=policy, with_labels=False)
+    memory = None
+    memory_len = 0
+    if cfg.enc_schedule:
+        memory = _run_encoder(params, batch, plan=plan, cfg=cfg,
+                              policy=policy)
+        memory_len = cfg.enc_seq_padded
+    x, caches = _run_segments_prefill(params, x, plan=plan, cfg=cfg,
+                                      policy=policy, max_seq=max_seq,
+                                      memory=memory, memory_len=memory_len)
+    x = ops.norm(x, params["final_norm"], cfg.norm)
+    x_last = _last_position(x, plan)
+    tok = greedy_token(x_last, params["embedding"]["unemb"], plan=plan,
+                       cfg=cfg, policy=policy)
+    B = tok.shape[0]
+    S_tot = total_seq(cfg, batch["tokens"].shape[1])
+    pos = jnp.full((B,), S_tot, jnp.int32)
+    return tok, caches, pos
+
+
+def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy):
+    """One AR step.  token/pos: [B] -> (next_token [B], caches)."""
+    x = embed_token(params["embedding"]["embed"], token, plan=plan,
+                    policy=policy)                              # [B, E]
+    if cfg.rope_theta == 0:
+        pos_tab = sinusoidal_positions(cfg.max_seq, cfg.d_model)
+        x = x + jnp.take(pos_tab, jnp.clip(pos, 0, cfg.max_seq - 1),
+                         axis=0).astype(x.dtype)
+    memory_len = cfg.enc_seq_padded if cfg.enc_schedule else 0
+    x, caches = _run_segments_decode(params, x, pos, caches, plan=plan,
+                                     cfg=cfg, policy=policy,
+                                     memory_len=memory_len)
+    x = ops.norm(x, params["final_norm"], cfg.norm)
+    tok = greedy_token(x, params["embedding"]["unemb"], plan=plan, cfg=cfg,
+                       policy=policy)
+    return tok, caches

@@ -1,0 +1,85 @@
+"""Encoder-only ViT classifier (the paper's own model family, Table II).
+
+Real patchify: the paper's stride=kernel conv frontend is mathematically a
+linear map on flattened 16x16x3 patches — implemented exactly so (one GEMM),
+plus cls token, learned positions, `vit` blocks and the classifier head.
+Used by the faithful-reproduction benchmarks (Figs. 8/9/10) and paper-model
+smoke tests; the assigned-architecture grid runs through models/lm.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks
+from repro.core import collectives as col
+from repro.core.nn import act_dtype, pdot
+from repro.kernels import ops
+from repro.sharding.plan import Plan, UNSHARDED
+
+PATCH_DIM = 16 * 16 * 3
+
+
+def vit_param_dims(cfg) -> dict:
+    seg_dims = [jax.tree.map(lambda d: (None,) + tuple(d),
+                             blocks.block_param_dims(kind, cfg),
+                             is_leaf=lambda x: isinstance(x, tuple))
+                for kind, _ in cfg.schedule]
+    return {
+        "patch": (None, None), "cls": (None, None), "pos": (None, None),
+        "head": (None, None), "head_b": (None,),
+        "final_norm": blocks._norm_dims(cfg),
+        "segments": tuple(seg_dims),
+    }
+
+
+def init_vit(key, cfg, dtype=jnp.float32) -> dict:
+    E = cfg.d_model
+    ks = jax.random.split(key, 6)
+
+    def init_segment(k, kind, count):
+        kk = jax.random.split(k, count)
+        return jax.vmap(lambda q: blocks.init_block(q, kind, cfg, dtype))(kk)
+
+    segs = tuple(init_segment(jax.random.fold_in(ks[0], i), kind, count)
+                 for i, (kind, count) in enumerate(cfg.schedule))
+    return {
+        "patch": (jax.random.normal(ks[1], (PATCH_DIM, E)) * 0.02
+                  ).astype(dtype),
+        "cls": (jax.random.normal(ks[2], (1, E)) * 0.02).astype(dtype),
+        "pos": (jax.random.normal(ks[3], (cfg.image_seq, E)) * 0.02
+                ).astype(dtype),
+        "head": (jax.random.normal(ks[4], (E, cfg.n_classes)) * 0.02
+                 ).astype(dtype),
+        "head_b": jnp.zeros((cfg.n_classes,), dtype),
+        "final_norm": blocks._init_norm(cfg, dtype),
+        "segments": segs,
+    }
+
+
+def forward_vit(params, patches, *, cfg, policy, plan: Plan = UNSHARDED):
+    """patches: [B, n_patches, PATCH_DIM] raw pixels -> logits [B, classes].
+    One network pass per classification (the paper's image/s metric)."""
+    B = patches.shape[0]
+    ad = act_dtype(policy)
+    x = pdot(patches, params["patch"], policy)          # linear patchify
+    cls = jnp.broadcast_to(params["cls"][None], (B, 1, x.shape[-1]))
+    x = jnp.concatenate([cls.astype(x.dtype), x], axis=1)
+    x = x + params["pos"][None, :x.shape[1]].astype(x.dtype)
+    for (kind, _), p_seg in zip(cfg.schedule, params["segments"]):
+        def body(h, p_layer, _kind=kind):
+            h2, _, _ = blocks.block_full(_kind, p_layer, h, plan=plan,
+                                         cfg=cfg, policy=policy)
+            return h2, None
+        x, _ = jax.lax.scan(body, x, p_seg)
+    x = ops.norm(x, params["final_norm"], cfg.norm)
+    logits = pdot(x[:, 0], params["head"], policy, out_dtype=jnp.float32)
+    return logits + params["head_b"].astype(jnp.float32)
+
+
+def vit_loss(params, patches, labels, *, cfg, policy, plan: Plan = UNSHARDED):
+    logits = forward_vit(params, patches, cfg=cfg, policy=policy, plan=plan)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "acc": acc}

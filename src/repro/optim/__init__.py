@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule, linear_schedule
+from repro.optim.compression import int8_allreduce, quantize_int8, dequantize_int8

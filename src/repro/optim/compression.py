@@ -1,0 +1,99 @@
+"""Int8 gradient compression with error feedback (cross-pod DP reduction).
+
+At 1000+ nodes the pod-level data-parallel all-reduce crosses the slowest
+links (DCN / optical inter-pod).  This module provides an explicit int8
+recursive-halving all-reduce built on `ppermute`: every hop ships int8
+payloads + one fp32 scale (≈4x fewer wire bytes than fp32, 2x vs bf16);
+accumulation stays fp32 locally.  The initial quantization error is returned
+for error feedback (carried in optimizer state, added to the next step's
+gradient) — the standard EF-SGD/1-bit-Adam trick that restores convergence.
+
+Used by launch/steps.py when `grad_compression="int8"`; the quantizers are
+hypothesis-tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8.  -> (q int8, scale fp32 scalar)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _halving_exchange(x_send, axis: str, step: int, n: int):
+    perm = []
+    for i in range(n):
+        b = (i // step) % 2
+        perm.append((i, i + step if b == 0 else i - step))
+    return jax.lax.ppermute(x_send, axis, perm)
+
+
+def int8_allreduce(x, axis: str):
+    """All-reduce over `axis` with int8 wire payloads.
+
+    Recursive-halving reduce-scatter (each hop quantizes the outgoing half)
+    followed by an int8 recursive-doubling all-gather.  Returns fp32.
+    Requires a power-of-two axis; falls back to psum for size 1.
+    """
+    n = jax.lax.axis_size(axis)
+    if n == 1:
+        return x.astype(jnp.float32)
+    assert n & (n - 1) == 0, f"int8_allreduce needs power-of-two axis, got {n}"
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = -flat.shape[0] % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    idx = jax.lax.axis_index(axis)
+    size = flat.shape[0]
+
+    # reduce-scatter by recursive halving, int8 on the wire
+    buf = flat
+    offset = jnp.zeros((), jnp.int32)
+    width = size
+    step = n // 2
+    while step >= 1:
+        width //= 2
+        bit = (idx // step) % 2
+        my_off = offset + bit * width
+        their_off = offset + (1 - bit) * width
+        send = jax.lax.dynamic_slice(buf, (their_off,), (width,))
+        q, s = quantize_int8(send)
+        q_r = _halving_exchange(q, axis, step, n)
+        s_r = _halving_exchange(s, axis, step, n)
+        mine = jax.lax.dynamic_slice(buf, (my_off,), (width,))
+        buf = jax.lax.dynamic_update_slice(
+            buf, mine + dequantize_int8(q_r, s_r), (my_off,))
+        offset = my_off
+        step //= 2
+    chunk = jax.lax.dynamic_slice(buf, (offset,), (width,))
+
+    # all-gather the reduced chunks, int8 on the wire
+    q, s = quantize_int8(chunk)
+    q_all = jax.lax.all_gather(q, axis, axis=0, tiled=True)
+    s_all = jax.lax.all_gather(s[None], axis, axis=0)
+    full = (q_all.reshape(n, width).astype(jnp.float32)
+            * s_all.reshape(n, 1)).reshape(-1)
+    if pad:
+        full = full[:size - pad]
+    return full.reshape(shape)
+
+
+def ef_compressed_psum(g, err, axis: str):
+    """Error-feedback wrapper: reduce (g + err) in int8, return the reduced
+    gradient and the new local error (what quantization dropped)."""
+    gf = g.astype(jnp.float32) + err
+    q, s = quantize_int8(gf)
+    new_err = gf - dequantize_int8(q, s)
+    reduced = int8_allreduce(dequantize_int8(q, s), axis)
+    return reduced, new_err

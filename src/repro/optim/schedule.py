@@ -1,0 +1,25 @@
+"""LR schedules (pure jnp functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        wu = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        decay = jnp.maximum(0.0, 1.0 - jnp.maximum(s - warmup, 0)
+                            / jnp.maximum(total - warmup, 1))
+        return base_lr * wu * decay
+    return lr
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        wu = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * wu * cos
+    return lr

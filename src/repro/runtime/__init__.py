@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import PreemptionGuard, run_with_restarts
+from repro.runtime.straggler import StragglerWatchdog
+from repro.runtime.elastic import elastic_restore

@@ -1,0 +1,34 @@
+"""Elastic scaling: resume a checkpoint onto a different mesh.
+
+Checkpoints store logical arrays (checkpoint/checkpointer.py), so scaling
+down/up is: build the new mesh -> rebuild the step bundle (the Plan resolves
+the same logical dims onto the new axes) -> restore with the new shardings.
+The batch axes re-divide automatically as long as global_batch still divides
+the new dp size (asserted here).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_mesh_for
+
+
+def elastic_restore(checkpointer, cfg, shape, *, n_devices: Optional[int] = None,
+                    mesh=None, step: Optional[int] = None, **step_kwargs):
+    """-> (bundle, state) on the new mesh, restored from the checkpoint."""
+    if mesh is None:
+        n = n_devices or len(jax.devices())
+        mesh = make_mesh_for(n)
+    bundle = steps_mod.make_train_step(cfg, shape, mesh, **step_kwargs)
+    plan = bundle.plan
+    assert shape.global_batch % max(plan.dp, 1) == 0, (
+        f"global_batch {shape.global_batch} must divide the new dp "
+        f"{plan.dp}")
+    state_struct = bundle.in_structs[0]
+    shardings = steps_mod.to_shardings(bundle.aux["state_specs"], mesh)
+    state = checkpointer.restore(state_struct, step=step,
+                                 shardings=shardings)
+    return bundle, state

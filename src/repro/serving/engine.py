@@ -1,0 +1,129 @@
+"""Continuous-batching serving engine (NAR prefill + AR decode, paper T8).
+
+A fixed decode batch of B slots runs lockstep AR steps (the paper's AR
+mode); finished rows are immediately replaced by prefilling queued requests
+(batch-1 NAR pass, paper's prompt-encoding mode) and scattering their cache
+into the free slot — decode never drains to admit work.
+
+All model math goes through the launch/steps bundles, so the engine runs
+identically on 1 CPU device (tests) and on the production mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import steps as steps_mod
+from repro.serving.kv_cache import insert_row, zero_caches
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # [S_prompt] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    prefill_ms: float = 0.0
+    decode_ms: float = 0.0
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
+                 max_seq: int = 256, prompt_len: int = 32, mesh=None,
+                 policy=None):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.prompt_len = prompt_len
+        dshape = ShapeConfig("engine_decode", "decode", max_seq, batch_size)
+        pshape = ShapeConfig("engine_prefill", "prefill", prompt_len, 1)
+        self.decode_step = steps_mod.make_decode_step(
+            cfg, dshape, mesh, policy=policy, max_seq=max_seq)
+        self.prefill_step = steps_mod.make_prefill_step(
+            cfg, pshape, mesh, policy=policy, max_seq=max_seq)
+        self.caches = zero_caches(self.decode_step.aux["cache_struct"],
+                                  steps_mod.to_shardings(
+                                      self.decode_step.aux["cache_specs"],
+                                      mesh))
+        self.tokens = jnp.zeros((batch_size,), jnp.int32)
+        self.pos = jnp.zeros((batch_size,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self.steps_run = 0
+
+    # -- admission -----------------------------------------------------
+    def submit(self, req: Request):
+        assert len(req.prompt) == self.prompt_len, (
+            f"engine is configured for prompt_len={self.prompt_len}")
+        self.queue.append(req)
+
+    def _admit(self):
+        for b in range(self.B):
+            if self.slots[b] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            t0 = time.perf_counter()
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+            if self.cfg.n_patches:
+                batch["patches"] = jnp.zeros(
+                    (1, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
+            if self.cfg.enc_schedule:
+                batch["frames"] = jnp.zeros(
+                    (1, self.cfg.enc_seq_padded, self.cfg.d_model),
+                    jnp.bfloat16)
+            tok, caches1, pos1 = self.prefill_step.fn(self.params, batch)
+            req.prefill_ms = (time.perf_counter() - t0) * 1e3
+            req.output.append(int(tok[0]))
+            self.caches = insert_row(self.caches, caches1, b)
+            self.tokens = self.tokens.at[b].set(tok[0])
+            self.pos = self.pos.at[b].set(pos1[0])
+            self.slots[b] = req
+
+    # -- decode ----------------------------------------------------------
+    def _retire(self):
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = req.output[-1]
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or int(self.pos[b]) >= self.max_seq - 1):
+                req.done = True
+                self.completed.append(req)
+                self.slots[b] = None
+
+    def step(self):
+        """One engine iteration: admit -> AR step -> collect."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return False
+        t0 = time.perf_counter()
+        self.tokens, self.pos, self.caches = self.decode_step.fn(
+            self.params, self.tokens, self.pos, self.caches)
+        dt = (time.perf_counter() - t0) * 1e3
+        self.steps_run += 1
+        toks = np.asarray(self.tokens)
+        for b, req in enumerate(self.slots):
+            if req is not None:
+                req.output.append(int(toks[b]))
+                req.decode_ms += dt
+        self._retire()
+        return True
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Run until queue + slots drain; returns completed requests."""
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return self.completed

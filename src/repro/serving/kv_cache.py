@@ -1,0 +1,35 @@
+"""KV-cache utilities for the serving engine.
+
+The cache *layout* (ring vs linear, sequence sharding) is owned by
+launch/steps.cache_layout; this module materializes zero-initialized caches
+and provides the row-scatter used by continuous batching (inserting one
+freshly-prefilled request into an existing decode batch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zero_caches(cache_struct, shardings=None):
+    """Materialize zeroed caches matching the struct tree (optionally with
+    shardings — the decode step's cache specs)."""
+    def mk(st, sh):
+        if sh is None:
+            return jnp.zeros(st.shape, st.dtype)
+        return jax.jit(lambda: jnp.zeros(st.shape, st.dtype),
+                       out_shardings=sh)()
+    if shardings is None:
+        return jax.tree.map(lambda st: jnp.zeros(st.shape, st.dtype),
+                            cache_struct)
+    return jax.tree.map(mk, cache_struct, shardings)
+
+
+@jax.jit
+def insert_row(batch_caches, single_caches, row: int):
+    """Scatter a single-request cache (batch dim 1) into row `row` of the
+    batch caches.  Cache leaves are [count, B, ...]: dim 1 is the batch."""
+    def ins(b, s):
+        return jax.lax.dynamic_update_slice_in_dim(b, s.astype(b.dtype),
+                                                   row, axis=1)
+    return jax.tree.map(ins, batch_caches, single_caches)

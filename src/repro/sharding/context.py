@@ -1,0 +1,107 @@
+"""Mesh context: logical-axis resolution shared by the whole framework.
+
+Logical axes
+------------
+``dp``    data parallel (batch)           -> physical ("pod", "data")
+``fsdp``  fully-sharded parameter axis    -> physical "data"
+``tp``    tensor parallel (heads / d_ff)  -> physical "model"
+``sp``    sequence parallel (activations) -> physical "model"
+
+Model code never names physical axes; it asks the active `MeshContext`.
+With no mesh (unit tests, single-CPU benchmarks) every operation degrades
+to the unsharded path: constraints become no-ops and the explicit-collective
+features (fused projection, distributed softmax, MoE dispatch) run their
+single-shard branch.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES = {
+    "dp": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "sp": ("model",),
+}
+
+
+@dataclass(frozen=True)
+class MeshContext:
+    mesh: Optional[Mesh] = None
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    # -- resolution -----------------------------------------------------
+    def _axes(self, logical: Optional[str]):
+        if logical is None or self.mesh is None:
+            return None
+        phys = tuple(a for a in self.rules.get(logical, ())
+                     if a in self.mesh.axis_names)
+        if not phys:
+            return None
+        return phys if len(phys) > 1 else phys[0]
+
+    def pspec(self, *logical) -> P:
+        return P(*(self._axes(l) for l in logical))
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+    def constraint(self, x, *logical):
+        """with_sharding_constraint that degrades to identity without a mesh."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.pspec(*logical)))
+
+    # -- queries ---------------------------------------------------------
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.rules.get(logical, ()):
+            if a in self.mesh.axis_names:
+                n *= self.mesh.shape[a]
+        return n
+
+    def axis_names(self, logical: str) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in self.rules.get(logical, ())
+                     if a in self.mesh.axis_names)
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size("tp")
+
+    @property
+    def dp(self) -> int:
+        return self.axis_size("dp")
+
+
+_STATE = threading.local()
+
+
+def get_ctx() -> MeshContext:
+    return getattr(_STATE, "ctx", None) or MeshContext()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = MeshContext(mesh, dict(rules or DEFAULT_RULES))
+    try:
+        if mesh is not None:
+            with mesh:
+                yield _STATE.ctx
+        else:
+            yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev

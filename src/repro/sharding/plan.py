@@ -1,0 +1,163 @@
+"""Static sharding plan per (arch, shape, mesh, mode).
+
+The plan is the single source of truth for how logical dimensions map to
+physical mesh axes.  Model code is written in manual-SPMD style (inside one
+`shard_map` per step) and consults only the plan:
+
+  logical dim     train (mode="train")        serve (mode="serve")
+  -----------     ---------------------       ---------------------
+  batch           ("pod", "data")             ("data",)  [() when B == 1]
+  seq (resid)     ("model",)                  ("model",)  [decode: unsharded]
+  fsdp (weights)  ("data",)                   ()  — weights replicated on data
+  tp (heads/d_ff) ("model",)                  ("model",)
+  cache seq       n/a                         ("model",)  [("data","model")
+                                               when batch == 1 — long_500k]
+
+Weight PartitionSpecs are derived from per-parameter *logical dim tuples*
+declared next to the parameter schema (core/layers.py): e.g. wq has logical
+dims ("fsdp", "tp") -> train spec P("data", "model"), serve spec
+P(None, "model").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _present(mesh: Optional[Mesh], axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+@dataclass(frozen=True)
+class Plan:
+    mesh: Optional[Mesh]
+    mode: str                        # train | serve
+    batch_axes: Tuple[str, ...]      # residual-stream batch dim
+    seq_axes: Tuple[str, ...]        # residual-stream sequence dim
+    fsdp_axes: Tuple[str, ...]       # weight row-sharding (gathered at use)
+    tp_axes: Tuple[str, ...]         # heads / d_ff / vocab sharding
+    cache_axes: Tuple[str, ...]      # KV-cache sequence sharding (decode)
+    attention_sharding: str = "head_tp"   # head_tp | seq_sp (train/prefill)
+    reduce_method: str = "ring"           # ring | tree  (T3 schedule)
+    gelu_impl: str = "i_gelu"             # i_gelu | gelu | gelu_exact (T5)
+    naive_attention: bool = False         # paper-baseline: no flash fusion
+    # beyond-paper (§Perf P2): sequence-parallel SSD — the state recurrence
+    # crosses seq shards via a log2(tp)-step associative scan of tiny
+    # (decay, state) pairs instead of gathering the full sequence
+    ssm_seq_parallel: bool = False
+    # beyond-paper (§Perf P1): fp8 KV-cache storage (halves the decode
+    # cache stream; scores upcast to fp32 for softmax stats as always)
+    kv_cache_dtype: str = "bfloat16"
+    # beyond-paper (§Perf P3c): fp8 residual-stream all-gathers (halves the
+    # dominant Megatron-SP gather wire bytes; math still runs at act dtype)
+    comm_fp8: bool = False
+    # beyond-paper (§Perf P3d): weight-stationary MLP — keep the sequence
+    # sharded and gather the (fp8) weights instead of gathering x and
+    # reduce-scattering the output.  Wins when tokens/device * E exceeds
+    # the per-layer FFN weight bytes (long-prefill serving).
+    mlp_weight_stationary: bool = False
+
+    # ---- sizes ---------------------------------------------------------
+    def size(self, axes: Tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a] if self.mesh else 1
+        return n
+
+    @property
+    def dp(self) -> int:
+        return self.size(self.batch_axes)
+
+    @property
+    def tp(self) -> int:
+        return self.size(self.tp_axes)
+
+    @property
+    def sp(self) -> int:
+        return self.size(self.seq_axes)
+
+    @property
+    def fsdp(self) -> int:
+        return self.size(self.fsdp_axes)
+
+    @property
+    def cache_shards(self) -> int:
+        return self.size(self.cache_axes)
+
+    # ---- logical -> physical -------------------------------------------
+    def _axes_of(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        phys = {
+            "batch": self.batch_axes,
+            "seq": self.seq_axes,
+            "fsdp": self.fsdp_axes,
+            "tp": self.tp_axes,
+            "cache": self.cache_axes,
+        }[logical]
+        if not phys:
+            return None
+        return phys if len(phys) > 1 else phys[0]
+
+    def pspec(self, *logical) -> P:
+        return P(*(self._axes_of(l) for l in logical))
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+def make_plan(cfg: ModelConfig, shape: Optional[ShapeConfig],
+              mesh: Optional[Mesh], *, mode: str = "train",
+              reduce_method: str = "ring") -> Plan:
+    """Build the sharding plan for one benchmark cell."""
+    if mode == "train":
+        batch = _present(mesh, ("pod", "data"))
+        fsdp = _present(mesh, ("data",))
+    else:
+        batch = _present(mesh, ("pod", "data"))
+        fsdp = ()                    # serve: weights replicated over data
+    seq = _present(mesh, ("model",))
+    tp = _present(mesh, ("model",))
+    cache = _present(mesh, ("model",))
+
+    gb = shape.global_batch if shape is not None else 0
+    if mode == "serve" and shape is not None and gb == 1:
+        # long_500k: no batch to shard -> spread the cache over the full mesh
+        batch = ()
+        cache = _present(mesh, ("pod", "data", "model"))
+    elif mesh is not None and gb:
+        # drop batch axes the batch size cannot fill
+        kept = []
+        rem = gb
+        for a in batch:
+            s = mesh.shape[a]
+            if rem % s == 0 and rem >= s:
+                kept.append(a)
+                rem //= s
+        batch = tuple(kept)
+
+    return Plan(
+        mesh=mesh, mode=mode,
+        batch_axes=batch, seq_axes=seq, fsdp_axes=fsdp, tp_axes=tp,
+        cache_axes=cache,
+        attention_sharding=cfg.attention_sharding,
+        reduce_method=reduce_method,
+    )
+
+
+UNSHARDED = Plan(mesh=None, mode="train", batch_axes=(), seq_axes=(),
+                 fsdp_axes=(), tp_axes=(), cache_axes=())

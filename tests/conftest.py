@@ -1,0 +1,26 @@
+"""Test configuration.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+(the multi-device tests spawn subprocesses that set their own flags).
+"""
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_allclose(a, b, *, rtol=2e-2, atol=2e-2):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol)

@@ -1,0 +1,107 @@
+"""HLO analysis: trip-count weighting, collective accounting, roofline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import parse_hlo
+from repro.analysis.roofline import (model_flops, roofline_from_summary,
+                                     PEAK_BF16)
+from repro.configs import SHAPES, get_config
+
+
+def _flops_of(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return parse_hlo(compiled.as_text(), default_dot_dtype="f32").total_flops
+
+
+def test_trip_count_weighting():
+    """A scan of k matmuls must report ~k x the flops of one matmul —
+    exactly what compiled.cost_analysis() gets wrong."""
+    x = jnp.ones((64, 64))
+    w = jnp.ones((8, 64, 64))
+
+    def one(x):
+        return x @ w[0]
+
+    def scan(x):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    f1 = _flops_of(one, x)
+    f8 = _flops_of(scan, x)
+    assert f1 > 0
+    ratio = f8 / f1
+    assert 7.0 < ratio < 9.5, ratio
+
+
+def test_dot_flops_exact():
+    a = jnp.ones((32, 128))
+    b = jnp.ones((128, 16))
+    got = _flops_of(lambda a, b: a @ b, a, b)
+    assert got == 2 * 32 * 128 * 16
+
+
+def test_collective_bytes_counted():
+    import subprocess, sys, os, textwrap
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, %r)
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.analysis.hlo import parse_hlo
+        mesh = jax.make_mesh((4,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        def f(x):
+            return jax.lax.psum(x, "d")
+        sm = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
+                           check_vma=False)
+        c = jax.jit(sm).lower(
+            jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
+        s = parse_hlo(c.as_text())
+        # all-reduce of 256 floats/device: 2 * 1KiB * 3/4 wire bytes
+        total = sum(s.collective_bytes.values())
+        assert 1024 < total < 4096, s.collective_bytes
+        print("OK", total)
+    """ % os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=300, env=env)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "OK" in p.stdout
+
+
+def test_roofline_terms():
+    from repro.analysis.hlo import HloSummary
+    s = HloSummary(flops_by_dtype={"bf16": PEAK_BF16},      # 1s of compute
+                   flops_by_tag={}, collective_bytes={"all-gather": 50e9},
+                   mem_bytes=819e9 / 2)
+    r = roofline_from_summary(s)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 0.5) < 1e-9
+    assert r.bound in ("compute", "collective")
+    assert abs(r.step_time_s - 1.0) < 1e-9
+
+
+def test_model_flops_kinds():
+    cfg = get_config("phi4-mini-3.8b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr > pf > dc > 0
+    # train = 3x a forward over the same token count
+    assert abs(tr / (SHAPES["train_4k"].global_batch
+                     * SHAPES["train_4k"].seq_len)
+               / (pf / (SHAPES["prefill_32k"].global_batch
+                        * SHAPES["prefill_32k"].seq_len)) - 3.0) < 1e-6
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.n_active_params() < 0.4 * cfg.n_params()

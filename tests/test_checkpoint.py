@@ -1,0 +1,74 @@
+"""Checkpointing: roundtrip, atomic commit, async, gc, restore-into-struct."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {"step": jnp.asarray(3, jnp.int32),
+            "params": {"w": jax.random.normal(k, (8, 16)),
+                       "scale": jnp.ones((16,), jnp.bfloat16)},
+            "nested": ({"m": jnp.zeros((8, 16))},)}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    s = _state()
+    ck.save(s, 3)
+    r = ck.restore(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape,
+                                                               x.dtype), s))
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async(_state(), 5)
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_gc_keeps_last(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        ck.save(_state(), step)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_no_partial_commit(tmp_path):
+    """A .tmp directory must never be listed as a checkpoint."""
+    ck = Checkpointer(str(tmp_path))
+    os.makedirs(tmp_path / "step_00000007.tmp")
+    assert ck.latest_step() is None
+    ck.save(_state(), 7)
+    assert ck.latest_step() == 7
+
+
+def test_restore_specific_step_and_manifest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(0), 1, meta={"arch": "phi4"})
+    ck.save(_state(1), 2)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        _state())
+    r1 = ck.restore(like, step=1)
+    s0 = _state(0)
+    np.testing.assert_array_equal(np.asarray(r1["params"]["w"]),
+                                  np.asarray(s0["params"]["w"]))
+    assert ck.manifest(1)["meta"]["arch"] == "phi4"
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(), 1)
+    bad = _state()
+    bad["params"]["w"] = jnp.zeros((4, 4))
+    with pytest.raises(AssertionError):
+        ck.restore(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), bad))

@@ -1,0 +1,43 @@
+"""Data pipeline: determinism, restart-exactness, file-backed stream."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import FileStream, SyntheticStream
+
+
+def test_synthetic_deterministic():
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    a = SyntheticStream(cfg, global_batch=4, seq_len=32, seed=1)
+    b = SyntheticStream(cfg, global_batch=4, seq_len=32, seed=1)
+    for step in (0, 5, 17):
+        np.testing.assert_array_equal(np.asarray(a.batch(step)["tokens"]),
+                                      np.asarray(b.batch(step)["tokens"]))
+    assert not np.array_equal(np.asarray(a.batch(0)["tokens"]),
+                              np.asarray(a.batch(1)["tokens"]))
+
+
+def test_synthetic_host_sharding():
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    h0 = SyntheticStream(cfg, global_batch=4, seq_len=16, host_id=0,
+                         n_hosts=2)
+    h1 = SyntheticStream(cfg, global_batch=4, seq_len=16, host_id=1,
+                         n_hosts=2)
+    b0, b1 = h0.batch(3), h1.batch(3)
+    assert b0["tokens"].shape == (2, 16)
+    assert not np.array_equal(np.asarray(b0["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_file_stream_resume_exact(tmp_path):
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    path = tmp_path / "tokens.bin"
+    np.arange(10_000, dtype=np.uint16).tofile(path)
+    a = FileStream(cfg, str(path), global_batch=2, seq_len=16)
+    b = FileStream(cfg, str(path), global_batch=2, seq_len=16)
+    for step in (0, 3, 9):
+        np.testing.assert_array_equal(np.asarray(a.batch(step)["tokens"]),
+                                      np.asarray(b.batch(step)["tokens"]))
+    # labels are next-token shifted
+    batch = a.batch(0)
+    np.testing.assert_array_equal(np.asarray(batch["labels"][:, :-1]),
+                                  np.asarray(batch["tokens"][:, 1:]))

@@ -1,0 +1,22 @@
+"""Multi-device equivalence suite (runs _distributed_prog.py in a
+subprocess so the forced 8-device XLA config never leaks into other
+tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+PROG = os.path.join(os.path.dirname(__file__), "_distributed_prog.py")
+
+
+@pytest.mark.timeout(1200)
+def test_distributed_equivalence():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, PROG], capture_output=True,
+                       text=True, timeout=1100, env=env)
+    sys.stdout.write(p.stdout)
+    sys.stderr.write(p.stderr[-3000:])
+    assert p.returncode == 0, "distributed program failed"
+    assert "ALL OK" in p.stdout

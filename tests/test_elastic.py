@@ -1,0 +1,61 @@
+"""Elastic scaling: a checkpoint written on one mesh resumes on another
+device count (subprocess isolates the forced-device XLA config)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_elastic_restore_across_device_counts(tmp_path):
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {os.path.join(os.path.dirname(__file__), '..', 'src')!r})
+        import jax, numpy as np
+        from repro.configs import get_config, ShapeConfig
+        from repro.launch import steps
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import frontends
+        from repro.checkpoint import Checkpointer
+        from repro.runtime.elastic import elastic_restore
+        from repro.core.precision import FP32
+
+        cfg = get_config("phi4-mini-3.8b").reduced()
+        shape = ShapeConfig("t", "train", 32, 8)
+        batch = frontends.make_batch(cfg, "train", 8, 32, seed=1)
+
+        # train 2 steps on a (4, 2) mesh, checkpoint
+        mesh_a = make_test_mesh((4, 2))
+        ba = steps.make_train_step(cfg, shape, mesh_a, policy=FP32)
+        sa = ba.aux["init_state"](0)
+        for _ in range(2):
+            sa, ma = ba.fn(sa, batch)
+        ck = Checkpointer({str(tmp_path / 'ck')!r})
+        ck.save(sa, 2)
+
+        # resume on a (2, 2) mesh (half the devices) and keep training
+        mesh_b = make_test_mesh((2, 2))
+        bb, sb = elastic_restore(ck, cfg, shape, mesh=mesh_b, policy=FP32)
+        assert int(np.asarray(sb["step"])) == 2
+        sb, mb = bb.fn(sb, batch)
+
+        # reference: uninterrupted 3 steps on mesh_a
+        sr = ba.aux["init_state"](0)
+        for _ in range(3):
+            sr, mr = ba.fn(sr, batch)
+        dl = abs(float(mr["loss"]) - float(mb["loss"]))
+        assert dl < 5e-5, ("elastic-resume loss mismatch", dl)
+        print("ELASTIC OK", dl)
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=550, env=env)
+    sys.stdout.write(p.stdout)
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "ELASTIC OK" in p.stdout

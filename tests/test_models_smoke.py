@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward/train step on CPU, shape + finiteness asserts, and AR==NAR
+consistency at the logits level."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, PAPER_MODELS, get_config
+from repro.core.precision import BF16, FP32
+from repro.models import frontends, lm, vit
+from repro.sharding.plan import UNSHARDED
+
+ARCHS = sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_forward_smoke(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+    batch = frontends.make_batch(cfg, "train", 2, 32 + (cfg.n_patches or 0))
+    loss, metrics = lm.forward_train(params, batch, plan=UNSHARDED, cfg=cfg,
+                                     policy=FP32)
+    assert np.isfinite(float(loss))
+    # ln(vocab) ballpark for random init
+    assert 0.5 * np.log(cfg.vocab) < float(metrics["ce"]) < 2 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """AR decode must track NAR prefill: greedy tokens agree or are
+    numerical ties (checked against the reference prefill logits)."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+    S, max_seq, steps = 16, 32, 3
+    batch = frontends.make_batch(cfg, "prefill", 2,
+                                 S + (cfg.n_patches or 0))
+    tok, caches, pos = lm.forward_prefill(params, batch, plan=UNSHARDED,
+                                          cfg=cfg, policy=FP32,
+                                          max_seq=max_seq)
+    toks = [tok]
+    t, p = tok, pos
+    for _ in range(steps):
+        t, caches = lm.forward_decode(params, t, p, caches, plan=UNSHARDED,
+                                      cfg=cfg, policy=FP32)
+        p = p + 1
+        toks.append(t)
+    # reference: fresh prefill over prompt + generated prefix
+    for i in range(1, steps + 1):
+        ext = jnp.concatenate(
+            [batch["tokens"]] + [x[:, None] for x in toks[:i]], axis=1)
+        b2 = dict(batch)
+        b2["tokens"] = ext
+        tref, _, _ = lm.forward_prefill(params, b2, plan=UNSHARDED, cfg=cfg,
+                                        policy=FP32, max_seq=max_seq)
+        exact = np.asarray(tref == toks[i])
+        if not exact.all():
+            # tolerate fp ties: the decode token's logit must be within tol
+            # of the argmax logit under the reference forward
+            from repro.core.embedding import logits_local
+            from repro.models.lm import _embed_sequence, _run_segments_train, _last_position
+            x, _, _ = _embed_sequence(params, b2, plan=UNSHARDED, cfg=cfg,
+                                      policy=FP32, with_labels=False)
+            memory = None
+            if cfg.enc_schedule:
+                x2 = lm._run_encoder(params, b2, plan=UNSHARDED, cfg=cfg,
+                                     policy=FP32)
+                memory = x2
+            xs, _ = _run_segments_train(params, x, plan=UNSHARDED, cfg=cfg,
+                                        policy=FP32, memory=memory,
+                                        memory_len=cfg.enc_seq_padded)
+            from repro.kernels import ops
+            xs = ops.norm(xs, params["final_norm"], cfg.norm)
+            xl = _last_position(xs, UNSHARDED)
+            z, _ = logits_local(xl, params["embedding"]["unemb"],
+                                plan=UNSHARDED, cfg=cfg, policy=FP32)
+            z = np.asarray(z)
+            got = z[np.arange(z.shape[0]), np.asarray(toks[i])]
+            gap = z.max(-1) - got
+            assert (gap < 1e-3).all(), (arch, i, gap)
+
+
+def test_vlm_patch_prefix_changes_output():
+    cfg = get_config("internvl2-76b").reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+    batch = frontends.make_batch(cfg, "train", 2, 16 + cfg.n_patches)
+    l1, _ = lm.forward_train(params, batch, plan=UNSHARDED, cfg=cfg,
+                             policy=FP32)
+    batch2 = dict(batch)
+    batch2["patches"] = batch["patches"] * 0 + 1.0
+    l2, _ = lm.forward_train(params, batch2, plan=UNSHARDED, cfg=cfg,
+                             policy=FP32)
+    assert float(l1) != float(l2)
+
+
+def test_whisper_cross_attention_uses_frames():
+    cfg = get_config("whisper-base").reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+    batch = frontends.make_batch(cfg, "train", 2, 16)
+    l1, _ = lm.forward_train(params, batch, plan=UNSHARDED, cfg=cfg,
+                             policy=FP32)
+    batch2 = dict(batch)
+    batch2["frames"] = batch["frames"] * 0
+    l2, _ = lm.forward_train(params, batch2, plan=UNSHARDED, cfg=cfg,
+                             policy=FP32)
+    assert float(l1) != float(l2)
+
+
+@pytest.mark.parametrize("policy", [FP32, BF16])
+def test_policies_finite(policy):
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+    params = policy.cast_params(params)
+    batch = frontends.make_batch(cfg, "train", 2, 32)
+    loss, _ = lm.forward_train(params, batch, plan=UNSHARDED, cfg=cfg,
+                               policy=policy)
+    assert np.isfinite(float(loss))
+
+
+# -- paper models ----------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["vit-b", "gpt3-xl", "gpt-j"])
+def test_paper_model_smoke(name):
+    cfg = PAPER_MODELS[name].reduced()
+    if cfg.family == "vit":
+        params = vit.init_vit(jax.random.key(0), cfg, jnp.float32)
+        patches = jnp.asarray(
+            np.random.default_rng(0).standard_normal(
+                (2, cfg.image_seq - 1, vit.PATCH_DIM)), jnp.float32)
+        labels = jnp.array([1, 2], jnp.int32)
+        loss, metrics = vit.vit_loss(params, patches, labels, cfg=cfg,
+                                     policy=FP32)
+        assert np.isfinite(float(loss))
+    else:
+        params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+        batch = frontends.make_batch(cfg, "train", 2, 32)
+        loss, _ = lm.forward_train(params, batch, plan=UNSHARDED, cfg=cfg,
+                                   policy=FP32)
+        assert np.isfinite(float(loss))

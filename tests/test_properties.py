@@ -1,0 +1,178 @@
+"""Hypothesis property tests on the system's invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED, REGISTRY, SHAPES, supports_shape
+from repro.core.activations import gelu_exact, i_gelu
+from repro.core.attention import merge_partials, ring_from_full
+from repro.kernels import ref
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# distributed softmax merge (T4): sharded partials == full softmax
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(2, 4),
+       st.integers(0, 2**31 - 1))
+def test_merge_partials_equals_full_softmax(b, h, shards, seed):
+    """Splitting the KV set into shards, computing per-shard (o, m, l) and
+    merging == softmax over the full set.  The paper's T4 invariant."""
+    rng = np.random.default_rng(seed)
+    S, D = 8 * shards, 16
+    q = rng.standard_normal((b, h, D)).astype(np.float32)
+    k = rng.standard_normal((b, S, h, D)).astype(np.float32)
+    v = rng.standard_normal((b, S, h, D)).astype(np.float32)
+    scale = 1.0 / np.sqrt(D)
+
+    # full softmax reference
+    want = ref.decode_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                    jnp.asarray(v), S)
+
+    # per-shard partials, merged with the T4 rule (numpy mirror of the
+    # cross-device math: pmax/psum over the shard list)
+    os_, ms_, ls_ = [], [], []
+    for i in range(shards):
+        sl = slice(i * 8, (i + 1) * 8)
+        s = np.einsum("bhd,bshd->bhs", q * scale, k[:, sl])
+        m = s.max(-1)
+        p = np.exp(s - m[..., None])
+        l = p.sum(-1)
+        o = np.einsum("bhs,bshd->bhd", p, v[:, sl])
+        os_.append(o), ms_.append(m), ls_.append(l)
+    m_all = np.max(ms_, axis=0)
+    l_all = sum(l * np.exp(m - m_all) for l, m in zip(ls_, ms_))
+    o_all = sum(o * np.exp(m - m_all)[..., None] for o, m in zip(os_, ms_))
+    got = o_all / np.maximum(l_all, 1e-30)[..., None]
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_merge_partials_no_axes_normalizes():
+    o = jnp.ones((2, 3, 4))
+    m = jnp.zeros((2, 3))
+    l = jnp.full((2, 3), 2.0)
+    out = merge_partials(o, m, l, ())
+    np.testing.assert_allclose(np.asarray(out), 0.5)
+
+
+# --------------------------------------------------------------------------
+# ring cache (SWA)
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.integers(1, 3), st.integers(1, 40), st.integers(1, 5))
+def test_ring_cache_slots(b, s, w_log):
+    """ring_from_full places position p at slot p % W for the last W
+    positions."""
+    W = 2 ** w_log
+    k = jnp.arange(b * s, dtype=jnp.float32).reshape(b, s, 1, 1)
+    ring = np.asarray(ring_from_full(k, W))
+    for p in range(max(0, s - W), s):
+        np.testing.assert_allclose(ring[:, p % W, 0, 0],
+                                   np.asarray(k[:, p, 0, 0]))
+
+
+# --------------------------------------------------------------------------
+# online softmax: order invariance
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 64]))
+def test_flash_block_size_invariance(seed, block):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 24, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 48, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 48, 2, 16)), jnp.float32)
+    a = ref.flash_attention_ref(q, k, v, causal=True, block_kv=block)
+    b_ = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# int8 quantization (gradient compression)
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 1e3))
+def test_quantize_int8_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    amax = float(np.abs(np.asarray(x)).max())
+    assert err.max() <= amax / 127.0 * 0.5 + 1e-6 * amax
+
+
+# --------------------------------------------------------------------------
+# i-GELU approximation (paper T5)
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.integers(0, 2**31 - 1))
+def test_i_gelu_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-6, 6, 512), jnp.float32)
+    err = np.abs(np.asarray(i_gelu(x)) - np.asarray(gelu_exact(x)))
+    assert err.max() < 0.02        # I-BERT's published bound is ~0.01
+
+
+# --------------------------------------------------------------------------
+# config invariants (all 10 assigned archs)
+# --------------------------------------------------------------------------
+
+def test_assigned_arch_count():
+    assert len(ASSIGNED) == 10
+
+
+def test_config_divisibility_for_production_mesh():
+    """Every assigned arch must shard on the (16,16) production mesh."""
+    for name, cfg in ASSIGNED.items():
+        assert cfg.d_model % 16 == 0, name
+        assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab
+        if cfg.d_ff:
+            assert cfg.d_ff % 16 == 0, name
+        if cfg.has_attention:
+            hhd = cfg.n_heads * cfg.head_dim
+            assert hhd % 16 == 0, name
+            assert (cfg.n_kv_heads * cfg.head_dim) % 16 == 0, name
+            if cfg.attention_sharding == "head_tp":
+                assert cfg.n_heads % 16 == 0, name
+        if cfg.ssm_state:
+            assert cfg.padded_ssm_heads() % 16 == 0, name
+        total = sum(c for _, c in cfg.schedule)
+        assert total == cfg.n_layers, (name, total, cfg.n_layers)
+
+
+def test_param_counts_sane():
+    """Param counts within 20% of the published sizes."""
+    expected = {
+        "phi4-mini-3.8b": 3.8e9, "chatglm3-6b": 6e9, "deepseek-67b": 67e9,
+        "gemma3-27b": 27e9, "mixtral-8x22b": 141e9, "mixtral-8x7b": 47e9,
+        "internvl2-76b": 76e9, "hymba-1.5b": 1.5e9, "mamba2-2.7b": 2.7e9,
+    }
+    for name, want in expected.items():
+        got = ASSIGNED[name].n_params()
+        assert 0.75 * want < got < 1.35 * want, (name, got, want)
+
+
+def test_shape_support_matrix():
+    """40 cells; long_500k runs only for sub-quadratic-capable archs."""
+    cells = [(a, s) for a in ASSIGNED for s in SHAPES]
+    assert len(cells) == 40
+    skips = {a for a in ASSIGNED
+             if not supports_shape(ASSIGNED[a], SHAPES["long_500k"])}
+    assert skips == {"phi4-mini-3.8b", "chatglm3-6b", "deepseek-67b",
+                     "internvl2-76b", "whisper-base"}
+
+
+def test_reduced_configs_instantiable():
+    for name, cfg in REGISTRY.items():
+        r = cfg.reduced()
+        assert r.n_params() > 0
+        assert sum(c for _, c in r.schedule) == r.n_layers
