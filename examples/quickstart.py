@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py [--arch phi4-mini-3.8b]
 
 Runs in ~2 minutes on one CPU: 40 train steps on a reduced config (loss
-drops), then greedy generation through the serving engine — the same code
-paths the production mesh uses (launch/steps.py), just unsharded.
+drops), then generation through the session-based `InferenceEngine` — the
+same code paths the production mesh uses (launch/steps.py), just unsharded.
+The engine takes variable-length prompts (no fixed prompt_len; prefill is
+bucketed per length) and per-request `SamplingParams`.
 """
 import argparse
 import sys
@@ -19,7 +21,7 @@ from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.data import SyntheticStream
 from repro.launch import steps
-from repro.serving import Request, ServingEngine
+from repro.serving import InferenceEngine, Request, SamplingParams
 
 
 def main():
@@ -47,16 +49,20 @@ def main():
     params = jax.tree.map(
         lambda x: x.astype(jnp.bfloat16)
         if jnp.issubdtype(x.dtype, jnp.floating) else x, state["params"])
-    engine = ServingEngine(cfg, params, batch_size=2, max_seq=96,
-                           prompt_len=16)
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=96)
     rng = np.random.default_rng(0)
-    for uid in range(3):
-        engine.submit(Request(uid=uid,
-                              prompt=rng.integers(0, cfg.vocab, 16,
-                                                  dtype=np.int32),
-                              max_new_tokens=8))
+    for uid, n in enumerate((12, 16, 24)):    # variable-length prompts
+        engine.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab, n, dtype=np.int32),
+            max_new_tokens=8,
+            sampling=SamplingParams(temperature=0.7, top_k=20, seed=uid)
+            if uid == 2 else SamplingParams()))
     for req in engine.run():
-        print(f"request {req.uid}: generated {req.output}")
+        mode = "sampled" if req.sampling.temperature > 0 else "greedy"
+        print(f"request {req.uid} ({req.prompt_len} prompt tokens, {mode}): "
+              f"generated {req.output}")
+    print(engine.stats().summary())
 
 
 if __name__ == "__main__":

@@ -1,10 +1,13 @@
-"""Serving example: the paper's AR/NAR modes through the continuous-batching
-engine on a GPT-class model (reduced GPT-J).
+"""Serving example: the paper's AR/NAR modes through the session-based
+`InferenceEngine` on a GPT-class model (reduced GPT-J).
 
     PYTHONPATH=src python examples/serve_gpt.py
 
-Reports prefill (NAR, paper's prompt-encoding mode) and decode (AR) timing
-per request — the paper's two benchmark regimes (Sec. VI-A).
+Demonstrates the session API: variable-length prompts (bucketed NAR
+prefill, the paper's prompt-encoding mode), per-request SamplingParams
+(greedy and temperature/top-k mixed in one batch), streaming TokenEvents,
+and `engine.stats()` serving telemetry (Sec. VI-A's two throughput
+regimes).
 """
 import sys
 
@@ -14,27 +17,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import PAPER_MODELS, REGISTRY
+from repro.configs import PAPER_MODELS
 from repro.models import lm
-from repro.serving import Request, ServingEngine
+from repro.serving import InferenceEngine, Request, SamplingParams
 
 
 def main():
     cfg = PAPER_MODELS["gpt-j"].reduced()
     params = lm.init_lm(jax.random.key(0), cfg, jnp.bfloat16)
-    engine = ServingEngine(cfg, params, batch_size=4, max_seq=128,
-                           prompt_len=32)
+    engine = InferenceEngine(cfg, params, batch_size=4, max_seq=128)
     rng = np.random.default_rng(1)
     for uid in range(8):
+        n = int(rng.integers(8, 40))          # variable-length prompts
+        sampling = (SamplingParams(temperature=0.8, top_k=20, seed=uid)
+                    if uid % 2 else SamplingParams())       # mixed in-batch
         engine.submit(Request(
-            uid=uid, prompt=rng.integers(0, cfg.vocab, 32, dtype=np.int32),
-            max_new_tokens=12))
-    done = engine.run()
-    print(f"{len(done)} requests served in {engine.steps_run} AR steps "
-          f"(continuous batching: {8 * 12} tokens total)")
-    for r in done[:4]:
-        print(f"  req {r.uid}: NAR prefill {r.prefill_ms:6.0f}ms | "
-              f"AR {len(r.output)} tokens | {r.output[:6]}...")
+            uid=uid, prompt=rng.integers(0, cfg.vocab, n, dtype=np.int32),
+            max_new_tokens=12, sampling=sampling))
+
+    # streaming: tokens arrive the moment their engine step completes
+    streamed = {}
+    for ev in engine.generate():
+        streamed.setdefault(ev.uid, []).append(ev.token)
+        if ev.is_last:
+            print(f"  req {ev.uid} done: {len(streamed[ev.uid])} tokens, "
+                  f"first: {streamed[ev.uid][:6]}...")
+
+    stats = engine.stats()
+    print(f"{stats.requests_completed} requests served in "
+          f"{engine.steps_run} AR steps")
+    print(stats.summary())
 
 
 if __name__ == "__main__":

@@ -140,3 +140,60 @@ def greedy_token(x, unemb, *, plan: Plan, cfg, policy):
     z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy)
     _, tok = col.pargmax(z, plan.tp_axes, index_offset=v0)
     return tok
+
+
+TOP_K_CAP = 64      # distributed top-k threshold search depth per tp shard
+
+
+def sample_token(x, unemb, lane, *, plan: Plan, cfg, policy):
+    """x: [B, E] -> next token ids [B], sampled per row from softmax(z/T)
+    with optional top-k truncation — all over the tp-sharded vocab, the
+    logits never gathered.
+
+    `lane` carries the per-row sampling state (all [B]):
+      temperature  f32; rows with temperature <= 0 take the exact greedy path
+      top_k        i32; 0 disables truncation (clamped to TOP_K_CAP)
+      seed         i32; the request's RNG lane
+      step         i32; the global position the sampled token will occupy
+
+    Sampling is Gumbel-max — argmax(z/T + g) with g ~ Gumbel(0,1) — so the
+    draw reuses the same distributed argmax as greedy decoding (pargmax over
+    the vocab shards) instead of materializing a gathered distribution.  The
+    top-k threshold is exact for k <= TOP_K_CAP (larger k clamps): each
+    shard contributes its local top-TOP_K_CAP, so the union — gathered as
+    O(tp*TOP_K_CAP) floats — is guaranteed to contain the global k-th
+    largest logit only up to k = TOP_K_CAP, and k is clamped there.
+    Noise keys fold (seed, step, shard) so a (seed, position) pair maps to
+    one reproducible draw regardless of batch slot or engine schedule."""
+    z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy)
+    B, v_loc = z.shape
+    t = lane["temperature"].astype(jnp.float32)
+    k = lane["top_k"].astype(jnp.int32)
+    sampled = t > 0.0
+
+    kcap = min(TOP_K_CAP, v_loc)
+    loc_top = jax.lax.top_k(z, kcap)[0]                      # [B, kcap] desc
+    glob_top = col.all_gather(loc_top, plan.tp_axes, axis=-1)
+    glob_top = -jnp.sort(-glob_top, axis=-1)                 # [B, tp*kcap]
+    # the union holds the global k-th largest only for k <= kcap — unless
+    # each shard contributed its ENTIRE local vocab, making the union the
+    # full logit set and any k exact
+    k_max = glob_top.shape[-1] if kcap == v_loc else kcap
+    kth = jnp.clip(k, 1, k_max) - 1
+    thresh = jnp.take_along_axis(glob_top, kth[:, None], axis=-1)
+    keep = (k[:, None] <= 0) | (z >= thresh)
+
+    shard = col.axis_index(plan.tp_axes)
+
+    def gumbel_row(seed, step):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(seed), step), shard)
+        return jax.random.gumbel(key, (v_loc,), jnp.float32)
+
+    g = jax.vmap(gumbel_row)(lane["seed"], lane["step"])     # [B, v_loc]
+    t_safe = jnp.where(sampled, jnp.maximum(t, 1e-6), 1.0)
+    score = jnp.where(sampled[:, None],
+                      jnp.where(keep, z, NEG_INF) / t_safe[:, None] + g,
+                      z)                                     # greedy rows: raw z
+    _, tok = col.pargmax(score, plan.tp_axes, index_offset=v0)
+    return tok

@@ -1,10 +1,14 @@
-"""Serving driver: continuous-batching engine demo.
+"""Serving driver: session-based continuous-batching engine demo.
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
-        --reduced --requests 8 --batch 4 --prompt-len 32 --max-new 16
+        --reduced --requests 8 --batch 4 --prompt-len 48 --min-prompt-len 8 \
+        --max-new 16 --temperature 0.7 --top-k 40
 
-Reports the paper's two serving metrics: NAR prefill throughput (tokens/s
-of prompt encoding) and AR decode throughput (tokens/s of generation).
+Drives a mixed-length request trace through `InferenceEngine` and reports
+the paper's two serving metrics from `engine.stats()`: NAR prompt-encoding
+throughput and AR decode throughput (tokens/s, counted from true per-request
+prompt lengths, not padded buckets), plus TTFT percentiles, decode-slot
+occupancy, and prefill bucket hits.
 """
 from __future__ import annotations
 
@@ -19,7 +23,26 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.mesh import make_mesh_for
 from repro.models import lm
-from repro.serving import Request, ServingEngine
+from repro.serving import InferenceEngine, Request, SamplingParams
+
+
+def build_trace(cfg, args) -> list:
+    """Mixed-length request trace; lengths uniform in
+    [min_prompt_len, prompt_len] (fixed-length when min == max)."""
+    rng = np.random.default_rng(args.seed)
+    lo = args.min_prompt_len or args.prompt_len
+    reqs = []
+    for uid in range(args.requests):
+        n = int(rng.integers(lo, args.prompt_len + 1))
+        sampling = (SamplingParams(temperature=args.temperature,
+                                   top_k=args.top_k, seed=uid)
+                    if args.temperature > 0 else SamplingParams())
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab, n, dtype=np.int32),
+            max_new_tokens=args.max_new,
+            sampling=sampling))
+    return reqs
 
 
 def main(argv=None) -> int:
@@ -28,12 +51,21 @@ def main(argv=None) -> int:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length")
+    ap.add_argument("--min-prompt-len", type=int, default=0,
+                    help="min prompt length (0 => fixed at --prompt-len)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 => greedy")
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--single-device", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.min_prompt_len > args.prompt_len:
+        ap.error(f"--min-prompt-len {args.min_prompt_len} exceeds "
+                 f"--prompt-len {args.prompt_len}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -41,30 +73,25 @@ def main(argv=None) -> int:
     mesh = None if args.single_device else make_mesh_for(len(jax.devices()))
     params = lm.init_lm(jax.random.key(args.seed), cfg, jnp.bfloat16)
 
-    engine = ServingEngine(cfg, params, batch_size=args.batch,
-                           max_seq=args.max_seq, prompt_len=args.prompt_len,
-                           mesh=mesh)
-    rng = np.random.default_rng(args.seed)
-    for uid in range(args.requests):
-        engine.submit(Request(
-            uid=uid,
-            prompt=rng.integers(0, cfg.vocab, args.prompt_len,
-                                dtype=np.int32),
-            max_new_tokens=args.max_new))
+    engine = InferenceEngine(cfg, params, batch_size=args.batch,
+                             max_seq=args.max_seq, mesh=mesh)
+    for req in build_trace(cfg, args):
+        engine.submit(req)
 
     t0 = time.perf_counter()
     done = engine.run()
     wall = time.perf_counter() - t0
-    prompt_toks = len(done) * args.prompt_len
-    new_toks = sum(len(r.output) for r in done)
+    stats = engine.stats()
+
     print(f"served {len(done)} requests in {wall:.2f}s over "
-          f"{engine.steps_run} AR steps")
-    print(f"NAR prefill: {prompt_toks} prompt tokens; "
-          f"AR decode: {new_toks} tokens "
-          f"({new_toks / max(wall, 1e-9):.1f} tok/s end-to-end)")
-    for r in done[:3]:
-        print(f"  req {r.uid}: prefill {r.prefill_ms:.0f}ms, "
-              f"{len(r.output)} tokens, first: {r.output[:8]}")
+          f"{engine.steps_run} AR steps "
+          f"({stats.prefill_compiles} prefill buckets compiled: "
+          f"{sorted(stats.bucket_hits)})")
+    print(stats.summary())
+    for r in sorted(done, key=lambda r: r.uid)[:3]:
+        print(f"  req {r.uid}: prompt {r.prompt_len} (bucket {r.bucket}), "
+              f"prefill {r.prefill_ms:.0f}ms, {len(r.output)} tokens, "
+              f"first: {r.output[:8]}")
     return 0
 
 

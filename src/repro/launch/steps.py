@@ -157,6 +157,25 @@ def batch_dims(cfg: ModelConfig, shape_kind: str):
     return out
 
 
+def lane_dims(with_prompt_len: bool):
+    """Logical dims of the per-request sampling lane ([B] leaves)."""
+    out = {"temperature": ("batch",), "top_k": ("batch",),
+           "seed": ("batch",)}
+    if with_prompt_len:
+        out["prompt_len"] = ("batch",)
+    return out
+
+
+def lane_struct(global_batch: int, with_prompt_len: bool):
+    B = global_batch
+    out = {"temperature": jax.ShapeDtypeStruct((B,), jnp.float32),
+           "top_k": jax.ShapeDtypeStruct((B,), jnp.int32),
+           "seed": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    if with_prompt_len:
+        out["prompt_len"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return out
+
+
 # --------------------------------------------------------------------------
 # bundles
 # --------------------------------------------------------------------------
@@ -325,7 +344,8 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                       kv_cache_dtype: str = "bfloat16",
                       attention_sharding: str = "",
                       comm_fp8: bool = False,
-                      mlp_weight_stationary: bool = False) -> StepBundle:
+                      mlp_weight_stationary: bool = False,
+                      with_sampling: bool = False) -> StepBundle:
     import dataclasses
     policy = policy or default_policy(cfg, "serve")
     plan = make_plan(cfg, shape, mesh, mode="serve",
@@ -349,20 +369,34 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
     c_specs = resolve_pspecs(c_dims, plan)
     tok_spec = plan.pspec("batch")
 
-    def body(params, batch):
+    def run(params, batch, lane):
         col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
-        tok, caches, pos = lm.forward_prefill(params, batch, plan=plan,
-                                              cfg=cfg, policy=policy,
-                                              max_seq=max_seq)
-        return tok, caches, pos
+        if lane is None:
+            return lm.forward_prefill(params, batch, plan=plan, cfg=cfg,
+                                      policy=policy, max_seq=max_seq)
+        # per-request lane: sampling params + true prompt length (the batch
+        # may be right-padded to a length bucket)
+        lane = dict(lane)
+        return lm.forward_prefill(params, batch, plan=plan, cfg=cfg,
+                                  policy=policy, max_seq=max_seq,
+                                  prompt_len=lane.pop("prompt_len"),
+                                  lane=lane)
 
-    sm = _maybe_shard_map(body, mesh, in_specs=(p_specs, b_specs),
-                          out_specs=(tok_spec, c_specs, tok_spec))
-    fn = jax.jit(sm)
+    body = run if with_sampling else (lambda params, batch:
+                                      run(params, batch, None))
+    in_specs = (p_specs, b_specs)
     in_structs = (with_shardings(p_struct, p_specs, mesh),
                   with_shardings(b_struct, b_specs, mesh))
+    if with_sampling:
+        l_specs = resolve_pspecs(lane_dims(True), plan)
+        in_specs += (l_specs,)
+        in_structs += (with_shardings(lane_struct(shape.global_batch, True),
+                                      l_specs, mesh),)
+    sm = _maybe_shard_map(body, mesh, in_specs=in_specs,
+                          out_specs=(tok_spec, c_specs, tok_spec))
+    fn = jax.jit(sm)
     return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
-                      in_structs=in_structs, in_specs=(p_specs, b_specs),
+                      in_structs=in_structs, in_specs=in_specs,
                       aux={"param_specs": p_specs, "cache_struct": c_struct,
                            "cache_specs": c_specs, "max_seq": max_seq,
                            "param_dims": p_dims})
@@ -377,7 +411,8 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
                      policy: Optional[Policy] = None,
                      max_seq: Optional[int] = None,
                      reduce_method: str = "ring",
-                     kv_cache_dtype: str = "bfloat16") -> StepBundle:
+                     kv_cache_dtype: str = "bfloat16",
+                     with_sampling: bool = False) -> StepBundle:
     import dataclasses
     policy = policy or default_policy(cfg, "serve")
     plan = make_plan(cfg, shape, mesh, mode="serve",
@@ -394,22 +429,29 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
     tok_spec = plan.pspec("batch")
     d_struct = frontends.decode_struct(shape.global_batch)
 
-    def body(params, token, pos, caches):
+    def run(params, token, pos, caches, lane):
         tok, caches = lm.forward_decode(params, token, pos, caches, plan=plan,
-                                        cfg=cfg, policy=policy)
+                                        cfg=cfg, policy=policy, lane=lane)
         return tok, pos + 1, caches
 
-    sm = _maybe_shard_map(body, mesh,
-                          in_specs=(p_specs, tok_spec, tok_spec, c_specs),
-                          out_specs=(tok_spec, tok_spec, c_specs))
-    fn = jax.jit(sm, donate_argnums=(3,))
+    body = run if with_sampling else (lambda params, token, pos, caches:
+                                      run(params, token, pos, caches, None))
+    in_specs = (p_specs, tok_spec, tok_spec, c_specs)
     in_structs = (with_shardings(p_struct, p_specs, mesh),
                   with_shardings(d_struct["token"], tok_spec, mesh),
                   with_shardings(d_struct["pos"], tok_spec, mesh),
                   with_shardings(c_struct, c_specs, mesh))
+    if with_sampling:
+        l_specs = resolve_pspecs(lane_dims(False), plan)
+        in_specs += (l_specs,)
+        in_structs += (with_shardings(lane_struct(shape.global_batch, False),
+                                      l_specs, mesh),)
+    sm = _maybe_shard_map(body, mesh, in_specs=in_specs,
+                          out_specs=(tok_spec, tok_spec, c_specs))
+    fn = jax.jit(sm, donate_argnums=(3,))
     return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
                       in_structs=in_structs,
-                      in_specs=(p_specs, tok_spec, tok_spec, c_specs),
+                      in_specs=in_specs,
                       aux={"param_specs": p_specs, "cache_struct": c_struct,
                            "cache_specs": c_specs, "max_seq": max_seq,
                            "param_dims": p_dims})

@@ -10,7 +10,8 @@ over `plan.seq_axes`).
 Modes
 -----
 train     full sequence, remat per layer, distributed-CE loss (NAR math)
-prefill   full sequence + KV-cache construction, greedy next token (NAR)
+prefill   full sequence + KV-cache construction, next token (NAR); supports
+          right-padded length buckets (`prompt_len`) and in-jit sampling
 decode    one token per call against the sequence-sharded cache (AR, T4)
 
 Modality frontends are stubs per the assignment: VLM patch embeddings and
@@ -28,7 +29,7 @@ from repro.core import collectives as col
 from repro.core.embedding import (ce_loss, embed_sequence, embed_token,
                                   embedding_param_dims,
                                   embedding_param_shapes, greedy_token,
-                                  init_embedding)
+                                  init_embedding, sample_token)
 from repro.core.nn import act_dtype
 from repro.core.rope import sinusoidal_positions
 from repro.kernels import ops
@@ -248,18 +249,38 @@ def forward_train(params, batch, *, plan: Plan, cfg, policy):
 
 def _last_position(x, plan: Plan):
     """x: [B, S_loc, E] sequence-sharded -> [B, E] residual of the final
-    global position (owned by the last seq shard; psum'd to everyone)."""
+    global position (fixed-length convenience over `_residual_at`)."""
+    B, S_loc = x.shape[0], x.shape[1]
+    S_tot = S_loc * max(plan.sp, 1)
+    return _residual_at(x, jnp.full((B,), S_tot - 1, jnp.int32), plan)
+
+
+def _residual_at(x, idx, plan: Plan):
+    """x: [B, S_loc, E] sequence-sharded; idx: [B] global positions ->
+    [B, E] residual at each row's position (psum'd from the owner shard)."""
+    S_loc = x.shape[1]
+    off = col.axis_index(plan.seq_axes) * S_loc
+    loc = idx.astype(jnp.int32) - off
+    rows = jnp.take_along_axis(
+        x, jnp.clip(loc, 0, S_loc - 1)[:, None, None], axis=1)[:, 0]
     if not plan.seq_axes:
-        return x[:, -1]
-    i = col.axis_index(plan.seq_axes)
-    n = plan.sp
-    mine = jnp.where(i == n - 1, 1.0, 0.0).astype(jnp.float32)
-    return col.psum(x[:, -1].astype(jnp.float32) * mine,
+        return rows
+    mine = ((loc >= 0) & (loc < S_loc))[:, None].astype(jnp.float32)
+    return col.psum(rows.astype(jnp.float32) * mine,
                     plan.seq_axes).astype(x.dtype)
 
 
-def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int):
-    """NAR prompt pass.  -> (next_token [B], caches, pos [B], memory_len)."""
+def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int,
+                    prompt_len=None, lane=None):
+    """NAR prompt pass.  -> (next_token [B], caches, pos [B]).
+
+    `prompt_len` ([B] int32, optional): true per-row text length when
+    `batch["tokens"]` is right-padded to a length bucket — the next token is
+    read at each row's true last position and `pos` starts at its true
+    length (pad cache entries beyond it are never attended: decode masks
+    positions > pos, and causality masks them during the prefill itself).
+    `lane` (optional): per-row sampling state (core.embedding.sample_token,
+    sans "step"); greedy decoding when None."""
     x, _, _ = _embed_sequence(params, batch, plan=plan, cfg=cfg,
                               policy=policy, with_labels=False)
     memory = None
@@ -272,17 +293,29 @@ def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int):
                                       policy=policy, max_seq=max_seq,
                                       memory=memory, memory_len=memory_len)
     x = ops.norm(x, params["final_norm"], cfg.norm)
-    x_last = _last_position(x, plan)
-    tok = greedy_token(x_last, params["embedding"]["unemb"], plan=plan,
-                       cfg=cfg, policy=policy)
-    B = tok.shape[0]
-    S_tot = total_seq(cfg, batch["tokens"].shape[1])
-    pos = jnp.full((B,), S_tot, jnp.int32)
+    B = batch["tokens"].shape[0]
+    if prompt_len is None:
+        pos = jnp.full((B,), total_seq(cfg, batch["tokens"].shape[1]),
+                       jnp.int32)
+    else:
+        pos = (cfg.n_patches or 0) + prompt_len.astype(jnp.int32)
+    x_last = _residual_at(x, pos - 1, plan)
+    if lane is None:
+        tok = greedy_token(x_last, params["embedding"]["unemb"], plan=plan,
+                           cfg=cfg, policy=policy)
+    else:
+        tok = sample_token(x_last, params["embedding"]["unemb"],
+                           dict(lane, step=pos), plan=plan, cfg=cfg,
+                           policy=policy)
     return tok, caches, pos
 
 
-def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy):
-    """One AR step.  token/pos: [B] -> (next_token [B], caches)."""
+def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy,
+                   lane=None):
+    """One AR step.  token/pos: [B] -> (next_token [B], caches).
+
+    `lane` (optional): per-row sampling state (core.embedding.sample_token,
+    sans "step"); greedy decoding when None."""
     x = embed_token(params["embedding"]["embed"], token, plan=plan,
                     policy=policy)                              # [B, E]
     if cfg.rope_theta == 0:
@@ -294,6 +327,11 @@ def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy):
                                      cfg=cfg, policy=policy,
                                      memory_len=memory_len)
     x = ops.norm(x, params["final_norm"], cfg.norm)
-    tok = greedy_token(x, params["embedding"]["unemb"], plan=plan, cfg=cfg,
-                       policy=policy)
+    if lane is None:
+        tok = greedy_token(x, params["embedding"]["unemb"], plan=plan,
+                           cfg=cfg, policy=policy)
+    else:
+        tok = sample_token(x, params["embedding"]["unemb"],
+                           dict(lane, step=pos + 1), plan=plan, cfg=cfg,
+                           policy=policy)
     return tok, caches

@@ -1,1 +1,4 @@
-from repro.serving.engine import ServingEngine, Request
+from repro.serving.engine import (InferenceEngine, Request, ServingEngine,
+                                  TokenEvent)
+from repro.serving.sampling import GREEDY, SamplingParams
+from repro.serving.stats import EngineStats

@@ -1,9 +1,31 @@
-"""Continuous-batching serving engine (NAR prefill + AR decode, paper T8).
+"""Session-based continuous-batching inference engine (NAR prefill + AR
+decode, paper T8 / Sec. VI-A).
 
 A fixed decode batch of B slots runs lockstep AR steps (the paper's AR
 mode); finished rows are immediately replaced by prefilling queued requests
 (batch-1 NAR pass, paper's prompt-encoding mode) and scattering their cache
 into the free slot — decode never drains to admit work.
+
+The session API decouples *what a request wants* from *how the engine
+batches it*:
+
+  variable-length prompts   prefill steps are compiled lazily per
+      power-of-two length bucket; prompts are right-padded to the bucket.
+      Padding is output-exact for linear attention caches (causality masks
+      pads during the prefill, `pos` masks them at decode, and decode
+      overwrites each pad slot exactly when it first becomes attendable).
+      Archs with recurrent or ring-buffer state (SSM hybrids, sliding-window
+      attention) compile at exact prompt length instead — their state would
+      absorb pad positions.
+  per-request sampling      `SamplingParams` (greedy / temperature / top-k,
+      per-request seed) scattered into per-slot lane arrays; the draw
+      happens *inside* the jitted step (core/embedding.sample_token), so one
+      compiled decode step serves any mix of greedy and sampled requests.
+  streaming                 `generate()` yields `TokenEvent(uid, token,
+      is_last)` as steps complete; `run()` drains it for batch use.
+  telemetry                 `stats()` -> EngineStats: NAR / AR throughput
+      tracked separately (the paper's two metrics), TTFT, slot occupancy,
+      bucket hit counts.
 
 All model math goes through the launch/steps bundles, so the engine runs
 identically on 1 CPU device (tests) and on the production mesh.
@@ -12,69 +34,134 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import steps as steps_mod
 from repro.serving.kv_cache import insert_row, zero_caches
+from repro.serving.sampling import (SamplingParams, prefill_lane, set_lane,
+                                    zero_lane)
+from repro.serving.stats import EngineStats
 
 
 @dataclass
 class Request:
     uid: int
-    prompt: np.ndarray                  # [S_prompt] int32
+    prompt: np.ndarray                  # [S_prompt] int32, any length
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     # filled by the engine:
     output: List[int] = field(default_factory=list)
+    prompt_len: int = 0                 # true length (set at submit)
+    bucket: int = 0                     # padded prefill length (set at admit)
     prefill_ms: float = 0.0
     decode_ms: float = 0.0
+    ttft_ms: float = 0.0                # submit -> first token
     done: bool = False
+    _t_submit: float = field(default=0.0, repr=False)
 
 
-class ServingEngine:
+@dataclass(frozen=True)
+class TokenEvent:
+    """One streamed token: emitted by `InferenceEngine.generate()` the
+    moment the engine step that produced it completes."""
+    uid: int
+    token: int
+    is_last: bool
+
+
+class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
-                 max_seq: int = 256, prompt_len: int = 32, mesh=None,
-                 policy=None):
+                 max_seq: int = 256, mesh=None, policy=None,
+                 min_bucket: int = 8):
+        assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
         self.cfg = cfg
         self.params = params
         self.B = batch_size
         self.max_seq = max_seq
-        self.prompt_len = prompt_len
+        self.min_bucket = min_bucket
+        self.mesh = mesh
+        self.policy = policy
+        # pad-to-bucket is exact only for linear attention caches (see module
+        # docstring); recurrent / ring-buffer archs prefill at exact length
+        self._pad_buckets = not (cfg.has_ssm or cfg.sliding_window > 0)
+        # VLM patch prefix rides along in every prefill: it consumes cache
+        # positions, shrinking the token budget a prompt may use
+        self._n_prefix = cfg.n_patches or 0
         dshape = ShapeConfig("engine_decode", "decode", max_seq, batch_size)
-        pshape = ShapeConfig("engine_prefill", "prefill", prompt_len, 1)
         self.decode_step = steps_mod.make_decode_step(
-            cfg, dshape, mesh, policy=policy, max_seq=max_seq)
-        self.prefill_step = steps_mod.make_prefill_step(
-            cfg, pshape, mesh, policy=policy, max_seq=max_seq)
+            cfg, dshape, mesh, policy=policy, max_seq=max_seq,
+            with_sampling=True)
+        self._prefill_steps: Dict[int, steps_mod.StepBundle] = {}
         self.caches = zero_caches(self.decode_step.aux["cache_struct"],
                                   steps_mod.to_shardings(
                                       self.decode_step.aux["cache_specs"],
                                       mesh))
         self.tokens = jnp.zeros((batch_size,), jnp.int32)
         self.pos = jnp.zeros((batch_size,), jnp.int32)
+        self.lane = zero_lane(batch_size)
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self.steps_run = 0
+        self._stats = EngineStats(batch_size=batch_size)
+
+    # -- prefill compilation cache -------------------------------------
+    def bucket_for(self, prompt_len: int) -> int:
+        """Prefill length bucket for a prompt: next power of two >=
+        max(min_bucket, len), capped at the token budget (max_seq minus any
+        patch prefix); exact length for archs whose caches cannot absorb
+        padding."""
+        if not self._pad_buckets:
+            return prompt_len
+        b = self.min_bucket
+        while b < prompt_len:
+            b *= 2
+        return min(b, self.max_seq - self._n_prefix)
+
+    def _prefill_for(self, bucket: int) -> steps_mod.StepBundle:
+        step = self._prefill_steps.get(bucket)
+        if step is None:
+            pshape = ShapeConfig(f"engine_prefill_{bucket}", "prefill",
+                                 bucket, 1)
+            step = steps_mod.make_prefill_step(
+                self.cfg, pshape, self.mesh, policy=self.policy,
+                max_seq=self.max_seq, with_sampling=True)
+            self._prefill_steps[bucket] = step
+            self._stats.prefill_compiles += 1
+        return step
 
     # -- admission -----------------------------------------------------
     def submit(self, req: Request):
-        assert len(req.prompt) == self.prompt_len, (
-            f"engine is configured for prompt_len={self.prompt_len}")
+        n = len(req.prompt)
+        cap = self.max_seq - 1 - self._n_prefix
+        assert 0 < n <= cap, (
+            f"prompt length {n} not in [1, {cap}] "
+            f"(max_seq={self.max_seq}, patch prefix={self._n_prefix})")
+        assert req.max_new_tokens >= 1, (
+            f"max_new_tokens must be >= 1 (the prefill emits the first "
+            f"token): {req.max_new_tokens}")
+        req.prompt_len = n
+        req._t_submit = time.perf_counter()
         self.queue.append(req)
+        self._stats.requests_submitted += 1
 
-    def _admit(self):
+    def _admit(self, fresh: List):
         for b in range(self.B):
             if self.slots[b] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
+            bucket = self.bucket_for(req.prompt_len)
+            req.bucket = bucket
+            step = self._prefill_for(bucket)
             t0 = time.perf_counter()
-            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+            padded = np.zeros((bucket,), np.int32)
+            padded[:req.prompt_len] = np.asarray(req.prompt, np.int32)
+            batch = {"tokens": jnp.asarray(padded)[None]}
             if self.cfg.n_patches:
                 batch["patches"] = jnp.zeros(
                     (1, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
@@ -82,48 +169,114 @@ class ServingEngine:
                 batch["frames"] = jnp.zeros(
                     (1, self.cfg.enc_seq_padded, self.cfg.d_model),
                     jnp.bfloat16)
-            tok, caches1, pos1 = self.prefill_step.fn(self.params, batch)
-            req.prefill_ms = (time.perf_counter() - t0) * 1e3
-            req.output.append(int(tok[0]))
+            tok, caches1, pos1 = step.fn(
+                self.params, batch, prefill_lane(req.sampling,
+                                                 req.prompt_len))
+            tok0 = int(tok[0])
+            now = time.perf_counter()
+            req.prefill_ms = (now - t0) * 1e3
+            req.ttft_ms = (now - req._t_submit) * 1e3
+            req.output.append(tok0)
             self.caches = insert_row(self.caches, caches1, b)
             self.tokens = self.tokens.at[b].set(tok[0])
             self.pos = self.pos.at[b].set(pos1[0])
+            self.lane = set_lane(self.lane, b, req.sampling)
             self.slots[b] = req
+            fresh.append((req, 0))
+            st = self._stats
+            st.bucket_hits[bucket] = st.bucket_hits.get(bucket, 0) + 1
+            st.nar_tokens += req.prompt_len
+            st.padded_nar_tokens += bucket
+            st.nar_time_s += now - t0
+            st.ttft_ms.append(req.ttft_ms)
 
-    # -- decode ----------------------------------------------------------
+    # -- retirement ------------------------------------------------------
     def _retire(self):
+        pos = np.asarray(self.pos)
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
             tok = req.output[-1]
             if (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id)
-                    or int(self.pos[b]) >= self.max_seq - 1):
+                    or int(pos[b]) >= self.max_seq - 1):
                 req.done = True
                 self.completed.append(req)
+                self._stats.requests_completed += 1
                 self.slots[b] = None
 
-    def step(self):
-        """One engine iteration: admit -> AR step -> collect."""
-        self._admit()
-        if all(s is None for s in self.slots):
-            return False
-        t0 = time.perf_counter()
-        self.tokens, self.pos, self.caches = self.decode_step.fn(
-            self.params, self.tokens, self.pos, self.caches)
-        dt = (time.perf_counter() - t0) * 1e3
-        self.steps_run += 1
-        toks = np.asarray(self.tokens)
-        for b, req in enumerate(self.slots):
-            if req is not None:
+    # -- engine loop ------------------------------------------------------
+    def step(self) -> List[TokenEvent]:
+        """One engine iteration: admit -> retire -> AR step -> retire.
+        Returns the TokenEvents produced (prefill first-tokens + decoded
+        tokens), with `is_last` resolved against retirement."""
+        fresh: List = []                  # (request, output index) pairs
+        # admit/retire until slots are full or the queue drains: a request
+        # finished by its prefill token alone (max_new_tokens=1, prompt-eos,
+        # pos cap) frees its slot for another admission before the AR step
+        while True:
+            self._admit(fresh)
+            self._retire()
+            if not self.queue or all(s is not None for s in self.slots):
+                break
+        if any(s is not None for s in self.slots):
+            t0 = time.perf_counter()
+            self.tokens, self.pos, self.caches = self.decode_step.fn(
+                self.params, self.tokens, self.pos, self.caches, self.lane)
+            toks = np.asarray(self.tokens)          # blocks: honest timing
+            dt = time.perf_counter() - t0
+            self.steps_run += 1
+            occupied = 0
+            for b, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                occupied += 1
                 req.output.append(int(toks[b]))
-                req.decode_ms += dt
-        self._retire()
-        return True
+                req.decode_ms += dt * 1e3
+                fresh.append((req, len(req.output) - 1))
+            st = self._stats
+            st.decode_steps += 1
+            st.ar_tokens += occupied
+            st.ar_time_s += dt
+            st.occupied_slot_steps += occupied
+            self._retire()
+        return [TokenEvent(req.uid, req.output[i],
+                           req.done and i == len(req.output) - 1)
+                for req, i in fresh]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def generate(self, max_steps: int = 10_000) -> Iterator[TokenEvent]:
+        """Streaming interface: run engine steps until queue + slots drain,
+        yielding each token the moment its step completes."""
+        for _ in range(max_steps):
+            if not self.has_work():
+                return
+            yield from self.step()
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Run until queue + slots drain; returns completed requests."""
-        for _ in range(max_steps):
-            if not self.step() and not self.queue:
-                break
-        return self.completed
+        """Batch interface: drain `generate()`; returns the requests that
+        completed during THIS call (`self.completed` keeps the full session
+        history)."""
+        start = len(self.completed)
+        for _ in self.generate(max_steps):
+            pass
+        return self.completed[start:]
+
+    # -- telemetry --------------------------------------------------------
+    def stats(self) -> EngineStats:
+        """Live serving telemetry (accumulated since construction or the
+        last `reset_stats()`)."""
+        return self._stats
+
+    def reset_stats(self):
+        """Drop accumulated telemetry, keeping compiled steps (benchmarks:
+        warm buckets up, reset, then measure)."""
+        self._stats = EngineStats(batch_size=self.B)
+
+
+# The original fixed-prompt-length engine grew into the session API above.
+# The old name stays importable, but the constructor deliberately dropped
+# `prompt_len` — variable-length prompts made it meaningless.
+ServingEngine = InferenceEngine

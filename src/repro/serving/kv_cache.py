@@ -7,22 +7,37 @@ freshly-prefilled request into an existing decode batch).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+
+# One compiled zeros-builder per (shape, dtype, sharding) leaf, shared by
+# every engine construction in the process — re-jitting a fresh lambda per
+# leaf per call would recompile each time (the keys here are hashable, the
+# struct pytrees are not, so the cache lives at leaf granularity).
+_ZEROS_CACHE: dict = {}
+
+
+def _zeros(shape, dtype, sharding=None):
+    key = (tuple(shape), jnp.dtype(dtype).str, sharding)
+    fn = _ZEROS_CACHE.get(key)
+    if fn is None:
+        build = functools.partial(jnp.zeros, tuple(shape), dtype)
+        fn = (jax.jit(build) if sharding is None
+              else jax.jit(build, out_shardings=sharding))
+        _ZEROS_CACHE[key] = fn
+    return fn()
 
 
 def zero_caches(cache_struct, shardings=None):
     """Materialize zeroed caches matching the struct tree (optionally with
     shardings — the decode step's cache specs)."""
-    def mk(st, sh):
-        if sh is None:
-            return jnp.zeros(st.shape, st.dtype)
-        return jax.jit(lambda: jnp.zeros(st.shape, st.dtype),
-                       out_shardings=sh)()
     if shardings is None:
-        return jax.tree.map(lambda st: jnp.zeros(st.shape, st.dtype),
+        return jax.tree.map(lambda st: _zeros(st.shape, st.dtype),
                             cache_struct)
-    return jax.tree.map(mk, cache_struct, shardings)
+    return jax.tree.map(lambda st, sh: _zeros(st.shape, st.dtype, sh),
+                        cache_struct, shardings)
 
 
 @jax.jit

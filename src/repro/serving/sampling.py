@@ -1,0 +1,69 @@
+"""Per-request sampling parameters for the serving engine.
+
+`SamplingParams` is the host-side request option; the jit-side math lives in
+core/embedding.sample_token (Gumbel-max over the tp-sharded vocab) and is
+threaded through launch/steps' prefill/decode bundles as a per-slot "lane":
+a dict of [B] arrays (temperature / top_k / seed) the engine scatters into
+whenever a request is admitted to a slot.  Sampling therefore happens inside
+the jitted step — no logits ever leave the device, and one compiled decode
+step serves any mix of greedy and sampled requests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """What a request wants from the token sampler.
+
+    temperature  0.0 => greedy (exact argmax path inside the step);
+                 > 0 => softmax(z/temperature) via Gumbel-max
+    top_k        truncate to the k highest-logit tokens before sampling;
+                 0 => full vocabulary (ignored when temperature == 0;
+                 clamped to core.embedding.TOP_K_CAP inside the step —
+                 the distributed threshold search is exact up to the cap)
+    seed         the request's RNG lane — (seed, position) maps to one
+                 reproducible draw regardless of batching or slot placement
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0: {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0: {self.top_k}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def zero_lane(batch_size: int) -> dict:
+    """Fresh per-slot lane arrays (all slots greedy) for a decode batch."""
+    return {"temperature": jnp.zeros((batch_size,), jnp.float32),
+            "top_k": jnp.zeros((batch_size,), jnp.int32),
+            "seed": jnp.zeros((batch_size,), jnp.int32)}
+
+
+def set_lane(lane: dict, slot: int, params: SamplingParams) -> dict:
+    """Scatter one request's SamplingParams into slot `slot`."""
+    return {"temperature": lane["temperature"].at[slot].set(params.temperature),
+            "top_k": lane["top_k"].at[slot].set(params.top_k),
+            "seed": lane["seed"].at[slot].set(params.seed)}
+
+
+def prefill_lane(params: SamplingParams, prompt_len: int) -> dict:
+    """Batch-1 lane for a prefill step: the request's SamplingParams plus
+    its true (unpadded) prompt length."""
+    return {"temperature": jnp.full((1,), params.temperature, jnp.float32),
+            "top_k": jnp.full((1,), params.top_k, jnp.int32),
+            "seed": jnp.full((1,), params.seed, jnp.int32),
+            "prompt_len": jnp.full((1,), prompt_len, jnp.int32)}

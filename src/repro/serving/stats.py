@@ -1,0 +1,104 @@
+"""Serving telemetry: the paper's two regimes as first-class metrics.
+
+`EngineStats` is the engine's live accumulator — NAR (prompt-encoding) and
+AR (decode) token counts and wall time are tracked separately, mirroring the
+paper's Sec. VI-A split, plus the serving-level signals every scheduler
+decision needs: TTFT percentiles, decode-slot occupancy, and prefill
+length-bucket hit/compile counts.  `launch/serve.py` and
+`benchmarks/serving_bench.py` consume it instead of print-scraping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    rank = max(0, min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[rank]
+
+
+@dataclass
+class EngineStats:
+    batch_size: int = 0
+    requests_submitted: int = 0
+    requests_completed: int = 0
+    # -- NAR (prompt encoding / prefill) ------------------------------------
+    nar_tokens: int = 0            # true prompt tokens encoded
+    padded_nar_tokens: int = 0     # incl. length-bucket padding computed
+    nar_time_s: float = 0.0
+    # -- AR (decode) --------------------------------------------------------
+    ar_tokens: int = 0             # tokens produced by decode steps
+    ar_time_s: float = 0.0
+    decode_steps: int = 0
+    occupied_slot_steps: int = 0   # occupied decode-slot-steps (occupancy)
+    # -- serving-level ------------------------------------------------------
+    ttft_ms: List[float] = field(default_factory=list)
+    bucket_hits: Dict[int, int] = field(default_factory=dict)
+    prefill_compiles: int = 0      # distinct prefill buckets compiled
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def nar_tok_s(self) -> float:
+        """NAR prompt-encoding throughput (true prompt tokens / s)."""
+        return self.nar_tokens / self.nar_time_s if self.nar_time_s else 0.0
+
+    @property
+    def ar_tok_s(self) -> float:
+        """AR decode throughput (generated tokens / s)."""
+        return self.ar_tokens / self.ar_time_s if self.ar_time_s else 0.0
+
+    @property
+    def slot_occupancy(self) -> float:
+        """Mean fraction of decode slots occupied per AR step."""
+        total = self.decode_steps * self.batch_size
+        return self.occupied_slot_steps / total if total else 0.0
+
+    @property
+    def padding_overhead(self) -> float:
+        """Fraction of prefill compute spent on bucket padding."""
+        if not self.padded_nar_tokens:
+            return 0.0
+        return 1.0 - self.nar_tokens / self.padded_nar_tokens
+
+    @property
+    def ttft_p50_ms(self) -> float:
+        return percentile(self.ttft_ms, 50)
+
+    @property
+    def ttft_p95_ms(self) -> float:
+        return percentile(self.ttft_ms, 95)
+
+    def to_dict(self) -> dict:
+        """JSON-ready snapshot (benchmarks/serving_bench.py)."""
+        return {
+            "batch_size": self.batch_size,
+            "requests_submitted": self.requests_submitted,
+            "requests_completed": self.requests_completed,
+            "nar_tokens": self.nar_tokens,
+            "padded_nar_tokens": self.padded_nar_tokens,
+            "nar_time_s": self.nar_time_s,
+            "nar_tok_s": self.nar_tok_s,
+            "ar_tokens": self.ar_tokens,
+            "ar_time_s": self.ar_time_s,
+            "ar_tok_s": self.ar_tok_s,
+            "decode_steps": self.decode_steps,
+            "slot_occupancy": self.slot_occupancy,
+            "padding_overhead": self.padding_overhead,
+            "ttft_p50_ms": self.ttft_p50_ms,
+            "ttft_p95_ms": self.ttft_p95_ms,
+            "bucket_hits": {str(k): v
+                            for k, v in sorted(self.bucket_hits.items())},
+            "prefill_compiles": self.prefill_compiles,
+        }
+
+    def summary(self) -> str:
+        return (f"NAR {self.nar_tok_s:8.1f} tok/s ({self.nar_tokens} prompt "
+                f"tokens, {self.padding_overhead:.0%} pad) | "
+                f"AR {self.ar_tok_s:8.1f} tok/s ({self.ar_tokens} tokens, "
+                f"occupancy {self.slot_occupancy:.0%}) | "
+                f"TTFT p50 {self.ttft_p50_ms:.0f}ms p95 {self.ttft_p95_ms:.0f}ms")
