@@ -4,11 +4,13 @@
 
 Unlike the dry-run roofline benchmarks (benchmarks/run.py), this measures
 the *engine* end to end on this host: wall-clock NAR prompt-encoding tok/s,
-AR decode tok/s, and TTFT p50/p95 over a deterministic trace mixing prompt
-lengths, greedy and sampled requests.  A warmup pass compiles every length
-bucket first (`engine.reset_stats()` then separates compile time from the
-measured run), so the JSON tracks steady-state serving performance across
-PRs: artifacts/bench/BENCH_serving.json.
+AR decode tok/s, TTFT and decode-step p50/p95, and the paged-KV pool
+telemetry (peak utilization, blocks-per-token, preemptions) over a
+deterministic trace mixing prompt lengths, greedy and sampled requests.  A
+warmup pass compiles every (length bucket, group size) first
+(`engine.reset_stats()` then separates compile time from the measured run),
+so the JSON tracks steady-state serving performance across PRs:
+artifacts/bench/BENCH_serving.json.
 """
 from __future__ import annotations
 
@@ -59,6 +61,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-prompt-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV pool block size (tokens)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="KV pool capacity in blocks (0 => engine default "
+                         "of batch * ceil(max_seq / block_size))")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=os.path.join(ART, "BENCH_serving.json"))
     args = ap.parse_args(argv)
@@ -71,7 +78,9 @@ def main(argv=None) -> int:
         cfg = cfg.reduced()
     params = lm.init_lm(jax.random.key(args.seed), cfg, jnp.bfloat16)
     engine = InferenceEngine(cfg, params, batch_size=args.batch,
-                             max_seq=args.max_seq)
+                             max_seq=args.max_seq,
+                             block_size=args.block_size,
+                             kv_pool_blocks=args.kv_pool_blocks or None)
 
     trace_kw = dict(requests=args.requests, min_len=args.min_prompt_len,
                     max_len=args.max_prompt_len, max_new=args.max_new)
@@ -109,6 +118,13 @@ def main(argv=None) -> int:
         json.dump(record, f, indent=2)
     print(f"served {len(done)} requests in {wall:.2f}s")
     print(stats.summary())
+    if stats.kv_pool_blocks:
+        dense_positions = args.batch * args.max_seq
+        print(f"  KV: {stats.peak_blocks_used * stats.kv_block_size} peak "
+              f"pool positions vs {dense_positions} dense (B x max_seq), "
+              f"{stats.blocks_per_token:.2f} block-positions/live-token, "
+              f"decode step p50 {stats.decode_step_p50_ms:.2f}ms "
+              f"p95 {stats.decode_step_p95_ms:.2f}ms")
     print(f"  -> {args.out}")
     return 0
 

@@ -306,14 +306,51 @@ def _attn_seq_sp(p, x, *, plan, cfg, policy, causal, window, with_cache,
 # AR decode (T4: sequence-sharded cache + distributed softmax)
 # --------------------------------------------------------------------------
 
+def _decode_q(p, x, pos, *, plan: Plan, cfg, policy: Policy):
+    """Projected + rotated query for one decode step: [B, H, hd]."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    qp = pdot(x, gather_w(p["wq"], plan), policy)              # [B, Hhd/tp]
+    q = col.all_gather(qp, plan.tp_axes, axis=-1).reshape(B, H, hd)
+    return apply_rope(q[:, None], pos[:, None], theta=cfg.rope_theta,
+                      fraction=cfg.rope_fraction)[:, 0]
+
+
+def _decode_kv_new(p, x, pos, *, plan: Plan, cfg, policy: Policy):
+    """This step's K/V rows ([B, KV, hd] each; K rotated)."""
+    B = x.shape[0]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    kp = pdot(x, gather_w(p["wk"], plan), policy)
+    vp = pdot(x, gather_w(p["wv"], plan), policy)
+    k_new = col.all_gather(kp, plan.tp_axes, axis=-1).reshape(B, KV, hd)
+    v_new = col.all_gather(vp, plan.tp_axes, axis=-1).reshape(B, KV, hd)
+    k_new = apply_rope(k_new[:, None], pos[:, None], theta=cfg.rope_theta,
+                       fraction=cfg.rope_fraction)[:, 0]
+    return k_new, v_new
+
+
+def _decode_out_proj(p, merged, *, plan: Plan, policy: Policy):
+    """Contract the merged [B, H*hd] head tensor with wo (tp-partial +
+    psum) -> [B, E] at activation dtype."""
+    tp_ax = plan.tp_axes
+    ad = act_dtype(policy)
+    rows_loc = merged.shape[1] // plan.tp
+    i = col.axis_index(tp_ax)
+    o_loc = jax.lax.dynamic_slice_in_dim(
+        merged.astype(ad), i * rows_loc, rows_loc, axis=1)
+    wo = gather_w(p["wo"], plan, fsdp_dim=1)                   # [Hhd/tp, E]
+    part = pdot(o_loc, wo, policy, out_dtype=jnp.float32)
+    return col.psum(part, tp_ax).astype(ad)
+
+
 def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
                 window: int, cross: bool = False, memory_len: int = 0):
     """One decode step.  x: [B, E] (replicated over tp); pos: [B] int32 —
     position index of the token being written; cache: {"k","v"} local shards
     [B, W_loc, KV, hd].  Returns (y [B, E], updated cache)."""
-    tp, tp_ax, c_ax = plan.tp, plan.tp_axes, plan.cache_axes
+    c_ax = plan.cache_axes
     B, E = x.shape
-    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    H, hd = cfg.n_heads, cfg.head_dim
     ad = act_dtype(policy)
     sm_scale = float(1.0 / (hd ** 0.5))
 
@@ -321,18 +358,11 @@ def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
     W = W_loc * plan.cache_shards                  # global cache slots
     ring = window > 0 and W == window
 
-    qp = pdot(x, gather_w(p["wq"], plan), policy)              # [B, Hhd/tp]
-    q = col.all_gather(qp, tp_ax, axis=-1).reshape(B, H, hd)
-    q = apply_rope(q[:, None], pos[:, None], theta=cfg.rope_theta,
-                   fraction=cfg.rope_fraction)[:, 0]
+    q = _decode_q(p, x, pos, plan=plan, cfg=cfg, policy=policy)
 
     if not cross:
-        kp = pdot(x, gather_w(p["wk"], plan), policy)
-        vp = pdot(x, gather_w(p["wv"], plan), policy)
-        k_new = col.all_gather(kp, tp_ax, axis=-1).reshape(B, KV, hd)
-        v_new = col.all_gather(vp, tp_ax, axis=-1).reshape(B, KV, hd)
-        k_new = apply_rope(k_new[:, None], pos[:, None], theta=cfg.rope_theta,
-                           fraction=cfg.rope_fraction)[:, 0]
+        k_new, v_new = _decode_kv_new(p, x, pos, plan=plan, cfg=cfg,
+                                      policy=policy)
         slot = pos % W if ring else pos
         start = col.axis_index(c_ax) * W_loc
         loc = slot - start
@@ -364,12 +394,59 @@ def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
     o, m, l = decode_partials(q.astype(ad), cache["k"], cache["v"], valid,
                               sm_scale=sm_scale)
     merged = merge_partials(o, m, l, c_ax).reshape(B, H * hd)  # T4 merge
+    return _decode_out_proj(p, merged, plan=plan, policy=policy), cache
 
-    rows_loc = (H * hd) // tp
-    i = col.axis_index(tp_ax)
-    o_loc = jax.lax.dynamic_slice_in_dim(
-        merged.astype(ad), i * rows_loc, rows_loc, axis=1)
-    wo = gather_w(p["wo"], plan, fsdp_dim=1)                   # [Hhd/tp, E]
-    part = pdot(o_loc, wo, policy, out_dtype=jnp.float32)
-    y = col.psum(part, tp_ax).astype(ad)
-    return y, cache
+
+def attn_decode_paged(p, x, pos, cache, block_tables, *, plan: Plan, cfg,
+                      policy: Policy):
+    """One decode step against a block-paged KV cache (full-context layers
+    only — window/ring layers keep the dense per-slot ring, `attn_decode`).
+
+    x: [B, E]; pos: [B] — position index of the token being written;
+    cache: {"k","v"} pool shards [NB_loc, BS, KV, hd], block-sharded over
+    `plan.cache_axes`; block_tables: [B, MB] int32 *global* pool indices in
+    sequence order (< 0 = unallocated).  Returns (y [B, E], updated cache).
+
+    The new token's KV lands in block table[pos // BS] at offset pos % BS —
+    a single per-block scatter.  Attention dispatches to the paged split-KV
+    partials kernel (kernels/ops.paged_decode_partials) over the blocks this
+    shard owns (absent / non-owned table entries masked), and the per-shard
+    online-softmax partials merge across cache shards with the same T4 rule
+    as the dense path — the pool is never gathered."""
+    c_ax = plan.cache_axes
+    B, E = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    ad = act_dtype(policy)
+
+    NB_loc, BS = cache["k"].shape[0], cache["k"].shape[1]
+    start = col.axis_index(c_ax) * NB_loc          # first owned global block
+
+    q = _decode_q(p, x, pos, plan=plan, cfg=cfg, policy=policy)
+    k_new, v_new = _decode_kv_new(p, x, pos, plan=plan, cfg=cfg,
+                                  policy=policy)
+
+    # scatter the new token into its block (absent / non-owned -> dropped;
+    # negative ids wrap in .at[], so route them out of bounds instead)
+    gb = jnp.take_along_axis(block_tables, (pos // BS)[:, None],
+                             axis=1)[:, 0]                       # [B]
+    loc = gb - start
+    owned = (gb >= 0) & (loc >= 0) & (loc < NB_loc)
+    loc = jnp.where(owned, loc, NB_loc)
+    off = pos % BS
+    cache = {
+        "k": cache["k"].at[loc, off].set(
+            k_new.astype(cache["k"].dtype), mode="drop"),
+        "v": cache["v"].at[loc, off].set(
+            v_new.astype(cache["v"].dtype), mode="drop"),
+    }
+
+    # local view of the table: entries this shard owns, local ids
+    length = pos + 1                               # incl. the token just cached
+    loc_tab = block_tables - start
+    present = (block_tables >= 0) & (loc_tab >= 0) & (loc_tab < NB_loc)
+    loc_tab = jnp.where(present, loc_tab, -1)
+
+    o, m, l = ops.paged_decode_partials(q.astype(ad), cache["k"], cache["v"],
+                                        loc_tab, length)
+    merged = merge_partials(o, m, l, c_ax).reshape(B, H * hd)  # T4 merge
+    return _decode_out_proj(p, merged, plan=plan, policy=policy), cache

@@ -123,19 +123,40 @@ def kind_cache_len(kind: str, cfg, max_seq: int) -> int:
     return min(w, max_seq) if w > 0 and w < max_seq else max_seq
 
 
+def kind_paged(kind: str, cfg, max_seq: int) -> bool:
+    """True when this kind's self-attention KV cache is block-paged under a
+    paged layout: full-context attention layers only — window/ring caches
+    are already bounded and stay dense per-slot (as do SSM state and
+    cross-attention memory)."""
+    return (kind in ATTN_KINDS
+            and kind_cache_len(kind, cfg, max_seq) == max_seq)
+
+
 # --------------------------------------------------------------------------
 # forward
 # --------------------------------------------------------------------------
 
 def block_full(kind: str, p, x, *, plan: Plan, cfg, policy,
                with_cache: bool = False, max_seq: int = 0, memory=None,
-               memory_len: int = 0):
-    """x: [B, S_loc, E] -> (x', cache | None, aux)."""
+               memory_len: int = 0, compact_kv: bool = False):
+    """x: [B, S_loc, E] -> (x', cache | None, aux).
+
+    `compact_kv`: emit full-context KV caches at the prompt's own length
+    instead of padding to `max_seq` (paged prefill: the engine scatters the
+    compact cache into pool blocks, so the B x max_seq dense buffer never
+    materializes).  Ring/window caches keep their window-sized layout."""
     aux = jnp.zeros((), jnp.float32)
     cache = {}
     causal = kind_causal(kind, cfg)
     window = kind_window(kind, cfg)
     cache_len = kind_cache_len(kind, cfg, max_seq) if with_cache else 0
+    if compact_kv and kind_paged(kind, cfg, max_seq):
+        # compact cache at the sequence's own length, rounded up to the
+        # cache-shard count (cache_slice cuts S // shards rows per device —
+        # an indivisible S would silently drop the tail positions)
+        S_tot = x.shape[1] * max(plan.sp, 1)
+        shards = max(plan.cache_shards, 1)
+        cache_len = -(-S_tot // shards) * shards
 
     h = ops.norm(x, p["ln1"], cfg.norm)
     if kind == "ssm":
@@ -183,9 +204,14 @@ def block_full(kind: str, p, x, *, plan: Plan, cfg, policy,
 
 
 def block_decode(kind: str, p, x, pos, cache, *, plan: Plan, cfg, policy,
-                 memory_len: int = 0):
+                 memory_len: int = 0, block_tables=None, paged: bool = False):
     """x: [B, E]; pos: [B]; cache: this layer's cache dict.
-    Returns (x', updated cache)."""
+    Returns (x', updated cache).
+
+    `paged`: this kind's self-attention KV lives in a block pool
+    ([NB, BS, KV, hd] leaves) addressed through `block_tables` [B, MB]
+    (core/attention.attn_decode_paged); SSM state, ring caches and
+    cross-attention memory are per-slot dense either way."""
     window = kind_window(kind, cfg)
     new_cache = dict(cache)
 
@@ -197,9 +223,16 @@ def block_decode(kind: str, p, x, pos, cache, *, plan: Plan, cfg, policy,
         new_cache.update(sc)
         return x + y, new_cache
 
-    y, kv = attn.attn_decode(p["attn"], h, pos,
-                             {"k": cache["k"], "v": cache["v"]},
-                             plan=plan, cfg=cfg, policy=policy, window=window)
+    if paged:
+        y, kv = attn.attn_decode_paged(p["attn"], h, pos,
+                                       {"k": cache["k"], "v": cache["v"]},
+                                       block_tables, plan=plan, cfg=cfg,
+                                       policy=policy)
+    else:
+        y, kv = attn.attn_decode(p["attn"], h, pos,
+                                 {"k": cache["k"], "v": cache["v"]},
+                                 plan=plan, cfg=cfg, policy=policy,
+                                 window=window)
     new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
     if kind in ("hybrid_attn", "hybrid_local"):
         s, sc = ssm_mod.ssm_decode(p["ssm"], h,

@@ -10,7 +10,18 @@ merge rule combines *cross-chip* partials in core/distributed_softmax.py,
 so chip-local and pod-level softmax use one primitive.
 
 Grid: (B, KV, n_chunks) with the chunk dim innermost; partials are merged
-in-kernel through VMEM scratch (single pass over the cache)."""
+in-kernel through VMEM scratch (single pass over the cache).
+
+`paged_decode_attention` is the block-paged variant of the same primitive:
+the cache is a global pool of fixed-size KV blocks and each slot owns an
+ordered *block table* of pool indices.  The table (and the per-slot valid
+lengths) ride in as scalar-prefetch operands: the grid's innermost
+dimension walks table entries, the BlockSpec index map dereferences the
+table to DMA the named block, and absent entries (unallocated / non-owned
+shard) skip their fold — the grid still spans max_blocks cells per slot,
+but the dot work (and, via consecutive-index pipelining, the block
+fetches) tracks the blocks a slot actually owns, while the pool *capacity*
+is decoupled from B x max_seq entirely."""
 from __future__ import annotations
 
 import functools
@@ -23,47 +34,64 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                   *, block_kv: int, window: int, sm_scale: float):
-    """q_ref: [1, 1, G, D]; k/v_ref: [1, block_kv, 1, D];
-    len_ref: scalar-prefetch [B] valid lengths; o_ref: [1, 1, G, D]."""
-    b = pl.program_id(0)
-    ci = pl.program_id(2)
-
+def _online_merge(ci, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
+                  mask, live, sm_scale: float):
+    """Shared split-KV cell body: fold one masked KV chunk's scores into the
+    (m, l, acc) scratch with the online-softmax rescale rule, initializing
+    the scratch on the first chunk.  `mask`: [G, chunk] validity of this
+    chunk's positions; `live`: scalar — False when the whole chunk is
+    masked, skipping its dot work entirely (a fully-masked chunk is a
+    no-op: corr = 1, p = 0).  The caller writes the output on the last
+    chunk."""
     @pl.when(ci == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    g, d = q_ref.shape[2], q_ref.shape[3]
-    q = q_ref[0, 0]                                     # [G, D]
-    k = k_ref[:, :, 0, :][0]                            # [block_kv, D]
-    v = v_ref[:, :, 0, :][0]
+    @pl.when(live)
+    def _fold():
+        q = q_ref[0, 0]                                 # [G, D]
+        k = k_ref[:, :, 0, :][0]                        # [chunk, D]
+        v = v_ref[:, :, 0, :][0]
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * sm_scale
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, block_kv: int, window: int, sm_scale: float):
+    """q_ref: [1, 1, G, D]; k/v_ref: [1, block_kv, 1, D];
+    len_ref: scalar-prefetch [B] valid lengths; o_ref: [1, 1, G, D]."""
+    b = pl.program_id(0)
+    ci = pl.program_id(2)
+    g = q_ref.shape[2]
     length = len_ref[b]
     pos = jax.lax.broadcasted_iota(jnp.int32, (g, block_kv), 1) + ci * block_kv
     mask = pos < length
+    live = ci * block_kv < length
     if window > 0:
         mask &= pos >= length - window
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
-    m_ref[...] = m_new
-    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        live &= (ci + 1) * block_kv > length - window
+    _online_merge(ci, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+                  mask=mask, live=live, sm_scale=sm_scale)
 
     @pl.when(ci == pl.num_programs(2) - 1)
     def _finish():
         o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
@@ -110,3 +138,149 @@ def decode_attention(q, k_cache, v_cache, length, *, window=0, block_kv=512,
         interpret=interpret,
     )(length, qr, k_cache, v_cache)
     return out.reshape(B, H, D)
+
+
+# --------------------------------------------------------------------------
+# paged split-KV decode
+# --------------------------------------------------------------------------
+
+def _paged_mask(tab_ref, len_ref, b, e, g: int, block_size: int):
+    """-> (mask [G, BS], live scalar) for pool-block entry `e` of slot `b`:
+    token t of entry e holds absolute position e*BS + t, masked when past
+    the slot's length or when the table entry is absent (< 0: unallocated /
+    non-owned shard).  `live` is False when the whole entry is masked —
+    absent entries skip their fold (and their DMA collapses onto block 0,
+    which consecutive-index pipelining fetches once), so per-step work
+    tracks the blocks a slot actually owns."""
+    pos = (jax.lax.broadcasted_iota(jnp.int32, (g, block_size), 1)
+           + e * block_size)
+    live = (tab_ref[b, e] >= 0) & (e * block_size < len_ref[b])
+    return (pos < len_ref[b]) & (tab_ref[b, e] >= 0), live
+
+
+def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, block_size: int,
+                         sm_scale: float):
+    """q_ref: [1, 1, G, D]; k/v_ref: [1, block_size, 1, D] — the pool block
+    the slot's table names for entry `e` (the index map dereferenced it);
+    tab_ref: scalar-prefetch [B, MB] block tables (< 0 = absent);
+    len_ref: scalar-prefetch [B] valid lengths."""
+    b = pl.program_id(0)
+    e = pl.program_id(2)
+    mask, live = _paged_mask(tab_ref, len_ref, b, e, q_ref.shape[2],
+                             block_size)
+    _online_merge(e, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+                  mask=mask, live=live, sm_scale=sm_scale)
+
+    @pl.when(e == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def _paged_partials_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                           mo_ref, lo_ref, m_ref, l_ref, acc_ref, *,
+                           block_size: int, sm_scale: float):
+    """As _paged_decode_kernel but emits the raw (o, m, l) online-softmax
+    partials instead of normalizing — the cross-shard T4 merge
+    (core/attention.merge_partials) combines per-device pool shards."""
+    b = pl.program_id(0)
+    e = pl.program_id(2)
+    mask, live = _paged_mask(tab_ref, len_ref, b, e, q_ref.shape[2],
+                             block_size)
+    _online_merge(e, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+                  mask=mask, live=live, sm_scale=sm_scale)
+
+    @pl.when(e == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...]
+        mo_ref[0, 0] = m_ref[...]
+        lo_ref[0, 0] = l_ref[...]
+
+
+def _paged_call(kernel, q, k_pool, v_pool, block_tables, lengths, out_shape,
+                out_specs, interpret):
+    """Shared pallas_call plumbing for the paged kernels: grid (slot,
+    kv_head, table entry) with scalar-prefetched tables dereferenced by the
+    k/v index maps — each step DMAs exactly one owned pool block."""
+    B, KV, G, D = q.shape
+    _, BS, _, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    sm_scale = float(1.0 / (D ** 0.5))
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    block_tables = block_tables.astype(jnp.int32)
+
+    def kv_index(b, h, e, tab_ref, len_ref):
+        t = tab_ref[b, e]
+        return (jnp.where(t < 0, 0, t), 0, h, 0)   # absent -> any block, masked
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, e, tab_ref, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, BS, 1, D), kv_index),
+            pl.BlockSpec((1, BS, 1, D), kv_index),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(kernel, block_size=BS, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pool, v_pool)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           interpret=False):
+    """Paged split-KV decode.  q: [B, H, D]; k/v_pool: [NB, BS, KV, D] —
+    global pool of fixed-size KV blocks; block_tables: [B, MB] int32 pool
+    indices in sequence order (< 0 = absent entry); lengths: [B] valid
+    tokens per slot.  Returns [B, H, D], softmax fully normalized
+    (single-pool case; sharded pools use `paged_decode_partials`)."""
+    B, H, D = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    out = _paged_call(
+        _paged_decode_kernel, q.reshape(B, KV, G, D), k_pool, v_pool,
+        block_tables, lengths,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, e, tab_ref, len_ref: (b, h, 0, 0)),
+        interpret=interpret)
+    return out.reshape(B, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths, *,
+                          interpret=False):
+    """Paged split-KV decode emitting unnormalized online-softmax partials:
+    -> (o [B, H, D] fp32 unnormalized, m [B, H], l [B, H]).  Each cache
+    shard runs this over its *local* pool (non-owned table entries < 0) and
+    the T4 merge rule combines the shards — the pool is never gathered."""
+    B, H, D = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    hw = pl.BlockSpec((1, 1, G),
+                      lambda b, h, e, tab_ref, len_ref: (b, h, 0))
+    o, m, l = _paged_call(
+        _paged_partials_kernel, q.reshape(B, KV, G, D), k_pool, v_pool,
+        block_tables, lengths,
+        out_shape=[jax.ShapeDtypeStruct((B, KV, G, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, G), jnp.float32)],
+        out_specs=[pl.BlockSpec((1, 1, G, D),
+                                lambda b, h, e, tab_ref, len_ref:
+                                (b, h, 0, 0)),
+                   hw, hw],
+        interpret=interpret)
+    return o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H)

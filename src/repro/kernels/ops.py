@@ -106,6 +106,31 @@ def decode_attention(q, k_cache, v_cache, length, *, window=0, block_kv=512):
                                      window=window)
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
+    """Block-paged decode.  q: [B, H, D]; k/v_pool: [NB, BS, KV, D];
+    block_tables: [B, MB] int32 pool indices (< 0 = absent entry);
+    lengths: [B] valid tokens per slot.  Fully normalized output."""
+    use, interp = _use_pallas()
+    if use:
+        return _fd.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                          lengths, interpret=interp)
+    return _ref.paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
+                                           lengths)
+
+
+def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths):
+    """Block-paged decode partials -> (o unnormalized [B, H, D] fp32,
+    m [B, H], l [B, H]) for the cross-shard online-softmax merge
+    (core/attention.merge_partials); same operands as
+    `paged_decode_attention`, run per cache shard on its local pool."""
+    use, interp = _use_pallas()
+    if use:
+        return _fd.paged_decode_partials(q, k_pool, v_pool, block_tables,
+                                         lengths, interpret=interp)
+    return _ref.paged_decode_partials_ref(q, k_pool, v_pool, block_tables,
+                                          lengths)
+
+
 # --------------------------------------------------------------------------
 # GEMM + fused epilogues (T1/T5)
 # --------------------------------------------------------------------------

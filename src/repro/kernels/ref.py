@@ -163,6 +163,64 @@ def decode_attention_ref(q, k_cache, v_cache, length, *, window=0,
     return out.reshape(B, H, D).astype(out_dtype)
 
 
+def _paged_gather(k_pool, v_pool, block_tables, lengths):
+    """Dereference block tables into a dense [B, MB*BS, KV, D] view plus a
+    [B, MB*BS] validity mask (token t of entry e = absolute position
+    e*BS + t; entries < 0 are absent)."""
+    _, BS, KV, D = k_pool.shape
+    B, MB = block_tables.shape
+    present = block_tables >= 0                                  # [B, MB]
+    tab = jnp.where(present, block_tables, 0)
+    k = k_pool.astype(jnp.float32)[tab].reshape(B, MB * BS, KV, D)
+    v = v_pool.astype(jnp.float32)[tab].reshape(B, MB * BS, KV, D)
+    pos = jnp.arange(MB * BS)[None, :]                           # absolute
+    msk = pos < jnp.asarray(lengths, jnp.int32)[:, None]
+    msk &= jnp.repeat(present, BS, axis=1)
+    return k, v, msk
+
+
+def _paged_scores(q, k, msk):
+    """Masked fp32 scores [B, KV, G, S] from q [B, H, D]."""
+    B, H, D = q.shape
+    KV = k.shape[2]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KV, H // KV, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k)
+    return jnp.where(msk[:, None, None], s, NEG_INF)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                               out_dtype=None):
+    """Paged single-token decode oracle (block-paged KV cache).
+
+    q: [B, H, D]; k/v_pool: [NB, BS, KV, D] — a global pool of fixed-size
+    KV blocks; block_tables: [B, MB] int32 block ids per slot in sequence
+    order (entries < 0 are absent: unallocated, or owned by another cache
+    shard); lengths: [B] valid tokens per slot.  Gathers the table into a
+    dense cache and defers to the dense softmax — ground truth, not fast."""
+    out_dtype = out_dtype or q.dtype
+    B, H, D = q.shape
+    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths)
+    s = _paged_scores(q, k, msk)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return out.reshape(B, H, D).astype(out_dtype)
+
+
+def paged_decode_partials_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Paged decode oracle emitting unnormalized online-softmax partials
+    -> (o [B, H, D] fp32, m [B, H], l [B, H]) for the cross-shard T4 merge
+    (each shard passes its local pool; absent entries are masked)."""
+    B, H, D = q.shape
+    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths)
+    s = _paged_scores(q, k, msk)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H)
+
+
 def rmsnorm_ref(x, gamma, *, eps=1e-6, out_dtype=None):
     out_dtype = out_dtype or x.dtype
     xf = x.astype(jnp.float32)

@@ -60,6 +60,11 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 => greedy")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV pool block size (tokens)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="KV pool capacity in blocks (0 => engine default); "
+                         "undersize it to exercise preemption")
     ap.add_argument("--single-device", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -74,7 +79,9 @@ def main(argv=None) -> int:
     params = lm.init_lm(jax.random.key(args.seed), cfg, jnp.bfloat16)
 
     engine = InferenceEngine(cfg, params, batch_size=args.batch,
-                             max_seq=args.max_seq, mesh=mesh)
+                             max_seq=args.max_seq, mesh=mesh,
+                             block_size=args.block_size,
+                             kv_pool_blocks=args.kv_pool_blocks or None)
     for req in build_trace(cfg, args):
         engine.submit(req)
 

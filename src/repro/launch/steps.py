@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,9 +109,52 @@ def default_policy(cfg: ModelConfig, mode: str) -> Policy:
 # cache layout
 # --------------------------------------------------------------------------
 
+@dataclass(frozen=True)
+class PagedLayout:
+    """Static description of a block-paged KV cache layout.
+
+    The pools are [count, num_blocks, block_size, KV, hd] per full-attention
+    segment (block dim sharded over `plan.cache_axes`); one [B, max_blocks]
+    block table addresses every layer — block b of a sequence lives in pool
+    slot table[b] of EVERY paged segment.  `segments` marks which schedule
+    entries are paged (window/ring, SSM and cross-attention caches stay
+    dense per-slot)."""
+    num_blocks: int
+    block_size: int
+    max_blocks: int                     # table width: ceil(max_seq / bs)
+    segments: tuple                     # per-segment bool: k/v are pools
+
+    @property
+    def any_paged(self) -> bool:
+        return any(self.segments)
+
+
+def serve_dp(cfg: ModelConfig, shape: ShapeConfig,
+             mesh: Optional[Mesh]) -> int:
+    """Batch-shard count the serve plan for this shape uses — the single
+    probe for "can this batch be paged?" (a paged pool is shared across
+    slots, so the engine needs dp == 1; make_decode_step asserts the same
+    plan-derived value)."""
+    return make_plan(cfg, shape, mesh, mode="serve").dp
+
+
+def make_paged_layout(cfg: ModelConfig, plan: Plan, max_seq: int,
+                      num_blocks: int, block_size: int) -> PagedLayout:
+    """Round the pool up to the cache-shard count and mark paged segments."""
+    shards = max(plan.cache_shards, 1)
+    nb = -(-num_blocks // shards) * shards
+    return PagedLayout(
+        num_blocks=nb, block_size=block_size,
+        max_blocks=-(-max_seq // block_size),
+        segments=tuple(blocks.kind_paged(kind, cfg, max_seq)
+                       for kind, _ in cfg.schedule))
+
+
 def cache_layout(cfg: ModelConfig, plan: Plan, global_batch: int,
-                 max_seq: int, policy: Policy):
-    """(struct tree, logical-dims tree) mirroring the prefill cache pytree."""
+                 max_seq: int, policy: Policy,
+                 paged: Optional[PagedLayout] = None):
+    """(struct tree, logical-dims tree) mirroring the prefill cache pytree.
+    With `paged`, full-attention k/v leaves become block pools."""
     B = global_batch
     kv_dtype = jnp.dtype(plan.kv_cache_dtype)
     KV, hd = cfg.n_kv_heads, cfg.head_dim
@@ -124,8 +167,14 @@ def cache_layout(cfg: ModelConfig, plan: Plan, global_batch: int,
         if kind in blocks.ATTN_KINDS:
             W = blocks.kind_cache_len(kind, cfg, max_seq)
             kv_dims = (None, "batch", "cache", None, None)
-            d["k"] = jax.ShapeDtypeStruct((count, B, W, KV, hd), kv_dtype)
-            d["v"] = jax.ShapeDtypeStruct((count, B, W, KV, hd), kv_dtype)
+            if paged is not None and blocks.kind_paged(kind, cfg, max_seq):
+                shape = (count, paged.num_blocks, paged.block_size, KV, hd)
+                kv_dims = (None, "cache", None, None, None)
+                d["k"] = jax.ShapeDtypeStruct(shape, kv_dtype)
+                d["v"] = jax.ShapeDtypeStruct(shape, kv_dtype)
+            else:
+                d["k"] = jax.ShapeDtypeStruct((count, B, W, KV, hd), kv_dtype)
+                d["v"] = jax.ShapeDtypeStruct((count, B, W, KV, hd), kv_dtype)
             dm["k"] = dm["v"] = kv_dims
             if kind == "dec":
                 We = cfg.enc_seq_padded
@@ -133,7 +182,8 @@ def cache_layout(cfg: ModelConfig, plan: Plan, global_batch: int,
                                                kv_dtype)
                 d["cv"] = jax.ShapeDtypeStruct((count, B, We, KV, hd),
                                                kv_dtype)
-                dm["ck"] = dm["cv"] = kv_dims
+                # cross-attn memory is per-slot dense even under paging
+                dm["ck"] = dm["cv"] = (None, "batch", "cache", None, None)
         if kind in blocks.SSM_KINDS or kind == "ssm":
             d["h"] = jax.ShapeDtypeStruct((count, B, Hp, Pd, N), jnp.float32)
             dm["h"] = (None, "batch", "tp", None, None)
@@ -345,7 +395,12 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                       attention_sharding: str = "",
                       comm_fp8: bool = False,
                       mlp_weight_stationary: bool = False,
-                      with_sampling: bool = False) -> StepBundle:
+                      with_sampling: bool = False,
+                      compact_kv: bool = False) -> StepBundle:
+    """`compact_kv`: emit full-context KV caches at the batch's own
+    sequence length instead of padded to `max_seq` — paged admission
+    scatters them into pool blocks, so the dense B x max_seq buffer never
+    materializes (ring/window caches keep their window layout)."""
     import dataclasses
     policy = policy or default_policy(cfg, "serve")
     plan = make_plan(cfg, shape, mesh, mode="serve",
@@ -373,14 +428,15 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
         col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
         if lane is None:
             return lm.forward_prefill(params, batch, plan=plan, cfg=cfg,
-                                      policy=policy, max_seq=max_seq)
+                                      policy=policy, max_seq=max_seq,
+                                      compact_kv=compact_kv)
         # per-request lane: sampling params + true prompt length (the batch
         # may be right-padded to a length bucket)
         lane = dict(lane)
         return lm.forward_prefill(params, batch, plan=plan, cfg=cfg,
                                   policy=policy, max_seq=max_seq,
                                   prompt_len=lane.pop("prompt_len"),
-                                  lane=lane)
+                                  lane=lane, compact_kv=compact_kv)
 
     body = run if with_sampling else (lambda params, batch:
                                       run(params, batch, None))
@@ -412,7 +468,15 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
                      max_seq: Optional[int] = None,
                      reduce_method: str = "ring",
                      kv_cache_dtype: str = "bfloat16",
-                     with_sampling: bool = False) -> StepBundle:
+                     with_sampling: bool = False,
+                     paged: Optional[Tuple[int, int]] = None) -> StepBundle:
+    """`paged`: (num_blocks, block_size) — build the step against a
+    block-paged KV cache: full-attention k/v leaves become global pools and
+    the step takes a [B, max_blocks] block-table operand after the caches
+    (`pos` carries the per-slot valid lengths).  The resolved `PagedLayout`
+    (pool rounded up to the cache-shard count) lands in aux["paged"].
+    Cache buffers are donated either way, so each step updates them in
+    place instead of allocating a fresh B x max_seq (or pool-sized) copy."""
     import dataclasses
     policy = policy or default_policy(cfg, "serve")
     plan = make_plan(cfg, shape, mesh, mode="serve",
@@ -420,27 +484,50 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
     plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype)
     max_seq = max_seq or shape.seq_len
 
+    layout = None
+    if paged is not None:
+        layout = make_paged_layout(cfg, plan, max_seq, *paged)
+        assert plan.dp == 1, (
+            "paged KV cache requires an unsharded decode batch (the pool is "
+            f"shared across slots): dp={plan.dp}")
+
     p_dims = lm.lm_param_dims(cfg)
     p_specs = resolve_pspecs(p_dims, plan)
     p_struct = _param_struct(cfg, policy.param_dtype)
     c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
-                                    policy)
+                                    policy, paged=layout)
     c_specs = resolve_pspecs(c_dims, plan)
     tok_spec = plan.pspec("batch")
     d_struct = frontends.decode_struct(shape.global_batch)
 
-    def run(params, token, pos, caches, lane):
-        tok, caches = lm.forward_decode(params, token, pos, caches, plan=plan,
-                                        cfg=cfg, policy=policy, lane=lane)
+    def run(params, token, pos, caches, tables, lane):
+        tok, caches = lm.forward_decode(
+            params, token, pos, caches, plan=plan, cfg=cfg, policy=policy,
+            lane=lane, block_tables=tables,
+            paged_segments=layout.segments if layout else None)
         return tok, pos + 1, caches
 
-    body = run if with_sampling else (lambda params, token, pos, caches:
-                                      run(params, token, pos, caches, None))
+    if layout is not None:
+        body = (run if with_sampling
+                else (lambda params, token, pos, caches, tables:
+                      run(params, token, pos, caches, tables, None)))
+    elif with_sampling:
+        body = (lambda params, token, pos, caches, lane:
+                run(params, token, pos, caches, None, lane))
+    else:
+        body = (lambda params, token, pos, caches:
+                run(params, token, pos, caches, None, None))
     in_specs = (p_specs, tok_spec, tok_spec, c_specs)
     in_structs = (with_shardings(p_struct, p_specs, mesh),
                   with_shardings(d_struct["token"], tok_spec, mesh),
                   with_shardings(d_struct["pos"], tok_spec, mesh),
                   with_shardings(c_struct, c_specs, mesh))
+    if layout is not None:
+        t_spec = plan.pspec("batch", None)
+        t_struct = jax.ShapeDtypeStruct(
+            (shape.global_batch, layout.max_blocks), jnp.int32)
+        in_specs += (t_spec,)
+        in_structs += (with_shardings(t_struct, t_spec, mesh),)
     if with_sampling:
         l_specs = resolve_pspecs(lane_dims(False), plan)
         in_specs += (l_specs,)
@@ -454,4 +541,4 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
                       in_specs=in_specs,
                       aux={"param_specs": p_specs, "cache_struct": c_struct,
                            "cache_specs": c_specs, "max_seq": max_seq,
-                           "param_dims": p_dims})
+                           "param_dims": p_dims, "paged": layout})

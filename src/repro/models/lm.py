@@ -171,7 +171,7 @@ def _run_segments_train(params, x, *, plan, cfg, policy, memory, memory_len):
 
 
 def _run_segments_prefill(params, x, *, plan, cfg, policy, max_seq,
-                          memory, memory_len):
+                          memory, memory_len, compact_kv=False):
     caches = []
     for (kind, _), p_seg in zip(cfg.schedule, params["segments"]):
         def body(h, p_layer, _kind=kind):
@@ -179,7 +179,8 @@ def _run_segments_prefill(params, x, *, plan, cfg, policy, max_seq,
                                              cfg=cfg, policy=policy,
                                              with_cache=True, max_seq=max_seq,
                                              memory=memory,
-                                             memory_len=memory_len)
+                                             memory_len=memory_len,
+                                             compact_kv=compact_kv)
             return h2, cache
         x, seg_cache = jax.lax.scan(body, x, p_seg)
         caches.append(seg_cache)
@@ -187,15 +188,18 @@ def _run_segments_prefill(params, x, *, plan, cfg, policy, max_seq,
 
 
 def _run_segments_decode(params, x, pos, caches, *, plan, cfg, policy,
-                         memory_len):
+                         memory_len, block_tables=None, paged_segments=None):
     new_caches = []
-    for (kind, _), p_seg, c_seg in zip(cfg.schedule, params["segments"],
-                                       caches):
-        def body(h, inp, _kind=kind):
+    paged_segments = paged_segments or (False,) * len(cfg.schedule)
+    for (kind, _), p_seg, c_seg, pgd in zip(cfg.schedule, params["segments"],
+                                            caches, paged_segments):
+        def body(h, inp, _kind=kind, _paged=pgd):
             p_layer, c_layer = inp
             h2, c2 = blocks.block_decode(_kind, p_layer, h, pos, c_layer,
                                          plan=plan, cfg=cfg, policy=policy,
-                                         memory_len=memory_len)
+                                         memory_len=memory_len,
+                                         block_tables=block_tables,
+                                         paged=_paged)
             return h2, c2
         x, c_new = jax.lax.scan(body, x, (p_seg, c_seg))
         new_caches.append(c_new)
@@ -271,7 +275,7 @@ def _residual_at(x, idx, plan: Plan):
 
 
 def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int,
-                    prompt_len=None, lane=None):
+                    prompt_len=None, lane=None, compact_kv: bool = False):
     """NAR prompt pass.  -> (next_token [B], caches, pos [B]).
 
     `prompt_len` ([B] int32, optional): true per-row text length when
@@ -280,7 +284,9 @@ def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int,
     length (pad cache entries beyond it are never attended: decode masks
     positions > pos, and causality masks them during the prefill itself).
     `lane` (optional): per-row sampling state (core.embedding.sample_token,
-    sans "step"); greedy decoding when None."""
+    sans "step"); greedy decoding when None.
+    `compact_kv`: emit full-context KV caches at prompt length instead of
+    padded to `max_seq` (paged admission scatters them into pool blocks)."""
     x, _, _ = _embed_sequence(params, batch, plan=plan, cfg=cfg,
                               policy=policy, with_labels=False)
     memory = None
@@ -291,7 +297,8 @@ def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int,
         memory_len = cfg.enc_seq_padded
     x, caches = _run_segments_prefill(params, x, plan=plan, cfg=cfg,
                                       policy=policy, max_seq=max_seq,
-                                      memory=memory, memory_len=memory_len)
+                                      memory=memory, memory_len=memory_len,
+                                      compact_kv=compact_kv)
     x = ops.norm(x, params["final_norm"], cfg.norm)
     B = batch["tokens"].shape[0]
     if prompt_len is None:
@@ -311,11 +318,15 @@ def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int,
 
 
 def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy,
-                   lane=None):
+                   lane=None, block_tables=None, paged_segments=None):
     """One AR step.  token/pos: [B] -> (next_token [B], caches).
 
     `lane` (optional): per-row sampling state (core.embedding.sample_token,
-    sans "step"); greedy decoding when None."""
+    sans "step"); greedy decoding when None.
+    `block_tables` / `paged_segments` (optional): block-paged KV cache —
+    [B, MB] int32 pool indices per slot plus a static per-segment tuple
+    marking which segments' k/v leaves are pools (launch/steps builds both;
+    `pos` doubles as the per-slot valid length)."""
     x = embed_token(params["embedding"]["embed"], token, plan=plan,
                     policy=policy)                              # [B, E]
     if cfg.rope_theta == 0:
@@ -325,7 +336,9 @@ def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy,
     memory_len = cfg.enc_seq_padded if cfg.enc_schedule else 0
     x, caches = _run_segments_decode(params, x, pos, caches, plan=plan,
                                      cfg=cfg, policy=policy,
-                                     memory_len=memory_len)
+                                     memory_len=memory_len,
+                                     block_tables=block_tables,
+                                     paged_segments=paged_segments)
     x = ops.norm(x, params["final_norm"], cfg.norm)
     if lane is None:
         tok = greedy_token(x, params["embedding"]["unemb"], plan=plan,

@@ -1,22 +1,40 @@
 """Session-based continuous-batching inference engine (NAR prefill + AR
-decode, paper T8 / Sec. VI-A).
+decode, paper T8 / Sec. VI-A) over a block-paged KV cache.
 
 A fixed decode batch of B slots runs lockstep AR steps (the paper's AR
 mode); finished rows are immediately replaced by prefilling queued requests
-(batch-1 NAR pass, paper's prompt-encoding mode) and scattering their cache
-into the free slot — decode never drains to admit work.
+(NAR pass, paper's prompt-encoding mode) — decode never drains to admit
+work.
+
+KV memory is *paged*: a `BlockAllocator` owns a global pool of fixed-size
+KV blocks and each slot holds an ordered block table of the blocks its
+request occupies.  Admission allocates ceil(tokens / block_size) blocks,
+decode allocates one more each time a slot crosses a block boundary, and
+retirement frees them — live pool occupancy tracks active tokens, never
+B x max_seq.  When the pool is exhausted the youngest running request is
+preempted back to the queue (its blocks freed) and later re-admitted by
+re-prefilling its prompt + generated prefix — recompute preemption, the
+same (seed, position)-keyed sampling draws making the continuation exact.
+Sliding-window (ring), SSM and cross-attention caches stay dense per-slot
+(they are already bounded); archs with no full-context attention simply
+have no paged leaves.
+
+Admission is *batched*: queued requests sharing a prefill length bucket are
+prefilled together in one compiled call and their compact KV is scattered
+straight into their assigned blocks (serving/kv_cache.make_prefill_scatter)
+— a per-block scatter, not a whole-batch-cache `dynamic_update_slice`.
 
 The session API decouples *what a request wants* from *how the engine
 batches it*:
 
   variable-length prompts   prefill steps are compiled lazily per
-      power-of-two length bucket; prompts are right-padded to the bucket.
-      Padding is output-exact for linear attention caches (causality masks
-      pads during the prefill, `pos` masks them at decode, and decode
-      overwrites each pad slot exactly when it first becomes attendable).
-      Archs with recurrent or ring-buffer state (SSM hybrids, sliding-window
-      attention) compile at exact prompt length instead — their state would
-      absorb pad positions.
+      (length bucket, group size); prompts are right-padded to the bucket.
+      Buckets step by 1.5x/2x rungs (8, 12, 16, 24, 32, ...) — batched
+      admission amortizes the extra compiles that finer rungs cost, and
+      halves worst-case padding waste vs pure powers of two.  Padding is
+      output-exact for linear attention caches; archs with recurrent or
+      ring-buffer state (SSM hybrids, sliding-window attention) compile at
+      exact prompt length instead — their state would absorb pad positions.
   per-request sampling      `SamplingParams` (greedy / temperature / top-k,
       per-request seed) scattered into per-slot lane arrays; the draw
       happens *inside* the jitted step (core/embedding.sample_token), so one
@@ -25,7 +43,7 @@ batches it*:
       is_last)` as steps complete; `run()` drains it for batch use.
   telemetry                 `stats()` -> EngineStats: NAR / AR throughput
       tracked separately (the paper's two metrics), TTFT, slot occupancy,
-      bucket hit counts.
+      decode-step latency percentiles, pool utilization, preemptions.
 
 All model math goes through the launch/steps bundles, so the engine runs
 identically on 1 CPU device (tests) and on the production mesh.
@@ -34,16 +52,17 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import steps as steps_mod
-from repro.serving.kv_cache import insert_row, zero_caches
-from repro.serving.sampling import (SamplingParams, prefill_lane, set_lane,
-                                    zero_lane)
+from repro.serving.kv_cache import (BlockAllocator, make_prefill_scatter,
+                                    zero_caches)
+from repro.serving.sampling import (SamplingParams, set_lane,
+                                    stack_prefill_lanes, zero_lane)
 from repro.serving.stats import EngineStats
 
 
@@ -58,11 +77,12 @@ class Request:
     output: List[int] = field(default_factory=list)
     prompt_len: int = 0                 # true length (set at submit)
     bucket: int = 0                     # padded prefill length (set at admit)
-    prefill_ms: float = 0.0
+    prefill_ms: float = 0.0             # amortized share of group prefills
     decode_ms: float = 0.0
     ttft_ms: float = 0.0                # submit -> first token
     done: bool = False
     _t_submit: float = field(default=0.0, repr=False)
+    _seq: int = field(default=0, repr=False)   # admission order (preemption)
 
 
 @dataclass(frozen=True)
@@ -77,7 +97,8 @@ class TokenEvent:
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
                  max_seq: int = 256, mesh=None, policy=None,
-                 min_bucket: int = 8):
+                 min_bucket: int = 8, paged: bool = True,
+                 block_size: int = 16, kv_pool_blocks: Optional[int] = None):
         assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
         self.cfg = cfg
         self.params = params
@@ -93,14 +114,41 @@ class InferenceEngine:
         # positions, shrinking the token budget a prompt may use
         self._n_prefix = cfg.n_patches or 0
         dshape = ShapeConfig("engine_decode", "decode", max_seq, batch_size)
+        # the pool is shared across slots: a batch-sharded decode would give
+        # each data shard a divergent pool copy -> fall back to dense rows
+        if paged and steps_mod.serve_dp(cfg, dshape, mesh) > 1:
+            paged = False
+        self.paged = paged
+        if paged:
+            default_blocks = batch_size * (-(-max_seq // block_size))
+            paged_arg: Optional[Tuple[int, int]] = (
+                kv_pool_blocks or default_blocks, block_size)
+        else:
+            paged_arg = None
         self.decode_step = steps_mod.make_decode_step(
             cfg, dshape, mesh, policy=policy, max_seq=max_seq,
-            with_sampling=True)
-        self._prefill_steps: Dict[int, steps_mod.StepBundle] = {}
+            with_sampling=True, paged=paged_arg)
+        self.layout = self.decode_step.aux["paged"]
+        self._prefill_steps: Dict[tuple, steps_mod.StepBundle] = {}
         self.caches = zero_caches(self.decode_step.aux["cache_struct"],
                                   steps_mod.to_shardings(
                                       self.decode_step.aux["cache_specs"],
                                       mesh))
+        if self.paged:
+            self.allocator = BlockAllocator(self.layout.num_blocks,
+                                            self.layout.block_size)
+            self.block_tables = np.full(
+                (batch_size, self.layout.max_blocks), -1, np.int32)
+            self._scatter = make_prefill_scatter(self.layout.segments,
+                                                 self.layout.block_size)
+        else:
+            self.allocator = None
+            self.block_tables = None
+            self._scatter = make_prefill_scatter(
+                (False,) * len(cfg.schedule), 1)
+        self._slot_blocks: List[List[int]] = [[] for _ in range(batch_size)]
+        self._tables_dev = None            # device copy, rebuilt when dirty
+        self._admit_seq = 0
         self.tokens = jnp.zeros((batch_size,), jnp.int32)
         self.pos = jnp.zeros((batch_size,), jnp.int32)
         self.lane = zero_lane(batch_size)
@@ -108,30 +156,41 @@ class InferenceEngine:
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self.steps_run = 0
-        self._stats = EngineStats(batch_size=batch_size)
+        self._stats = self._fresh_stats()
+
+    def _fresh_stats(self) -> EngineStats:
+        st = EngineStats(batch_size=self.B)
+        if self.paged:
+            st.kv_pool_blocks = self.layout.num_blocks
+            st.kv_block_size = self.layout.block_size
+        return st
 
     # -- prefill compilation cache -------------------------------------
     def bucket_for(self, prompt_len: int) -> int:
-        """Prefill length bucket for a prompt: next power of two >=
-        max(min_bucket, len), capped at the token budget (max_seq minus any
-        patch prefix); exact length for archs whose caches cannot absorb
-        padding."""
+        """Prefill length bucket for a prompt: smallest rung of
+        {m, 1.5m} x 2^k >= max(min_bucket, len), capped at the token budget
+        (max_seq minus any patch prefix); exact length for archs whose
+        caches cannot absorb padding."""
         if not self._pad_buckets:
             return prompt_len
-        b = self.min_bucket
-        while b < prompt_len:
-            b *= 2
-        return min(b, self.max_seq - self._n_prefix)
+        cap = self.max_seq - self._n_prefix
+        base = self.min_bucket
+        while True:
+            for cand in (base, base + base // 2):
+                if cand >= prompt_len or cand >= cap:
+                    return min(cand, cap)
+            base *= 2
 
-    def _prefill_for(self, bucket: int) -> steps_mod.StepBundle:
-        step = self._prefill_steps.get(bucket)
+    def _prefill_for(self, bucket: int, group: int) -> steps_mod.StepBundle:
+        step = self._prefill_steps.get((bucket, group))
         if step is None:
-            pshape = ShapeConfig(f"engine_prefill_{bucket}", "prefill",
-                                 bucket, 1)
+            pshape = ShapeConfig(f"engine_prefill_{bucket}x{group}",
+                                 "prefill", bucket, group)
             step = steps_mod.make_prefill_step(
                 self.cfg, pshape, self.mesh, policy=self.policy,
-                max_seq=self.max_seq, with_sampling=True)
-            self._prefill_steps[bucket] = step
+                max_seq=self.max_seq, with_sampling=True,
+                compact_kv=self.paged)
+            self._prefill_steps[(bucket, group)] = step
             self._stats.prefill_compiles += 1
         return step
 
@@ -150,45 +209,201 @@ class InferenceEngine:
         self.queue.append(req)
         self._stats.requests_submitted += 1
 
-    def _admit(self, fresh: List):
-        for b in range(self.B):
-            if self.slots[b] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            bucket = self.bucket_for(req.prompt_len)
+    def _full_prompt(self, req: Request) -> np.ndarray:
+        """The token sequence a (re-)prefill must encode: the prompt plus
+        any tokens already generated before a preemption."""
+        if not req.output:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.output, np.int32)])
+
+    def _full_len(self, req: Request) -> int:
+        """len(_full_prompt(req)) without materializing it (admission scans
+        the whole queue; only admitted requests build the array)."""
+        return req.prompt_len + len(req.output)
+
+    def _next_group(self, max_n: int) -> List[Tuple[Request, List[int]]]:
+        """Pop the next admission group off the queue: up to `max_n`
+        requests sharing the head-of-line's length bucket, each with its
+        pool blocks allocated (all-or-nothing per request).  Empty when the
+        head cannot get blocks — the caller waits for running requests to
+        free some."""
+        head_bucket = self.bucket_for(self._full_len(self.queue[0]))
+        idxs = [i for i, r in enumerate(self.queue)
+                if self.bucket_for(self._full_len(r)) == head_bucket]
+        idxs = idxs[:max_n]
+        group: List[Tuple[Request, List[int]]] = []
+        taken: List[int] = []
+        for i in idxs:
+            req = self.queue[i]
+            blocks: List[int] = []
+            if self.paged:
+                need = self.allocator.blocks_for(
+                    self._n_prefix + self._full_len(req))
+                got = self.allocator.alloc(need)
+                if got is None:
+                    break
+                blocks = got
+            group.append((req, blocks))
+            taken.append(i)
+        if not group:
+            if all(s is None for s in self.slots):
+                need = self.allocator.blocks_for(
+                    self._n_prefix + self._full_len(self.queue[0]))
+                raise RuntimeError(
+                    f"KV pool too small: request {self.queue[0].uid} needs "
+                    f"{need} blocks, pool has {self.allocator.num_blocks} "
+                    f"({self.allocator.num_free} free) and no running "
+                    f"request can be preempted to free more")
+            return []
+        for i in reversed(taken):
+            self.queue.pop(i)
+        return group
+
+    def _admit(self, fresh: List) -> int:
+        admitted = 0
+        while True:
+            free = [b for b in range(self.B) if self.slots[b] is None]
+            if not free or not self.queue:
+                return admitted
+            group = self._next_group(len(free))
+            if not group:
+                return admitted
+            self._prefill_group(group, free, fresh)
+            admitted += len(group)
+
+    def _prefill_group(self, group, free_slots: List[int], fresh: List):
+        """One batched NAR pass for an admission group, scattering its KV
+        into the assigned blocks (paged) / slot rows (dense)."""
+        reqs = [req for req, _ in group]
+        fulls = [self._full_prompt(req) for req in reqs]
+        bucket = self.bucket_for(len(fulls[0]))
+        n = len(reqs)
+        step = self._prefill_for(bucket, n)
+        t0 = time.perf_counter()
+        padded = np.zeros((n, bucket), np.int32)
+        for j, seq in enumerate(fulls):
+            padded[j, :len(seq)] = seq
+        batch = {"tokens": jnp.asarray(padded)}
+        if self.cfg.n_patches:
+            batch["patches"] = jnp.zeros(
+                (n, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.enc_schedule:
+            batch["frames"] = jnp.zeros(
+                (n, self.cfg.enc_seq_padded, self.cfg.d_model), jnp.bfloat16)
+        tok, caches_g, pos_g = step.fn(
+            self.params, batch,
+            stack_prefill_lanes([r.sampling for r in reqs],
+                                [len(f) for f in fulls]))
+
+        slots = free_slots[:n]
+        if self.paged:
+            tables = np.full((n, self.layout.max_blocks), -1, np.int32)
+            for j, (_, blocks) in enumerate(group):
+                tables[j, :len(blocks)] = blocks
+        else:
+            tables = np.zeros((n, 1), np.int32)      # unused by the scatter
+        self.caches = self._scatter(self.caches, caches_g,
+                                    jnp.asarray(slots, jnp.int32),
+                                    jnp.asarray(tables))
+        slots_arr = jnp.asarray(slots, jnp.int32)
+        self.tokens = self.tokens.at[slots_arr].set(tok)
+        self.pos = self.pos.at[slots_arr].set(pos_g)
+        tok_np = np.asarray(tok)
+        now = time.perf_counter()
+        dt_ms = (now - t0) * 1e3
+
+        st = self._stats
+        n_first = 0
+        for j, (req, blocks) in enumerate(group):
+            b = slots[j]
+            first_admit = not req.output
             req.bucket = bucket
-            step = self._prefill_for(bucket)
-            t0 = time.perf_counter()
-            padded = np.zeros((bucket,), np.int32)
-            padded[:req.prompt_len] = np.asarray(req.prompt, np.int32)
-            batch = {"tokens": jnp.asarray(padded)[None]}
-            if self.cfg.n_patches:
-                batch["patches"] = jnp.zeros(
-                    (1, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
-            if self.cfg.enc_schedule:
-                batch["frames"] = jnp.zeros(
-                    (1, self.cfg.enc_seq_padded, self.cfg.d_model),
-                    jnp.bfloat16)
-            tok, caches1, pos1 = step.fn(
-                self.params, batch, prefill_lane(req.sampling,
-                                                 req.prompt_len))
-            tok0 = int(tok[0])
-            now = time.perf_counter()
-            req.prefill_ms = (now - t0) * 1e3
-            req.ttft_ms = (now - req._t_submit) * 1e3
-            req.output.append(tok0)
-            self.caches = insert_row(self.caches, caches1, b)
-            self.tokens = self.tokens.at[b].set(tok[0])
-            self.pos = self.pos.at[b].set(pos1[0])
+            req.prefill_ms += dt_ms / n    # amortized share of the group call
+            req.output.append(int(tok_np[j]))
+            req._seq = self._admit_seq
+            self._admit_seq += 1
             self.lane = set_lane(self.lane, b, req.sampling)
             self.slots[b] = req
-            fresh.append((req, 0))
-            st = self._stats
+            self._slot_blocks[b] = list(blocks)
+            if self.paged:
+                self.block_tables[b] = tables[j]
+                self._tables_dev = None
+            fresh.append((req, len(req.output) - 1))
             st.bucket_hits[bucket] = st.bucket_hits.get(bucket, 0) + 1
-            st.nar_tokens += req.prompt_len
-            st.padded_nar_tokens += bucket
-            st.nar_time_s += now - t0
-            st.ttft_ms.append(req.ttft_ms)
+            if first_admit:
+                n_first += 1
+                req.ttft_ms = (now - req._t_submit) * 1e3
+                st.nar_tokens += req.prompt_len
+                st.padded_nar_tokens += bucket
+                st.add_ttft_ms(req.ttft_ms)
+            else:
+                st.recompute_tokens += len(fulls[j])
+        # preemption recomputes are overhead, not prompt-encoding goodput:
+        # split the group's wall time so nar_tok_s stays comparable between
+        # preempting and non-preempting runs
+        st.nar_time_s += (now - t0) * n_first / n
+        st.recompute_time_s += (now - t0) * (n - n_first) / n
+
+    # -- paged bookkeeping ---------------------------------------------
+    def _preempt_youngest(self) -> Optional[int]:
+        """Evict the most recently admitted running request back to the
+        queue head, freeing its blocks (recompute preemption)."""
+        cand = [b for b in range(self.B) if self.slots[b] is not None]
+        if not cand:
+            return None
+        b = max(cand, key=lambda b: self.slots[b]._seq)
+        req = self.slots[b]
+        self._release_slot(b)
+        self.queue.insert(0, req)
+        self._stats.preemptions += 1
+        return b
+
+    def _release_slot(self, b: int):
+        if self.paged and self._slot_blocks[b]:
+            self.allocator.free(self._slot_blocks[b])
+        self._slot_blocks[b] = []
+        if self.paged:
+            self.block_tables[b, :] = -1
+            self._tables_dev = None
+        self.slots[b] = None
+
+    def _grow_tables(self):
+        """Before a decode step: every occupied slot must own the block its
+        next token lands in (pos // block_size).  Allocation failure
+        preempts the youngest running request until it succeeds."""
+        if not self.paged:
+            return
+        bs = self.layout.block_size
+        pos = np.asarray(self.pos)
+        for b in range(self.B):
+            if self.slots[b] is None:
+                continue
+            need = int(pos[b]) // bs + 1
+            if need > self.allocator.num_blocks:
+                # impossible to ever satisfy — fail before preempting (and
+                # discarding) every other in-flight request's progress
+                raise RuntimeError(
+                    f"KV pool too small: request {self.slots[b].uid} needs "
+                    f"{need} blocks, pool capacity is "
+                    f"{self.allocator.num_blocks} (raise kv_pool_blocks, "
+                    f"raise block_size, or cap max_new_tokens)")
+            while self.slots[b] is not None and len(self._slot_blocks[b]) < need:
+                got = self.allocator.alloc(1)
+                if got is not None:
+                    self.block_tables[b, len(self._slot_blocks[b])] = got[0]
+                    self._slot_blocks[b].extend(got)
+                    self._tables_dev = None
+                    continue
+                if self._preempt_youngest() is None:
+                    raise RuntimeError(
+                        "KV pool exhausted with no running request to "
+                        "preempt")
+
+    def _tables(self):
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self.block_tables)
+        return self._tables_dev
 
     # -- retirement ------------------------------------------------------
     def _retire(self):
@@ -203,7 +418,7 @@ class InferenceEngine:
                 req.done = True
                 self.completed.append(req)
                 self._stats.requests_completed += 1
-                self.slots[b] = None
+                self._release_slot(b)
 
     # -- engine loop ------------------------------------------------------
     def step(self) -> List[TokenEvent]:
@@ -213,24 +428,39 @@ class InferenceEngine:
         fresh: List = []                  # (request, output index) pairs
         # admit/retire until slots are full or the queue drains: a request
         # finished by its prefill token alone (max_new_tokens=1, prompt-eos,
-        # pos cap) frees its slot for another admission before the AR step
+        # pos cap) frees its slot (and blocks) for another admission before
+        # the AR step.  A free slot the pool cannot serve yet is not
+        # progress — stop and let the decode/retire cycle free blocks.
         while True:
-            self._admit(fresh)
+            n_done = len(self.completed)
+            admitted = self._admit(fresh)
             self._retire()
             if not self.queue or all(s is not None for s in self.slots):
                 break
+            if not admitted and len(self.completed) == n_done:
+                break
+        if any(s is not None for s in self.slots):
+            self._grow_tables()           # may preempt back to the queue
         if any(s is not None for s in self.slots):
             t0 = time.perf_counter()
-            self.tokens, self.pos, self.caches = self.decode_step.fn(
-                self.params, self.tokens, self.pos, self.caches, self.lane)
+            if self.paged:
+                self.tokens, self.pos, self.caches = self.decode_step.fn(
+                    self.params, self.tokens, self.pos, self.caches,
+                    self._tables(), self.lane)
+            else:
+                self.tokens, self.pos, self.caches = self.decode_step.fn(
+                    self.params, self.tokens, self.pos, self.caches,
+                    self.lane)
             toks = np.asarray(self.tokens)          # blocks: honest timing
             dt = time.perf_counter() - t0
             self.steps_run += 1
-            occupied = 0
+            occupied = live_tokens = 0
+            pos_np = np.asarray(self.pos)
             for b, req in enumerate(self.slots):
                 if req is None:
                     continue
                 occupied += 1
+                live_tokens += int(pos_np[b])
                 req.output.append(int(toks[b]))
                 req.decode_ms += dt * 1e3
                 fresh.append((req, len(req.output) - 1))
@@ -238,7 +468,11 @@ class InferenceEngine:
             st.decode_steps += 1
             st.ar_tokens += occupied
             st.ar_time_s += dt
+            st.add_decode_step_ms(dt * 1e3)
             st.occupied_slot_steps += occupied
+            if self.paged:
+                st.block_slot_steps += self.allocator.num_used
+                st.token_slot_steps += live_tokens
             self._retire()
         return [TokenEvent(req.uid, req.output[i],
                            req.done and i == len(req.output) - 1)
@@ -268,12 +502,18 @@ class InferenceEngine:
     def stats(self) -> EngineStats:
         """Live serving telemetry (accumulated since construction or the
         last `reset_stats()`)."""
+        if self.paged:
+            # the allocator tracks the true high-water mark on every alloc,
+            # including admissions that never reach a decode step
+            self._stats.peak_blocks_used = self.allocator.peak_used
         return self._stats
 
     def reset_stats(self):
         """Drop accumulated telemetry, keeping compiled steps (benchmarks:
         warm buckets up, reset, then measure)."""
-        self._stats = EngineStats(batch_size=self.B)
+        if self.paged:
+            self.allocator.peak_used = self.allocator.num_used
+        self._stats = self._fresh_stats()
 
 
 # The original fixed-prompt-length engine grew into the session API above.

@@ -1,13 +1,24 @@
 """KV-cache utilities for the serving engine.
 
-The cache *layout* (ring vs linear, sequence sharding) is owned by
-launch/steps.cache_layout; this module materializes zero-initialized caches
-and provides the row-scatter used by continuous batching (inserting one
-freshly-prefilled request into an existing decode batch).
+The cache *layout* (paged pools vs dense rows, ring vs linear, sequence
+sharding) is owned by launch/steps.cache_layout; this module materializes
+zero-initialized caches and provides the host-side paging machinery:
+
+  BlockAllocator       free-list over a global pool of fixed-size KV blocks;
+                       the engine owns one per decode batch and keeps a
+                       per-slot block table of the blocks each request holds.
+  make_prefill_scatter jitted admission scatter: a freshly prefilled group's
+                       compact KV goes straight into its assigned pool
+                       blocks (per-block scatter), while dense leaves (SSM
+                       state, ring caches, cross-attn memory) row-scatter
+                       into the group's slots — no B x max_seq
+                       dynamic_update_slice ever runs.
+  insert_row           legacy single-row scatter (dense layouts).
 """
 from __future__ import annotations
 
 import functools
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,3 +59,106 @@ def insert_row(batch_caches, single_caches, row: int):
         return jax.lax.dynamic_update_slice_in_dim(b, s.astype(b.dtype),
                                                    row, axis=1)
     return jax.tree.map(ins, batch_caches, single_caches)
+
+
+# --------------------------------------------------------------------------
+# block-paged pool
+# --------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Host-side free-list over a global pool of `num_blocks` KV blocks of
+    `block_size` tokens each.  The engine allocates ceil(tokens / bs) blocks
+    at admission, one more whenever a slot's decode position crosses a block
+    boundary, and frees a request's blocks the moment it retires (or is
+    preempted back to the queue) — pool occupancy tracks *live tokens*, not
+    slots x max_seq."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 1 and block_size >= 1, (num_blocks, block_size)
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list: freshly freed blocks are reused first (their pool
+        # slots are the warmest in cache)
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.peak_used = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold `tokens` cache positions."""
+        return -(-tokens // self.block_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop `n` blocks, or None (allocation is all-or-nothing) when the
+        pool cannot satisfy the request."""
+        assert n >= 0, n
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self.peak_used = max(self.peak_used, self.num_used)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        assert len(set(blocks)) == len(blocks), "double free within batch"
+        assert not set(blocks) & set(self._free), "double free"
+        self._free.extend(blocks)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("paged_segments", "block_size"))
+def _prefill_scatter(caches, group_caches, slots, tables, *,
+                     paged_segments, block_size: int):
+    out = []
+    for seg, new, paged in zip(caches, group_caches, paged_segments):
+        d = {}
+        for key, leaf in seg.items():
+            val = new[key]
+            if paged and key in ("k", "v"):
+                nb_pool = leaf.shape[1]
+                n, S = val.shape[1], val.shape[2]
+                ne = -(-S // block_size)            # entries this group fills
+                pad = ne * block_size - S
+                if pad:
+                    val = jnp.pad(
+                        val, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                val = val.reshape(val.shape[0], n, ne, block_size,
+                                  *val.shape[3:])
+                ids = tables[:, :ne]
+                # -1 wraps in .at[]; route out of range so "drop" applies
+                ids = jnp.where(ids >= 0, ids, nb_pool)
+                d[key] = leaf.at[:, ids].set(val.astype(leaf.dtype),
+                                             mode="drop")
+            else:
+                d[key] = leaf.at[:, slots].set(val.astype(leaf.dtype))
+        out.append(d)
+    return tuple(out)
+
+
+def make_prefill_scatter(paged_segments, block_size: int):
+    """The jitted admission scatter for one engine layout.
+
+    scatter(caches, group_caches, slots, tables) -> caches
+
+      caches        the live decode cache pytree (paged segments: k/v pools
+                    [count, NB, BS, KV, hd]; donated — updated in place)
+      group_caches  a prefilled admission group's compact caches (paged
+                    leaves [count, nB, S, KV, hd] at prompt length; dense
+                    leaves [count, nB, ...])
+      slots         [nB] int32 decode-slot index per group row
+      tables        [nB, MB] int32 assigned pool blocks in sequence order
+                    (-1 beyond the allocation)
+
+    Paged k/v leaves scatter per assigned block; every other leaf scatters
+    per slot row.  The jit lives at module level with the layout as static
+    args, so compiles (one per (nB, prompt-length) shape) are shared across
+    engine constructions."""
+    return functools.partial(_prefill_scatter,
+                             paged_segments=tuple(bool(p)
+                                                  for p in paged_segments),
+                             block_size=block_size)

@@ -60,10 +60,12 @@ def set_lane(lane: dict, slot: int, params: SamplingParams) -> dict:
             "seed": lane["seed"].at[slot].set(params.seed)}
 
 
-def prefill_lane(params: SamplingParams, prompt_len: int) -> dict:
-    """Batch-1 lane for a prefill step: the request's SamplingParams plus
-    its true (unpadded) prompt length."""
-    return {"temperature": jnp.full((1,), params.temperature, jnp.float32),
-            "top_k": jnp.full((1,), params.top_k, jnp.int32),
-            "seed": jnp.full((1,), params.seed, jnp.int32),
-            "prompt_len": jnp.full((1,), prompt_len, jnp.int32)}
+def stack_prefill_lanes(params_list, prompt_lens) -> dict:
+    """[nB] lane for a batched-admission prefill: one admission group's
+    SamplingParams and true prompt lengths, row-aligned with the padded
+    token batch."""
+    return {"temperature": jnp.asarray([p.temperature for p in params_list],
+                                       jnp.float32),
+            "top_k": jnp.asarray([p.top_k for p in params_list], jnp.int32),
+            "seed": jnp.asarray([p.seed for p in params_list], jnp.int32),
+            "prompt_len": jnp.asarray(list(prompt_lens), jnp.int32)}

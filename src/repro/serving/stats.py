@@ -22,6 +22,17 @@ def percentile(values: List[float], q: float) -> float:
     return s[rank]
 
 
+# Latency samples kept per metric: percentiles are computed over a sliding
+# recent window so a long-lived engine doesn't grow its stats without bound.
+MAX_SAMPLES = 4096
+
+
+def _bounded_append(values: List[float], v: float) -> None:
+    values.append(v)
+    if len(values) > MAX_SAMPLES:
+        del values[:len(values) - MAX_SAMPLES]
+
+
 @dataclass
 class EngineStats:
     batch_size: int = 0
@@ -36,10 +47,27 @@ class EngineStats:
     ar_time_s: float = 0.0
     decode_steps: int = 0
     occupied_slot_steps: int = 0   # occupied decode-slot-steps (occupancy)
+    decode_step_ms: List[float] = field(default_factory=list)
     # -- serving-level ------------------------------------------------------
     ttft_ms: List[float] = field(default_factory=list)
     bucket_hits: Dict[int, int] = field(default_factory=dict)
-    prefill_compiles: int = 0      # distinct prefill buckets compiled
+    prefill_compiles: int = 0      # distinct (bucket, group-size) compiled
+    # -- paged KV pool ------------------------------------------------------
+    kv_pool_blocks: int = 0        # pool capacity (0 = dense layout)
+    kv_block_size: int = 0
+    peak_blocks_used: int = 0
+    preemptions: int = 0           # requests evicted to the queue (pool full)
+    recompute_tokens: int = 0      # tokens re-prefilled after preemption
+    recompute_time_s: float = 0.0  # prefill wall time spent on recomputes
+    block_slot_steps: int = 0      # sum over decode steps of blocks in use
+    token_slot_steps: int = 0      # sum over decode steps of live tokens
+
+    # -- recorders (bounded: percentiles cover the recent MAX_SAMPLES) ------
+    def add_ttft_ms(self, v: float) -> None:
+        _bounded_append(self.ttft_ms, v)
+
+    def add_decode_step_ms(self, v: float) -> None:
+        _bounded_append(self.decode_step_ms, v)
 
     # -- derived ------------------------------------------------------------
     @property
@@ -73,6 +101,31 @@ class EngineStats:
     def ttft_p95_ms(self) -> float:
         return percentile(self.ttft_ms, 95)
 
+    @property
+    def decode_step_p50_ms(self) -> float:
+        return percentile(self.decode_step_ms, 50)
+
+    @property
+    def decode_step_p95_ms(self) -> float:
+        return percentile(self.decode_step_ms, 95)
+
+    @property
+    def pool_utilization(self) -> float:
+        """Peak fraction of the KV block pool in use (0.0 = dense layout)."""
+        if not self.kv_pool_blocks:
+            return 0.0
+        return self.peak_blocks_used / self.kv_pool_blocks
+
+    @property
+    def blocks_per_token(self) -> float:
+        """Mean pool *positions* held per live token across decode steps
+        (>= 1.0; the excess is partial-tail-block fragmentation).  A dense
+        [B, max_seq] layout would sit at B * max_seq / live tokens."""
+        if not self.token_slot_steps:
+            return 0.0
+        return (self.block_slot_steps * self.kv_block_size
+                / self.token_slot_steps)
+
     def to_dict(self) -> dict:
         """JSON-ready snapshot (benchmarks/serving_bench.py)."""
         return {
@@ -91,14 +144,31 @@ class EngineStats:
             "padding_overhead": self.padding_overhead,
             "ttft_p50_ms": self.ttft_p50_ms,
             "ttft_p95_ms": self.ttft_p95_ms,
+            "decode_step_p50_ms": self.decode_step_p50_ms,
+            "decode_step_p95_ms": self.decode_step_p95_ms,
             "bucket_hits": {str(k): v
                             for k, v in sorted(self.bucket_hits.items())},
             "prefill_compiles": self.prefill_compiles,
+            "kv_pool_blocks": self.kv_pool_blocks,
+            "kv_block_size": self.kv_block_size,
+            "peak_blocks_used": self.peak_blocks_used,
+            "pool_utilization": self.pool_utilization,
+            "blocks_per_token": self.blocks_per_token,
+            "preemptions": self.preemptions,
+            "recompute_tokens": self.recompute_tokens,
+            "recompute_time_s": self.recompute_time_s,
         }
 
     def summary(self) -> str:
+        pool = ""
+        if self.kv_pool_blocks:
+            pool = (f" | KV pool peak {self.pool_utilization:.0%} "
+                    f"({self.peak_blocks_used}/{self.kv_pool_blocks} x "
+                    f"{self.kv_block_size}-token blocks, "
+                    f"{self.preemptions} preempt)")
         return (f"NAR {self.nar_tok_s:8.1f} tok/s ({self.nar_tokens} prompt "
                 f"tokens, {self.padding_overhead:.0%} pad) | "
                 f"AR {self.ar_tok_s:8.1f} tok/s ({self.ar_tokens} tokens, "
                 f"occupancy {self.slot_occupancy:.0%}) | "
-                f"TTFT p50 {self.ttft_p50_ms:.0f}ms p95 {self.ttft_p95_ms:.0f}ms")
+                f"TTFT p50 {self.ttft_p50_ms:.0f}ms p95 "
+                f"{self.ttft_p95_ms:.0f}ms" + pool)

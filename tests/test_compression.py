@@ -1,6 +1,10 @@
 """Gradient compression: quantizer properties + error-feedback convergence."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim.compression import dequantize_int8, quantize_int8

@@ -1,0 +1,372 @@
+"""Block-paged KV cache: allocator invariants, paged-vs-dense decode
+attention parity (jnp reference and Pallas interpret mode), batched prefill
+admission parity, and out-of-blocks preemption correctness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import FP32
+from repro.kernels import ops, ref
+from repro.kernels.flash_decode import paged_decode_attention
+from repro.models import lm
+from repro.serving import InferenceEngine, Request, SamplingParams
+from repro.serving.kv_cache import BlockAllocator
+from repro.sharding.plan import UNSHARDED
+
+
+# --------------------------------------------------------------------------
+# BlockAllocator
+# --------------------------------------------------------------------------
+
+def test_allocator_alloc_free_reuse():
+    a = BlockAllocator(num_blocks=6, block_size=4)
+    assert a.num_free == 6 and a.num_used == 0
+    x = a.alloc(2)
+    y = a.alloc(3)
+    assert len(x) == 2 and len(y) == 3
+    assert len(set(x) | set(y)) == 5          # distinct blocks
+    assert a.num_used == 5 and a.peak_used == 5
+    a.free(x)
+    assert a.num_free == 3
+    z = a.alloc(3)                            # freed blocks come back
+    assert z is not None and a.num_free == 0
+    a.free(y)
+    a.free(z)
+    assert a.num_free == 6 and a.peak_used == 6      # peak never dropped
+
+
+def test_allocator_all_or_nothing_exhaustion():
+    a = BlockAllocator(num_blocks=4, block_size=8)
+    got = a.alloc(3)
+    assert got is not None
+    assert a.alloc(2) is None                 # only 1 free: no partial grant
+    assert a.num_free == 1                    # failed alloc takes nothing
+    assert a.alloc(1) is not None
+    assert a.alloc(1) is None
+
+
+def test_allocator_double_free_rejected():
+    a = BlockAllocator(num_blocks=3, block_size=2)
+    x = a.alloc(2)
+    a.free(x)
+    with pytest.raises(AssertionError):
+        a.free(x)
+
+
+def test_allocator_blocks_for():
+    a = BlockAllocator(num_blocks=8, block_size=16)
+    assert a.blocks_for(1) == 1
+    assert a.blocks_for(16) == 1
+    assert a.blocks_for(17) == 2
+
+
+# --------------------------------------------------------------------------
+# paged decode attention vs the dense oracle
+# --------------------------------------------------------------------------
+
+def _paged_from_dense(dense_k, dense_v, lengths, *, num_blocks, block_size,
+                      seed=0):
+    """Scatter a dense [B, S, KV, D] cache into a shuffled block pool +
+    per-slot tables (absent entries -1)."""
+    rng = np.random.default_rng(seed)
+    B, S, KV, D = dense_k.shape
+    MB = -(-S // block_size)
+    k_pool = np.zeros((num_blocks, block_size, KV, D), dense_k.dtype)
+    v_pool = np.zeros_like(k_pool)
+    tables = np.full((B, MB), -1, np.int32)
+    free = list(rng.permutation(num_blocks))
+    for b in range(B):
+        for e in range(-(-int(lengths[b]) // block_size)):
+            blk = int(free.pop())
+            tables[b, e] = blk
+            sl = dense_k[b, e * block_size:(e + 1) * block_size]
+            k_pool[blk, :len(sl)] = sl
+            sl = dense_v[b, e * block_size:(e + 1) * block_size]
+            v_pool[blk, :len(sl)] = sl
+    return k_pool, v_pool, tables
+
+
+@pytest.mark.parametrize("B,H,KV,D,BS,lengths", [
+    (3, 4, 2, 16, 8, (5, 33, 17)),            # GQA, ragged
+    (2, 4, 4, 16, 16, (1, 31)),               # MHA, length-1 edge
+    (1, 8, 2, 32, 8, (40,)),                  # exactly full blocks
+])
+def test_paged_decode_matches_dense_oracle(B, H, KV, D, BS, lengths):
+    """Paged reference AND Pallas paged kernel (interpret mode) == dense
+    decode_attention_ref for ragged per-slot lengths."""
+    rng = np.random.default_rng(11)
+    S = -(-max(lengths) // BS) * BS
+    NB = B * (-(-S // BS)) + 2
+    q = rng.standard_normal((B, H, D)).astype(np.float32)
+    dk = rng.standard_normal((B, S, KV, D)).astype(np.float32)
+    dv = rng.standard_normal((B, S, KV, D)).astype(np.float32)
+    kp, vp, tab = _paged_from_dense(dk, dv, lengths, num_blocks=NB,
+                                    block_size=BS)
+    lengths = jnp.asarray(np.asarray(lengths, np.int32))
+
+    want = ref.decode_attention_ref(jnp.asarray(q), jnp.asarray(dk),
+                                    jnp.asarray(dv), lengths)
+    got_ref = ref.paged_decode_attention_ref(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(tab),
+        lengths)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    got_kernel = paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(tab),
+        lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_partials_sharded_merge_matches_dense():
+    """The multi-device path: each cache shard runs the paged *partials*
+    kernel over its local pool slice (non-owned table entries masked to -1)
+    and the T4 merge rule combines the shards — equal to the dense oracle,
+    with the pool never gathered."""
+    from repro.core.attention import merge_partials
+
+    rng = np.random.default_rng(17)
+    B, H, KV, D, BS = 2, 4, 2, 16, 8
+    lengths = (11, 26)
+    S, NB, shards = 32, 8, 2
+    q = rng.standard_normal((B, H, D)).astype(np.float32)
+    dk = rng.standard_normal((B, S, KV, D)).astype(np.float32)
+    dv = rng.standard_normal((B, S, KV, D)).astype(np.float32)
+    kp, vp, tab = _paged_from_dense(dk, dv, lengths, num_blocks=NB,
+                                    block_size=BS)
+    lengths = jnp.asarray(np.asarray(lengths, np.int32))
+    want = ref.decode_attention_ref(jnp.asarray(q), jnp.asarray(dk),
+                                    jnp.asarray(dv), lengths)
+
+    nb_loc = NB // shards
+    parts = []
+    for s_i in range(shards):
+        start = s_i * nb_loc
+        loc = tab - start
+        present = (tab >= 0) & (loc >= 0) & (loc < nb_loc)
+        loc = np.where(present, loc, -1).astype(np.int32)
+        parts.append(ref.paged_decode_partials_ref(
+            jnp.asarray(q), jnp.asarray(kp[start:start + nb_loc]),
+            jnp.asarray(vp[start:start + nb_loc]), jnp.asarray(loc),
+            lengths))
+    # numpy mirror of the cross-device pmax/psum merge
+    m_all = jnp.maximum(parts[0][1], parts[1][1])
+    l_all = sum(l * jnp.exp(m - m_all) for _, m, l in parts)
+    o_all = sum(o * jnp.exp(m - m_all)[..., None] for o, m, _ in parts)
+    got = o_all / jnp.maximum(l_all, 1e-30)[..., None]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # single-shard partials + axis-free merge == the normalized kernel
+    o, m, l = ref.paged_decode_partials_ref(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(tab),
+        lengths)
+    one = merge_partials(o, m, l, ())
+    np.testing.assert_allclose(np.asarray(one), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_ops_dispatch_interpret():
+    """ops.paged_decode_attention routes to the Pallas kernel under
+    kernel_mode("interpret") and to the jnp oracle under "ref" — same
+    numbers either way."""
+    rng = np.random.default_rng(13)
+    B, H, KV, D, BS = 2, 4, 2, 16, 8
+    lengths = (9, 20)
+    S, NB = 24, 8
+    q = rng.standard_normal((B, H, D)).astype(np.float32)
+    dk = rng.standard_normal((B, S, KV, D)).astype(np.float32)
+    dv = rng.standard_normal((B, S, KV, D)).astype(np.float32)
+    kp, vp, tab = _paged_from_dense(dk, dv, lengths, num_blocks=NB,
+                                    block_size=BS)
+    args = (jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(tab), jnp.asarray(np.asarray(lengths, np.int32)))
+    with ops.kernel_mode("ref"):
+        a = ops.paged_decode_attention(*args)
+    with ops.kernel_mode("interpret"):
+        b = ops.paged_decode_attention(*args)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+    # the partials variant agrees between oracle and Pallas kernel too
+    with ops.kernel_mode("ref"):
+        ra = ops.paged_decode_partials(*args)
+    with ops.kernel_mode("interpret"):
+        rb = ops.paged_decode_partials(*args)
+    for x, y in zip(ra, rb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# engine: batched prefill admission + preemption
+# --------------------------------------------------------------------------
+
+def _direct_tokens(cfg, params, prompt, n_new, max_seq=64):
+    """Reference: unpadded batch-1 prefill + dense greedy decode loop."""
+    batch = {"tokens": jnp.asarray(prompt)[None]}
+    tok, caches, pos = lm.forward_prefill(params, batch, plan=UNSHARDED,
+                                          cfg=cfg, policy=FP32,
+                                          max_seq=max_seq)
+    toks = [int(tok[0])]
+    t, p = tok, pos
+    for _ in range(n_new - 1):
+        t, caches = lm.forward_decode(params, t, p, caches, plan=UNSHARDED,
+                                      cfg=cfg, policy=FP32)
+        p = p + 1
+        toks.append(int(t[0]))
+    return toks
+
+
+def _phi4():
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+    return cfg, params
+
+
+def test_batched_prefill_matches_sequential():
+    """Four same-bucket prompts admitted as ONE batched prefill call produce
+    exactly the tokens of four sequential unpadded prefill+decode runs."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(29)
+    prompts = [rng.integers(0, cfg.vocab, 13, dtype=np.int32)
+               for _ in range(4)]
+    engine = InferenceEngine(cfg, params, batch_size=4, max_seq=64,
+                             policy=FP32)
+    for uid, p in enumerate(prompts):
+        engine.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    assert len(done) == 4
+    # all four shared one (bucket=16, group=4) compiled prefill
+    assert engine.stats().prefill_compiles == 1
+    for req in done:
+        assert _direct_tokens(cfg, params, req.prompt, 4) == req.output
+
+
+def test_engine_pool_sized_to_active_tokens():
+    """Block accounting: peak pool usage covers live tokens, not
+    B x max_seq, and every block is back in the free list after retire."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (6, 14)]
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32, block_size=8)
+    for uid, p in enumerate(prompts):
+        engine.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+    engine.run()
+    st = engine.stats()
+    dense_blocks = engine.B * (64 // 8)
+    assert st.kv_pool_blocks == dense_blocks          # default capacity
+    # peak usage: ceil((6+4)/8) + ceil((14+4)/8) = 2 + 3 blocks
+    assert st.peak_blocks_used <= 5 < dense_blocks
+    assert st.blocks_per_token >= 1.0
+    assert engine.allocator.num_free == engine.allocator.num_blocks
+    assert (engine.block_tables == -1).all()          # no stale table rows
+
+
+def test_out_of_blocks_preemption_recovers_exactly():
+    """A pool too small for the full batch forces recompute preemption; the
+    preempted request is re-admitted and its final output matches the
+    uncontended reference, with no leaked blocks."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(37)
+    prompts = [rng.integers(0, cfg.vocab, 16, dtype=np.int32)
+               for _ in range(3)]
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32, block_size=8, kv_pool_blocks=5)
+    for uid, p in enumerate(prompts):
+        engine.submit(Request(uid=uid, prompt=p, max_new_tokens=12))
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    st = engine.stats()
+    assert len(done) == 3
+    assert st.preemptions > 0 and st.recompute_tokens > 0
+    assert st.recompute_time_s > 0          # overhead split out of NAR time
+    for req in done:
+        assert _direct_tokens(cfg, params, req.prompt, 12) == req.output
+    assert engine.allocator.num_free == engine.allocator.num_blocks
+
+
+def test_preemption_preserves_sampled_continuations():
+    """Recompute preemption must also reproduce *sampled* sequences: the
+    (seed, position)-keyed draws make the re-prefilled continuation land on
+    the same tokens the uncontended engine produces."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, cfg.vocab, 16, dtype=np.int32)
+               for _ in range(3)]
+    sampling = lambda uid: SamplingParams(temperature=1.0, seed=100 + uid)
+
+    def run(**kw):
+        engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                                 policy=FP32, **kw)
+        for uid, p in enumerate(prompts):
+            engine.submit(Request(uid=uid, prompt=p, max_new_tokens=10,
+                                  sampling=sampling(uid)))
+        return ({r.uid: r.output for r in engine.run()}, engine.stats())
+
+    want, st_big = run()
+    got, st_small = run(block_size=8, kv_pool_blocks=5)
+    assert st_big.preemptions == 0
+    assert st_small.preemptions > 0
+    assert got == want
+
+
+def test_pool_too_small_raises():
+    """A single request that cannot ever fit the pool is a configuration
+    error, not a hang."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(43)
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32, block_size=8, kv_pool_blocks=2)
+    engine.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 30,
+                                                     dtype=np.int32),
+                          max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="KV pool too small"):
+        engine.run()
+
+
+def test_dense_fallback_engine_parity():
+    """paged=False — the layout a batch-sharded (dp > 1) mesh falls back
+    to — still serves exactly through the batched-admission row scatter and
+    the tables-free decode step."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(53)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (7, 13, 13)]
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32, paged=False)
+    assert engine.allocator is None and engine.layout is None
+    for uid, p in enumerate(prompts):
+        engine.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    assert len(done) == 3
+    for req in done:
+        assert _direct_tokens(cfg, params, req.prompt, 4) == req.output
+    st = engine.stats()
+    assert st.kv_pool_blocks == 0 and st.pool_utilization == 0.0
+
+
+def test_window_arch_keeps_dense_ring_and_frees_blocks():
+    """Sliding-window layers fall back to the dense ring cache while global
+    layers page; retirement still returns every block."""
+    cfg = get_config("gemma3-27b").reduced()
+    assert cfg.sliding_window > 0
+    params = lm.init_lm(jax.random.key(1), cfg, jnp.float32)
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32)
+    # only the full-context segments are paged
+    segs = engine.layout.segments
+    kinds = [k for k, _ in cfg.schedule]
+    assert segs == tuple(k == "attn" for k in kinds)
+    rng = np.random.default_rng(47)
+    for uid in range(3):
+        engine.submit(Request(uid=uid,
+                              prompt=rng.integers(0, cfg.vocab, 9,
+                                                  dtype=np.int32),
+                              max_new_tokens=3))
+    done = sorted(engine.run(), key=lambda r: r.uid)
+    for req in done:
+        assert _direct_tokens(cfg, params, req.prompt, 3) == req.output
+    assert engine.allocator.num_free == engine.allocator.num_blocks

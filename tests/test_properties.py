@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ASSIGNED, REGISTRY, SHAPES, supports_shape

@@ -69,7 +69,8 @@ def test_engine_matches_direct_decode():
 
 def test_variable_length_prompts_across_buckets():
     """Prompts of differing lengths in one run, each output-exact vs the
-    direct unpadded loop (pad-to-bucket must not leak into the math)."""
+    direct unpadded loop (pad-to-bucket must not leak into the math).
+    Buckets step by 1.5x/2x rungs (8, 12, 16, 24, 32, ...)."""
     cfg, params = _phi4()
     rng = np.random.default_rng(7)
     prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
@@ -79,12 +80,13 @@ def test_variable_length_prompts_across_buckets():
                              policy=FP32, min_bucket=8)
     _submit_all(engine, prompts)
     done = sorted(engine.run(), key=lambda r: r.uid)
-    assert [r.bucket for r in done] == [8, 8, 16, 32]
+    assert [r.bucket for r in done] == [8, 8, 16, 24]
     assert [r.prompt_len for r in done] == [5, 8, 16, 23]
     for req in done:
         assert _direct_tokens(cfg, params, req.prompt, 5) == req.output, (
             req.uid, req.prompt_len, req.bucket)
-    # one compile per distinct bucket, not per request
+    # one compile per distinct (bucket, group size), not per request: the
+    # two bucket-8 prompts prefill together in one batched call
     assert engine.stats().prefill_compiles == 3
 
 
@@ -239,18 +241,25 @@ def test_engine_stats_telemetry():
     st = engine.stats()
     assert st.requests_submitted == st.requests_completed == 3
     assert st.nar_tokens == 5 + 16 + 23              # true lengths
-    assert st.padded_nar_tokens == 8 + 16 + 32       # bucket lengths
+    assert st.padded_nar_tokens == 8 + 16 + 24       # bucket lengths
     assert st.ar_tokens == sum(len(r.output) for r in done) - 3
     assert st.nar_time_s > 0 and st.ar_time_s > 0
     assert st.nar_tok_s > 0 and st.ar_tok_s > 0
     assert len(st.ttft_ms) == 3 and all(t > 0 for t in st.ttft_ms)
     assert st.ttft_p95_ms >= st.ttft_p50_ms > 0
-    assert st.bucket_hits == {8: 1, 16: 1, 32: 1}
+    assert st.bucket_hits == {8: 1, 16: 1, 24: 1}
     assert 0 < st.slot_occupancy <= 1
+    assert st.decode_step_p95_ms >= st.decode_step_p50_ms > 0
+    assert st.kv_pool_blocks > 0 and st.peak_blocks_used > 0
+    assert 0 < st.pool_utilization <= 1
+    assert st.blocks_per_token >= 1.0
+    assert st.preemptions == 0
     d = st.to_dict()
     assert d["nar_tok_s"] == st.nar_tok_s and d["bucket_hits"]["8"] == 1
+    assert d["pool_utilization"] == st.pool_utilization
     engine.reset_stats()
     assert engine.stats().nar_tokens == 0
+    assert engine.stats().kv_pool_blocks == st.kv_pool_blocks
 
 
 def test_serving_engine_alias():
