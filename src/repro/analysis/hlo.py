@@ -313,8 +313,15 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                 ml = _DOT_LHS_C.search(rest)
                 cdims = ([int(x) for x in ml.group(1).split(",") if x]
                          if ml else [])
-                mo = re.match(r"%?([\w.\-]+)", rest)
-                lhs_shapes = syms.get(mo.group(1), []) if mo else []
+                # lhs operand: first %-symbol in the operand list (call sites
+                # may carry operand type annotations — 'dot(f32[..] %a, ...)'
+                # — so the first bare token is not necessarily the symbol)
+                lhs_ops = _operands(rest)
+                if lhs_ops:
+                    lhs_shapes = syms.get(lhs_ops[0], [])
+                else:
+                    mo = re.match(r"%?([\w.\-]+)", rest)
+                    lhs_shapes = syms.get(mo.group(1), []) if mo else []
                 k = 1
                 if lhs_shapes:
                     ldims = lhs_shapes[0][1]

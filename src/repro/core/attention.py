@@ -397,6 +397,70 @@ def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
     return _decode_out_proj(p, merged, plan=plan, policy=policy), cache
 
 
+def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
+                     plan: Plan, cfg, policy: Policy):
+    """One chunked-prefill piece against a block-paged KV cache.
+
+    x: [B, C, E] — C consecutive prompt tokens per row, starting at absolute
+    position `pos0` [B]; `chunk_len` [B] is the true token count this chunk
+    carries (<= C; the tail is padding whose KV is never scattered and whose
+    outputs the caller discards); cache: {"k","v"} pool shards
+    [NB_loc, BS, KV, hd]; block_tables: [B, MB] global pool indices.
+
+    The chunk's KV rows are scattered into their blocks FIRST, then the
+    chunk queries attend the pool (prefix + this chunk) under a per-query
+    causal mask — so one code path covers both the first chunk (empty
+    prefix) and every later one.  Per-shard partials merge with the same T4
+    rule as decode; projections reuse the decode helpers on the flattened
+    [B*C] token batch.  Returns (y [B, C, E], updated cache)."""
+    c_ax = plan.cache_axes
+    B, C, E = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ad = act_dtype(policy)
+
+    NB_loc, BS = cache["k"].shape[0], cache["k"].shape[1]
+    start = col.axis_index(c_ax) * NB_loc
+    pos = pos0[:, None] + jnp.arange(C)[None, :]               # [B, C]
+
+    # projections: decode math on B*C tokens, reshaped back to chunks
+    flat = x.reshape(B * C, E)
+    pflat = pos.reshape(B * C)
+    q = _decode_q(p, flat, pflat, plan=plan, cfg=cfg,
+                  policy=policy).reshape(B, C, H, hd)
+    k_new, v_new = _decode_kv_new(p, flat, pflat, plan=plan, cfg=cfg,
+                                  policy=policy)
+    k_new = k_new.reshape(B, C, KV, hd)
+    v_new = v_new.reshape(B, C, KV, hd)
+
+    # scatter the chunk KV into its blocks (pad tail / non-owned dropped)
+    real = jnp.arange(C)[None, :] < chunk_len[:, None]         # [B, C]
+    MB = block_tables.shape[1]
+    entry = jnp.clip(pos // BS, 0, MB - 1)
+    gb = jnp.take_along_axis(block_tables, entry, axis=1)      # [B, C]
+    loc = gb - start
+    owned = real & (gb >= 0) & (loc >= 0) & (loc < NB_loc)
+    loc = jnp.where(owned, loc, NB_loc)      # out of range => mode="drop"
+    off = pos % BS
+    cache = {
+        "k": cache["k"].at[loc, off].set(
+            k_new.astype(cache["k"].dtype), mode="drop"),
+        "v": cache["v"].at[loc, off].set(
+            v_new.astype(cache["v"].dtype), mode="drop"),
+    }
+
+    # local table view (entries this shard owns, local ids)
+    length = pos0 + chunk_len                  # valid tokens incl. the chunk
+    loc_tab = block_tables - start
+    present = (block_tables >= 0) & (loc_tab >= 0) & (loc_tab < NB_loc)
+    loc_tab = jnp.where(present, loc_tab, -1)
+
+    o, m, l = ops.paged_chunk_partials(q.astype(ad), cache["k"], cache["v"],
+                                       loc_tab, pos, length)
+    merged = merge_partials(o, m, l, c_ax).reshape(B * C, H * hd)
+    y = _decode_out_proj(p, merged, plan=plan, policy=policy)
+    return y.reshape(B, C, E), cache
+
+
 def attn_decode_paged(p, x, pos, cache, block_tables, *, plan: Plan, cfg,
                       policy: Policy):
     """One decode step against a block-paged KV cache (full-context layers

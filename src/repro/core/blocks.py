@@ -203,6 +203,43 @@ def block_full(kind: str, p, x, *, plan: Plan, cfg, policy,
     return x, (cache if with_cache else None), aux
 
 
+def block_chunk(kind: str, p, x, pos0, chunk_len, cache, block_tables, *,
+                plan: Plan, cfg, policy):
+    """One chunked-prefill piece through a block whose KV cache is paged.
+
+    x: [B, C, E] — C consecutive prompt tokens starting at absolute position
+    `pos0` [B] (`chunk_len` [B] of them real).  Only full-context attention
+    kinds support chunking (their KV lives in the block pool, which carries
+    the chunk state between engine steps); SSM / sliding-window / cross-attn
+    kinds have recurrent or ring state a partial prefill would corrupt — the
+    runner gates on `ModelRunner.supports_chunked` and falls back to
+    whole-prompt prefill.  MLP / MoE run the decode path on the flattened
+    [B*C, E] token batch (identical per-token math); only attention needs
+    the chunk structure.  Returns (x', updated cache)."""
+    assert kind in ATTN_KINDS and kind not in SSM_KINDS and kind != "dec", (
+        f"chunked prefill unsupported for kind {kind!r}")
+    B, C, E = x.shape
+    new_cache = dict(cache)
+
+    h = ops.norm(x, p["ln1"], cfg.norm)
+    y, kv = attn.attn_chunk_paged(p["attn"], h, pos0, chunk_len,
+                                  {"k": cache["k"], "v": cache["v"]},
+                                  block_tables, plan=plan, cfg=cfg,
+                                  policy=policy)
+    new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+    x = x + y
+
+    h2 = ops.norm(x, p["ln2"], cfg.norm).reshape(B * C, E)
+    if kind in MOE_KINDS:
+        y2, _ = mlp_mod.moe_decode(p["moe"], h2, plan=plan, cfg=cfg,
+                                   policy=policy)
+    else:
+        y2 = mlp_mod.mlp_decode(p["mlp"], h2, plan=plan, cfg=cfg,
+                                policy=policy)
+    x = x + y2.reshape(B, C, E)
+    return x, new_cache
+
+
 def block_decode(kind: str, p, x, pos, cache, *, plan: Plan, cfg, policy,
                  memory_len: int = 0, block_tables=None, paged: bool = False):
     """x: [B, E]; pos: [B]; cache: this layer's cache dict.

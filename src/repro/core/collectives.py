@@ -23,6 +23,25 @@ Axes = Union[str, Tuple[str, ...], None]
 _STATE = threading.local()
 
 
+def shard_map(fn, *, mesh, in_specs, out_specs):
+    """`jax.shard_map` across jax versions.  Newer releases expose it at the
+    top level with `check_vma=`; older ones at jax.experimental.shard_map
+    with `check_rep=`.  Replication checking is off either way (manual-SPMD
+    model code psums explicitly)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            pass                              # pre-check_vma signature
+    # check_rep=False: manual-SPMD code psums replication axes explicitly,
+    # which the old rep checker cannot always infer (multi-pod grad sync)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 def set_reduce_method(method: str) -> None:
     assert method in ("ring", "tree"), method
     _STATE.reduce_method = method
@@ -40,10 +59,22 @@ def _norm(axes: Axes) -> Tuple[str, ...]:
     return tuple(axes)
 
 
+def one_axis_size(a) -> int:
+    """Static size of one named axis, across jax versions (`jax.lax.
+    axis_size` is newer; older releases expose it via `jax.core.axis_frame`,
+    which returns either the size or a frame carrying it)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(a)
+    import jax.core as jcore
+    fr = jcore.axis_frame(a)
+    return fr if isinstance(fr, int) else fr.size
+
+
 def axis_size(axes: Axes) -> int:
     n = 1
     for a in _norm(axes):
-        n *= jax.lax.axis_size(a)
+        n *= one_axis_size(a)
     return n
 
 
@@ -54,7 +85,7 @@ def axis_index(axes: Axes):
         return jnp.zeros((), jnp.int32)
     idx = jnp.zeros((), jnp.int32)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * one_axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import collectives as col
+
 from repro.sharding.context import get_ctx
 
 NEG_INF = -1e30
@@ -82,18 +84,18 @@ def distributed_decode_attention(q, k_cache, v_cache, pos, *, window=0,
     dp_spec = ctx.pspec("dp")[0]
 
     def inner(q, k_loc, v_loc, pos):
-        n = jax.lax.axis_size(tp_axis)
+        n = col.one_axis_size(tp_axis)
         i = jax.lax.axis_index(tp_axis)
         s0 = i * (S // n)
         o, m, l = local(q, k_loc, v_loc, pos, s0)
         merged = merge_partials(o, m, l, tp_axis)
         return merged.astype(out_dtype)
 
-    return jax.shard_map(
+    return col.shard_map(
         inner, mesh=ctx.mesh,
         in_specs=(P(dp_spec, None, None), P(dp_spec, tp_axis, None, None),
                   P(dp_spec, tp_axis, None, None), P(dp_spec)),
-        out_specs=P(dp_spec, None, None), check_vma=False,
+        out_specs=P(dp_spec, None, None),
     )(q, k_cache, v_cache, pos)
 
 
@@ -152,7 +154,7 @@ def distributed_cross_entropy(x, unemb, labels, *, mask=None, chunk=1024,
         # w arrives (E, V/tp) but still sharded over fsdp on E -> gather it
         if fsdp_axis is not None:
             w = jax.lax.all_gather(w, fsdp_axis, axis=0, tiled=True)
-        n = jax.lax.axis_size(tp_axis)
+        n = col.one_axis_size(tp_axis)
         i = jax.lax.axis_index(tp_axis)
         v0 = i * (V // n)
 
@@ -177,11 +179,11 @@ def distributed_cross_entropy(x, unemb, labels, *, mask=None, chunk=1024,
                                 jnp.zeros((), jnp.float32), xs)
         return total[None]
 
-    totals = jax.shard_map(
+    totals = col.shard_map(
         inner, mesh=ctx.mesh,
         in_specs=(P(dp_spec, None, None), P(dp_spec, None), P(dp_spec, None),
                   P(fsdp_axis, tp_axis)),
-        out_specs=P(dp_spec), check_vma=False,
+        out_specs=P(dp_spec),
     )(x, labels, mask, unemb)
     total = totals.sum()
     n = jnp.maximum(mask.sum(), 1)

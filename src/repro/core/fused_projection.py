@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import collectives as col
+
 from repro.core.tree_reduce import tree_psum_scatter
 from repro.sharding.context import get_ctx
 
@@ -59,7 +61,7 @@ def fused_output_projection(x, w, *, method: str = "reduce_scatter",
         if method == "all_reduce":
             full = jax.lax.psum(part, tp_axis)
             # slice this device's sequence chunk to land in (dp, sp, None)
-            n = jax.lax.axis_size(tp_axis)
+            n = col.one_axis_size(tp_axis)
             idx = jax.lax.axis_index(tp_axis)
             chunk = part.shape[seq_dim] // n
             y = jax.lax.dynamic_slice_in_dim(full, idx * chunk, chunk, seq_dim)
@@ -74,5 +76,5 @@ def fused_output_projection(x, w, *, method: str = "reduce_scatter",
 
     in_specs = (P(dp_spec, None, tp_axis), P(tp_axis, None))
     out_specs = P(dp_spec, tp_axis, None)
-    return jax.shard_map(inner, mesh=ctx.mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(x, w)
+    return col.shard_map(inner, mesh=ctx.mesh, in_specs=in_specs,
+                         out_specs=out_specs)(x, w)

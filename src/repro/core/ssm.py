@@ -126,7 +126,7 @@ def _shard_state_scan(D, h, axes):
         return jnp.zeros_like(h)
     assert len(axes) == 1, "seq-parallel SSD expects one mesh axis"
     axis = axes[0]
-    n = jax.lax.axis_size(axis)
+    n = col.one_axis_size(axis)
     idx = jax.lax.axis_index(axis)
     Dc, hc = D, h                         # running inclusive scan
     k = 1

@@ -23,7 +23,8 @@ def tree_psum_scatter(x, axis_name: str, *, scatter_dim: int = 0):
     """Reduce-scatter via recursive halving.  x: identical-shape partial on
     every device; returns the device's 1/N chunk of sum(x) along
     `scatter_dim` (size must divide by the axis size)."""
-    n = jax.lax.axis_size(axis_name)
+    from repro.core.collectives import one_axis_size
+    n = one_axis_size(axis_name)
     if n == 1:
         return x
     assert n & (n - 1) == 0, f"tree reduction needs power-of-two axis, got {n}"
@@ -60,7 +61,8 @@ def tree_psum_scatter(x, axis_name: str, *, scatter_dim: int = 0):
 def tree_psum(x, axis_name: str):
     """All-reduce as recursive halving + recursive doubling (allgather).
     Exposed for completeness; psum_scatter covers the fused-projection use."""
-    n = jax.lax.axis_size(axis_name)
+    from repro.core.collectives import one_axis_size
+    n = one_axis_size(axis_name)
     if n == 1:
         return x
     shape = x.shape

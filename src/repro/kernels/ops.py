@@ -131,6 +131,22 @@ def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths):
                                           lengths)
 
 
+def paged_chunk_partials(q, k_pool, v_pool, block_tables, q_pos, lengths):
+    """Chunked-prefill partials -> (o unnormalized [B, C, H, D] fp32,
+    m [B, C, H], l [B, C, H]); q_pos [B, C] gives each query's absolute
+    position for causal masking.  Run per cache shard on its local pool,
+    merged with core/attention.merge_partials like the decode partials.
+
+    No hand kernel yet: a prefill chunk is GEMM-throughput-bound on the
+    same projections the dense prefill runs, and the score/probability
+    intermediates are bounded by C x S — the reference keeps math and
+    precision identical to the paged decode oracle (vmemk scope: the
+    intermediates live in VMEM once a Pallas chunk kernel lands)."""
+    with jax.named_scope("vmemk_chunk"):
+        return _ref.paged_chunk_partials_ref(q, k_pool, v_pool, block_tables,
+                                             q_pos, lengths)
+
+
 # --------------------------------------------------------------------------
 # GEMM + fused epilogues (T1/T5)
 # --------------------------------------------------------------------------

@@ -221,6 +221,35 @@ def paged_decode_partials_ref(q, k_pool, v_pool, block_tables, lengths):
     return o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H)
 
 
+def paged_chunk_partials_ref(q, k_pool, v_pool, block_tables, q_pos,
+                             lengths):
+    """Chunked-prefill partials: C query tokens per row against the paged
+    pool (which already holds this chunk's own KV rows), causal-masked per
+    query position.
+
+    q: [B, C, H, D]; k/v_pool: [NB, BS, KV, D]; block_tables: [B, MB]
+    (entries < 0 absent); q_pos: [B, C] absolute position of each query
+    (pad queries may point past `lengths` — their outputs are garbage the
+    caller discards); lengths: [B] valid tokens incl. this chunk.
+    -> (o [B, C, H, D] fp32 unnormalized, m [B, C, H], l [B, C, H]) for the
+    cross-shard T4 merge, same contract as `paged_decode_partials_ref`."""
+    B, C, H, D = q.shape
+    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths)
+    KV = k.shape[2]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, C, KV, H // KV, D)
+    s = jnp.einsum("bckgd,bskd->bckgs", qf, k)                # [B,C,KV,G,S]
+    pos = jnp.arange(k.shape[1])[None, None, :]
+    keep = msk[:, None, :] & (pos <= q_pos[:, :, None])       # [B, C, S]
+    s = jnp.where(keep[:, :, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bckgs,bskd->bckgd", p, v)
+    return (o.reshape(B, C, H, D), m.reshape(B, C, H),
+            l.reshape(B, C, H))
+
+
 def rmsnorm_ref(x, gamma, *, eps=1e-6, out_dtype=None):
     out_dtype = out_dtype or x.dtype
     xf = x.astype(jnp.float32)

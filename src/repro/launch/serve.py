@@ -7,8 +7,14 @@
 Drives a mixed-length request trace through `InferenceEngine` and reports
 the paper's two serving metrics from `engine.stats()`: NAR prompt-encoding
 throughput and AR decode throughput (tokens/s, counted from true per-request
-prompt lengths, not padded buckets), plus TTFT percentiles, decode-slot
-occupancy, and prefill bucket hits.
+prompt lengths, not padded buckets), plus TTFT / queue-wait percentiles,
+decode-slot occupancy, and prefill bucket hits.
+
+Scheduler/runner split knobs:
+  --policy {fcfs,priority,chunked}   scheduling policy (fcfs = classic)
+  --prefill-chunk N                  chunk budget for --policy chunked
+  --task {generate,encode}           decoder AR traffic vs encoder-only
+                                     pooled-embedding traffic (EncodeTask)
 """
 from __future__ import annotations
 
@@ -23,24 +29,33 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.mesh import make_mesh_for
 from repro.models import lm
-from repro.serving import InferenceEngine, Request, SamplingParams
+from repro.serving import (EncodeTask, InferenceEngine, Request,
+                           SamplingParams, make_policy)
 
 
 def build_trace(cfg, args) -> list:
     """Mixed-length request trace; lengths uniform in
-    [min_prompt_len, prompt_len] (fixed-length when min == max)."""
+    [min_prompt_len, prompt_len] (fixed-length when min == max).
+    --task encode emits EncodeTasks (pooled embeddings) instead."""
     rng = np.random.default_rng(args.seed)
     lo = args.min_prompt_len or args.prompt_len
     reqs = []
     for uid in range(args.requests):
         n = int(rng.integers(lo, args.prompt_len + 1))
+        prompt = rng.integers(0, cfg.vocab, n, dtype=np.int32)
+        if args.task == "encode":
+            reqs.append(EncodeTask(uid=uid, prompt=prompt,
+                                   pooling=args.pooling,
+                                   priority=uid % 3))
+            continue
         sampling = (SamplingParams(temperature=args.temperature,
                                    top_k=args.top_k, seed=uid)
                     if args.temperature > 0 else SamplingParams())
         reqs.append(Request(
             uid=uid,
-            prompt=rng.integers(0, cfg.vocab, n, dtype=np.int32),
+            prompt=prompt,
             max_new_tokens=args.max_new,
+            priority=uid % 3,
             sampling=sampling))
     return reqs
 
@@ -60,6 +75,16 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 => greedy")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--policy", choices=("fcfs", "priority", "chunked"),
+                    default="fcfs", help="scheduling policy")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked prefill token budget (--policy chunked)")
+    ap.add_argument("--task", choices=("generate", "encode"),
+                    default="generate",
+                    help="generate: AR decode requests; encode: "
+                         "encoder-only pooled-embedding requests")
+    ap.add_argument("--pooling", choices=("last", "mean"), default="last",
+                    help="EncodeTask pooling (--task encode)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV pool block size (tokens)")
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
@@ -78,10 +103,16 @@ def main(argv=None) -> int:
     mesh = None if args.single_device else make_mesh_for(len(jax.devices()))
     params = lm.init_lm(jax.random.key(args.seed), cfg, jnp.bfloat16)
 
-    engine = InferenceEngine(cfg, params, batch_size=args.batch,
-                             max_seq=args.max_seq, mesh=mesh,
-                             block_size=args.block_size,
-                             kv_pool_blocks=args.kv_pool_blocks or None)
+    engine = InferenceEngine(
+        cfg, params, batch_size=args.batch, max_seq=args.max_seq, mesh=mesh,
+        block_size=args.block_size,
+        kv_pool_blocks=args.kv_pool_blocks or None,
+        scheduler=make_policy(args.policy, chunk_tokens=args.prefill_chunk))
+    if (args.policy == "chunked"
+            and not engine.runner.supports_chunked):
+        print(f"note: {cfg.name} cannot chunk prefills "
+              f"(recurrent/ring/cross-attn cache state) — "
+              f"falling back to whole-prompt admission")
     for req in build_trace(cfg, args):
         engine.submit(req)
 
@@ -92,13 +123,21 @@ def main(argv=None) -> int:
 
     print(f"served {len(done)} requests in {wall:.2f}s over "
           f"{engine.steps_run} AR steps "
+          f"[policy={args.policy}] "
           f"({stats.prefill_compiles} prefill buckets compiled: "
           f"{sorted(stats.bucket_hits)})")
     print(stats.summary())
     for r in sorted(done, key=lambda r: r.uid)[:3]:
-        print(f"  req {r.uid}: prompt {r.prompt_len} (bucket {r.bucket}), "
-              f"prefill {r.prefill_ms:.0f}ms, {len(r.output)} tokens, "
-              f"first: {r.output[:8]}")
+        if isinstance(r, EncodeTask):
+            e = np.asarray(r.embedding)
+            print(f"  enc {r.uid}: prompt {r.prompt_len} (bucket "
+                  f"{r.bucket}), {r.encode_ms:.0f}ms, |emb|="
+                  f"{float(np.linalg.norm(e)):.3f} [{e[0]:+.4f} "
+                  f"{e[1]:+.4f} ...]")
+        else:
+            print(f"  req {r.uid}: prompt {r.prompt_len} (bucket "
+                  f"{r.bucket}), prefill {r.prefill_ms:.0f}ms, "
+                  f"{len(r.output)} tokens, first: {r.output[:8]}")
     return 0
 
 

@@ -40,6 +40,19 @@ from repro.sharding.plan import Plan, make_plan
 IS_DIMS = lambda x: isinstance(x, tuple) and all(
     isinstance(d, (str, type(None))) for d in x)
 
+# Sharding-invariant RNG: on jax versions where threefry_partitionable still
+# defaults False, RNG lowered under sharded outputs (init_state's
+# out_shardings) produces different bits than the same program run eagerly /
+# unsharded — the multi-device equivalence contract (tests/_distributed_prog)
+# needs identical params either way.  Partitionable threefry guarantees it.
+# NOTE this is a PROCESS-GLOBAL flag flipped at import: any program that
+# imports this module (directly or via repro.serving) gets partitionable
+# threefry bits everywhere, which differ from the legacy algorithm's.  It
+# lives here rather than per-entrypoint because every step builder, test
+# subprocess and serving engine funnels through this module, and a path
+# that missed the flag would silently break cross-sharding determinism.
+jax.config.update("jax_threefry_partitionable", True)
+
 
 # --------------------------------------------------------------------------
 # spec resolution
@@ -247,8 +260,8 @@ class StepBundle:
 def _maybe_shard_map(fn, mesh, in_specs, out_specs):
     if mesh is None:
         return fn
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    return col.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
 
 
 def _param_struct(cfg, dtype):
@@ -456,6 +469,144 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                       aux={"param_specs": p_specs, "cache_struct": c_struct,
                            "cache_specs": c_specs, "max_seq": max_seq,
                            "param_dims": p_dims})
+
+
+# --------------------------------------------------------------------------
+# encode step (encoder-only NAR)
+# --------------------------------------------------------------------------
+
+def make_encode_step(cfg: ModelConfig, shape: ShapeConfig,
+                     mesh: Optional[Mesh], *,
+                     policy: Optional[Policy] = None,
+                     pooling: str = "last",
+                     reduce_method: str = "ring",
+                     naive_attention: bool = False) -> StepBundle:
+    """Encoder-only serving step: one full-sequence forward, no KV cache,
+    returning a pooled [B, d_model] float32 embedding per row (the paper's
+    encoder topology — ViT/BERT-style configs — served through the same
+    engine as decoder LMs).  Reuses the prefill bundle machinery: same plan
+    derivation, same batch specs, same lane-carried true lengths for
+    right-padded length buckets; there is just no cache tree and no token.
+
+    fn(params, batch, prompt_len [B] int32) -> pooled [B, E] float32."""
+    import dataclasses
+    policy = policy or default_policy(cfg, "serve")
+    plan = make_plan(cfg, shape, mesh, mode="serve",
+                     reduce_method=reduce_method)
+    plan = dataclasses.replace(plan, naive_attention=naive_attention)
+
+    p_dims = lm.lm_param_dims(cfg)
+    p_specs = resolve_pspecs(p_dims, plan)
+    p_struct = _param_struct(cfg, policy.param_dtype)
+    b_dims = batch_dims(cfg, "encode")
+    b_specs = resolve_pspecs(b_dims, plan)
+    b_struct = frontends.batch_struct(cfg, "encode", shape.global_batch,
+                                      shape.seq_len)
+    out_spec = plan.pspec("batch", None)
+
+    def body(params, batch, prompt_len):
+        col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
+        return lm.forward_encode(params, batch, plan=plan, cfg=cfg,
+                                 policy=policy, prompt_len=prompt_len,
+                                 pooling=pooling)
+
+    len_spec = plan.pspec("batch")
+    in_specs = (p_specs, b_specs, len_spec)
+    in_structs = (with_shardings(p_struct, p_specs, mesh),
+                  with_shardings(b_struct, b_specs, mesh),
+                  with_shardings(jax.ShapeDtypeStruct(
+                      (shape.global_batch,), jnp.int32), len_spec, mesh))
+    sm = _maybe_shard_map(body, mesh, in_specs=in_specs, out_specs=out_spec)
+    fn = jax.jit(sm)
+    return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
+                      in_structs=in_structs, in_specs=in_specs,
+                      aux={"param_specs": p_specs, "pooling": pooling})
+
+
+# --------------------------------------------------------------------------
+# chunked-prefill step
+# --------------------------------------------------------------------------
+
+def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                            mesh: Optional[Mesh], *,
+                            layout: PagedLayout,
+                            chunk_tokens: int,
+                            policy: Optional[Policy] = None,
+                            max_seq: Optional[int] = None,
+                            reduce_method: str = "ring",
+                            kv_cache_dtype: str = "bfloat16",
+                            with_sampling: bool = False) -> StepBundle:
+    """One chunked-prefill piece over the *decode* cache layout: encodes up
+    to `chunk_tokens` consecutive prompt tokens per row straight into the
+    paged KV pools, so a long admission interleaves with decode steps
+    instead of stalling them (chunk state is just the block tables + `pos`).
+
+    `shape` must be the decode shape the engine's decode step was built
+    with — the cache pytree (and its shardings) is shared between the two
+    steps, and caches are donated here for the same in-place update.
+
+    fn(params, tokens [n, C], pos0 [n], chunk_len [n], caches,
+       tables [n, MB][, lane]) -> (token [n], caches, pos [n])
+
+    The returned token is meaningful only for rows whose chunk completes
+    the prompt (it then equals the unchunked prefill's sample; see
+    lm.forward_chunk)."""
+    import dataclasses
+    policy = policy or default_policy(cfg, "serve")
+    plan = make_plan(cfg, shape, mesh, mode="serve",
+                     reduce_method=reduce_method)
+    plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype)
+    max_seq = max_seq or shape.seq_len
+    assert plan.dp == 1, (
+        f"chunked prefill requires an unsharded decode batch: dp={plan.dp}")
+    assert all(layout.segments), (
+        "chunked prefill requires every segment's KV to be paged "
+        f"(segments={layout.segments})")
+
+    p_dims = lm.lm_param_dims(cfg)
+    p_specs = resolve_pspecs(p_dims, plan)
+    p_struct = _param_struct(cfg, policy.param_dtype)
+    c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
+                                    policy, paged=layout)
+    c_specs = resolve_pspecs(c_dims, plan)
+    n = shape.global_batch
+    row_spec = plan.pspec("batch")
+    tok_spec = plan.pspec("batch", None)
+
+    def run(params, tokens, pos0, chunk_len, caches, tables, lane):
+        col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
+        return lm.forward_chunk(params, tokens, pos0, chunk_len, caches,
+                                tables, plan=plan, cfg=cfg, policy=policy,
+                                lane=lane, paged_segments=layout.segments)
+
+    body = (run if with_sampling
+            else (lambda params, tokens, pos0, chunk_len, caches, tables:
+                  run(params, tokens, pos0, chunk_len, caches, tables,
+                      None)))
+    in_specs = (p_specs, tok_spec, row_spec, row_spec, c_specs, tok_spec)
+    in_structs = (
+        with_shardings(p_struct, p_specs, mesh),
+        with_shardings(jax.ShapeDtypeStruct((n, chunk_tokens), jnp.int32),
+                       tok_spec, mesh),
+        with_shardings(jax.ShapeDtypeStruct((n,), jnp.int32), row_spec,
+                       mesh),
+        with_shardings(jax.ShapeDtypeStruct((n,), jnp.int32), row_spec,
+                       mesh),
+        with_shardings(c_struct, c_specs, mesh),
+        with_shardings(jax.ShapeDtypeStruct((n, layout.max_blocks),
+                                            jnp.int32), tok_spec, mesh))
+    if with_sampling:
+        l_specs = resolve_pspecs(lane_dims(False), plan)
+        in_specs += (l_specs,)
+        in_structs += (with_shardings(lane_struct(n, False), l_specs, mesh),)
+    sm = _maybe_shard_map(body, mesh, in_specs=in_specs,
+                          out_specs=(row_spec, c_specs, row_spec))
+    fn = jax.jit(sm, donate_argnums=(4,))
+    return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
+                      in_structs=in_structs, in_specs=in_specs,
+                      aux={"param_specs": p_specs, "cache_struct": c_struct,
+                           "cache_specs": c_specs, "max_seq": max_seq,
+                           "paged": layout, "chunk_tokens": chunk_tokens})
 
 
 # --------------------------------------------------------------------------

@@ -19,7 +19,10 @@ EMBED_DTYPE = jnp.bfloat16
 def batch_struct(cfg: ModelConfig, shape_kind: str, global_batch: int,
                  seq_len: int) -> dict:
     """ShapeDtypeStruct stand-ins for one full-sequence step's data batch.
-    `seq_len` counts the TOTAL sequence (VLM patch prefix included)."""
+    `seq_len` counts the TOTAL sequence (VLM patch prefix included).
+    `shape_kind`: "train" adds labels; "prefill" and "encode" (the
+    encoder-only serving step, launch/steps.make_encode_step) are
+    tokens-only plus any modality inputs."""
     s_text = seq_len - (cfg.n_patches or 0)
     assert s_text > 0, (seq_len, cfg.n_patches)
     out = {"tokens": jax.ShapeDtypeStruct((global_batch, s_text), jnp.int32)}

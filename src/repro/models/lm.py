@@ -171,13 +171,17 @@ def _run_segments_train(params, x, *, plan, cfg, policy, memory, memory_len):
 
 
 def _run_segments_prefill(params, x, *, plan, cfg, policy, max_seq,
-                          memory, memory_len, compact_kv=False):
+                          memory, memory_len, compact_kv=False,
+                          with_cache=True):
+    """`with_cache=False` runs the same full-sequence stack cache-free (the
+    encoder-only serving pass) — one segment pipeline, not two."""
     caches = []
     for (kind, _), p_seg in zip(cfg.schedule, params["segments"]):
         def body(h, p_layer, _kind=kind):
             h2, cache, _ = blocks.block_full(_kind, p_layer, h, plan=plan,
                                              cfg=cfg, policy=policy,
-                                             with_cache=True, max_seq=max_seq,
+                                             with_cache=with_cache,
+                                             max_seq=max_seq,
                                              memory=memory,
                                              memory_len=memory_len,
                                              compact_kv=compact_kv)
@@ -315,6 +319,93 @@ def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int,
                            dict(lane, step=pos), plan=plan, cfg=cfg,
                            policy=policy)
     return tok, caches, pos
+
+
+def forward_encode(params, batch, *, plan: Plan, cfg, policy,
+                   prompt_len=None, pooling: str = "last"):
+    """Encoder-only NAR pass: one full-sequence forward, no KV cache, no
+    sampling — the paper's encoder topology served as a first-class task.
+    -> pooled [B, E] float32.
+
+    `prompt_len` ([B] int32, optional): true per-row text length when the
+    batch is right-padded to a length bucket.  Padding is output-exact only
+    for causal schedules (bidirectional kinds attend pad positions); the
+    runner pads only when every kind is causal and encodes at exact length
+    otherwise.
+    `pooling`: "last" — residual at the final true position (what a prefill
+    would sample from); "mean" — masked mean over the true positions."""
+    x, _, _ = _embed_sequence(params, batch, plan=plan, cfg=cfg,
+                              policy=policy, with_labels=False)
+    memory = None
+    memory_len = 0
+    if cfg.enc_schedule:
+        memory = _run_encoder(params, batch, plan=plan, cfg=cfg,
+                              policy=policy)
+        memory_len = cfg.enc_seq_padded
+    x, _ = _run_segments_prefill(params, x, plan=plan, cfg=cfg,
+                                 policy=policy, max_seq=0, memory=memory,
+                                 memory_len=memory_len, with_cache=False)
+    x = ops.norm(x, params["final_norm"], cfg.norm)
+
+    B, S_loc = x.shape[0], x.shape[1]
+    n_p = cfg.n_patches or 0
+    if prompt_len is None:
+        pos = jnp.full((B,), S_loc * max(plan.sp, 1), jnp.int32)
+    else:
+        pos = n_p + prompt_len.astype(jnp.int32)
+    if pooling == "last":
+        return _residual_at(x, pos - 1, plan).astype(jnp.float32)
+    # masked mean over true text positions (patch prefix excluded)
+    off = col.axis_index(plan.seq_axes) * S_loc
+    gpos = jnp.arange(S_loc)[None, :] + off                    # [1, S_loc]
+    keep = (gpos >= n_p) & (gpos < pos[:, None])               # [B, S_loc]
+    s = jnp.sum(x.astype(jnp.float32) * keep[..., None], axis=1)
+    s = col.psum(s, plan.seq_axes)
+    n = jnp.maximum((pos - n_p).astype(jnp.float32), 1.0)
+    return s / n[:, None]
+
+
+def forward_chunk(params, tokens, pos0, chunk_len, caches, block_tables, *,
+                  plan: Plan, cfg, policy, lane=None, paged_segments=None):
+    """One chunked-prefill piece: encode C consecutive prompt tokens into
+    the paged KV cache.  tokens: [B, C]; pos0: [B] absolute start position;
+    chunk_len: [B] real tokens this chunk (<= C; tail is padding).
+    -> (next_token [B], caches, pos [B]).
+
+    Every call also samples a token at each row's last real chunk position
+    — the caller uses it only when the chunk completes the prompt, where it
+    equals what `forward_prefill` samples (same residual, same (seed, step)
+    draw).  Requires every segment paged (ModelRunner.supports_chunked);
+    `lane` as in forward_prefill (sans prompt_len); greedy when None."""
+    B, C = tokens.shape
+    x = embed_token(params["embedding"]["embed"], tokens.reshape(B * C),
+                    plan=plan, policy=policy).reshape(B, C, -1)
+    paged_segments = paged_segments or (True,) * len(cfg.schedule)
+    new_caches = []
+    for (kind, _), p_seg, c_seg, pgd in zip(cfg.schedule, params["segments"],
+                                            caches, paged_segments):
+        assert pgd, f"chunked prefill requires paged segments: {kind}"
+        def body(h, inp, _kind=kind):
+            p_layer, c_layer = inp
+            h2, c2 = blocks.block_chunk(_kind, p_layer, h, pos0, chunk_len,
+                                        c_layer, block_tables, plan=plan,
+                                        cfg=cfg, policy=policy)
+            return h2, c2
+        x, c_new = jax.lax.scan(body, x, (p_seg, c_seg))
+        new_caches.append(c_new)
+    x = ops.norm(x, params["final_norm"], cfg.norm)
+
+    pos = pos0 + chunk_len.astype(jnp.int32)
+    last = jnp.clip(chunk_len - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    if lane is None:
+        tok = greedy_token(x_last, params["embedding"]["unemb"], plan=plan,
+                           cfg=cfg, policy=policy)
+    else:
+        tok = sample_token(x_last, params["embedding"]["unemb"],
+                           dict(lane, step=pos), plan=plan, cfg=cfg,
+                           policy=policy)
+    return tok, tuple(new_caches), pos
 
 
 def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy,

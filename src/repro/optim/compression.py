@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import collectives as col
+
 
 def quantize_int8(x):
     """Per-tensor symmetric int8.  -> (q int8, scale fp32 scalar)."""
@@ -45,7 +47,7 @@ def int8_allreduce(x, axis: str):
     followed by an int8 recursive-doubling all-gather.  Returns fp32.
     Requires a power-of-two axis; falls back to psum for size 1.
     """
-    n = jax.lax.axis_size(axis)
+    n = col.one_axis_size(axis)
     if n == 1:
         return x.astype(jnp.float32)
     assert n & (n - 1) == 0, f"int8_allreduce needs power-of-two axis, got {n}"

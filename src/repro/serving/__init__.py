@@ -1,4 +1,9 @@
-from repro.serving.engine import (InferenceEngine, Request, ServingEngine,
-                                  TokenEvent)
+from repro.serving.engine import InferenceEngine, ServingEngine
+from repro.serving.runner import ModelRunner
 from repro.serving.sampling import GREEDY, SamplingParams
+from repro.serving.scheduler import (ChunkedPrefillPolicy, FCFSPolicy,
+                                     PriorityPolicy, SchedulerPolicy,
+                                     make_policy)
 from repro.serving.stats import EngineStats
+from repro.serving.tasks import (EncodeTask, GenerateTask, Request, Task,
+                                 TokenEvent)

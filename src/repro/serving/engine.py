@@ -1,431 +1,292 @@
-"""Session-based continuous-batching inference engine (NAR prefill + AR
-decode, paper T8 / Sec. VI-A) over a block-paged KV cache.
+"""Session-based continuous-batching inference engine — thin façade wiring
+queue -> SchedulerPolicy -> ModelRunner.
 
-A fixed decode batch of B slots runs lockstep AR steps (the paper's AR
-mode); finished rows are immediately replaced by prefilling queued requests
-(NAR pass, paper's prompt-encoding mode) — decode never drains to admit
-work.
+The pre-split engine fused admission policy, step execution and cache
+bookkeeping into one class; it is now three layers with explicit seams:
 
-KV memory is *paged*: a `BlockAllocator` owns a global pool of fixed-size
-KV blocks and each slot holds an ordered block table of the blocks its
-request occupies.  Admission allocates ceil(tokens / block_size) blocks,
-decode allocates one more each time a slot crosses a block boundary, and
-retirement frees them — live pool occupancy tracks active tokens, never
-B x max_seq.  When the pool is exhausted the youngest running request is
-preempted back to the queue (its blocks freed) and later re-admitted by
-re-prefilling its prompt + generated prefix — recompute preemption, the
-same (seed, position)-keyed sampling draws making the continuation exact.
-Sliding-window (ring), SSM and cross-attention caches stay dense per-slot
-(they are already bounded); archs with no full-context attention simply
-have no paged leaves.
+  serving/tasks.py      what a client wants: `GenerateTask` (NAR prefill +
+                        AR decode, the paper's decoder topology) and
+                        `EncodeTask` (one pooled NAR pass, the paper's
+                        encoder topology), each with priority/deadline.
+  serving/scheduler.py  what runs next: `SchedulerPolicy` (FCFS / priority
+                        + aging / chunked prefill) — pure host-side
+                        ordering + preemption-victim selection.
+  serving/runner.py     how it runs: `ModelRunner` owns the compiled
+                        steps, caches, block pool and sampling lanes, and
+                        exposes prefill / chunk_step / decode / encode with
+                        no policy logic.
 
-Admission is *batched*: queued requests sharing a prefill length bucket are
-prefilled together in one compiled call and their compact KV is scattered
-straight into their assigned blocks (serving/kv_cache.make_prefill_scatter)
-— a per-block scatter, not a whole-batch-cache `dynamic_update_slice`.
+Engine mechanics preserved from the pre-split engine (see runner.py for
+the paging details): a fixed decode batch of B slots runs lockstep AR
+steps; finished rows are immediately replaced by prefilling queued
+requests; KV memory is block-paged with recompute preemption when the pool
+exhausts; admission is batched per prefill-length bucket; per-request
+sampling happens inside the jitted steps; `generate()` streams
+`TokenEvent`s and `stats()` returns `EngineStats`.
 
-The session API decouples *what a request wants* from *how the engine
-batches it*:
+New in the split:
 
-  variable-length prompts   prefill steps are compiled lazily per
-      (length bucket, group size); prompts are right-padded to the bucket.
-      Buckets step by 1.5x/2x rungs (8, 12, 16, 24, 32, ...) — batched
-      admission amortizes the extra compiles that finer rungs cost, and
-      halves worst-case padding waste vs pure powers of two.  Padding is
-      output-exact for linear attention caches; archs with recurrent or
-      ring-buffer state (SSM hybrids, sliding-window attention) compile at
-      exact prompt length instead — their state would absorb pad positions.
-  per-request sampling      `SamplingParams` (greedy / temperature / top-k,
-      per-request seed) scattered into per-slot lane arrays; the draw
-      happens *inside* the jitted step (core/embedding.sample_token), so one
-      compiled decode step serves any mix of greedy and sampled requests.
-  streaming                 `generate()` yields `TokenEvent(uid, token,
-      is_last)` as steps complete; `run()` drains it for batch use.
-  telemetry                 `stats()` -> EngineStats: NAR / AR throughput
-      tracked separately (the paper's two metrics), TTFT, slot occupancy,
-      decode-step latency percentiles, pool utilization, preemptions.
+  scheduler=            any SchedulerPolicy; FCFSPolicy (default) is
+                        token-for-token identical to the pre-split engine.
+  EncodeTask serving    encoder-only requests batch into pooled
+                        full-sequence passes (no slots, no KV) interleaved
+                        with generate traffic — mixed workloads share one
+                        engine.
+  chunked prefill       ChunkedPrefillPolicy(chunk_tokens=N): prompts
+                        longer than N prefill in N-token pieces between
+                        decode steps, so a long admission never stalls
+                        running AR slots for its whole prefill (outputs
+                        stay token-identical to FCFS; the decode-stall p95
+                        drop is measured by benchmarks/serving_bench.py).
 
-All model math goes through the launch/steps bundles, so the engine runs
-identically on 1 CPU device (tests) and on the production mesh.
+Back-compat: `InferenceEngine(cfg, params, batch_size=..., max_seq=...,
+policy=<precision>)`, `submit/generate/run/stats/reset_stats/has_work`,
+`Request` (= GenerateTask), `ServingEngine` (= InferenceEngine), and the
+paged internals tests/benches touch (`allocator`, `layout`,
+`block_tables`, `steps_run`, `bucket_for`) all keep working unmodified.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeConfig
-from repro.launch import steps as steps_mod
-from repro.serving.kv_cache import (BlockAllocator, make_prefill_scatter,
-                                    zero_caches)
-from repro.serving.sampling import (SamplingParams, set_lane,
-                                    stack_prefill_lanes, zero_lane)
+from repro.configs.base import ModelConfig
+from repro.serving.runner import ModelRunner
+from repro.serving.scheduler import FCFSPolicy, SchedulerPolicy
 from repro.serving.stats import EngineStats
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                  # [S_prompt] int32, any length
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    sampling: SamplingParams = field(default_factory=SamplingParams)
-    # filled by the engine:
-    output: List[int] = field(default_factory=list)
-    prompt_len: int = 0                 # true length (set at submit)
-    bucket: int = 0                     # padded prefill length (set at admit)
-    prefill_ms: float = 0.0             # amortized share of group prefills
-    decode_ms: float = 0.0
-    ttft_ms: float = 0.0                # submit -> first token
-    done: bool = False
-    _t_submit: float = field(default=0.0, repr=False)
-    _seq: int = field(default=0, repr=False)   # admission order (preemption)
-
-
-@dataclass(frozen=True)
-class TokenEvent:
-    """One streamed token: emitted by `InferenceEngine.generate()` the
-    moment the engine step that produced it completes."""
-    uid: int
-    token: int
-    is_last: bool
+from repro.serving.tasks import (EncodeTask, GenerateTask, Request, Task,
+                                 TokenEvent)
 
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
                  max_seq: int = 256, mesh=None, policy=None,
                  min_bucket: int = 8, paged: bool = True,
-                 block_size: int = 16, kv_pool_blocks: Optional[int] = None):
-        assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
-        self.cfg = cfg
-        self.params = params
-        self.B = batch_size
-        self.max_seq = max_seq
-        self.min_bucket = min_bucket
-        self.mesh = mesh
-        self.policy = policy
-        # pad-to-bucket is exact only for linear attention caches (see module
-        # docstring); recurrent / ring-buffer archs prefill at exact length
-        self._pad_buckets = not (cfg.has_ssm or cfg.sliding_window > 0)
-        # VLM patch prefix rides along in every prefill: it consumes cache
-        # positions, shrinking the token budget a prompt may use
-        self._n_prefix = cfg.n_patches or 0
-        dshape = ShapeConfig("engine_decode", "decode", max_seq, batch_size)
-        # the pool is shared across slots: a batch-sharded decode would give
-        # each data shard a divergent pool copy -> fall back to dense rows
-        if paged and steps_mod.serve_dp(cfg, dshape, mesh) > 1:
-            paged = False
-        self.paged = paged
-        if paged:
-            default_blocks = batch_size * (-(-max_seq // block_size))
-            paged_arg: Optional[Tuple[int, int]] = (
-                kv_pool_blocks or default_blocks, block_size)
-        else:
-            paged_arg = None
-        self.decode_step = steps_mod.make_decode_step(
-            cfg, dshape, mesh, policy=policy, max_seq=max_seq,
-            with_sampling=True, paged=paged_arg)
-        self.layout = self.decode_step.aux["paged"]
-        self._prefill_steps: Dict[tuple, steps_mod.StepBundle] = {}
-        self.caches = zero_caches(self.decode_step.aux["cache_struct"],
-                                  steps_mod.to_shardings(
-                                      self.decode_step.aux["cache_specs"],
-                                      mesh))
-        if self.paged:
-            self.allocator = BlockAllocator(self.layout.num_blocks,
-                                            self.layout.block_size)
-            self.block_tables = np.full(
-                (batch_size, self.layout.max_blocks), -1, np.int32)
-            self._scatter = make_prefill_scatter(self.layout.segments,
-                                                 self.layout.block_size)
-        else:
-            self.allocator = None
-            self.block_tables = None
-            self._scatter = make_prefill_scatter(
-                (False,) * len(cfg.schedule), 1)
-        self._slot_blocks: List[List[int]] = [[] for _ in range(batch_size)]
-        self._tables_dev = None            # device copy, rebuilt when dirty
-        self._admit_seq = 0
-        self.tokens = jnp.zeros((batch_size,), jnp.int32)
-        self.pos = jnp.zeros((batch_size,), jnp.int32)
-        self.lane = zero_lane(batch_size)
-        self.slots: List[Optional[Request]] = [None] * batch_size
-        self.queue: List[Request] = []
-        self.completed: List[Request] = []
-        self.steps_run = 0
+                 block_size: int = 16, kv_pool_blocks: Optional[int] = None,
+                 scheduler: Optional[SchedulerPolicy] = None,
+                 encode_batch: Optional[int] = None):
+        # `policy` is the PRECISION policy (pre-split name, kept for
+        # back-compat); the scheduling policy is `scheduler`
+        self.runner = ModelRunner(cfg, params, batch_size=batch_size,
+                                  max_seq=max_seq, mesh=mesh, policy=policy,
+                                  min_bucket=min_bucket, paged=paged,
+                                  block_size=block_size,
+                                  kv_pool_blocks=kv_pool_blocks)
+        self.scheduler = scheduler or FCFSPolicy()
+        self.encode_batch = encode_batch or batch_size
+        self.queue: List[Task] = []
+        self.completed: List[Task] = []
         self._stats = self._fresh_stats()
+        self._t_last_decode: Optional[float] = None
+
+    # -- delegated runner state (back-compat surface) -------------------
+    @property
+    def cfg(self):
+        return self.runner.cfg
+
+    @property
+    def params(self):
+        return self.runner.params
+
+    @property
+    def B(self) -> int:
+        return self.runner.B
+
+    @property
+    def max_seq(self) -> int:
+        return self.runner.max_seq
+
+    @property
+    def paged(self) -> bool:
+        return self.runner.paged
+
+    @property
+    def layout(self):
+        return self.runner.layout
+
+    @property
+    def allocator(self):
+        return self.runner.allocator
+
+    @property
+    def block_tables(self):
+        return self.runner.block_tables
+
+    @property
+    def slots(self):
+        return self.runner.slots
+
+    @property
+    def steps_run(self) -> int:
+        return self.runner.steps_run
+
+    def bucket_for(self, prompt_len: int) -> int:
+        return self.runner.bucket_for(prompt_len)
 
     def _fresh_stats(self) -> EngineStats:
-        st = EngineStats(batch_size=self.B)
-        if self.paged:
-            st.kv_pool_blocks = self.layout.num_blocks
-            st.kv_block_size = self.layout.block_size
+        st = EngineStats(batch_size=self.runner.B)
+        if self.runner.paged:
+            st.kv_pool_blocks = self.runner.layout.num_blocks
+            st.kv_block_size = self.runner.layout.block_size
         return st
 
-    # -- prefill compilation cache -------------------------------------
-    def bucket_for(self, prompt_len: int) -> int:
-        """Prefill length bucket for a prompt: smallest rung of
-        {m, 1.5m} x 2^k >= max(min_bucket, len), capped at the token budget
-        (max_seq minus any patch prefix); exact length for archs whose
-        caches cannot absorb padding."""
-        if not self._pad_buckets:
-            return prompt_len
-        cap = self.max_seq - self._n_prefix
-        base = self.min_bucket
-        while True:
-            for cand in (base, base + base // 2):
-                if cand >= prompt_len or cand >= cap:
-                    return min(cand, cap)
-            base *= 2
-
-    def _prefill_for(self, bucket: int, group: int) -> steps_mod.StepBundle:
-        step = self._prefill_steps.get((bucket, group))
-        if step is None:
-            pshape = ShapeConfig(f"engine_prefill_{bucket}x{group}",
-                                 "prefill", bucket, group)
-            step = steps_mod.make_prefill_step(
-                self.cfg, pshape, self.mesh, policy=self.policy,
-                max_seq=self.max_seq, with_sampling=True,
-                compact_kv=self.paged)
-            self._prefill_steps[(bucket, group)] = step
-            self._stats.prefill_compiles += 1
-        return step
-
     # -- admission -----------------------------------------------------
-    def submit(self, req: Request):
-        n = len(req.prompt)
-        cap = self.max_seq - 1 - self._n_prefix
+    def submit(self, task: Task):
+        """Queue a GenerateTask (alias: Request) or EncodeTask."""
+        n = len(task.prompt)
+        if isinstance(task, EncodeTask):
+            cap = self.runner.max_seq - self.runner._n_prefix
+        else:
+            cap = self.runner.prompt_cap
         assert 0 < n <= cap, (
             f"prompt length {n} not in [1, {cap}] "
-            f"(max_seq={self.max_seq}, patch prefix={self._n_prefix})")
-        assert req.max_new_tokens >= 1, (
-            f"max_new_tokens must be >= 1 (the prefill emits the first "
-            f"token): {req.max_new_tokens}")
-        req.prompt_len = n
-        req._t_submit = time.perf_counter()
-        self.queue.append(req)
+            f"(max_seq={self.runner.max_seq}, "
+            f"patch prefix={self.runner._n_prefix})")
+        if isinstance(task, GenerateTask):
+            assert task.max_new_tokens >= 1, (
+                f"max_new_tokens must be >= 1 (the prefill emits the first "
+                f"token): {task.max_new_tokens}")
+        task.prompt_len = n
+        task._t_submit = time.perf_counter()
+        self.queue.append(task)
         self._stats.requests_submitted += 1
 
-    def _full_prompt(self, req: Request) -> np.ndarray:
-        """The token sequence a (re-)prefill must encode: the prompt plus
-        any tokens already generated before a preemption."""
-        if not req.output:
-            return np.asarray(req.prompt, np.int32)
-        return np.concatenate([np.asarray(req.prompt, np.int32),
-                               np.asarray(req.output, np.int32)])
+    def _first_admission(self, task: Task):
+        # fresh clock, not the step-start timestamp: blocking encode/prefill
+        # calls (possibly compiles) may have run earlier in this same step,
+        # and they are part of this task's wait
+        task.queue_wait_ms = (time.perf_counter() - task._t_submit) * 1e3
+        self._stats.add_queue_wait_ms(task.queue_wait_ms)
 
-    def _full_len(self, req: Request) -> int:
-        """len(_full_prompt(req)) without materializing it (admission scans
-        the whole queue; only admitted requests build the array)."""
-        return req.prompt_len + len(req.output)
+    def _chunkable(self, task: GenerateTask) -> bool:
+        ct = self.scheduler.chunk_tokens
+        return (ct is not None and self.runner.supports_chunked
+                and self.runner.full_len(task) > ct)
 
-    def _next_group(self, max_n: int) -> List[Tuple[Request, List[int]]]:
-        """Pop the next admission group off the queue: up to `max_n`
-        requests sharing the head-of-line's length bucket, each with its
-        pool blocks allocated (all-or-nothing per request).  Empty when the
-        head cannot get blocks — the caller waits for running requests to
-        free some."""
-        head_bucket = self.bucket_for(self._full_len(self.queue[0]))
-        idxs = [i for i, r in enumerate(self.queue)
-                if self.bucket_for(self._full_len(r)) == head_bucket]
-        idxs = idxs[:max_n]
-        group: List[Tuple[Request, List[int]]] = []
-        taken: List[int] = []
-        for i in idxs:
-            req = self.queue[i]
-            blocks: List[int] = []
-            if self.paged:
-                need = self.allocator.blocks_for(
-                    self._n_prefix + self._full_len(req))
-                got = self.allocator.alloc(need)
-                if got is None:
-                    break
-                blocks = got
-            group.append((req, blocks))
-            taken.append(i)
+    def _next_group(self, order: List[GenerateTask], max_n: int):
+        """The next whole-prompt admission group: up to `max_n` tasks
+        sharing the policy head's length bucket, each with its pool blocks
+        allocated (all-or-nothing per task).  Empty when the head cannot
+        get blocks — the caller waits for running requests to free some."""
+        runner = self.runner
+        head_bucket = runner.bucket_for(runner.full_len(order[0]))
+        cands = [t for t in order
+                 if runner.bucket_for(runner.full_len(t)) == head_bucket]
+        cands = cands[:max_n]
+        group = []
+        for task in cands:
+            blk = runner.alloc_for(task)
+            if blk is None:
+                break
+            group.append((task, blk))
         if not group:
-            if all(s is None for s in self.slots):
-                need = self.allocator.blocks_for(
-                    self._n_prefix + self._full_len(self.queue[0]))
-                raise RuntimeError(
-                    f"KV pool too small: request {self.queue[0].uid} needs "
-                    f"{need} blocks, pool has {self.allocator.num_blocks} "
-                    f"({self.allocator.num_free} free) and no running "
-                    f"request can be preempted to free more")
-            return []
-        for i in reversed(taken):
-            self.queue.pop(i)
+            self._pool_too_small_check(order[0])
         return group
 
+    def _pool_too_small_check(self, head: GenerateTask):
+        """Admission got nothing: fatal only when nothing is running (no
+        retirement can ever free blocks for the head)."""
+        runner = self.runner
+        if runner.has_running():
+            return
+        need = runner.blocks_needed(head)
+        raise RuntimeError(
+            f"KV pool too small: request {head.uid} needs "
+            f"{need} blocks, pool has {runner.allocator.num_blocks} "
+            f"({runner.allocator.num_free} free) and no running "
+            f"request can be preempted to free more")
+
+    def _gen_queue(self) -> List[GenerateTask]:
+        return [t for t in self.queue if isinstance(t, GenerateTask)]
+
     def _admit(self, fresh: List) -> int:
+        """Admit generate tasks into free slots per the scheduling policy:
+        whole-prompt groups prefill immediately; prompts over the chunk
+        budget park in their slot and advance chunk-by-chunk."""
+        runner = self.runner
         admitted = 0
         while True:
-            free = [b for b in range(self.B) if self.slots[b] is None]
-            if not free or not self.queue:
+            free = runner.free_slots()
+            gen = self._gen_queue()
+            if not free or not gen:
                 return admitted
-            group = self._next_group(len(free))
+            # fresh clock per iteration: earlier groups in this same step
+            # ran blocking prefills, which age the remaining queue
+            order = self.scheduler.admission_order(gen,
+                                                   time.perf_counter())
+            head = order[0]
+            if self._chunkable(head):
+                blk = runner.alloc_for(head)
+                if blk is None:
+                    self._pool_too_small_check(head)
+                    return admitted
+                self.queue.remove(head)
+                if not head.output:
+                    self._first_admission(head)
+                runner.begin_chunked(head, blk, free[0])
+                admitted += 1
+                continue
+            group = self._next_group(order, len(free))
             if not group:
                 return admitted
-            self._prefill_group(group, free, fresh)
+            for task, _ in group:
+                self.queue.remove(task)
+                if not task.output:
+                    self._first_admission(task)
+            fresh.extend(runner.prefill(group, free, self._stats))
             admitted += len(group)
 
-    def _prefill_group(self, group, free_slots: List[int], fresh: List):
-        """One batched NAR pass for an admission group, scattering its KV
-        into the assigned blocks (paged) / slot rows (dense)."""
-        reqs = [req for req, _ in group]
-        fulls = [self._full_prompt(req) for req in reqs]
-        bucket = self.bucket_for(len(fulls[0]))
-        n = len(reqs)
-        step = self._prefill_for(bucket, n)
-        t0 = time.perf_counter()
-        padded = np.zeros((n, bucket), np.int32)
-        for j, seq in enumerate(fulls):
-            padded[j, :len(seq)] = seq
-        batch = {"tokens": jnp.asarray(padded)}
-        if self.cfg.n_patches:
-            batch["patches"] = jnp.zeros(
-                (n, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
-        if self.cfg.enc_schedule:
-            batch["frames"] = jnp.zeros(
-                (n, self.cfg.enc_seq_padded, self.cfg.d_model), jnp.bfloat16)
-        tok, caches_g, pos_g = step.fn(
-            self.params, batch,
-            stack_prefill_lanes([r.sampling for r in reqs],
-                                [len(f) for f in fulls]))
-
-        slots = free_slots[:n]
-        if self.paged:
-            tables = np.full((n, self.layout.max_blocks), -1, np.int32)
-            for j, (_, blocks) in enumerate(group):
-                tables[j, :len(blocks)] = blocks
-        else:
-            tables = np.zeros((n, 1), np.int32)      # unused by the scatter
-        self.caches = self._scatter(self.caches, caches_g,
-                                    jnp.asarray(slots, jnp.int32),
-                                    jnp.asarray(tables))
-        slots_arr = jnp.asarray(slots, jnp.int32)
-        self.tokens = self.tokens.at[slots_arr].set(tok)
-        self.pos = self.pos.at[slots_arr].set(pos_g)
-        tok_np = np.asarray(tok)
-        now = time.perf_counter()
-        dt_ms = (now - t0) * 1e3
-
-        st = self._stats
-        n_first = 0
-        for j, (req, blocks) in enumerate(group):
-            b = slots[j]
-            first_admit = not req.output
-            req.bucket = bucket
-            req.prefill_ms += dt_ms / n    # amortized share of the group call
-            req.output.append(int(tok_np[j]))
-            req._seq = self._admit_seq
-            self._admit_seq += 1
-            self.lane = set_lane(self.lane, b, req.sampling)
-            self.slots[b] = req
-            self._slot_blocks[b] = list(blocks)
-            if self.paged:
-                self.block_tables[b] = tables[j]
-                self._tables_dev = None
-            fresh.append((req, len(req.output) - 1))
-            st.bucket_hits[bucket] = st.bucket_hits.get(bucket, 0) + 1
-            if first_admit:
-                n_first += 1
-                req.ttft_ms = (now - req._t_submit) * 1e3
-                st.nar_tokens += req.prompt_len
-                st.padded_nar_tokens += bucket
-                st.add_ttft_ms(req.ttft_ms)
-            else:
-                st.recompute_tokens += len(fulls[j])
-        # preemption recomputes are overhead, not prompt-encoding goodput:
-        # split the group's wall time so nar_tok_s stays comparable between
-        # preempting and non-preempting runs
-        st.nar_time_s += (now - t0) * n_first / n
-        st.recompute_time_s += (now - t0) * (n - n_first) / n
-
-    # -- paged bookkeeping ---------------------------------------------
-    def _preempt_youngest(self) -> Optional[int]:
-        """Evict the most recently admitted running request back to the
-        queue head, freeing its blocks (recompute preemption)."""
-        cand = [b for b in range(self.B) if self.slots[b] is not None]
-        if not cand:
-            return None
-        b = max(cand, key=lambda b: self.slots[b]._seq)
-        req = self.slots[b]
-        self._release_slot(b)
-        self.queue.insert(0, req)
-        self._stats.preemptions += 1
-        return b
-
-    def _release_slot(self, b: int):
-        if self.paged and self._slot_blocks[b]:
-            self.allocator.free(self._slot_blocks[b])
-        self._slot_blocks[b] = []
-        if self.paged:
-            self.block_tables[b, :] = -1
-            self._tables_dev = None
-        self.slots[b] = None
-
-    def _grow_tables(self):
-        """Before a decode step: every occupied slot must own the block its
-        next token lands in (pos // block_size).  Allocation failure
-        preempts the youngest running request until it succeeds."""
-        if not self.paged:
-            return
-        bs = self.layout.block_size
-        pos = np.asarray(self.pos)
-        for b in range(self.B):
-            if self.slots[b] is None:
-                continue
-            need = int(pos[b]) // bs + 1
-            if need > self.allocator.num_blocks:
-                # impossible to ever satisfy — fail before preempting (and
-                # discarding) every other in-flight request's progress
-                raise RuntimeError(
-                    f"KV pool too small: request {self.slots[b].uid} needs "
-                    f"{need} blocks, pool capacity is "
-                    f"{self.allocator.num_blocks} (raise kv_pool_blocks, "
-                    f"raise block_size, or cap max_new_tokens)")
-            while self.slots[b] is not None and len(self._slot_blocks[b]) < need:
-                got = self.allocator.alloc(1)
-                if got is not None:
-                    self.block_tables[b, len(self._slot_blocks[b])] = got[0]
-                    self._slot_blocks[b].extend(got)
-                    self._tables_dev = None
-                    continue
-                if self._preempt_youngest() is None:
-                    raise RuntimeError(
-                        "KV pool exhausted with no running request to "
-                        "preempt")
-
-    def _tables(self):
-        if self._tables_dev is None:
-            self._tables_dev = jnp.asarray(self.block_tables)
-        return self._tables_dev
+    def _run_encode(self) -> int:
+        """Run ONE same-bucket encode batch (policy-ordered) — encode uses
+        no slots or cache, so it interleaves with generate admission; one
+        batch per engine step keeps long encode backlogs from starving
+        decode."""
+        enc = [t for t in self.queue if isinstance(t, EncodeTask)]
+        if not enc:
+            return 0
+        runner = self.runner
+        order = self.scheduler.admission_order(enc, time.perf_counter())
+        head = order[0]
+        bucket = runner.encode_bucket_for(head.prompt_len)
+        group = [t for t in order
+                 if runner.encode_bucket_for(t.prompt_len) == bucket
+                 and t.pooling == head.pooling][:self.encode_batch]
+        for task in group:
+            self.queue.remove(task)
+            self._first_admission(task)
+        runner.encode(group, self._stats)
+        for task in group:
+            self.completed.append(task)
+            self._stats.requests_completed += 1
+        return len(group)
 
     # -- retirement ------------------------------------------------------
     def _retire(self):
-        pos = np.asarray(self.pos)
-        for b, req in enumerate(self.slots):
-            if req is None:
+        runner = self.runner
+        pos = np.asarray(runner.pos)
+        for b, task in enumerate(runner.slots):
+            if task is None or runner.prefilling[b]:
                 continue
-            tok = req.output[-1]
-            if (len(req.output) >= req.max_new_tokens
-                    or (req.eos_id is not None and tok == req.eos_id)
-                    or int(pos[b]) >= self.max_seq - 1):
-                req.done = True
-                self.completed.append(req)
+            tok = task.output[-1]
+            if (len(task.output) >= task.max_new_tokens
+                    or (task.eos_id is not None and tok == task.eos_id)
+                    or int(pos[b]) >= self.runner.max_seq - 1):
+                task.done = True
+                self.completed.append(task)
                 self._stats.requests_completed += 1
-                self._release_slot(b)
+                runner.release_slot(b)
 
     # -- engine loop ------------------------------------------------------
     def step(self) -> List[TokenEvent]:
-        """One engine iteration: admit -> retire -> AR step -> retire.
-        Returns the TokenEvents produced (prefill first-tokens + decoded
-        tokens), with `is_last` resolved against retirement."""
-        fresh: List = []                  # (request, output index) pairs
+        """One engine iteration: encode batch -> admit -> chunk advance ->
+        AR step -> retire.  Returns the TokenEvents produced (prefill
+        first-tokens + decoded tokens), with `is_last` resolved against
+        retirement."""
+        runner = self.runner
+        fresh: List = []                  # (task, output index) pairs
+        self._run_encode()
         # admit/retire until slots are full or the queue drains: a request
         # finished by its prefill token alone (max_new_tokens=1, prompt-eos,
         # pos cap) frees its slot (and blocks) for another admission before
@@ -435,51 +296,59 @@ class InferenceEngine:
             n_done = len(self.completed)
             admitted = self._admit(fresh)
             self._retire()
-            if not self.queue or all(s is not None for s in self.slots):
+            if not self._gen_queue() or not runner.free_slots():
                 break
             if not admitted and len(self.completed) == n_done:
                 break
-        if any(s is not None for s in self.slots):
-            self._grow_tables()           # may preempt back to the queue
-        if any(s is not None for s in self.slots):
-            t0 = time.perf_counter()
-            if self.paged:
-                self.tokens, self.pos, self.caches = self.decode_step.fn(
-                    self.params, self.tokens, self.pos, self.caches,
-                    self._tables(), self.lane)
-            else:
-                self.tokens, self.pos, self.caches = self.decode_step.fn(
-                    self.params, self.tokens, self.pos, self.caches,
-                    self.lane)
-            toks = np.asarray(self.tokens)          # blocks: honest timing
-            dt = time.perf_counter() - t0
-            self.steps_run += 1
-            occupied = live_tokens = 0
-            pos_np = np.asarray(self.pos)
-            for b, req in enumerate(self.slots):
-                if req is None:
-                    continue
-                occupied += 1
-                live_tokens += int(pos_np[b])
-                req.output.append(int(toks[b]))
-                req.decode_ms += dt * 1e3
-                fresh.append((req, len(req.output) - 1))
-            st = self._stats
-            st.decode_steps += 1
-            st.ar_tokens += occupied
-            st.ar_time_s += dt
-            st.add_decode_step_ms(dt * 1e3)
-            st.occupied_slot_steps += occupied
-            if self.paged:
-                st.block_slot_steps += self.allocator.num_used
-                st.token_slot_steps += live_tokens
-            self._retire()
-        return [TokenEvent(req.uid, req.output[i],
-                           req.done and i == len(req.output) - 1)
-                for req, i in fresh]
+        # chunked-prefill advancement under a per-STEP token budget: the
+        # point of chunking is bounding the prefill work between two decode
+        # steps, so the budget is shared across prefilling slots (oldest
+        # admitted first), not per-slot — several long admissions in flight
+        # still cost at most ~chunk_tokens before the next AR step.  Then
+        # retire (the final chunk's token may end the request outright).
+        budget = self.scheduler.chunk_tokens or 0
+        for task in sorted((runner.slots[b] for b in range(runner.B)
+                            if runner.slots[b] is not None
+                            and runner.prefilling[b]),
+                           key=lambda t: t._seq):
+            if budget <= 0:
+                break
+            ev = runner.chunk_step(task, self.scheduler.chunk_tokens,
+                                   self._stats)
+            # every call costs one full compiled chunk_tokens-wide pass
+            # (short final chunks are padded), so the budget is spent per
+            # CALL, not per true token — with budget == chunk_tokens that
+            # is exactly one chunk pass between AR steps
+            budget -= self.scheduler.chunk_tokens
+            if ev is not None:
+                fresh.append(ev)
+        self._retire()
+        if runner.decoding_slots():
+            victim = lambda running: self.scheduler.select_victim(
+                running, time.perf_counter())
+            # each eviction goes to the queue head (most recently evicted
+            # first), matching the pre-split engine's re-queue order
+            for task in runner.ensure_decode_blocks(victim, self._stats):
+                self.queue.insert(0, task)
+            if runner.decoding_slots():
+                t0 = time.perf_counter()
+                if self._t_last_decode is not None:
+                    # time decode slots sat idle since the last AR step —
+                    # admission prefill work between decode steps shows up
+                    # here (chunked prefill exists to bound it)
+                    self._stats.add_decode_stall_ms(
+                        (t0 - self._t_last_decode) * 1e3)
+                fresh.extend(runner.decode(self._stats))
+                self._t_last_decode = time.perf_counter()
+                self._retire()
+        if not runner.decoding_slots():
+            self._t_last_decode = None    # idle gaps are not decode stalls
+        return [TokenEvent(task.uid, task.output[i],
+                           task.done and i == len(task.output) - 1)
+                for task, i in fresh]
 
     def has_work(self) -> bool:
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        return bool(self.queue) or self.runner.has_running()
 
     def generate(self, max_steps: int = 10_000) -> Iterator[TokenEvent]:
         """Streaming interface: run engine steps until queue + slots drain,
@@ -489,10 +358,10 @@ class InferenceEngine:
                 return
             yield from self.step()
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Batch interface: drain `generate()`; returns the requests that
+    def run(self, max_steps: int = 10_000) -> List[Task]:
+        """Batch interface: drain `generate()`; returns the tasks that
         completed during THIS call (`self.completed` keeps the full session
-        history)."""
+        history).  EncodeTasks carry their result in `.embedding`."""
         start = len(self.completed)
         for _ in self.generate(max_steps):
             pass
@@ -502,21 +371,26 @@ class InferenceEngine:
     def stats(self) -> EngineStats:
         """Live serving telemetry (accumulated since construction or the
         last `reset_stats()`)."""
-        if self.paged:
+        if self.runner.paged:
             # the allocator tracks the true high-water mark on every alloc,
             # including admissions that never reach a decode step
-            self._stats.peak_blocks_used = self.allocator.peak_used
+            self._stats.peak_blocks_used = self.runner.allocator.peak_used
         return self._stats
 
     def reset_stats(self):
         """Drop accumulated telemetry, keeping compiled steps (benchmarks:
         warm buckets up, reset, then measure)."""
-        if self.paged:
-            self.allocator.peak_used = self.allocator.num_used
+        if self.runner.paged:
+            self.runner.allocator.peak_used = self.runner.allocator.num_used
         self._stats = self._fresh_stats()
+        # a stall sample must never span a reset (warm-up-then-measure)
+        self._t_last_decode = None
 
 
-# The original fixed-prompt-length engine grew into the session API above.
-# The old name stays importable, but the constructor deliberately dropped
-# `prompt_len` — variable-length prompts made it meaningless.
+# The original fixed-prompt-length engine grew into the session API above;
+# the scheduler/runner split kept the façade.  The old names stay
+# importable: `Request` is GenerateTask, `ServingEngine` is this class.
 ServingEngine = InferenceEngine
+
+__all__ = ["InferenceEngine", "ServingEngine", "Request", "GenerateTask",
+           "EncodeTask", "TokenEvent"]

@@ -1,0 +1,532 @@
+"""ModelRunner: policy-free model execution for the serving engine.
+
+Owns everything device-side — the compiled `StepBundle`s (decode, per-bucket
+prefill, chunked prefill, per-bucket encode), the live caches, the
+`BlockAllocator` and block tables, the sampling lanes, and the per-slot
+token/pos state — and exposes exactly four execution verbs:
+
+  prefill(group, stats)       one batched NAR pass admitting a group of
+                              GenerateTasks into free decode slots
+  chunk_step(task, stats)     advance one chunked-prefill piece for a task
+                              parked in a slot (see begin_chunked)
+  decode(stats)               one AR step over every *decoding* slot
+  encode(group, stats)        one pooled full-sequence pass for a batch of
+                              EncodeTasks (no slots, no cache)
+
+No scheduling decisions happen here: which tasks to admit, in what order,
+in what chunk budget, and who to preempt is the SchedulerPolicy's job
+(serving/scheduler.py); the engine (serving/engine.py) wires queue ->
+policy -> runner.  The runner's only "choice" is mechanical bookkeeping:
+block alloc/free, table maintenance, lane scatter, retirement plumbing.
+
+Chunked-prefill state: a task mid-chunk occupies a slot but its block-table
+row is NOT installed in the decode tables until the final chunk lands — so
+interleaved decode steps write nothing into its blocks (absent table rows
+scatter-drop) and its garbage token/pos rows are ignored.  The chunk state
+that persists between engine steps is exactly (block tables, prefilled
+count): what PR 2's paged layout already carries.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import blocks
+from repro.launch import steps as steps_mod
+from repro.serving.kv_cache import (BlockAllocator, make_prefill_scatter,
+                                    zero_caches)
+from repro.serving.sampling import (device_lane, set_lane, stack_lanes,
+                                    stack_prefill_lanes, zero_lane)
+from repro.serving.stats import EngineStats
+from repro.serving.tasks import EncodeTask, GenerateTask, Task
+
+
+class ModelRunner:
+    """Compiled steps + caches + pool for one serving engine instance."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
+                 max_seq: int = 256, mesh=None, policy=None,
+                 min_bucket: int = 8, paged: bool = True,
+                 block_size: int = 16, kv_pool_blocks: Optional[int] = None):
+        assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.min_bucket = min_bucket
+        self.mesh = mesh
+        self.policy = policy                 # precision policy (not sched)
+        # pad-to-bucket is exact only for linear attention caches; recurrent
+        # / ring-buffer archs (SSM hybrids, sliding window) prefill at exact
+        # prompt length — their state would absorb pad positions
+        self._pad_buckets = not (cfg.has_ssm or cfg.sliding_window > 0)
+        # encode has no cache: padding is exact whenever every kind is
+        # causal (pads sit after the true positions and are never pooled);
+        # bidirectional kinds (enc/vit, or causal=False) attend their pads
+        self._encode_pad = all(blocks.kind_causal(k, cfg)
+                               for k, _ in cfg.schedule)
+        # VLM patch prefix rides along in every prefill: it consumes cache
+        # positions, shrinking the token budget a prompt may use
+        self._n_prefix = cfg.n_patches or 0
+        dshape = ShapeConfig("engine_decode", "decode", max_seq, batch_size)
+        # the pool is shared across slots: a batch-sharded decode would give
+        # each data shard a divergent pool copy -> fall back to dense rows
+        if paged and steps_mod.serve_dp(cfg, dshape, mesh) > 1:
+            paged = False
+        self.paged = paged
+        if paged:
+            default_blocks = batch_size * (-(-max_seq // block_size))
+            paged_arg: Optional[Tuple[int, int]] = (
+                kv_pool_blocks or default_blocks, block_size)
+        else:
+            paged_arg = None
+        self.decode_step = steps_mod.make_decode_step(
+            cfg, dshape, mesh, policy=policy, max_seq=max_seq,
+            with_sampling=True, paged=paged_arg)
+        self.layout = self.decode_step.aux["paged"]
+        self._prefill_steps: Dict[tuple, steps_mod.StepBundle] = {}
+        self._encode_steps: Dict[tuple, steps_mod.StepBundle] = {}
+        self._chunk_steps: Dict[int, steps_mod.StepBundle] = {}
+        self.caches = zero_caches(self.decode_step.aux["cache_struct"],
+                                  steps_mod.to_shardings(
+                                      self.decode_step.aux["cache_specs"],
+                                      mesh))
+        if self.paged:
+            self.allocator = BlockAllocator(self.layout.num_blocks,
+                                            self.layout.block_size)
+            self.block_tables = np.full(
+                (batch_size, self.layout.max_blocks), -1, np.int32)
+            self._scatter = make_prefill_scatter(self.layout.segments,
+                                                 self.layout.block_size)
+        else:
+            self.allocator = None
+            self.block_tables = None
+            self._scatter = make_prefill_scatter(
+                (False,) * len(cfg.schedule), 1)
+        # chunked prefill needs every segment's KV in the pool (the tables
+        # ARE the chunk state) and a token-only causal stack
+        self.supports_chunked = bool(
+            self.paged and self.layout.any_paged
+            and all(self.layout.segments) and not cfg.has_ssm
+            and not cfg.enc_schedule and not self._n_prefix
+            and cfg.rope_theta > 0)
+        self._slot_blocks: List[List[int]] = [[] for _ in range(batch_size)]
+        self._tables_dev = None            # device copy, rebuilt when dirty
+        self._admit_seq = 0
+        # token/pos live HOST-side: per-slot updates (prefill landing, chunk
+        # completion) index by a python int, and a device `.at[b].set()`
+        # would jit-compile once per distinct slot index — a 20-50ms spike
+        # in the middle of serving.  [B] int32 transfers per step are noise.
+        self.tokens = np.zeros((batch_size,), np.int32)
+        self.pos = np.zeros((batch_size,), np.int32)
+        self.lane = zero_lane(batch_size)
+        self.slots: List[Optional[GenerateTask]] = [None] * batch_size
+        # slots holding a task whose prompt is still chunk-prefilling: their
+        # table rows stay out of the decode tables and their token/pos rows
+        # are garbage until the final chunk lands
+        self.prefilling: List[bool] = [False] * batch_size
+        self.steps_run = 0
+
+    # -- capacity / bucket geometry ------------------------------------
+    @property
+    def prompt_cap(self) -> int:
+        """Longest admissible prompt (one decode position + patch prefix
+        reserved)."""
+        return self.max_seq - 1 - self._n_prefix
+
+    def bucket_for(self, prompt_len: int) -> int:
+        """Prefill length bucket for a prompt: smallest rung of
+        {m, 1.5m} x 2^k >= max(min_bucket, len), capped at the token budget
+        (max_seq minus any patch prefix); exact length for archs whose
+        caches cannot absorb padding."""
+        if not self._pad_buckets:
+            return prompt_len
+        return self._bucket(prompt_len)
+
+    def encode_bucket_for(self, prompt_len: int) -> int:
+        """Length bucket for an EncodeTask batch (no cache: exactness is
+        about attention masks, not cache state — see _encode_pad)."""
+        if not self._encode_pad:
+            return prompt_len
+        return self._bucket(prompt_len)
+
+    def _bucket(self, n: int) -> int:
+        cap = self.max_seq - self._n_prefix
+        base = self.min_bucket
+        while True:
+            for cand in (base, base + base // 2):
+                if cand >= n or cand >= cap:
+                    return min(cand, cap)
+            base *= 2
+
+    # -- step compilation caches ---------------------------------------
+    def _prefill_for(self, bucket: int, group: int,
+                     stats: EngineStats) -> steps_mod.StepBundle:
+        step = self._prefill_steps.get((bucket, group))
+        if step is None:
+            pshape = ShapeConfig(f"engine_prefill_{bucket}x{group}",
+                                 "prefill", bucket, group)
+            step = steps_mod.make_prefill_step(
+                self.cfg, pshape, self.mesh, policy=self.policy,
+                max_seq=self.max_seq, with_sampling=True,
+                compact_kv=self.paged)
+            self._prefill_steps[(bucket, group)] = step
+            stats.prefill_compiles += 1
+        return step
+
+    def _encode_for(self, bucket: int, group: int, pooling: str,
+                    stats: EngineStats) -> steps_mod.StepBundle:
+        step = self._encode_steps.get((bucket, group, pooling))
+        if step is None:
+            eshape = ShapeConfig(f"engine_encode_{bucket}x{group}",
+                                 "prefill", bucket + self._n_prefix, group)
+            step = steps_mod.make_encode_step(
+                self.cfg, eshape, self.mesh, policy=self.policy,
+                pooling=pooling)
+            self._encode_steps[(bucket, group, pooling)] = step
+            stats.encode_compiles += 1
+        return step
+
+    def _chunk_for(self, chunk_tokens: int) -> steps_mod.StepBundle:
+        step = self._chunk_steps.get(chunk_tokens)
+        if step is None:
+            cshape = ShapeConfig(f"engine_chunk_{chunk_tokens}", "decode",
+                                 self.max_seq, 1)
+            step = steps_mod.make_chunk_prefill_step(
+                self.cfg, cshape, self.mesh, layout=self.layout,
+                chunk_tokens=chunk_tokens, policy=self.policy,
+                max_seq=self.max_seq, with_sampling=True)
+            self._chunk_steps[chunk_tokens] = step
+        return step
+
+    # -- slot / pool bookkeeping ---------------------------------------
+    def free_slots(self) -> List[int]:
+        return [b for b in range(self.B) if self.slots[b] is None]
+
+    def running(self) -> List[GenerateTask]:
+        return [t for t in self.slots if t is not None]
+
+    def has_running(self) -> bool:
+        return any(s is not None for s in self.slots)
+
+    def full_prompt(self, task: GenerateTask) -> np.ndarray:
+        """The token sequence a (re-)prefill must encode: the prompt plus
+        any tokens already generated before a preemption."""
+        if not task.output:
+            return np.asarray(task.prompt, np.int32)
+        return np.concatenate([np.asarray(task.prompt, np.int32),
+                               np.asarray(task.output, np.int32)])
+
+    def full_len(self, task: GenerateTask) -> int:
+        """len(full_prompt(task)) without materializing it."""
+        return task.prompt_len + len(task.output)
+
+    def blocks_needed(self, task: GenerateTask) -> int:
+        return self.allocator.blocks_for(self._n_prefix + self.full_len(task))
+
+    def alloc_for(self, task: GenerateTask) -> Optional[List[int]]:
+        """All-or-nothing block allocation for (re-)admitting `task`."""
+        if not self.paged:
+            return []
+        return self.allocator.alloc(self.blocks_needed(task))
+
+    def release_slot(self, b: int):
+        if self.paged and self._slot_blocks[b]:
+            self.allocator.free(self._slot_blocks[b])
+        self._slot_blocks[b] = []
+        if self.paged:
+            self.block_tables[b, :] = -1
+            self._tables_dev = None
+        self.slots[b] = None
+        self.prefilling[b] = False
+
+    def evict(self, b: int) -> GenerateTask:
+        """Pull the task out of slot `b`, freeing its blocks (recompute
+        preemption: the engine re-queues it; a mid-chunk prefill restarts
+        from scratch on re-admission)."""
+        task = self.slots[b]
+        task.prefilled = 0
+        self.release_slot(b)
+        return task
+
+    def _tables(self):
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self.block_tables)
+        return self._tables_dev
+
+    def ensure_decode_blocks(
+            self, select_victim: Callable[[Sequence[Task]], Task],
+            stats: EngineStats) -> List[GenerateTask]:
+        """Before a decode step: every decoding slot must own the block its
+        next token lands in (pos // block_size).  Allocation failure evicts
+        `select_victim(running)` until it succeeds; returns the evicted
+        tasks (the engine re-queues them)."""
+        if not self.paged:
+            return []
+        evicted: List[GenerateTask] = []
+        bs = self.layout.block_size
+        pos = np.asarray(self.pos)
+        for b in range(self.B):
+            if self.slots[b] is None or self.prefilling[b]:
+                continue
+            need = int(pos[b]) // bs + 1
+            if need > self.allocator.num_blocks:
+                # impossible to ever satisfy — fail before preempting (and
+                # discarding) every other in-flight request's progress
+                raise RuntimeError(
+                    f"KV pool too small: request {self.slots[b].uid} needs "
+                    f"{need} blocks, pool capacity is "
+                    f"{self.allocator.num_blocks} (raise kv_pool_blocks, "
+                    f"raise block_size, or cap max_new_tokens)")
+            while (self.slots[b] is not None
+                   and len(self._slot_blocks[b]) < need):
+                got = self.allocator.alloc(1)
+                if got is not None:
+                    self.block_tables[b, len(self._slot_blocks[b])] = got[0]
+                    self._slot_blocks[b].extend(got)
+                    self._tables_dev = None
+                    continue
+                cand = self.running()
+                if not cand:
+                    raise RuntimeError(
+                        "KV pool exhausted with no running request to "
+                        "preempt")
+                victim = select_victim(cand)
+                vb = self.slots.index(victim)
+                evicted.append(self.evict(vb))
+                stats.preemptions += 1
+        return evicted
+
+    # -- execution: batched whole-prompt prefill -----------------------
+    def prefill(self, group: List[Tuple[GenerateTask, List[int]]],
+                free_slots: List[int], stats: EngineStats,
+                ) -> List[Tuple[GenerateTask, int]]:
+        """One batched NAR pass for an admission group, scattering its KV
+        into the assigned blocks (paged) / slot rows (dense).  Returns
+        (task, output index) pairs for the freshly sampled first tokens."""
+        tasks = [t for t, _ in group]
+        fulls = [self.full_prompt(t) for t in tasks]
+        bucket = self.bucket_for(len(fulls[0]))
+        n = len(tasks)
+        step = self._prefill_for(bucket, n, stats)
+        t0 = time.perf_counter()
+        padded = np.zeros((n, bucket), np.int32)
+        for j, seq in enumerate(fulls):
+            padded[j, :len(seq)] = seq
+        batch = {"tokens": jnp.asarray(padded)}
+        if self.cfg.n_patches:
+            batch["patches"] = jnp.zeros(
+                (n, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.enc_schedule:
+            batch["frames"] = jnp.zeros(
+                (n, self.cfg.enc_seq_padded, self.cfg.d_model), jnp.bfloat16)
+        tok, caches_g, pos_g = step.fn(
+            self.params, batch,
+            stack_prefill_lanes([t.sampling for t in tasks],
+                                [len(f) for f in fulls]))
+
+        slots = free_slots[:n]
+        if self.paged:
+            tables = np.full((n, self.layout.max_blocks), -1, np.int32)
+            for j, (_, blk) in enumerate(group):
+                tables[j, :len(blk)] = blk
+        else:
+            tables = np.zeros((n, 1), np.int32)      # unused by the scatter
+        self.caches = self._scatter(self.caches, caches_g,
+                                    jnp.asarray(slots, jnp.int32),
+                                    jnp.asarray(tables))
+        tok_np = np.asarray(tok)
+        self.tokens[slots] = tok_np
+        self.pos[slots] = np.asarray(pos_g)
+        now = time.perf_counter()
+        dt_ms = (now - t0) * 1e3
+
+        fresh: List[Tuple[GenerateTask, int]] = []
+        n_first = 0
+        for j, (task, blk) in enumerate(group):
+            b = slots[j]
+            first_admit = not task.output
+            task.bucket = bucket
+            task.prefill_ms += dt_ms / n   # amortized share of the group
+            task.prefilled = len(fulls[j])
+            task.output.append(int(tok_np[j]))
+            self._seat(task, b, blk)
+            if self.paged:
+                self.block_tables[b] = tables[j]
+                self._tables_dev = None
+            fresh.append((task, len(task.output) - 1))
+            stats.bucket_hits[bucket] = stats.bucket_hits.get(bucket, 0) + 1
+            if first_admit:
+                n_first += 1
+                task.ttft_ms = (now - task._t_submit) * 1e3
+                stats.nar_tokens += task.prompt_len
+                stats.padded_nar_tokens += bucket
+                stats.add_ttft_ms(task.ttft_ms)
+            else:
+                stats.recompute_tokens += len(fulls[j])
+        # preemption recomputes are overhead, not prompt-encoding goodput:
+        # split the group's wall time so nar_tok_s stays comparable between
+        # preempting and non-preempting runs
+        stats.nar_time_s += (now - t0) * n_first / n
+        stats.recompute_time_s += (now - t0) * (n - n_first) / n
+        return fresh
+
+    def _seat(self, task: GenerateTask, b: int, blk: List[int]):
+        task._seq = self._admit_seq
+        self._admit_seq += 1
+        self.lane = set_lane(self.lane, b, task.sampling)
+        self.slots[b] = task
+        self.prefilling[b] = False
+        self._slot_blocks[b] = list(blk)
+
+    # -- execution: chunked prefill ------------------------------------
+    def begin_chunked(self, task: GenerateTask, blk: List[int], b: int):
+        """Park `task` in slot `b` with its full block allocation, in the
+        prefilling state: its table row stays OUT of the decode tables (so
+        interleaved decode steps drop every write to it) until the final
+        chunk lands in `chunk_step`."""
+        assert self.supports_chunked
+        self._seat(task, b, blk)
+        self.prefilling[b] = True
+        task.prefilled = 0
+
+    def chunk_step(self, task: GenerateTask, chunk_tokens: int,
+                   stats: EngineStats) -> Optional[Tuple[GenerateTask, int]]:
+        """Advance one <= `chunk_tokens`-sized prefill piece for `task`.
+        Returns the (task, output index) first-token event when this chunk
+        completes the prompt (the slot then joins decode), else None."""
+        b = self.slots.index(task)
+        assert self.prefilling[b], task.uid
+        full = self.full_prompt(task)
+        start = task.prefilled
+        step = self._chunk_for(chunk_tokens)
+        t0 = time.perf_counter()
+        C = chunk_tokens
+        take = min(C, len(full) - start)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :take] = full[start:start + take]
+        row_table = np.full((1, self.layout.max_blocks), -1, np.int32)
+        row_table[0, :len(self._slot_blocks[b])] = self._slot_blocks[b]
+        lane = stack_lanes([task.sampling])
+        tok, self.caches, pos_end = step.fn(
+            self.params, jnp.asarray(chunk),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray([take], jnp.int32),
+            self.caches, jnp.asarray(row_table), lane)
+        tok_np = int(np.asarray(tok)[0])          # blocks: honest timing
+        pos_np = int(np.asarray(pos_end)[0])
+        now = time.perf_counter()
+        task.prefilled = start + take
+        task.prefill_ms += (now - t0) * 1e3
+        first_admit = not task.output
+        if first_admit:
+            stats.nar_tokens += take
+            stats.padded_nar_tokens += C
+            stats.nar_time_s += now - t0
+        else:
+            stats.recompute_tokens += take
+            stats.recompute_time_s += now - t0
+        stats.prefill_chunks += 1
+        stats.chunked_prefill_tokens += take
+        if task.prefilled < len(full):
+            return None
+        # final chunk: the sampled token is the prompt's first output and
+        # the slot joins the decode batch
+        task.bucket = -(-len(full) // chunk_tokens) * chunk_tokens
+        task.output.append(tok_np)
+        self.tokens[b] = tok_np
+        self.pos[b] = pos_np
+        self.prefilling[b] = False
+        if self.paged:
+            self.block_tables[b] = row_table[0]
+            self._tables_dev = None
+        if first_admit:
+            task.ttft_ms = (now - task._t_submit) * 1e3
+            stats.add_ttft_ms(task.ttft_ms)
+        return (task, len(task.output) - 1)
+
+    # -- execution: AR decode ------------------------------------------
+    def decode(self, stats: EngineStats) -> List[Tuple[GenerateTask, int]]:
+        """One lockstep AR step over every decoding slot.  Returns the
+        (task, output index) token events."""
+        t0 = time.perf_counter()
+        tok_d = jnp.asarray(self.tokens)
+        pos_d = jnp.asarray(self.pos)
+        lane_d = device_lane(self.lane)
+        if self.paged:
+            tok_d, pos_d, self.caches = self.decode_step.fn(
+                self.params, tok_d, pos_d, self.caches,
+                self._tables(), lane_d)
+        else:
+            tok_d, pos_d, self.caches = self.decode_step.fn(
+                self.params, tok_d, pos_d, self.caches, lane_d)
+        toks = np.asarray(tok_d)                  # blocks: honest timing
+        self.tokens = np.array(toks, np.int32)
+        self.pos = np.array(pos_d, np.int32)
+        dt = time.perf_counter() - t0
+        self.steps_run += 1
+        occupied = live_tokens = 0
+        pos_np = np.asarray(self.pos)
+        fresh: List[Tuple[GenerateTask, int]] = []
+        for b, task in enumerate(self.slots):
+            if task is None or self.prefilling[b]:
+                continue
+            occupied += 1
+            live_tokens += int(pos_np[b])
+            task.output.append(int(toks[b]))
+            task.decode_ms += dt * 1e3
+            fresh.append((task, len(task.output) - 1))
+        stats.decode_steps += 1
+        stats.ar_tokens += occupied
+        stats.ar_time_s += dt
+        stats.add_decode_step_ms(dt * 1e3)
+        stats.occupied_slot_steps += occupied
+        if self.paged:
+            stats.block_slot_steps += self.allocator.num_used
+            stats.token_slot_steps += live_tokens
+        return fresh
+
+    def decoding_slots(self) -> List[int]:
+        return [b for b in range(self.B)
+                if self.slots[b] is not None and not self.prefilling[b]]
+
+    # -- execution: encoder-only NAR -----------------------------------
+    def encode(self, group: List[EncodeTask], stats: EngineStats):
+        """One pooled full-sequence pass for a same-bucket batch of
+        EncodeTasks (and same pooling mode).  Fills task.embedding."""
+        assert group and len({t.pooling for t in group}) == 1
+        n = len(group)
+        lens = [t.prompt_len for t in group]
+        bucket = self.encode_bucket_for(max(lens))
+        step = self._encode_for(bucket, n, group[0].pooling, stats)
+        t0 = time.perf_counter()
+        padded = np.zeros((n, bucket), np.int32)
+        for j, task in enumerate(group):
+            padded[j, :task.prompt_len] = np.asarray(task.prompt, np.int32)
+        batch = {"tokens": jnp.asarray(padded)}
+        if self.cfg.n_patches:
+            batch["patches"] = jnp.zeros(
+                (n, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.enc_schedule:
+            batch["frames"] = jnp.zeros(
+                (n, self.cfg.enc_seq_padded, self.cfg.d_model), jnp.bfloat16)
+        pooled = step.fn(self.params, batch, jnp.asarray(lens, jnp.int32))
+        pooled_np = np.asarray(pooled)            # blocks: honest timing
+        now = time.perf_counter()
+        dt = now - t0
+        for j, task in enumerate(group):
+            task.bucket = bucket
+            task.embedding = pooled_np[j]
+            task.encode_ms = dt * 1e3 / n
+            task.latency_ms = (now - task._t_submit) * 1e3
+            task.done = True
+            stats.encode_tokens += task.prompt_len
+            stats.padded_encode_tokens += bucket
+            stats.add_encode_latency_ms(task.latency_ms)
+            stats.bucket_hits[bucket] = stats.bucket_hits.get(bucket, 0) + 1
+        stats.encode_time_s += dt
+        stats.encode_batches += 1

@@ -13,6 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -47,25 +48,43 @@ GREEDY = SamplingParams()
 
 
 def zero_lane(batch_size: int) -> dict:
-    """Fresh per-slot lane arrays (all slots greedy) for a decode batch."""
-    return {"temperature": jnp.zeros((batch_size,), jnp.float32),
-            "top_k": jnp.zeros((batch_size,), jnp.int32),
-            "seed": jnp.zeros((batch_size,), jnp.int32)}
+    """Fresh per-slot lane arrays (all slots greedy) for a decode batch.
+
+    HOST-side numpy: slot updates index by a python int, and a device
+    `.at[slot].set()` would jit-compile once per distinct slot index; the
+    engine converts at the step-call boundary instead."""
+    return {"temperature": np.zeros((batch_size,), np.float32),
+            "top_k": np.zeros((batch_size,), np.int32),
+            "seed": np.zeros((batch_size,), np.int32)}
 
 
 def set_lane(lane: dict, slot: int, params: SamplingParams) -> dict:
-    """Scatter one request's SamplingParams into slot `slot`."""
-    return {"temperature": lane["temperature"].at[slot].set(params.temperature),
-            "top_k": lane["top_k"].at[slot].set(params.top_k),
-            "seed": lane["seed"].at[slot].set(params.seed)}
+    """Scatter one request's SamplingParams into slot `slot` (functional:
+    the input lane is not mutated)."""
+    out = {k: v.copy() for k, v in lane.items()}
+    out["temperature"][slot] = params.temperature
+    out["top_k"][slot] = params.top_k
+    out["seed"][slot] = params.seed
+    return out
+
+
+def device_lane(lane: dict) -> dict:
+    """Host lane -> device arrays for a jitted step call."""
+    return {k: jnp.asarray(v) for k, v in lane.items()}
+
+
+def stack_lanes(params_list) -> dict:
+    """[n] lane arrays for a row batch of SamplingParams (the schema the
+    jitted steps consume; chunked-prefill rows use this directly)."""
+    return {"temperature": jnp.asarray([p.temperature for p in params_list],
+                                       jnp.float32),
+            "top_k": jnp.asarray([p.top_k for p in params_list], jnp.int32),
+            "seed": jnp.asarray([p.seed for p in params_list], jnp.int32)}
 
 
 def stack_prefill_lanes(params_list, prompt_lens) -> dict:
     """[nB] lane for a batched-admission prefill: one admission group's
     SamplingParams and true prompt lengths, row-aligned with the padded
     token batch."""
-    return {"temperature": jnp.asarray([p.temperature for p in params_list],
-                                       jnp.float32),
-            "top_k": jnp.asarray([p.top_k for p in params_list], jnp.int32),
-            "seed": jnp.asarray([p.seed for p in params_list], jnp.int32),
-            "prompt_len": jnp.asarray(list(prompt_lens), jnp.int32)}
+    return dict(stack_lanes(params_list),
+                prompt_len=jnp.asarray(list(prompt_lens), jnp.int32))

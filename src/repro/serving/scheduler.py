@@ -1,0 +1,136 @@
+"""Pluggable scheduling policies for the serving engine.
+
+The engine's step loop is policy-free mechanics (queue -> policy -> runner);
+everything *discretionary* — admission order, preemption victim choice, and
+whether long prompts prefill whole or in token-budget chunks — lives behind
+`SchedulerPolicy`:
+
+  FCFSPolicy            arrival order, youngest-admitted preemption victim:
+                        byte-for-byte the pre-split engine's behavior.
+  PriorityPolicy        effective priority = priority + age / aging_s, so a
+                        starving low-priority task eventually outranks fresh
+                        high-priority arrivals (priority inversion is bounded
+                        by aging_s * delta_priority seconds).  Preemption
+                        evicts the lowest-effective-priority running task.
+  ChunkedPrefillPolicy  FCFS ordering + `chunk_tokens`: prompts longer than
+                        the budget prefill in fixed-size chunks interleaved
+                        with decode steps (serving/runner.py carries chunk
+                        state in the paged block tables), so admitting a
+                        long prompt never stalls running AR slots for the
+                        whole prefill.
+
+Policies are pure ordering/selection logic over host-side `Task` objects —
+they never touch device state, steps, or caches, which is what makes them
+pluggable: a new policy is a subclass, not an engine fork.
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from typing import List, Optional, Sequence
+
+from repro.serving.tasks import Task
+
+
+class SchedulerPolicy(ABC):
+    """Admission ordering + preemption victim selection.
+
+    `chunk_tokens`: None => whole-prompt prefill; an int => the engine asks
+    the runner to prefill at most this many prompt tokens per engine step
+    for prompts that exceed it (falls back to whole-prompt prefill on archs
+    whose cache layout cannot carry chunk state — see
+    ModelRunner.supports_chunked).
+    """
+
+    name: str = "policy"
+    chunk_tokens: Optional[int] = None
+
+    @abstractmethod
+    def admission_order(self, queue: Sequence[Task],
+                        now: float) -> List[Task]:
+        """The queue in the order admission should consider it (a new list;
+        the engine's queue itself is arrival-ordered and never reordered —
+        completed/admitted entries are removed by identity)."""
+
+    def select_victim(self, running: Sequence[Task], now: float) -> Task:
+        """The running task to preempt when the KV pool is exhausted.
+        Default: the most recently admitted (youngest) — it has the least
+        decode progress to recompute."""
+        return max(running, key=lambda t: t._seq)
+
+
+class FCFSPolicy(SchedulerPolicy):
+    """First-come-first-served: today's (pre-split) engine behavior."""
+
+    name = "fcfs"
+
+    def admission_order(self, queue: Sequence[Task],
+                        now: float) -> List[Task]:
+        return list(queue)
+
+
+class PriorityPolicy(SchedulerPolicy):
+    """Priority + age ordering with bounded inversion.
+
+    effective(t) = t.priority + t.age_s(now) / aging_s
+
+    A task of priority p waiting longer than `aging_s * (q - p)` seconds
+    outranks a fresh task of priority q, so no task starves.  Tasks with a
+    `deadline_ms` get a second boost as the deadline approaches (urgency
+    grows linearly to +`deadline_boost` at the deadline)."""
+
+    name = "priority"
+
+    def __init__(self, aging_s: float = 10.0, deadline_boost: float = 1.0):
+        assert aging_s > 0, aging_s
+        self.aging_s = aging_s
+        self.deadline_boost = deadline_boost
+
+    def effective_priority(self, task: Task, now: float) -> float:
+        p = task.priority + task.age_s(now) / self.aging_s
+        if task.deadline_ms is not None and task.deadline_ms > 0:
+            urgency = min(1.0, task.age_s(now) * 1e3 / task.deadline_ms)
+            p += self.deadline_boost * urgency
+        return p
+
+    def admission_order(self, queue: Sequence[Task],
+                        now: float) -> List[Task]:
+        # stable sort: equal effective priority keeps arrival order
+        return sorted(queue, key=lambda t: -self.effective_priority(t, now))
+
+    def select_victim(self, running: Sequence[Task], now: float) -> Task:
+        # evict the least important; among equals, the youngest (least
+        # decode progress lost to recompute)
+        return min(running, key=lambda t: (self.effective_priority(t, now),
+                                           -t._seq))
+
+
+class ChunkedPrefillPolicy(FCFSPolicy):
+    """FCFS admission, but long prompts prefill in `chunk_tokens`-sized
+    pieces interleaved with decode steps (continuous batching's chunked
+    prefill).  Token outputs are identical to FCFSPolicy — chunking changes
+    *when* prefill FLOPs run, never what they compute."""
+
+    name = "chunked"
+
+    def __init__(self, chunk_tokens: int = 32):
+        assert chunk_tokens >= 1, chunk_tokens
+        self.chunk_tokens = chunk_tokens
+
+
+POLICIES = {
+    "fcfs": FCFSPolicy,
+    "priority": PriorityPolicy,
+    "chunked": ChunkedPrefillPolicy,
+}
+
+
+def make_policy(name: str, *, chunk_tokens: Optional[int] = None,
+                aging_s: float = 10.0) -> SchedulerPolicy:
+    """CLI-friendly factory (launch/serve.py --policy)."""
+    if name == "fcfs":
+        return FCFSPolicy()
+    if name == "priority":
+        return PriorityPolicy(aging_s=aging_s)
+    if name == "chunked":
+        return ChunkedPrefillPolicy(chunk_tokens or 32)
+    raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}")

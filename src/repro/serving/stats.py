@@ -3,9 +3,12 @@
 `EngineStats` is the engine's live accumulator — NAR (prompt-encoding) and
 AR (decode) token counts and wall time are tracked separately, mirroring the
 paper's Sec. VI-A split, plus the serving-level signals every scheduler
-decision needs: TTFT percentiles, decode-slot occupancy, and prefill
-length-bucket hit/compile counts.  `launch/serve.py` and
-`benchmarks/serving_bench.py` consume it instead of print-scraping.
+decision needs: TTFT / queue-wait / decode-stall percentiles, decode-slot
+occupancy, prefill length-bucket hit/compile counts, chunked-prefill
+counters, and the per-task-class throughput split (generate vs encode —
+the paper's decoder and encoder topologies sharing one engine).
+`launch/serve.py` and `benchmarks/serving_bench.py` consume it instead of
+print-scraping.
 """
 from __future__ import annotations
 
@@ -48,8 +51,22 @@ class EngineStats:
     decode_steps: int = 0
     occupied_slot_steps: int = 0   # occupied decode-slot-steps (occupancy)
     decode_step_ms: List[float] = field(default_factory=list)
+    # -- encoder-only (EncodeTask) ------------------------------------------
+    encode_tokens: int = 0         # true tokens through pooled passes
+    padded_encode_tokens: int = 0  # incl. length-bucket padding computed
+    encode_time_s: float = 0.0
+    encode_batches: int = 0        # batched pooled passes run
+    encode_compiles: int = 0       # distinct (bucket, group, pooling) steps
+    encode_latency_ms: List[float] = field(default_factory=list)
+    # -- chunked prefill ----------------------------------------------------
+    prefill_chunks: int = 0        # chunk steps run
+    chunked_prefill_tokens: int = 0  # true prompt tokens through chunks
     # -- serving-level ------------------------------------------------------
     ttft_ms: List[float] = field(default_factory=list)
+    queue_wait_ms: List[float] = field(default_factory=list)
+    # gap between consecutive decode steps while slots were decoding: the
+    # time running AR requests sat stalled behind admission work
+    decode_stall_ms: List[float] = field(default_factory=list)
     bucket_hits: Dict[int, int] = field(default_factory=dict)
     prefill_compiles: int = 0      # distinct (bucket, group-size) compiled
     # -- paged KV pool ------------------------------------------------------
@@ -69,6 +86,15 @@ class EngineStats:
     def add_decode_step_ms(self, v: float) -> None:
         _bounded_append(self.decode_step_ms, v)
 
+    def add_queue_wait_ms(self, v: float) -> None:
+        _bounded_append(self.queue_wait_ms, v)
+
+    def add_decode_stall_ms(self, v: float) -> None:
+        _bounded_append(self.decode_stall_ms, v)
+
+    def add_encode_latency_ms(self, v: float) -> None:
+        _bounded_append(self.encode_latency_ms, v)
+
     # -- derived ------------------------------------------------------------
     @property
     def nar_tok_s(self) -> float:
@@ -79,6 +105,18 @@ class EngineStats:
     def ar_tok_s(self) -> float:
         """AR decode throughput (generated tokens / s)."""
         return self.ar_tokens / self.ar_time_s if self.ar_time_s else 0.0
+
+    @property
+    def encode_tok_s(self) -> float:
+        """Encoder-only throughput (true tokens through pooled passes / s) —
+        the per-task-class split's encode side (generate side: nar/ar)."""
+        return (self.encode_tokens / self.encode_time_s
+                if self.encode_time_s else 0.0)
+
+    @property
+    def encode_completed(self) -> int:
+        """EncodeTasks finished (== latency samples; bounded window)."""
+        return len(self.encode_latency_ms)
 
     @property
     def slot_occupancy(self) -> float:
@@ -102,12 +140,36 @@ class EngineStats:
         return percentile(self.ttft_ms, 95)
 
     @property
+    def queue_wait_p50_ms(self) -> float:
+        return percentile(self.queue_wait_ms, 50)
+
+    @property
+    def queue_wait_p95_ms(self) -> float:
+        return percentile(self.queue_wait_ms, 95)
+
+    @property
     def decode_step_p50_ms(self) -> float:
         return percentile(self.decode_step_ms, 50)
 
     @property
     def decode_step_p95_ms(self) -> float:
         return percentile(self.decode_step_ms, 95)
+
+    @property
+    def decode_stall_p50_ms(self) -> float:
+        return percentile(self.decode_stall_ms, 50)
+
+    @property
+    def decode_stall_p95_ms(self) -> float:
+        return percentile(self.decode_stall_ms, 95)
+
+    @property
+    def encode_latency_p50_ms(self) -> float:
+        return percentile(self.encode_latency_ms, 50)
+
+    @property
+    def encode_latency_p95_ms(self) -> float:
+        return percentile(self.encode_latency_ms, 95)
 
     @property
     def pool_utilization(self) -> float:
@@ -142,10 +204,25 @@ class EngineStats:
             "decode_steps": self.decode_steps,
             "slot_occupancy": self.slot_occupancy,
             "padding_overhead": self.padding_overhead,
+            "encode_tokens": self.encode_tokens,
+            "padded_encode_tokens": self.padded_encode_tokens,
+            "encode_time_s": self.encode_time_s,
+            "encode_tok_s": self.encode_tok_s,
+            "encode_batches": self.encode_batches,
+            "encode_compiles": self.encode_compiles,
+            "encode_completed": self.encode_completed,
+            "encode_latency_p50_ms": self.encode_latency_p50_ms,
+            "encode_latency_p95_ms": self.encode_latency_p95_ms,
+            "prefill_chunks": self.prefill_chunks,
+            "chunked_prefill_tokens": self.chunked_prefill_tokens,
             "ttft_p50_ms": self.ttft_p50_ms,
             "ttft_p95_ms": self.ttft_p95_ms,
+            "queue_wait_p50_ms": self.queue_wait_p50_ms,
+            "queue_wait_p95_ms": self.queue_wait_p95_ms,
             "decode_step_p50_ms": self.decode_step_p50_ms,
             "decode_step_p95_ms": self.decode_step_p95_ms,
+            "decode_stall_p50_ms": self.decode_stall_p50_ms,
+            "decode_stall_p95_ms": self.decode_stall_p95_ms,
             "bucket_hits": {str(k): v
                             for k, v in sorted(self.bucket_hits.items())},
             "prefill_compiles": self.prefill_compiles,
@@ -166,9 +243,19 @@ class EngineStats:
                     f"({self.peak_blocks_used}/{self.kv_pool_blocks} x "
                     f"{self.kv_block_size}-token blocks, "
                     f"{self.preemptions} preempt)")
+        enc = ""
+        if self.encode_batches:
+            enc = (f" | ENC {self.encode_tok_s:8.1f} tok/s "
+                   f"({self.encode_completed} reqs, p95 "
+                   f"{self.encode_latency_p95_ms:.0f}ms)")
+        chunk = ""
+        if self.prefill_chunks:
+            chunk = (f" | chunked {self.chunked_prefill_tokens} tok in "
+                     f"{self.prefill_chunks} chunks, decode-stall p95 "
+                     f"{self.decode_stall_p95_ms:.0f}ms")
         return (f"NAR {self.nar_tok_s:8.1f} tok/s ({self.nar_tokens} prompt "
                 f"tokens, {self.padding_overhead:.0%} pad) | "
                 f"AR {self.ar_tok_s:8.1f} tok/s ({self.ar_tokens} tokens, "
                 f"occupancy {self.slot_occupancy:.0%}) | "
                 f"TTFT p50 {self.ttft_p50_ms:.0f}ms p95 "
-                f"{self.ttft_p95_ms:.0f}ms" + pool)
+                f"{self.ttft_p95_ms:.0f}ms" + enc + chunk + pool)

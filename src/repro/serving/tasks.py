@@ -1,0 +1,125 @@
+"""Task hierarchy for the serving stack.
+
+A `Task` is *what a client wants*; the scheduler (serving/scheduler.py)
+decides *when* it runs and the `ModelRunner` (serving/runner.py) decides
+*how*.  Two concrete task classes cover the paper's two topologies:
+
+  GenerateTask   decoder-LM request: NAR prefill + AR decode loop, streaming
+                 tokens (subsumes the pre-split `Request` — that name stays
+                 importable as an alias and every old field keeps working).
+  EncodeTask     encoder-only request: one NAR full-sequence forward pass
+                 (the paper's 12.8x-speedup topology), returning a pooled
+                 embedding — no KV cache, no decode slot, no AR steps.
+
+Both carry `priority` (higher = more urgent; only PriorityPolicy looks at
+it) and `deadline_ms` (advisory latency budget from submission; exposed to
+policies for deadline-aware ordering, never enforced by the engine).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.sampling import SamplingParams
+
+
+def _require_keyword_prompt(task: "Task") -> None:
+    """The Task base fields (priority, deadline_ms, ...) sit between `uid`
+    and the subclass' `prompt`, so the pre-split `Request(0, tokens)`
+    positional form would silently land the prompt in `priority` — fail
+    loudly instead of misbehaving later."""
+    if task.prompt is None:
+        extra = ""
+        if isinstance(task.priority, np.ndarray):
+            extra = (" (an array landed in `priority`: positional "
+                     "construction is no longer supported)")
+        raise TypeError(
+            f"{type(task).__name__} requires `prompt`; pass fields by "
+            f"keyword, e.g. {type(task).__name__}(uid=0, prompt=tokens)"
+            + extra)
+
+
+@dataclass
+class Task:
+    """Common serving-request state.  `uid` must be unique per engine."""
+    uid: int
+    priority: int = 0                   # higher = scheduled sooner (policy)
+    deadline_ms: Optional[float] = None  # advisory latency budget (policy)
+    # filled by the engine:
+    prompt_len: int = 0                 # true token length (set at submit)
+    bucket: int = 0                     # padded batch length (set at admit)
+    queue_wait_ms: float = 0.0          # submit -> first admission
+    done: bool = False
+    _t_submit: float = field(default=0.0, repr=False)
+    _seq: int = field(default=0, repr=False)   # admission order (preemption)
+
+    def age_s(self, now: Optional[float] = None) -> float:
+        """Seconds this task has been waiting since submission."""
+        return max(0.0, (now if now is not None else time.perf_counter())
+                   - self._t_submit)
+
+
+@dataclass
+class GenerateTask(Task):
+    """Decoder-LM request: prefill the prompt, then decode up to
+    `max_new_tokens` AR steps (stopping early on `eos_id`)."""
+    prompt: np.ndarray = None           # [S_prompt] int32, any length
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    prefill_ms: float = 0.0             # amortized share of group prefills
+    decode_ms: float = 0.0
+    ttft_ms: float = 0.0                # submit -> first token
+    # chunked-prefill progress: prompt tokens whose KV is already in the
+    # cache (0 = not admitted / whole-prompt prefill; == full length once
+    # the final chunk lands and the first token is sampled)
+    prefilled: int = 0
+
+    def __post_init__(self):
+        _require_keyword_prompt(self)
+
+    def remaining_prefill(self) -> int:
+        return self.prompt_len + len(self.output) - self.prefilled
+
+
+@dataclass
+class EncodeTask(Task):
+    """Encoder-only request: one full-sequence forward, pooled output.
+
+    pooling   "last" — residual of the final true position (causal-LM
+                        sentence embedding; equals the hidden state a
+                        prefill would sample from)
+              "mean" — masked mean over the true positions (BERT-style)
+    """
+    prompt: np.ndarray = None           # [S_prompt] int32, any length
+    pooling: str = "last"
+    # filled by the engine:
+    embedding: Optional[np.ndarray] = None   # [d_model] float32 result
+    encode_ms: float = 0.0              # amortized share of the batched pass
+    latency_ms: float = 0.0             # submit -> result
+
+    def __post_init__(self):
+        _require_keyword_prompt(self)
+        if self.pooling not in ("last", "mean"):
+            raise ValueError(f"pooling must be 'last' or 'mean': "
+                             f"{self.pooling!r}")
+
+
+# The pre-split engine exposed a single `Request` class; it was exactly
+# today's GenerateTask.  Old call sites (serve.py traces, tests, benches)
+# construct it with the same keyword fields and keep working unmodified.
+Request = GenerateTask
+
+
+@dataclass(frozen=True)
+class TokenEvent:
+    """One streamed token: emitted by `InferenceEngine.generate()` the
+    moment the engine step that produced it completes."""
+    uid: int
+    token: int
+    is_last: bool

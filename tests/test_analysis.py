@@ -54,12 +54,12 @@ def test_collective_bytes_counted():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.analysis.hlo import parse_hlo
-        mesh = jax.make_mesh((4,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.core.collectives import shard_map
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((4,), ("d",))
         def f(x):
             return jax.lax.psum(x, "d")
-        sm = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
-                           check_vma=False)
+        sm = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
         c = jax.jit(sm).lower(
             jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
         s = parse_hlo(c.as_text())

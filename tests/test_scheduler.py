@@ -1,0 +1,321 @@
+"""Scheduler / ModelRunner split: policy-order properties, chunked-prefill
+token identity, EncodeTask parity, and mixed encode+generate batches.
+
+Policy-order properties are pure host-side logic (no model); the
+end-to-end checks run the reduced phi4 config on one device like
+tests/test_serving.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core.precision import FP32
+from repro.models import frontends, lm
+from repro.serving import (ChunkedPrefillPolicy, EncodeTask, FCFSPolicy,
+                           InferenceEngine, PriorityPolicy, Request,
+                           SamplingParams, make_policy)
+from repro.serving.tasks import GenerateTask
+from repro.sharding.plan import UNSHARDED
+
+
+# --------------------------------------------------------------------------
+# policy-order properties (no model)
+# --------------------------------------------------------------------------
+
+def _tasks(specs, now):
+    """specs: (uid, priority, age_s) -> GenerateTasks submitted in uid
+    order, `age_s` seconds ago."""
+    out = []
+    for uid, prio, age in specs:
+        t = GenerateTask(uid=uid, priority=prio,
+                         prompt=np.zeros((4,), np.int32))
+        t._t_submit = now - age
+        t._seq = uid
+        out.append(t)
+    return out
+
+
+def test_fcfs_order_is_arrival_order():
+    now = 1000.0
+    q = _tasks([(0, 5, 1.0), (1, 0, 0.5), (2, 9, 0.1)], now)
+    assert [t.uid for t in FCFSPolicy().admission_order(q, now)] == [0, 1, 2]
+
+
+def test_priority_order_and_stability():
+    now = 1000.0
+    q = _tasks([(0, 0, 0.1), (1, 2, 0.1), (2, 1, 0.1), (3, 2, 0.1)], now)
+    order = PriorityPolicy(aging_s=1e9).admission_order(q, now)
+    # priority desc; equal priority keeps arrival order (stable sort)
+    assert [t.uid for t in order] == [1, 3, 2, 0]
+
+
+def test_priority_inversion_bounded_by_aging():
+    """A low-priority task waiting longer than aging_s * delta_priority
+    outranks a fresh high-priority task — no starvation."""
+    now = 1000.0
+    pol = PriorityPolicy(aging_s=2.0)
+    fresh_hi = _tasks([(0, 3, 0.0)], now)[0]
+    old_lo = _tasks([(1, 0, 7.0)], now)[0]      # 7s > 2.0 * (3 - 0)
+    young_lo = _tasks([(2, 0, 1.0)], now)[0]
+    assert [t.uid for t in
+            pol.admission_order([fresh_hi, old_lo, young_lo], now)] == [
+        1, 0, 2]
+
+
+def test_priority_victim_is_least_important():
+    now = 1000.0
+    pol = PriorityPolicy(aging_s=1e9)
+    running = _tasks([(0, 5, 0.1), (1, 0, 0.1), (2, 3, 0.1)], now)
+    assert pol.select_victim(running, now).uid == 1
+    # FCFS evicts the youngest admitted regardless of priority
+    assert FCFSPolicy().select_victim(running, now).uid == 2
+
+
+def test_deadline_boosts_urgency():
+    now = 1000.0
+    pol = PriorityPolicy(aging_s=1e9, deadline_boost=5.0)
+    plain = _tasks([(0, 1, 0.5)], now)[0]
+    urgent = _tasks([(1, 1, 0.5)], now)[0]
+    urgent.deadline_ms = 600.0                   # 500ms into a 600ms budget
+    assert pol.admission_order([plain, urgent], now)[0].uid == 1
+
+
+def test_make_policy_factory():
+    assert isinstance(make_policy("fcfs"), FCFSPolicy)
+    assert isinstance(make_policy("priority"), PriorityPolicy)
+    p = make_policy("chunked", chunk_tokens=24)
+    assert isinstance(p, ChunkedPrefillPolicy) and p.chunk_tokens == 24
+    with pytest.raises(KeyError):
+        make_policy("nope")
+
+
+# --------------------------------------------------------------------------
+# end-to-end: policies on the reduced model
+# --------------------------------------------------------------------------
+
+def _phi4():
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+    return cfg, params
+
+
+def _run_engine(cfg, params, reqs, **kw):
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32, **kw)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    return engine, {t.uid: t for t in done}
+
+
+def _gen_reqs(cfg, lens, *, max_new=6, sampled=(), priorities=None):
+    rng = np.random.default_rng(31)
+    reqs = []
+    for uid, n in enumerate(lens):
+        reqs.append(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, n, dtype=np.int32),
+            max_new_tokens=max_new,
+            priority=(priorities or [0] * len(lens))[uid],
+            sampling=SamplingParams(temperature=0.8, top_k=20, seed=uid)
+            if uid in sampled else SamplingParams()))
+    return reqs
+
+
+def test_chunked_prefill_token_identical_to_fcfs():
+    """ChunkedPrefillPolicy must change WHEN prefill FLOPs run, never what
+    they compute: same request set, greedy and sampled, token-for-token."""
+    cfg, params = _phi4()
+    lens = (5, 40, 12, 33)                       # two prompts > chunk budget
+    base = _run_engine(cfg, params, _gen_reqs(cfg, lens, sampled=(1, 3)),
+                       scheduler=FCFSPolicy())[1]
+    eng, chunked = _run_engine(cfg, params,
+                               _gen_reqs(cfg, lens, sampled=(1, 3)),
+                               scheduler=ChunkedPrefillPolicy(16))
+    assert eng.runner.supports_chunked
+    st = eng.stats()
+    assert st.prefill_chunks >= 2 + 3            # ceil(40/16) + ceil(33/16)
+    assert st.chunked_prefill_tokens == 40 + 33
+    assert {u: t.output for u, t in chunked.items()} == {
+        u: t.output for u, t in base.items()}
+    # pool fully drained afterwards — chunk bookkeeping leaks no blocks
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_chunked_policy_falls_back_without_paged_full_attention():
+    """Archs whose cache cannot carry chunk state (sliding window here)
+    serve chunked-policy traffic through whole-prompt prefill, outputs
+    unchanged."""
+    cfg = get_config("gemma3-27b").reduced()
+    params = lm.init_lm(jax.random.key(1), cfg, jnp.float32)
+    reqs = _gen_reqs(cfg, (30, 9), max_new=3)
+    base = _run_engine(cfg, params, _gen_reqs(cfg, (30, 9), max_new=3),
+                       scheduler=FCFSPolicy())[1]
+    eng, got = _run_engine(cfg, params, reqs,
+                           scheduler=ChunkedPrefillPolicy(8))
+    assert not eng.runner.supports_chunked
+    assert eng.stats().prefill_chunks == 0
+    assert {u: t.output for u, t in got.items()} == {
+        u: t.output for u, t in base.items()}
+
+
+def test_priority_policy_reorders_admission():
+    """With one slot, the high-priority late arrival is served before the
+    earlier low-priority queue (and outputs stay per-request identical to
+    FCFS — ordering never leaks into the math)."""
+    cfg, params = _phi4()
+    reqs = _gen_reqs(cfg, (8, 8, 8), max_new=4, priorities=[0, 0, 5])
+    fcfs = InferenceEngine(cfg, params, batch_size=1, max_seq=64,
+                           policy=FP32, scheduler=FCFSPolicy())
+    prio = InferenceEngine(cfg, params, batch_size=1, max_seq=64,
+                           policy=FP32,
+                           scheduler=PriorityPolicy(aging_s=1e9))
+    for r in _gen_reqs(cfg, (8, 8, 8), max_new=4, priorities=[0, 0, 5]):
+        fcfs.submit(r)
+    for r in reqs:
+        prio.submit(r)
+    f_done = fcfs.run()
+    p_done = prio.run()
+    assert [t.uid for t in f_done] == [0, 1, 2]
+    assert [t.uid for t in p_done][0] == 2        # priority 5 served first
+    assert ({t.uid: t.output for t in p_done}
+            == {t.uid: t.output for t in f_done})
+
+
+# --------------------------------------------------------------------------
+# EncodeTask serving
+# --------------------------------------------------------------------------
+
+def _direct_encode(cfg, params, prompt, pooling):
+    batch = {"tokens": jnp.asarray(prompt)[None]}
+    return np.asarray(lm.forward_encode(params, batch, plan=UNSHARDED,
+                                        cfg=cfg, policy=FP32,
+                                        pooling=pooling))[0]
+
+
+def test_encode_task_matches_direct_forward():
+    """Engine EncodeTasks (batched, right-padded to buckets) == a direct
+    unpadded forward_encode, for both pooling modes."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (5, 8, 19)]
+    for pooling in ("last", "mean"):
+        engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                                 policy=FP32)
+        for uid, p in enumerate(prompts):
+            engine.submit(EncodeTask(uid=uid, prompt=p, pooling=pooling))
+        done = {t.uid: t for t in engine.run()}
+        assert len(done) == 3
+        for uid, p in enumerate(prompts):
+            ref = _direct_encode(cfg, params, p, pooling)
+            got = done[uid].embedding
+            assert got.shape == (cfg.d_model,)
+            np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+        st = engine.stats()
+        assert st.encode_tokens == 5 + 8 + 19
+        assert st.encode_batches >= 1 and st.encode_tok_s > 0
+        assert st.encode_latency_p95_ms >= st.encode_latency_p50_ms > 0
+
+
+def test_encode_last_pooling_equals_prefill_residual():
+    """pooling="last" is the hidden state a prefill would sample from: the
+    greedy token from the pooled embedding must equal the prefill's."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(43)
+    prompt = rng.integers(0, cfg.vocab, 11, dtype=np.int32)
+    emb = _direct_encode(cfg, params, prompt, "last")
+    from repro.core.embedding import greedy_token
+    tok = int(greedy_token(jnp.asarray(emb, jnp.float32)[None],
+                           params["embedding"]["unemb"], plan=UNSHARDED,
+                           cfg=cfg, policy=FP32)[0])
+    batch = {"tokens": jnp.asarray(prompt)[None]}
+    t_ref, _, _ = lm.forward_prefill(params, batch, plan=UNSHARDED, cfg=cfg,
+                                     policy=FP32, max_seq=64)
+    assert tok == int(t_ref[0])
+
+
+def _bert_style():
+    """Encoder-only bidirectional token encoder (BERT-style): `enc` kind,
+    served through the engine via exact-length encode batches (bidir
+    attention would attend pad positions, so no padding)."""
+    cfg = ModelConfig(
+        name="bert-tiny-test", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab=512,
+        schedule=(("enc", 2),), causal=False, mlp_act="gelu",
+        norm="layernorm", rope_theta=10_000.0, max_seq=64)
+    params = lm.init_lm(jax.random.key(7), cfg, jnp.float32)
+    return cfg, params
+
+
+def test_encoder_only_config_serves_exact_length():
+    cfg, params = _bert_style()
+    rng = np.random.default_rng(47)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (6, 6, 13)]
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32)
+    assert not engine.runner._encode_pad          # bidirectional: no pads
+    assert engine.runner.encode_bucket_for(13) == 13
+    for uid, p in enumerate(prompts):
+        engine.submit(EncodeTask(uid=uid, prompt=p, pooling="mean"))
+    done = {t.uid: t for t in engine.run()}
+    for uid, p in enumerate(prompts):
+        ref = _direct_encode(cfg, params, p, "mean")
+        np.testing.assert_allclose(done[uid].embedding, ref,
+                                   rtol=1e-5, atol=1e-5)
+    # the two length-6 prompts shared one exact-length batch
+    assert engine.stats().encode_batches == 2
+
+
+def test_mixed_encode_and_generate_batches():
+    """Encode and generate traffic through ONE engine: generate outputs
+    match a generate-only run, encode embeddings match direct forwards."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(53)
+    gen_reqs = _gen_reqs(cfg, (7, 21), max_new=5, sampled=(1,))
+    enc_prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+                   for n in (9, 14)]
+
+    base = _run_engine(cfg, params,
+                       _gen_reqs(cfg, (7, 21), max_new=5, sampled=(1,)))[1]
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32)
+    for r in gen_reqs:
+        engine.submit(r)
+    for j, p in enumerate(enc_prompts):
+        engine.submit(EncodeTask(uid=100 + j, prompt=p))
+    done = {t.uid: t for t in engine.run()}
+    assert len(done) == 4
+    for uid in (0, 1):
+        assert done[uid].output == base[uid].output
+    for j, p in enumerate(enc_prompts):
+        ref = _direct_encode(cfg, params, p, "last")
+        np.testing.assert_allclose(done[100 + j].embedding, ref,
+                                   rtol=1e-5, atol=1e-5)
+    st = engine.stats()
+    assert st.requests_completed == 4
+    assert st.encode_completed == 2 and st.ar_tokens > 0
+    assert len(st.queue_wait_ms) == 4
+    assert st.queue_wait_p95_ms >= st.queue_wait_p50_ms >= 0
+    d = st.to_dict()
+    assert d["encode_tok_s"] == st.encode_tok_s
+    assert d["queue_wait_p95_ms"] == st.queue_wait_p95_ms
+
+
+def test_chunked_with_preemption_recovers_exactly():
+    """Chunked policy + an undersized pool: preempted requests (possibly
+    mid-chunk) recompute to token-identical continuations."""
+    cfg, params = _phi4()
+    lens = (26, 26, 18)
+    base = _run_engine(cfg, params,
+                       _gen_reqs(cfg, lens, max_new=8, sampled=(1,)))[1]
+    eng, got = _run_engine(cfg, params,
+                           _gen_reqs(cfg, lens, max_new=8, sampled=(1,)),
+                           scheduler=ChunkedPrefillPolicy(8),
+                           block_size=8, kv_pool_blocks=8)
+    assert {u: t.output for u, t in got.items()} == {
+        u: t.output for u, t in base.items()}
+    assert eng.allocator.num_free == eng.allocator.num_blocks
