@@ -1,19 +1,34 @@
-"""Paper Fig. 10: kernel latency breakdown (GEMM vs attention vs activations).
+"""Paper Fig. 10: kernel latency breakdown (GEMM vs attention vs activations)
+plus the fused-epilogue A/B comparison.
 
-Uses the tagged FLOP attribution from the HLO parser (attention / mlp / ce /
-other=projections+embeddings) for GPT-J and GPT3-XL in fp32 and fp8, NAR and
-AR modes.  Paper validation: GEMM-class work dominates; normalization /
-activation layers are negligible; the attention share grows at fp8 (its
-fp32 softmax doesn't scale down).
+Fig. 10 uses the tagged FLOP attribution from the HLO parser (attention /
+mlp / ce / other=projections+embeddings) for GPT-J and GPT3-XL in fp32 and
+fp8, NAR and AR modes.  Paper validation: GEMM-class work dominates;
+normalization / activation layers are negligible; the attention share grows
+at fp8 (its fp32 softmax doesn't scale down).
+
+The fusion table runs each cell twice — fused prologue/epilogue pipeline
+(default) vs the discrete op chain (`--no-fuse`) — and compares the
+per-step HBM-traffic proxy (`mem_bytes_per_device`), the fusion-eliminated
+traffic (`mem_bytes_elided_per_device`), and the roofline step time.  The
+norm/residual activation round-trips the fusion removes must make the
+fused `mem_bytes` STRICTLY lower for GPT-J NAR and AR; the result (plus the
+pass/fail checks) lands in artifacts/bench/BENCH_fusion.json and runs in
+the CI bench smoke (--fusion-only --smoke).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import ART, cell, write_csv
 
 
-def main():
+def fig10():
     print("== Fig.10: kernel FLOP breakdown (share of per-step FLOPs) ==")
     rows = []
     for arch in ("gpt-j", "gpt3-xl"):
@@ -39,5 +54,95 @@ def main():
     return rows
 
 
+def fusion_table(smoke: bool = False):
+    """Fused-vs-unfused HBM-traffic / step-time comparison ->
+    BENCH_fusion.json."""
+    archs = ("gpt-j",) if smoke else ("gpt-j", "gpt3-xl")
+    seq = 64 if smoke else 1024
+    shapes = (("NAR", f"prefill:{seq}:1"), ("AR", f"decode:{seq}:1"))
+    print("== Fused-epilogue pipeline: HBM-traffic proxy (per device) ==")
+    header = ["arch", "mode", "mem_fused", "mem_unfused", "mem_ratio",
+              "elided_fused", "step_fused_us", "step_unfused_us"]
+    print("  " + " | ".join(f"{h:>14s}" for h in header))
+    rows, cells, checks = [], {}, {}
+    for arch in archs:
+        for mode, shape in shapes:
+            fused = cell(arch, shape, mesh="none",
+                         tag=f"fusion_{mode}_fused")
+            unfused = cell(arch, shape, mesh="none",
+                           tag=f"fusion_{mode}_unfused", nofuse=True)
+            if not (fused.get("ok") and unfused.get("ok")):
+                print(f"  {arch} {mode}: FAILED "
+                      f"({fused.get('error', '')[:120]}"
+                      f"{unfused.get('error', '')[:120]})")
+                continue
+            rf, ru = fused["roofline"], unfused["roofline"]
+            mf, mu = rf["mem_bytes_per_device"], ru["mem_bytes_per_device"]
+            row = [arch, mode, f"{mf/1e6:.1f}MB", f"{mu/1e6:.1f}MB",
+                   f"{mf/mu:.3f}",
+                   f"{rf.get('mem_bytes_elided_per_device', 0)/1e6:.1f}MB",
+                   f"{rf['step_time_s']*1e6:.0f}",
+                   f"{ru['step_time_s']*1e6:.0f}"]
+            rows.append(row)
+            print("  " + " | ".join(f"{str(x):>14s}" for x in row))
+            cells[f"{arch}_{mode}"] = {
+                "shape": shape,
+                "mem_bytes_fused": mf,
+                "mem_bytes_unfused": mu,
+                "mem_ratio": mf / mu if mu else 0.0,
+                "mem_bytes_elided_fused":
+                    rf.get("mem_bytes_elided_per_device", 0.0),
+                "step_time_fused_s": rf["step_time_s"],
+                "step_time_unfused_s": ru["step_time_s"],
+                "flops_fused": rf["flops_per_device"],
+                "flops_unfused": ru["flops_per_device"],
+            }
+            if arch == "gpt-j":
+                # acceptance gate: norm/residual traffic actually eliminated
+                checks[f"gptj_{mode}_mem_strictly_lower"] = bool(mf < mu)
+                checks[f"gptj_{mode}_flops_unchanged"] = bool(
+                    abs(rf["flops_per_device"] - ru["flops_per_device"])
+                    < 0.01 * max(ru["flops_per_device"], 1.0))
+    # the gate requires BOTH gpt-j modes measured — a crashed cell must
+    # fail the bench, not silently drop its checks
+    required = [f"gptj_{mode}_mem_strictly_lower" for mode, _ in shapes]
+    complete = all(k in checks for k in required)
+    out = {"cells": cells, "checks": checks,
+           "ok": complete and all(checks.values())}
+    path = os.path.join(ART, "BENCH_fusion.json")
+    os.makedirs(ART, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"  checks: {checks}")
+    print(f"  -> {path}")
+    write_csv(os.path.join(ART, "fusion_breakdown.csv"), header, rows)
+    return out
+
+
+def fusion_gate():
+    """fusion_table + hard failure on unmet checks (benchmarks/run.py
+    entry — raises instead of SystemExit so the harness records it)."""
+    out = fusion_table()
+    if not out["ok"]:
+        raise RuntimeError(f"fusion checks failed: {out['checks']}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fusion-only", action="store_true",
+                    help="skip Fig.10, run only the fusion comparison")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / gpt-j only (CI bench smoke)")
+    # argv=None: called programmatically (benchmarks/run.py) — defaults
+    args = ap.parse_args([] if argv is None else argv)
+    if not args.fusion_only:
+        fig10()
+    out = fusion_table(smoke=args.smoke)
+    if not out["ok"]:
+        raise SystemExit(f"fusion checks failed: {out['checks']}")
+    return out
+
+
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

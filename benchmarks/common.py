@@ -19,7 +19,7 @@ V5E_TDP_W = 170.0          # per-chip board power estimate (public v5e figure)
 
 def cell(arch: str, shape: str, *, mesh: str = "none", policy: str = "",
          tag: str = "baseline", naive: bool = False, reduce: str = "ring",
-         timeout: int = 1200) -> dict:
+         nofuse: bool = False, timeout: int = 1200) -> dict:
     """Run (or fetch cached) one dry-run cell; returns its record."""
     os.makedirs(ART, exist_ok=True)
     safe = shape.replace(":", "-")
@@ -33,6 +33,8 @@ def cell(arch: str, shape: str, *, mesh: str = "none", policy: str = "",
         cmd += ["--policy", policy]
     if naive:
         cmd += ["--naive"]
+    if nofuse:
+        cmd += ["--no-fuse"]
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,

@@ -18,7 +18,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig7,fig8,fig9seq,fig9chip,fig10,"
-                         "tab3,tab4")
+                         "fusion,tab3,tab4")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else None
 
@@ -29,7 +29,8 @@ def main(argv=None) -> int:
         ("fig7+fig8", ("fig7", "fig8"), ablation.main),
         ("fig9-seq", ("fig9seq",), seq_scaling.main),
         ("fig9-chip", ("fig9chip",), scaling.main),
-        ("fig10", ("fig10",), breakdown.main),
+        ("fig10", ("fig10",), breakdown.fig10),
+        ("fusion", ("fusion",), breakdown.fusion_gate),
         ("tab3", ("tab3",), precision_table.main),
         ("tab4", ("tab4",), soa_table.main),
     ]

@@ -3,11 +3,20 @@
 
     PYTHONPATH=src python examples/serve_gpt.py
 
-Demonstrates the session API: variable-length prompts (bucketed NAR
-prefill, the paper's prompt-encoding mode), per-request SamplingParams
-(greedy and temperature/top-k mixed in one batch), streaming TokenEvents,
-and `engine.stats()` serving telemetry (Sec. VI-A's two throughput
-regimes).
+Demonstrates the serving surface end to end:
+
+  1. the session API — variable-length prompts (bucketed NAR prefill, the
+     paper's prompt-encoding mode), per-request SamplingParams (greedy and
+     temperature/top-k mixed in one batch), streaming TokenEvents, and
+     `engine.stats()` telemetry (Sec. VI-A's two throughput regimes);
+  2. the scheduler split — a `PriorityPolicy` engine serving mixed-urgency
+     traffic (priority + aging, bounded inversion);
+  3. encoder-only serving — a batch of `EncodeTask`s (pooled NAR forward,
+     the paper's encoder topology) sharing the engine with generation.
+
+All forwards run the fused prologue/epilogue kernel pipeline (the
+default); pass `fuse_epilogues=False` to A/B the discrete op chain —
+greedy outputs are token-identical either way.
 """
 import sys
 
@@ -19,14 +28,13 @@ import numpy as np
 
 from repro.configs import PAPER_MODELS
 from repro.models import lm
-from repro.serving import InferenceEngine, Request, SamplingParams
+from repro.serving import (EncodeTask, InferenceEngine, PriorityPolicy,
+                           Request, SamplingParams)
 
 
-def main():
-    cfg = PAPER_MODELS["gpt-j"].reduced()
-    params = lm.init_lm(jax.random.key(0), cfg, jnp.bfloat16)
+def streaming_session(cfg, params, rng):
+    """1. Session API: mixed sampling, streaming, telemetry."""
     engine = InferenceEngine(cfg, params, batch_size=4, max_seq=128)
-    rng = np.random.default_rng(1)
     for uid in range(8):
         n = int(rng.integers(8, 40))          # variable-length prompts
         sampling = (SamplingParams(temperature=0.8, top_k=20, seed=uid)
@@ -47,6 +55,58 @@ def main():
     print(f"{stats.requests_completed} requests served in "
           f"{engine.steps_run} AR steps")
     print(stats.summary())
+
+
+def priority_session(cfg, params, rng):
+    """2. PriorityPolicy: urgent traffic jumps the queue (with aging, so
+    background work cannot starve)."""
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=128,
+                             scheduler=PriorityPolicy(aging_s=5.0))
+    # a burst of background work, then two urgent requests behind it
+    for uid in range(4):
+        engine.submit(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, 16, dtype=np.int32),
+            max_new_tokens=8, priority=0))
+    for uid in (100, 101):
+        engine.submit(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, 12, dtype=np.int32),
+            max_new_tokens=8, priority=5, deadline_ms=500.0))
+
+    order = [t.uid for t in engine.run()]
+    urgent_rank = max(order.index(100), order.index(101))
+    print(f"  completion order: {order} "
+          f"(urgent uids 100/101 finished by rank {urgent_rank})")
+
+
+def encode_session(cfg, params, rng):
+    """3. EncodeTask batch: pooled sentence embeddings through the same
+    engine — no KV cache, no decode slots, batched per length bucket."""
+    engine = InferenceEngine(cfg, params, batch_size=4, max_seq=128)
+    for uid in range(4):
+        n = int(rng.integers(6, 30))
+        engine.submit(EncodeTask(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, n, dtype=np.int32),
+            pooling="mean" if uid % 2 else "last"))
+    done = sorted(engine.run(), key=lambda t: t.uid)
+    for t in done:
+        e = t.embedding
+        print(f"  encode {t.uid} ({t.pooling:4s}): [{cfg.d_model}] "
+              f"embedding, norm {float(np.linalg.norm(e)):.2f}")
+    st = engine.stats()
+    print(f"  encode throughput: {st.encode_batches} batches, "
+          f"{st.encode_tokens} tokens")
+
+
+def main():
+    cfg = PAPER_MODELS["gpt-j"].reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.bfloat16)
+    rng = np.random.default_rng(1)
+    print("== 1. streaming session (FCFS) ==")
+    streaming_session(cfg, params, rng)
+    print("== 2. priority scheduling ==")
+    priority_session(cfg, params, rng)
+    print("== 3. encoder-only serving (EncodeTask) ==")
+    encode_session(cfg, params, rng)
 
 
 if __name__ == "__main__":

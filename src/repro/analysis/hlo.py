@@ -105,6 +105,10 @@ class CompStats:
     dot_flops_by_tag: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     mem_bytes: float = 0.0
+    # HBM traffic the kernel fusions eliminate: bytes a vmemk-scoped op
+    # would have been charged had it streamed through HBM like the naive
+    # lowering (norm/residual/activation intermediates, flash score tiles)
+    elided_bytes: float = 0.0
     # (callee, multiplier, counts_mem): fusion bodies execute in VMEM/regs —
     # their HBM traffic is the fusion call site's operands+outputs, so
     # fusion-edge mem doesn't propagate (counts_mem=False)
@@ -118,6 +122,7 @@ class HloSummary:
     flops_by_tag: Dict[str, float]
     collective_bytes: Dict[str, float]     # per collective kind
     mem_bytes: float
+    elided_bytes: float = 0.0              # fusion-eliminated HBM traffic
     debug_items: Optional[list] = None     # (bytes, comp, op, name) rows
 
     @property
@@ -349,6 +354,9 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                     # they come from outside the kernel (params / slices of
                     # outside tensors); tensors produced by scoped compute
                     # (probabilities, decay masks, accumulators) are VMEM
+                    naive = (_nbytes(shapes)
+                             + operand_cost(cname, rest, syms)) * scale
+                    charged = 0.0
                     prod = comp_producer.get(cname, {})
                     for on in _operands(rest):
                         po = prod.get(on)
@@ -358,7 +366,9 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                             or (po[0] == "fusion"
                                 and pure_movement.get(po[1], False)))
                         if streams:
-                            cur.mem_bytes += _nbytes(syms.get(on, [])) * scale
+                            charged += _nbytes(syms.get(on, [])) * scale
+                    cur.mem_bytes += charged
+                    cur.elided_bytes += max(naive - charged, 0.0)
             elif opcode in COLLECTIVES:
                 g = 1
                 mg = _GROUPS_RE.search(rest)
@@ -412,17 +422,17 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                 for mc2 in re.finditer(_CALL_RE, rest):
                     callee = mc2.group(1)
                     cur.calls.append((callee, 1.0, counts_mem))
-                if opcode == "fusion" and not vmemk:
+                if opcode == "fusion":
                     if callee in dus_bytes:
                         # in-place update (KV cache / scan-stacked outputs):
                         # the buffer is aliased — charge the update twice
-                        cur.mem_bytes += dus_bytes[callee]
+                        charge = dus_bytes[callee]
                     elif (callee and pure_movement.get(callee)
                           and all(_nbytes(syms.get(on, [])) <= 64
                                   for on in _operands(rest))):
                         # broadcast-from-scalar (zeros init): fuses into its
                         # consumer on TPU; no stream
-                        pass
+                        charge = 0.0
                     elif callee and pure_movement.get(callee):
                         # slice/convert-only fusion (e.g. the CPU backend's
                         # weight upcast): one stream at the narrowest width
@@ -434,19 +444,28 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                             for dt, _ in comp_syms[callee].get(p, [])]
                         narrow = min(widths) if widths else 4
                         elems = sum(_nelems(d) for _, d in shapes)
-                        cur.mem_bytes += elems * narrow
+                        charge = elems * narrow
                     else:
-                        cur.mem_bytes += _nbytes(shapes)
-                        cur.mem_bytes += operand_cost(cname, rest, syms)
+                        charge = (_nbytes(shapes)
+                                  + operand_cost(cname, rest, syms))
+                    if not vmemk:
+                        cur.mem_bytes += charge
+                    else:
+                        cur.elided_bytes += charge
             elif opcode in _SLICING_OPS or opcode == "broadcast":
                 if not vmemk:
                     cur.mem_bytes += 2 * _nbytes(shapes)   # read slice + write
+                else:
+                    cur.elided_bytes += 2 * _nbytes(shapes)
             elif opcode in ("dynamic-update-slice", "scatter"):
+                ops_ = _operands(rest)
+                upd = ops_[1] if len(ops_) > 1 else None
+                charge = (2 * _nbytes(syms.get(upd, [])) if upd
+                          else _nbytes(shapes))
                 if not vmemk:
-                    ops_ = _operands(rest)
-                    upd = ops_[1] if len(ops_) > 1 else None
-                    cur.mem_bytes += 2 * _nbytes(syms.get(upd, [])) \
-                        if upd else _nbytes(shapes)
+                    cur.mem_bytes += charge
+                else:
+                    cur.elided_bytes += charge
             elif opcode in _ELEMENTWISE:
                 if opcode == "copy" and cname == entry:
                     # entry-level copies are donation/output-aliasing
@@ -456,6 +475,9 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                 if not vmemk:
                     cur.mem_bytes += _nbytes(shapes)
                     cur.mem_bytes += operand_cost(cname, rest, syms)
+                else:
+                    cur.elided_bytes += (_nbytes(shapes)
+                                         + operand_cost(cname, rest, syms))
             if debug and cur.mem_bytes - mem_before > debug_min_bytes:
                 debug_items.append((cur.mem_bytes - mem_before, cname,
                                     opcode, nm))
@@ -464,20 +486,21 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
         raise ValueError("no ENTRY computation found")
 
     # roll up through the call graph (memoized; weights multiply)
-    memo: Dict[str, Tuple[Dict, Dict, Dict, float]] = {}
+    memo: Dict[str, Tuple[Dict, Dict, Dict, float, float]] = {}
 
     def visit(name: str, stack=()):
         if name in memo:
             return memo[name]
         if name not in comps or name in stack:
-            return ({}, {}, {}, 0.0)
+            return ({}, {}, {}, 0.0, 0.0)
         c = comps[name]
         fd = defaultdict(float, c.dot_flops)
         ft = defaultdict(float, c.dot_flops_by_tag)
         cb = defaultdict(float, c.coll_bytes)
         mb = c.mem_bytes
+        eb = c.elided_bytes
         for callee, mult, counts_mem in c.calls:
-            sfd, sft, scb, smb = visit(callee, stack + (name,))
+            sfd, sft, scb, smb, seb = visit(callee, stack + (name,))
             for k, v in sfd.items():
                 fd[k] += v * mult
             for k, v in sft.items():
@@ -486,11 +509,12 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                 cb[k] += v * mult
             if counts_mem:
                 mb += smb * mult
-        memo[name] = (dict(fd), dict(ft), dict(cb), mb)
+                eb += seb * mult
+        memo[name] = (dict(fd), dict(ft), dict(cb), mb, eb)
         return memo[name]
 
-    fd, ft, cb, mb = visit(entry)
+    fd, ft, cb, mb, eb = visit(entry)
     return HloSummary(flops_by_dtype=fd, flops_by_tag=ft,
-                      collective_bytes=cb, mem_bytes=mb,
+                      collective_bytes=cb, mem_bytes=mb, elided_bytes=eb,
                       debug_items=sorted(debug_items, reverse=True)
                       if debug else None)

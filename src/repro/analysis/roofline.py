@@ -40,6 +40,10 @@ class Roofline:
     flops_by_dtype: Dict[str, float]
     flops_by_tag: Dict[str, float]
     collective_bytes: Dict[str, float]
+    # HBM traffic the fused kernels keep in VMEM (per device): what the
+    # norm/residual/activation intermediates and kernel-interior tiles
+    # would have cost under the naive op-by-op lowering
+    mem_bytes_elided: float = 0.0
 
     @property
     def bound(self) -> str:
@@ -67,6 +71,7 @@ class Roofline:
             "compute_fraction": self.compute_fraction,
             "flops_per_device": self.flops,
             "mem_bytes_per_device": self.mem_bytes,
+            "mem_bytes_elided_per_device": self.mem_bytes_elided,
             "coll_bytes_per_device": self.coll_bytes,
             "flops_by_dtype": self.flops_by_dtype,
             "flops_by_tag": self.flops_by_tag,
@@ -85,7 +90,8 @@ def roofline_from_summary(s: HloSummary) -> Roofline:
         coll_bytes=s.total_collective_bytes,
         flops_by_dtype=dict(s.flops_by_dtype),
         flops_by_tag=dict(s.flops_by_tag),
-        collective_bytes=dict(s.collective_bytes))
+        collective_bytes=dict(s.collective_bytes),
+        mem_bytes_elided=s.elided_bytes)
 
 
 def model_flops(cfg, shape) -> float:

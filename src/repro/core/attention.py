@@ -30,10 +30,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import collectives as col
-from repro.core.nn import act_dtype, gather_w, pdot
+from repro.core.nn import act_dtype, fused_pdot, gather_w, pdot
 from repro.core.precision import Policy
 from repro.core.rope import apply_rope
 from repro.kernels import ops
+from repro.kernels.epilogue import Epilogue
 from repro.sharding.plan import Plan
 
 NEG_INF = -1e30
@@ -186,23 +187,36 @@ def build_cache(k_full, v_full, plan: Plan, *, window: int, cache_len: int):
 
 def attn_full(p, x, *, plan: Plan, cfg, policy: Policy, causal: bool,
               window: int, with_cache: bool = False, cache_len: int = 0,
-              memory=None, memory_len: int = 0):
+              memory=None, memory_len: int = 0, norm=None, residual=None):
     """x: [B, S_loc, E] sequence-sharded.  `memory`: cross-attention source
     [B, Sm_loc, E] (whisper decoder).  Returns (y [B, S_loc, E], cache|None).
+
+    Fused pipeline operands (plan.fuse_epilogues):
+      `norm`      kernels.epilogue.Prologue — x arrives UN-normalized and
+                  the pre-norm fuses into the Q/K/V projection GEMMs (the
+                  cross-attention memory is never normalized, matching the
+                  unfused chain).
+      `residual`  [B, S_loc, E] residual stream — folded into the output
+                  projection's epilogue when no tp-partial reduction is
+                  pending, added after the collective otherwise.  When
+                  given, the first return value is the UPDATED residual
+                  stream (residual + attn out), not the raw sub-layer out.
     """
     scheme = plan.attention_sharding
     if memory is not None or scheme == "seq_sp" or plan.tp == 1:
         return _attn_seq_sp(p, x, plan=plan, cfg=cfg, policy=policy,
                             causal=causal, window=window,
                             with_cache=with_cache, cache_len=cache_len,
-                            memory=memory, memory_len=memory_len)
+                            memory=memory, memory_len=memory_len,
+                            norm=norm, residual=residual)
     return _attn_head_tp(p, x, plan=plan, cfg=cfg, policy=policy,
                          causal=causal, window=window,
-                         with_cache=with_cache, cache_len=cache_len)
+                         with_cache=with_cache, cache_len=cache_len,
+                         norm=norm, residual=residual)
 
 
 def _attn_head_tp(p, x, *, plan, cfg, policy, causal, window,
-                  with_cache, cache_len):
+                  with_cache, cache_len, norm=None, residual=None):
     tp, tp_ax = plan.tp, plan.tp_axes
     B, S_loc, E = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -216,12 +230,14 @@ def _attn_head_tp(p, x, *, plan, cfg, policy, causal, window,
     positions = jnp.arange(S)
 
     wq = gather_w(p["wq"], plan)                               # [E, h_loc*hd]
-    q = pdot(x_full, wq, policy).reshape(B, S, h_loc, hd)
+    q = fused_pdot(x_full, wq, policy,
+                   prologue=norm).reshape(B, S, h_loc, hd)
     q = apply_rope(q, positions, theta=cfg.rope_theta,
                    fraction=cfg.rope_fraction)
 
-    kp = pdot(x_full, gather_w(p["wk"], plan), policy)         # [B,S,KVhd/tp]
-    vp = pdot(x_full, gather_w(p["wv"], plan), policy)
+    kp = fused_pdot(x_full, gather_w(p["wk"], plan), policy,
+                    prologue=norm)                             # [B,S,KVhd/tp]
+    vp = fused_pdot(x_full, gather_w(p["wv"], plan), policy, prologue=norm)
     need_full_kv = with_cache or not lay.aligned
     if need_full_kv and tp > 1:
         k_full = col.all_gather(kp, tp_ax, axis=-1).reshape(B, S, KV, hd)
@@ -250,8 +266,13 @@ def _attn_head_tp(p, x, *, plan, cfg, policy, causal, window,
     o = out.reshape(B, S, h_loc * hd)
 
     wo = col.all_gather(p["wo"], plan.fsdp_axes, axis=1)       # [h_loc*hd, E]
+    # head_tp only runs with tp > 1 (attn_full routes tp == 1 to seq_sp),
+    # so a tp-partial reduction is always pending: the residual add lands
+    # after the reduce-scatter, never in the GEMM epilogue
     part = pdot(o, wo, policy)                                 # partial over tp
     y = col.psum_scatter(part, tp_ax, scatter_dimension=1)     # T3
+    if residual is not None:
+        y = residual + y
 
     cache = None
     if with_cache:
@@ -261,7 +282,8 @@ def _attn_head_tp(p, x, *, plan, cfg, policy, causal, window,
 
 
 def _attn_seq_sp(p, x, *, plan, cfg, policy, causal, window, with_cache,
-                 cache_len, memory=None, memory_len=0):
+                 cache_len, memory=None, memory_len=0, norm=None,
+                 residual=None):
     sp_ax = plan.seq_axes
     B, S_loc, E = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -271,13 +293,16 @@ def _attn_seq_sp(p, x, *, plan, cfg, policy, causal, window, with_cache,
     q_pos = jnp.arange(S_loc) + off
 
     wq = gather_w(p["wq"], plan, tp_dim=1)                     # full [E, H*hd]
-    q = pdot(x, wq, policy).reshape(B, S_loc, H, hd)
+    q = fused_pdot(x, wq, policy, prologue=norm).reshape(B, S_loc, H, hd)
     q = apply_rope(q, q_pos, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
 
     src = x if memory is None else memory
+    src_norm = norm if memory is None else None   # memory is never normed
     Sm_loc = src.shape[1]
-    k_loc = pdot(src, gather_w(p["wk"], plan, tp_dim=1), policy)
-    v_loc = pdot(src, gather_w(p["wv"], plan, tp_dim=1), policy)
+    k_loc = fused_pdot(src, gather_w(p["wk"], plan, tp_dim=1), policy,
+                       prologue=src_norm)
+    v_loc = fused_pdot(src, gather_w(p["wv"], plan, tp_dim=1), policy,
+                       prologue=src_norm)
     k_loc = k_loc.reshape(B, Sm_loc, KV, hd)
     v_loc = v_loc.reshape(B, Sm_loc, KV, hd)
     if memory is None:
@@ -293,7 +318,11 @@ def _attn_seq_sp(p, x, *, plan, cfg, policy, causal, window, with_cache,
     o = out.reshape(B, S_loc, H * hd)
 
     wo = gather_w(p["wo"], plan, fsdp_dim=1, tp_dim=0)         # full [H*hd, E]
-    y = pdot(o, wo, policy)                                    # stays sharded
+    if residual is not None:    # no collective pending: fuse the residual
+        y = fused_pdot(o, wo, policy,
+                       epilogue=Epilogue(residual=residual, out_dtype=ad))
+    else:
+        y = pdot(o, wo, policy)                                # stays sharded
 
     cache = None
     if with_cache:
@@ -306,22 +335,24 @@ def _attn_seq_sp(p, x, *, plan, cfg, policy, causal, window, with_cache,
 # AR decode (T4: sequence-sharded cache + distributed softmax)
 # --------------------------------------------------------------------------
 
-def _decode_q(p, x, pos, *, plan: Plan, cfg, policy: Policy):
-    """Projected + rotated query for one decode step: [B, H, hd]."""
+def _decode_q(p, x, pos, *, plan: Plan, cfg, policy: Policy, norm=None):
+    """Projected + rotated query for one decode step: [B, H, hd].
+    `norm`: fused pre-norm prologue (x arrives un-normalized)."""
     B = x.shape[0]
     H, hd = cfg.n_heads, cfg.head_dim
-    qp = pdot(x, gather_w(p["wq"], plan), policy)              # [B, Hhd/tp]
+    qp = fused_pdot(x, gather_w(p["wq"], plan), policy,
+                    prologue=norm)                             # [B, Hhd/tp]
     q = col.all_gather(qp, plan.tp_axes, axis=-1).reshape(B, H, hd)
     return apply_rope(q[:, None], pos[:, None], theta=cfg.rope_theta,
                       fraction=cfg.rope_fraction)[:, 0]
 
 
-def _decode_kv_new(p, x, pos, *, plan: Plan, cfg, policy: Policy):
+def _decode_kv_new(p, x, pos, *, plan: Plan, cfg, policy: Policy, norm=None):
     """This step's K/V rows ([B, KV, hd] each; K rotated)."""
     B = x.shape[0]
     KV, hd = cfg.n_kv_heads, cfg.head_dim
-    kp = pdot(x, gather_w(p["wk"], plan), policy)
-    vp = pdot(x, gather_w(p["wv"], plan), policy)
+    kp = fused_pdot(x, gather_w(p["wk"], plan), policy, prologue=norm)
+    vp = fused_pdot(x, gather_w(p["wv"], plan), policy, prologue=norm)
     k_new = col.all_gather(kp, plan.tp_axes, axis=-1).reshape(B, KV, hd)
     v_new = col.all_gather(vp, plan.tp_axes, axis=-1).reshape(B, KV, hd)
     k_new = apply_rope(k_new[:, None], pos[:, None], theta=cfg.rope_theta,
@@ -329,9 +360,12 @@ def _decode_kv_new(p, x, pos, *, plan: Plan, cfg, policy: Policy):
     return k_new, v_new
 
 
-def _decode_out_proj(p, merged, *, plan: Plan, policy: Policy):
+def _decode_out_proj(p, merged, *, plan: Plan, policy: Policy,
+                     residual=None):
     """Contract the merged [B, H*hd] head tensor with wo (tp-partial +
-    psum) -> [B, E] at activation dtype."""
+    psum) -> [B, E] at activation dtype.  `residual` folds into the GEMM
+    epilogue when no tp reduction is pending (added after the psum
+    otherwise); when given, the result is the updated residual stream."""
     tp_ax = plan.tp_axes
     ad = act_dtype(policy)
     rows_loc = merged.shape[1] // plan.tp
@@ -339,15 +373,24 @@ def _decode_out_proj(p, merged, *, plan: Plan, policy: Policy):
     o_loc = jax.lax.dynamic_slice_in_dim(
         merged.astype(ad), i * rows_loc, rows_loc, axis=1)
     wo = gather_w(p["wo"], plan, fsdp_dim=1)                   # [Hhd/tp, E]
+    if residual is not None and not tp_ax:
+        return fused_pdot(o_loc, wo, policy,
+                          epilogue=Epilogue(residual=residual, out_dtype=ad),
+                          out_dtype=jnp.float32)
     part = pdot(o_loc, wo, policy, out_dtype=jnp.float32)
-    return col.psum(part, tp_ax).astype(ad)
+    y = col.psum(part, tp_ax).astype(ad)
+    return y if residual is None else residual + y
 
 
 def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
-                window: int, cross: bool = False, memory_len: int = 0):
+                window: int, cross: bool = False, memory_len: int = 0,
+                norm=None, residual=None):
     """One decode step.  x: [B, E] (replicated over tp); pos: [B] int32 —
     position index of the token being written; cache: {"k","v"} local shards
-    [B, W_loc, KV, hd].  Returns (y [B, E], updated cache)."""
+    [B, W_loc, KV, hd].  Returns (y [B, E], updated cache).
+
+    `norm` / `residual`: fused prologue/epilogue — see `attn_full` (with
+    `residual` the first return value is the updated stream)."""
     c_ax = plan.cache_axes
     B, E = x.shape
     H, hd = cfg.n_heads, cfg.head_dim
@@ -358,11 +401,11 @@ def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
     W = W_loc * plan.cache_shards                  # global cache slots
     ring = window > 0 and W == window
 
-    q = _decode_q(p, x, pos, plan=plan, cfg=cfg, policy=policy)
+    q = _decode_q(p, x, pos, plan=plan, cfg=cfg, policy=policy, norm=norm)
 
     if not cross:
         k_new, v_new = _decode_kv_new(p, x, pos, plan=plan, cfg=cfg,
-                                      policy=policy)
+                                      policy=policy, norm=norm)
         slot = pos % W if ring else pos
         start = col.axis_index(c_ax) * W_loc
         loc = slot - start
@@ -394,11 +437,13 @@ def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
     o, m, l = decode_partials(q.astype(ad), cache["k"], cache["v"], valid,
                               sm_scale=sm_scale)
     merged = merge_partials(o, m, l, c_ax).reshape(B, H * hd)  # T4 merge
-    return _decode_out_proj(p, merged, plan=plan, policy=policy), cache
+    return _decode_out_proj(p, merged, plan=plan, policy=policy,
+                            residual=residual), cache
 
 
 def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
-                     plan: Plan, cfg, policy: Policy):
+                     plan: Plan, cfg, policy: Policy, norm=None,
+                     residual=None):
     """One chunked-prefill piece against a block-paged KV cache.
 
     x: [B, C, E] — C consecutive prompt tokens per row, starting at absolute
@@ -426,9 +471,9 @@ def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
     flat = x.reshape(B * C, E)
     pflat = pos.reshape(B * C)
     q = _decode_q(p, flat, pflat, plan=plan, cfg=cfg,
-                  policy=policy).reshape(B, C, H, hd)
+                  policy=policy, norm=norm).reshape(B, C, H, hd)
     k_new, v_new = _decode_kv_new(p, flat, pflat, plan=plan, cfg=cfg,
-                                  policy=policy)
+                                  policy=policy, norm=norm)
     k_new = k_new.reshape(B, C, KV, hd)
     v_new = v_new.reshape(B, C, KV, hd)
 
@@ -457,12 +502,14 @@ def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
     o, m, l = ops.paged_chunk_partials(q.astype(ad), cache["k"], cache["v"],
                                        loc_tab, pos, length)
     merged = merge_partials(o, m, l, c_ax).reshape(B * C, H * hd)
-    y = _decode_out_proj(p, merged, plan=plan, policy=policy)
+    y = _decode_out_proj(p, merged, plan=plan, policy=policy,
+                         residual=residual.reshape(B * C, E)
+                         if residual is not None else None)
     return y.reshape(B, C, E), cache
 
 
 def attn_decode_paged(p, x, pos, cache, block_tables, *, plan: Plan, cfg,
-                      policy: Policy):
+                      policy: Policy, norm=None, residual=None):
     """One decode step against a block-paged KV cache (full-context layers
     only — window/ring layers keep the dense per-slot ring, `attn_decode`).
 
@@ -485,9 +532,9 @@ def attn_decode_paged(p, x, pos, cache, block_tables, *, plan: Plan, cfg,
     NB_loc, BS = cache["k"].shape[0], cache["k"].shape[1]
     start = col.axis_index(c_ax) * NB_loc          # first owned global block
 
-    q = _decode_q(p, x, pos, plan=plan, cfg=cfg, policy=policy)
+    q = _decode_q(p, x, pos, plan=plan, cfg=cfg, policy=policy, norm=norm)
     k_new, v_new = _decode_kv_new(p, x, pos, plan=plan, cfg=cfg,
-                                  policy=policy)
+                                  policy=policy, norm=norm)
 
     # scatter the new token into its block (absent / non-owned -> dropped;
     # negative ids wrap in .at[], so route them out of bounds instead)
@@ -513,4 +560,5 @@ def attn_decode_paged(p, x, pos, cache, block_tables, *, plan: Plan, cfg,
     o, m, l = ops.paged_decode_partials(q.astype(ad), cache["k"], cache["v"],
                                         loc_tab, length)
     merged = merge_partials(o, m, l, c_ax).reshape(B, H * hd)  # T4 merge
-    return _decode_out_proj(p, merged, plan=plan, policy=policy), cache
+    return _decode_out_proj(p, merged, plan=plan, policy=policy,
+                            residual=residual), cache

@@ -26,6 +26,14 @@ LOCAL_KINDS = ("local", "moe_local", "hybrid_local")
 BIDIR_KINDS = ("enc", "vit")
 
 
+def block_fused(plan: Plan) -> bool:
+    """True when this block should emit the fused prologue/epilogue
+    pipeline.  fp8 residual gathers (comm_fp8) pre-norm BEFORE quantizing
+    the wire bytes — folding the norm behind the gather would move the
+    quantization point — so fusion falls back to the discrete chain there."""
+    return plan.fuse_epilogues and not plan.comm_fp8
+
+
 # --------------------------------------------------------------------------
 # parameters
 # --------------------------------------------------------------------------
@@ -158,48 +166,93 @@ def block_full(kind: str, p, x, *, plan: Plan, cfg, policy,
         shards = max(plan.cache_shards, 1)
         cache_len = -(-S_tot // shards) * shards
 
-    h = ops.norm(x, p["ln1"], cfg.norm)
+    fused = block_fused(plan)
     if kind == "ssm":
+        h = ops.norm(x, p["ln1"], cfg.norm)
         y, sc = ssm_mod.ssm_full(p["ssm"], h, plan=plan, cfg=cfg,
                                  policy=policy, with_cache=with_cache)
         if with_cache:
             cache.update(sc)
         return x + y, (cache if with_cache else None), aux
 
-    y, kv = attn.attn_full(p["attn"], h, plan=plan, cfg=cfg, policy=policy,
-                           causal=causal, window=window,
-                           with_cache=with_cache, cache_len=cache_len)
+    hybrid = kind in ("hybrid_attn", "hybrid_local")
+    moe_like = kind in MOE_KINDS
+    h = y = None
+    if fused and not hybrid and not moe_like:
+        # pre-norm folds into the Q/K/V projections, the residual add into
+        # the out-projection epilogue: x' comes back as the updated stream
+        x, kv = attn.attn_full(p["attn"], x, plan=plan, cfg=cfg,
+                               policy=policy, causal=causal, window=window,
+                               with_cache=with_cache, cache_len=cache_len,
+                               norm=ops.norm_prologue(p["ln1"], cfg.norm),
+                               residual=x)
+    elif fused and moe_like:
+        # keep the sub-layer output: its residual add fuses with ln2 below
+        y, kv = attn.attn_full(p["attn"], x, plan=plan, cfg=cfg,
+                               policy=policy, causal=causal, window=window,
+                               with_cache=with_cache, cache_len=cache_len,
+                               norm=ops.norm_prologue(p["ln1"], cfg.norm))
+    else:
+        h = ops.norm(x, p["ln1"], cfg.norm)
+        y, kv = attn.attn_full(p["attn"], h, plan=plan, cfg=cfg,
+                               policy=policy, causal=causal, window=window,
+                               with_cache=with_cache, cache_len=cache_len)
     if with_cache:
         cache.update(kv)
-    if kind in ("hybrid_attn", "hybrid_local"):
+    if hybrid:
         s, sc = ssm_mod.ssm_full(p["ssm"], h, plan=plan, cfg=cfg,
                                  policy=policy, with_cache=with_cache)
         y = (y + s) * 0.5
         if with_cache:
             cache.update(sc)
-    x = x + y
+    if y is not None and not fused:
+        x = x + y
+        y = None
+    # fused + (hybrid | moe): y still pending — it folds into the fused
+    # residual_norm at the ln2 boundary below
 
     if kind == "dec":
-        hx = ops.norm(x, p["lnx"], cfg.norm)
-        yx, xkv = attn.attn_full(p["xattn"], hx, plan=plan, cfg=cfg,
-                                 policy=policy, causal=False, window=0,
-                                 with_cache=with_cache,
-                                 cache_len=memory.shape[1] * plan.sp
-                                 if memory is not None else 0,
-                                 memory=memory, memory_len=memory_len)
-        x = x + yx
+        cl = memory.shape[1] * plan.sp if memory is not None else 0
+        if fused:
+            x, xkv = attn.attn_full(p["xattn"], x, plan=plan, cfg=cfg,
+                                    policy=policy, causal=False, window=0,
+                                    with_cache=with_cache, cache_len=cl,
+                                    memory=memory, memory_len=memory_len,
+                                    norm=ops.norm_prologue(p["lnx"],
+                                                           cfg.norm),
+                                    residual=x)
+        else:
+            hx = ops.norm(x, p["lnx"], cfg.norm)
+            yx, xkv = attn.attn_full(p["xattn"], hx, plan=plan, cfg=cfg,
+                                     policy=policy, causal=False, window=0,
+                                     with_cache=with_cache, cache_len=cl,
+                                     memory=memory, memory_len=memory_len)
+            x = x + yx
         if with_cache:
             cache["ck"], cache["cv"] = xkv["k"], xkv["v"]
 
-    if kind in MOE_KINDS:
-        h2 = ops.norm(x, p["ln2"], cfg.norm)
+    if moe_like:
+        if fused:       # add + norm in one pass (GEMMs can't absorb MoE's
+            h2, x = ops.residual_norm(x, y, p["ln2"], cfg.norm)  # dispatch)
+        else:
+            h2 = ops.norm(x, p["ln2"], cfg.norm)
         y2, aux = mlp_mod.moe_full(p["moe"], h2, plan=plan, cfg=cfg,
                                    policy=policy)
         x = x + y2
     elif kind in MLP_KINDS:
-        h2 = ops.norm(x, p["ln2"], cfg.norm)
-        y2 = mlp_mod.mlp_full(p["mlp"], h2, plan=plan, cfg=cfg, policy=policy)
-        x = x + y2
+        if fused and hybrid:
+            h2, x = ops.residual_norm(x, y, p["ln2"], cfg.norm)
+            x = mlp_mod.mlp_full(p["mlp"], h2, plan=plan, cfg=cfg,
+                                 policy=policy, residual=x)
+        elif fused:
+            x = mlp_mod.mlp_full(p["mlp"], x, plan=plan, cfg=cfg,
+                                 policy=policy,
+                                 norm=ops.norm_prologue(p["ln2"], cfg.norm),
+                                 residual=x)
+        else:
+            h2 = ops.norm(x, p["ln2"], cfg.norm)
+            x = x + mlp_mod.mlp_full(p["mlp"], h2, plan=plan, cfg=cfg,
+                                     policy=policy)
     return x, (cache if with_cache else None), aux
 
 
@@ -220,23 +273,52 @@ def block_chunk(kind: str, p, x, pos0, chunk_len, cache, block_tables, *,
         f"chunked prefill unsupported for kind {kind!r}")
     B, C, E = x.shape
     new_cache = dict(cache)
+    fused = block_fused(plan)
+    moe_like = kind in MOE_KINDS
 
-    h = ops.norm(x, p["ln1"], cfg.norm)
-    y, kv = attn.attn_chunk_paged(p["attn"], h, pos0, chunk_len,
-                                  {"k": cache["k"], "v": cache["v"]},
-                                  block_tables, plan=plan, cfg=cfg,
-                                  policy=policy)
-    new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
-    x = x + y
-
-    h2 = ops.norm(x, p["ln2"], cfg.norm).reshape(B * C, E)
-    if kind in MOE_KINDS:
-        y2, _ = mlp_mod.moe_decode(p["moe"], h2, plan=plan, cfg=cfg,
-                                   policy=policy)
+    kv_in = {"k": cache["k"], "v": cache["v"]}
+    y = None
+    if fused and not moe_like:
+        x, kv = attn.attn_chunk_paged(p["attn"], x, pos0, chunk_len, kv_in,
+                                      block_tables, plan=plan, cfg=cfg,
+                                      policy=policy,
+                                      norm=ops.norm_prologue(p["ln1"],
+                                                             cfg.norm),
+                                      residual=x)
+    elif fused:
+        y, kv = attn.attn_chunk_paged(p["attn"], x, pos0, chunk_len, kv_in,
+                                      block_tables, plan=plan, cfg=cfg,
+                                      policy=policy,
+                                      norm=ops.norm_prologue(p["ln1"],
+                                                             cfg.norm))
     else:
+        h = ops.norm(x, p["ln1"], cfg.norm)
+        y, kv = attn.attn_chunk_paged(p["attn"], h, pos0, chunk_len, kv_in,
+                                      block_tables, plan=plan, cfg=cfg,
+                                      policy=policy)
+        x = x + y
+        y = None
+    new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+
+    if moe_like:
+        if fused:
+            h2, x = ops.residual_norm(x, y, p["ln2"], cfg.norm)
+        else:
+            h2 = ops.norm(x, p["ln2"], cfg.norm)
+        y2, _ = mlp_mod.moe_decode(p["moe"], h2.reshape(B * C, E), plan=plan,
+                                   cfg=cfg, policy=policy)
+        x = x + y2.reshape(B, C, E)
+    elif fused:
+        xf = mlp_mod.mlp_decode(p["mlp"], x.reshape(B * C, E), plan=plan,
+                                cfg=cfg, policy=policy,
+                                norm=ops.norm_prologue(p["ln2"], cfg.norm),
+                                residual=x.reshape(B * C, E))
+        x = xf.reshape(B, C, E)
+    else:
+        h2 = ops.norm(x, p["ln2"], cfg.norm).reshape(B * C, E)
         y2 = mlp_mod.mlp_decode(p["mlp"], h2, plan=plan, cfg=cfg,
                                 policy=policy)
-    x = x + y2.reshape(B, C, E)
+        x = x + y2.reshape(B, C, E)
     return x, new_cache
 
 
@@ -251,50 +333,91 @@ def block_decode(kind: str, p, x, pos, cache, *, plan: Plan, cfg, policy,
     cross-attention memory are per-slot dense either way."""
     window = kind_window(kind, cfg)
     new_cache = dict(cache)
+    fused = block_fused(plan)
 
-    h = ops.norm(x, p["ln1"], cfg.norm)
     if kind == "ssm":
+        h = ops.norm(x, p["ln1"], cfg.norm)
         y, sc = ssm_mod.ssm_decode(p["ssm"], h,
                                    {k: cache[k] for k in ("h", "cx", "cbc")},
                                    plan=plan, cfg=cfg, policy=policy)
         new_cache.update(sc)
         return x + y, new_cache
 
-    if paged:
-        y, kv = attn.attn_decode_paged(p["attn"], h, pos,
-                                       {"k": cache["k"], "v": cache["v"]},
-                                       block_tables, plan=plan, cfg=cfg,
-                                       policy=policy)
+    hybrid = kind in ("hybrid_attn", "hybrid_local")
+    moe_like = kind in MOE_KINDS
+    kv_in = {"k": cache["k"], "v": cache["v"]}
+    attn_fused = fused and not hybrid
+    nspec = (ops.norm_prologue(p["ln1"], cfg.norm) if attn_fused else None)
+    res = x if attn_fused and not moe_like else None
+    h = None
+    if attn_fused:
+        q_in = x
     else:
-        y, kv = attn.attn_decode(p["attn"], h, pos,
-                                 {"k": cache["k"], "v": cache["v"]},
-                                 plan=plan, cfg=cfg, policy=policy,
-                                 window=window)
+        h = ops.norm(x, p["ln1"], cfg.norm)
+        q_in = h
+    if paged:
+        y, kv = attn.attn_decode_paged(p["attn"], q_in, pos, kv_in,
+                                       block_tables, plan=plan, cfg=cfg,
+                                       policy=policy, norm=nspec,
+                                       residual=res)
+    else:
+        y, kv = attn.attn_decode(p["attn"], q_in, pos, kv_in, plan=plan,
+                                 cfg=cfg, policy=policy, window=window,
+                                 norm=nspec, residual=res)
     new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
-    if kind in ("hybrid_attn", "hybrid_local"):
+    if res is not None:         # y IS the updated stream
+        x, y = y, None
+    if hybrid:
         s, sc = ssm_mod.ssm_decode(p["ssm"], h,
                                    {k: cache[k] for k in ("h", "cx", "cbc")},
                                    plan=plan, cfg=cfg, policy=policy)
         y = (y + s) * 0.5
         new_cache.update(sc)
-    x = x + y
+    if y is not None and not fused:
+        x = x + y
+        y = None
+    # fused + (hybrid | moe): y pending for the residual_norm below
 
     if kind == "dec":
-        hx = ops.norm(x, p["lnx"], cfg.norm)
-        yx, _ = attn.attn_decode(p["xattn"], hx, pos,
-                                 {"k": cache["ck"], "v": cache["cv"]},
-                                 plan=plan, cfg=cfg, policy=policy, window=0,
-                                 cross=True, memory_len=memory_len)
-        x = x + yx
+        if fused:
+            x, _ = attn.attn_decode(p["xattn"], x, pos,
+                                    {"k": cache["ck"], "v": cache["cv"]},
+                                    plan=plan, cfg=cfg, policy=policy,
+                                    window=0, cross=True,
+                                    memory_len=memory_len,
+                                    norm=ops.norm_prologue(p["lnx"],
+                                                           cfg.norm),
+                                    residual=x)
+        else:
+            hx = ops.norm(x, p["lnx"], cfg.norm)
+            yx, _ = attn.attn_decode(p["xattn"], hx, pos,
+                                     {"k": cache["ck"], "v": cache["cv"]},
+                                     plan=plan, cfg=cfg, policy=policy,
+                                     window=0, cross=True,
+                                     memory_len=memory_len)
+            x = x + yx
 
-    if kind in MOE_KINDS:
-        h2 = ops.norm(x, p["ln2"], cfg.norm)
+    if moe_like:
+        if fused:
+            h2, x = ops.residual_norm(x, y, p["ln2"], cfg.norm)
+        else:
+            h2 = ops.norm(x, p["ln2"], cfg.norm)
         y2, _ = mlp_mod.moe_decode(p["moe"], h2, plan=plan, cfg=cfg,
                                    policy=policy)
         x = x + y2
     elif kind in MLP_KINDS:
-        h2 = ops.norm(x, p["ln2"], cfg.norm)
-        y2 = mlp_mod.mlp_decode(p["mlp"], h2, plan=plan, cfg=cfg,
-                                policy=policy)
-        x = x + y2
+        if fused and hybrid:
+            h2, x = ops.residual_norm(x, y, p["ln2"], cfg.norm)
+            x = mlp_mod.mlp_decode(p["mlp"], h2, plan=plan, cfg=cfg,
+                                   policy=policy, residual=x)
+        elif fused:
+            x = mlp_mod.mlp_decode(p["mlp"], x, plan=plan, cfg=cfg,
+                                   policy=policy,
+                                   norm=ops.norm_prologue(p["ln2"],
+                                                          cfg.norm),
+                                   residual=x)
+        else:
+            h2 = ops.norm(x, p["ln2"], cfg.norm)
+            x = x + mlp_mod.mlp_decode(p["mlp"], h2, plan=plan, cfg=cfg,
+                                       policy=policy)
     return x, new_cache

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import collectives as col
-from repro.core.nn import act_dtype, pdot
+from repro.core.nn import act_dtype, fused_pdot, pdot
 from repro.sharding.plan import Plan
 
 NEG_INF = -1e30
@@ -124,20 +124,25 @@ def ce_loss(x, unemb, labels, valid, *, plan: Plan, cfg, policy,
     return total, count
 
 
-def logits_local(x, unemb, *, plan: Plan, cfg, policy):
-    """x: [B, E] -> (z [B, Vp/tp] fp32 with padded cols masked, v0)."""
+def logits_local(x, unemb, *, plan: Plan, cfg, policy, norm=None):
+    """x: [B, E] -> (z [B, Vp/tp] fp32 with padded cols masked, v0).
+
+    `norm` (kernels.epilogue.Prologue, optional): the model's final norm
+    fused into the logits GEMM — x arrives as the raw residual and the
+    normalization happens in-register ahead of the contraction."""
     w = col.all_gather(unemb, plan.fsdp_axes, axis=0)
     v_loc = w.shape[1]
     v0 = col.axis_index(plan.tp_axes) * v_loc
     with jax.named_scope("ce_f32"):
-        z = pdot(x, w, policy, out_dtype=jnp.float32)
+        z = fused_pdot(x, w, policy, prologue=norm, out_dtype=jnp.float32)
     z = jnp.where((jnp.arange(v_loc)[None, :] + v0) < cfg.vocab, z, NEG_INF)
     return z, v0
 
 
-def greedy_token(x, unemb, *, plan: Plan, cfg, policy):
+def greedy_token(x, unemb, *, plan: Plan, cfg, policy, norm=None):
     """x: [B, E] -> next token ids [B] (global argmax over sharded vocab)."""
-    z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy)
+    z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy,
+                         norm=norm)
     _, tok = col.pargmax(z, plan.tp_axes, index_offset=v0)
     return tok
 
@@ -145,7 +150,7 @@ def greedy_token(x, unemb, *, plan: Plan, cfg, policy):
 TOP_K_CAP = 64      # distributed top-k threshold search depth per tp shard
 
 
-def sample_token(x, unemb, lane, *, plan: Plan, cfg, policy):
+def sample_token(x, unemb, lane, *, plan: Plan, cfg, policy, norm=None):
     """x: [B, E] -> next token ids [B], sampled per row from softmax(z/T)
     with optional top-k truncation — all over the tp-sharded vocab, the
     logits never gathered.
@@ -164,8 +169,10 @@ def sample_token(x, unemb, lane, *, plan: Plan, cfg, policy):
     O(tp*TOP_K_CAP) floats — is guaranteed to contain the global k-th
     largest logit only up to k = TOP_K_CAP, and k is clamped there.
     Noise keys fold (seed, step, shard) so a (seed, position) pair maps to
-    one reproducible draw regardless of batch slot or engine schedule."""
-    z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy)
+    one reproducible draw regardless of batch slot or engine schedule.
+    `norm`: final-norm prologue fused into the logits GEMM (logits_local)."""
+    z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy,
+                         norm=norm)
     B, v_loc = z.shape
     t = lane["temperature"].astype(jnp.float32)
     k = lane["top_k"].astype(jnp.int32)

@@ -21,8 +21,9 @@ import jax.numpy as jnp
 
 from repro.core import collectives as col
 from repro.core.activations import get_activation
-from repro.core.nn import act_dtype, gather_w, pdot
+from repro.core.nn import act_dtype, fused_pdot, gather_w, pdot
 from repro.kernels import ops
+from repro.kernels.epilogue import Epilogue
 from repro.sharding.plan import Plan
 
 MOE_CHUNK = 8192       # max tokens dispatched at once (bounds buffer memory)
@@ -53,57 +54,88 @@ def init_mlp(key, cfg, dtype):
             for (n, s), k in zip(sorted(shapes.items()), ks)}
 
 
-def _ffn_local(xt, p, plan: Plan, cfg, policy):
-    """xt: [T, E] -> [T, E] partial (d_ff sharded over tp).  2-D so the
-    Pallas fused-GEMM kernels apply directly."""
+def _first_gemm(xt, p, plan: Plan, cfg, policy, *, norm=None, tp_dim=None):
+    """First FFN GEMM(s) with the pre-norm fused as a prologue and the
+    activation as the epilogue: xt [T, E] -> h [T, F(/tp)] at act dtype."""
     ad = act_dtype(policy)
     cd = policy.compute_dtype
     if cfg.mlp_act == "swiglu":
-        wg = gather_w(p["wg"], plan)
-        wu = gather_w(p["wu"], plan)
-        h = ops.matmul_swiglu(xt.astype(cd), wg.astype(cd), wu.astype(cd),
-                              out_dtype=ad)
-    else:
-        w1 = gather_w(p["w1"], plan)
+        wg = gather_w(p["wg"], plan, tp_dim=tp_dim)
+        wu = gather_w(p["wu"], plan, tp_dim=tp_dim)
+        if norm is None:
+            return ops.matmul_swiglu(xt.astype(cd), wg.astype(cd),
+                                     wu.astype(cd), out_dtype=ad)
+        return ops.fused_matmul_swiglu(xt, wg, wu, prologue=norm,
+                                       compute_dtype=cd, out_dtype=ad)
+    w1 = gather_w(p["w1"], plan, tp_dim=tp_dim)
+    if norm is None:
         h = pdot(xt, w1, policy)
-        h = get_activation(plan.gelu_impl)(h).astype(ad)     # T5 fused epilogue
-    w2 = gather_w(p["w2"], plan, fsdp_dim=1)
+        h = get_activation(plan.gelu_impl)(h).astype(ad)  # T5 fused epilogue
+        return h
+    return fused_pdot(xt, w1, policy, prologue=norm,
+                      epilogue=Epilogue(activation=plan.gelu_impl,
+                                        out_dtype=ad))
+
+
+def _ffn_local(xt, p, plan: Plan, cfg, policy, *, norm=None, residual=None,
+               tp_dim=None, w2_tp_dim=None):
+    """xt: [T, E] -> [T, E] partial (d_ff sharded over tp).  2-D so the
+    Pallas fused-GEMM kernels apply directly.
+
+    `norm`: fused pre-norm prologue on the first GEMM (xt un-normalized);
+    `residual`: [T, E] folded into the second GEMM's epilogue — only legal
+    when the caller has no tp-partial reduction pending."""
+    h = _first_gemm(xt, p, plan, cfg, policy, norm=norm, tp_dim=tp_dim)
+    w2 = gather_w(p["w2"], plan, fsdp_dim=1, tp_dim=w2_tp_dim)
+    if residual is not None:
+        return fused_pdot(h, w2, policy,
+                          epilogue=Epilogue(residual=residual,
+                                            out_dtype=act_dtype(policy)))
     return pdot(h, w2, policy)                               # partial over tp
 
 
-def mlp_full(p, x, *, plan: Plan, cfg, policy):
-    """x: [B, S_loc, E] sequence-sharded -> same."""
+def mlp_full(p, x, *, plan: Plan, cfg, policy, norm=None, residual=None):
+    """x: [B, S_loc, E] sequence-sharded -> same.
+
+    Fused operands (plan.fuse_epilogues): `norm` folds the pre-norm into
+    the first GEMM; `residual` [B, S_loc, E] folds the residual add into
+    the second GEMM (or after the reduce-scatter when tp > 1).  With
+    `residual` given the return value is the UPDATED residual stream."""
+    B, S_loc, E = x.shape
     if plan.mlp_weight_stationary and plan.tp > 1:
         # §Perf P3d: x never moves — gather the weights across tp instead
         # (cheap at fp8) and compute the whole FFN on the local seq chunk
-        B, S_loc, E = x.shape
-        ad = act_dtype(policy)
-        cd = policy.compute_dtype
         xt = x.reshape(B * S_loc, E)
-        if cfg.mlp_act == "swiglu":
-            wg = gather_w(p["wg"], plan, tp_dim=1)
-            wu = gather_w(p["wu"], plan, tp_dim=1)
-            h = ops.matmul_swiglu(xt.astype(cd), wg.astype(cd),
-                                  wu.astype(cd), out_dtype=ad)
-        else:
-            w1 = gather_w(p["w1"], plan, tp_dim=1)
-            h = pdot(xt, w1, policy)
-            h = get_activation(plan.gelu_impl)(h).astype(ad)
-        w2 = gather_w(p["w2"], plan, fsdp_dim=1, tp_dim=0)
-        return pdot(h, w2, policy).reshape(B, S_loc, E)
+        res2 = (residual.reshape(B * S_loc, E)
+                if residual is not None else None)
+        y = _ffn_local(xt, p, plan, cfg, policy, norm=norm, residual=res2,
+                       tp_dim=1, w2_tp_dim=0)
+        return y.reshape(B, S_loc, E)
     gather = col.all_gather_fp8 if plan.comm_fp8 else col.all_gather
     x_full = gather(x, plan.seq_axes, axis=1)
     B, S, E = x_full.shape
-    part = _ffn_local(x_full.reshape(B * S, E), p, plan, cfg, policy)
+    fuse_res = residual is not None and not plan.tp_axes and not plan.seq_axes
+    part = _ffn_local(x_full.reshape(B * S, E), p, plan, cfg, policy,
+                      norm=norm,
+                      residual=(residual.reshape(B * S, E) if fuse_res
+                                else None))
     part = part.reshape(B, S, E)
-    return col.psum_scatter(part, plan.tp_axes, scatter_dimension=1)
+    if fuse_res:
+        return part
+    y = col.psum_scatter(part, plan.tp_axes, scatter_dimension=1)
+    return y if residual is None else residual + y
 
 
-def mlp_decode(p, x, *, plan: Plan, cfg, policy):
-    """x: [B, E] replicated over tp -> same."""
-    part = _ffn_local(x, p, plan, cfg, policy)
-    return col.psum(part.astype(jnp.float32), plan.tp_axes).astype(
+def mlp_decode(p, x, *, plan: Plan, cfg, policy, norm=None, residual=None):
+    """x: [B, E] replicated over tp -> same.  `norm`/`residual` as in
+    `mlp_full` (with `residual` the return is the updated stream)."""
+    if residual is not None and not plan.tp_axes:
+        return _ffn_local(x, p, plan, cfg, policy, norm=norm,
+                          residual=residual)
+    part = _ffn_local(x, p, plan, cfg, policy, norm=norm)
+    y = col.psum(part.astype(jnp.float32), plan.tp_axes).astype(
         act_dtype(policy))
+    return y if residual is None else residual + y
 
 
 # --------------------------------------------------------------------------
@@ -167,10 +199,17 @@ def moe_ffn_chunk(xc, p, *, plan: Plan, cfg, policy, capacity: int):
     wg = gather_w(p["wg"], plan, fsdp_dim=1)                    # [NE,E,F/tp]
     wu = gather_w(p["wu"], plan, fsdp_dim=1)
     w2 = gather_w(p["w2"], plan, fsdp_dim=2)                    # [NE,F/tp,E]
-    g = _bdot(xe, wg, policy)
-    u = _bdot(xe, wu, policy)
-    h = (jax.nn.silu(g.astype(jnp.float32))
-         * u.astype(jnp.float32)).astype(ad)
+    if plan.fuse_epilogues:
+        # batched per-expert gated GEMMs with the silu-mul kept in VMEM
+        # (kernels/ops.expert_swiglu: vmapped fused swiglu kernel on TPU)
+        h = ops.expert_swiglu(xe, wg, wu,
+                              compute_dtype=policy.compute_dtype,
+                              out_dtype=ad)
+    else:
+        g = _bdot(xe, wg, policy)
+        u = _bdot(xe, wu, policy)
+        h = (jax.nn.silu(g.astype(jnp.float32))
+             * u.astype(jnp.float32)).astype(ad)
     ye = _bdot(h, w2, policy)                                   # [NE, C, E]
 
     y_tok = ye.at[flat_e, slot].get(mode="fill", fill_value=0)  # [Tc*K, E]

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import collectives as col
 from repro.core.precision import Policy
+from repro.kernels import ops
 
 
 def act_dtype(policy: Policy):
@@ -35,6 +36,19 @@ def pdot(x, w, policy: Policy, *, out_dtype=None):
         x.astype(cd), w.astype(cd),
         (((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=od)
+
+
+def fused_pdot(x, w, policy: Policy, *, prologue=None, epilogue=None,
+               out_dtype=None):
+    """`pdot` with an optional fused norm prologue / bias-activation-
+    residual epilogue (kernels/epilogue.py).  With both None this IS
+    `pdot` — same dot, same dtypes — so call sites can thread the fusion
+    specs unconditionally."""
+    if prologue is None and epilogue is None:
+        return pdot(x, w, policy, out_dtype=out_dtype)
+    od = out_dtype or act_dtype(policy)
+    return ops.fused_matmul(x, w, prologue=prologue, epilogue=epilogue,
+                            compute_dtype=policy.compute_dtype, dot_dtype=od)
 
 
 def gather_w(w, plan, *, fsdp_dim=0, tp_dim=None):

@@ -1,0 +1,83 @@
+"""Declarative prologue/epilogue specs for the fused GEMM pipeline.
+
+The paper's headline speedups come from keeping operands streaming through
+the FPU instead of round-tripping every intermediate through main memory:
+the pre-norm, bias/activation and residual-add of a transformer sub-layer
+are folded into the GEMM that consumes / produces them (VEXP 2025; Full
+Stack Optimization of Transformer Inference 2023).  These two dataclasses
+are the repo-wide vocabulary for that folding:
+
+  ``Prologue``   normalize the GEMM's `a` operand in-register before the
+                 K-loop.  RMSNorm commutes with the contraction —
+                 ``norm(x) @ W == rsqrt(mean(x^2)+eps) * ((x*gamma) @ W)``
+                 — so the kernel accumulates row sum-of-squares alongside
+                 the partial products and applies the per-row scale once in
+                 the accumulator.  LayerNorm decomposes the same way with
+                 two extra streamed accumulators (`gamma @ W`, `beta @ W`).
+  ``Epilogue``   bias + activation + residual-add + output cast applied to
+                 the fp32 accumulator before the single output store.
+
+Both are plain containers: the *static* fields (norm kind, activation name,
+eps, presence of optional operands) select the kernel variant; the array
+fields ride along as ordinary operands.  `kernels/ops.py` dispatches them to
+the Pallas kernels (`kernels/matmul.py`) or the bit-matched jnp oracles
+(`kernels/ref.py`) under the usual ``auto/pallas/interpret/ref`` modes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+NORM_KINDS = ("rmsnorm", "layernorm")
+ACTIVATION_KINDS = ("none", "gelu", "gelu_exact", "i_gelu", "silu")
+
+RMS_EPS = 1e-6       # must match ops.rmsnorm's default
+LN_EPS = 1e-5        # must match ops.layernorm's default
+
+
+@dataclass(frozen=True)
+class Prologue:
+    """Fused pre-norm of the GEMM's `a` operand.
+
+    kind   "rmsnorm" | "layernorm"
+    scale  [K] norm gain (gamma)
+    bias   [K] norm shift (beta, layernorm only)
+    eps    statistics epsilon — defaults follow ops.rmsnorm/ops.layernorm
+    """
+    kind: str
+    scale: Any
+    bias: Any = None
+    eps: float = RMS_EPS
+
+    def __post_init__(self):
+        assert self.kind in NORM_KINDS, self.kind
+        if self.kind == "layernorm":
+            assert self.bias is not None, "layernorm prologue needs beta"
+
+
+@dataclass(frozen=True)
+class Epilogue:
+    """Fused accumulator epilogue: ``cast(act(acc + bias)) + residual``.
+
+    activation  "none" | "gelu" | "gelu_exact" | "i_gelu" | "silu"
+    bias        [N], added before the activation
+    residual    [..., N], added after the activation and output cast —
+                the residual-stream add that otherwise costs a full HBM
+                read+write of the activation
+    out_dtype   dtype of the single output store (None: `a`'s dtype, or the
+                residual's dtype when one is given)
+    """
+    activation: str = "none"
+    bias: Any = None
+    residual: Any = None
+    out_dtype: Any = None
+
+    def __post_init__(self):
+        assert self.activation in ACTIVATION_KINDS, self.activation
+
+
+def norm_prologue(params: dict, kind: str) -> Prologue:
+    """Prologue from a block's norm parameter dict ({"scale"[, "bias"]})."""
+    if kind == "rmsnorm":
+        return Prologue("rmsnorm", params["scale"], eps=RMS_EPS)
+    return Prologue("layernorm", params["scale"], params["bias"], eps=LN_EPS)

@@ -1,5 +1,5 @@
 """Spatio-temporally tiled GEMM Pallas kernel (paper T1) with fused
-activation epilogues (paper T5).
+norm prologues and activation/residual epilogues (paper T5).
 
 Paper mapping (Snitch -> TPU):
   * spatial M-tiling across clusters  -> handled one level up by sharding;
@@ -13,6 +13,19 @@ Paper mapping (Snitch -> TPU):
     accumulator before the single write-back (no HBM round trip).
   * SIMD widening dot products        -> low-precision operands with
     preferred_element_type=f32.
+
+Fused prologue (norm="rmsnorm"|"layernorm"): the `a` tile is normalized
+in-register before it feeds the MXU.  RMSNorm commutes with the
+contraction — ``norm(x) @ W = rsqrt(mean(x^2)+eps) * ((x*gamma) @ W)`` —
+so the K-loop streams each `a` tile once, accumulating row sum-of-squares
+next to the partial products, and the per-row scale is applied once in the
+accumulator at the last K step.  LayerNorm adds a row-sum accumulator plus
+two streamed [1, N] vectors (``gamma @ W``, ``beta @ W``):
+``ln(x) @ W = rstd * ((x*gamma) @ W - mu * (gamma @ W)) + beta @ W``.
+
+Fused epilogue: bias + activation + residual-add + output cast applied to
+the fp32 accumulator before the single output store — the pre-norm,
+activation, and residual of a transformer sub-layer never round-trip HBM.
 """
 from __future__ import annotations
 
@@ -23,54 +36,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.activations import get_activation
+from repro.kernels.epilogue import RMS_EPS
 
-def _epilogue(acc, activation):
+
+def _apply_activation(acc, activation):
     if activation == "none":
         return acc
-    if activation == "gelu":
-        return jax.nn.gelu(acc, approximate=True)
-    if activation == "silu":
-        return jax.nn.silu(acc)
-    raise ValueError(activation)
+    return get_activation(activation)(acc)
 
 
-def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, activation):
-    ki = pl.program_id(2)
-
-    @pl.when(ki == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jax.lax.dot_general(
-        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-    @pl.when(ki == pl.num_programs(2) - 1)
-    def _finish():
-        o_ref[...] = _epilogue(acc_ref[...], activation).astype(o_ref.dtype)
-
-
-def _mm_gated_kernel(a_ref, bg_ref, bu_ref, o_ref, accg_ref, accu_ref):
-    """SwiGLU-fused GEMM: o = silu(A @ Bg) * (A @ Bu) in one pass — the
-    gated analogue of the paper's GELU-fused linear."""
-    ki = pl.program_id(2)
-
-    @pl.when(ki == 0)
-    def _init():
-        accg_ref[...] = jnp.zeros_like(accg_ref)
-        accu_ref[...] = jnp.zeros_like(accu_ref)
-
-    a = a_ref[...]
-    accg_ref[...] += jax.lax.dot_general(
-        a, bg_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    accu_ref[...] += jax.lax.dot_general(
-        a, bu_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-    @pl.when(ki == pl.num_programs(2) - 1)
-    def _finish():
-        o_ref[...] = (jax.nn.silu(accg_ref[...]) * accu_ref[...]).astype(o_ref.dtype)
+def _row2d(v):
+    """[K] vector -> [1, K] so it tiles along the K/N grid dims."""
+    return v.reshape(1, -1)
 
 
 def _pad2(x, m, n):
@@ -81,12 +59,105 @@ def _pad2(x, m, n):
     return x
 
 
+def _finalize_norm(acc, *, norm, k_true, eps, s1, s2, gacc):
+    """Apply the deferred per-row norm scale to a streamed accumulator.
+    acc: [bm, bn]; s1/s2: [bm, 1] row sums; gacc: [1, bn] (gamma @ W)."""
+    if norm == "rmsnorm":
+        rstd = jax.lax.rsqrt(s2 / k_true + eps)
+        return acc * rstd
+    if norm == "layernorm":
+        mu = s1 / k_true
+        var = s2 / k_true - mu * mu
+        rstd = jax.lax.rsqrt(var + eps)
+        return (acc - mu * gacc) * rstd
+    return acc
+
+
+def _fused_mm_kernel(*refs, norm, activation, has_bias, has_res, eps,
+                     k_true):
+    """refs: a, b, [gamma], [nbeta], [bias], [residual], o,
+             acc, [s2], [s1], [gacc], [bacc]."""
+    it = iter(refs)
+    a_ref = next(it)
+    b_ref = next(it)
+    g_ref = next(it) if norm != "none" else None
+    nb_ref = next(it) if norm == "layernorm" else None
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_res else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    s2_ref = next(it) if norm != "none" else None
+    s1_ref = next(it) if norm == "layernorm" else None
+    gacc_ref = next(it) if norm == "layernorm" else None
+    bacc_ref = next(it) if norm == "layernorm" else None
+
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if norm != "none":
+            s2_ref[...] = jnp.zeros_like(s2_ref)
+        if norm == "layernorm":
+            s1_ref[...] = jnp.zeros_like(s1_ref)
+            gacc_ref[...] = jnp.zeros_like(gacc_ref)
+            bacc_ref[...] = jnp.zeros_like(bacc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if norm != "none":
+        af = a.astype(jnp.float32)
+        s2_ref[...] += jnp.sum(af * af, axis=1, keepdims=True)
+        g = g_ref[...].astype(jnp.float32)                    # [1, bk]
+        bf = b.astype(jnp.float32)
+        if norm == "layernorm":
+            s1_ref[...] += jnp.sum(af, axis=1, keepdims=True)
+            gacc_ref[...] += jax.lax.dot_general(
+                g, bf, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            bacc_ref[...] += jax.lax.dot_general(
+                nb_ref[...].astype(jnp.float32), bf,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            af * g, bf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        y = _finalize_norm(
+            acc_ref[...], norm=norm, k_true=k_true, eps=eps,
+            s1=s1_ref[...] if s1_ref is not None else None,
+            s2=s2_ref[...] if s2_ref is not None else None,
+            gacc=gacc_ref[...] if gacc_ref is not None else None)
+        if norm == "layernorm":
+            y = y + bacc_ref[...]
+        if has_bias:
+            y = y + bias_ref[...].astype(jnp.float32)
+        y = _apply_activation(y, activation)
+        if has_res:
+            y = y + res_ref[...].astype(jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "activation", "block_m", "block_n", "block_k", "out_dtype", "interpret"))
-def matmul(a, b, *, activation="none", block_m=128, block_n=128, block_k=512,
-           out_dtype=None, interpret=False):
-    """C = act(A @ B); A: [M, K], B: [K, N].  fp32 accumulation in VMEM."""
-    out_dtype = out_dtype or a.dtype
+    "activation", "norm", "eps", "block_m", "block_n", "block_k",
+    "out_dtype", "interpret"))
+def matmul(a, b, *, activation="none", norm="none", gamma=None, nbeta=None,
+           bias=None, residual=None, eps=RMS_EPS, block_m=128, block_n=128,
+           block_k=512, out_dtype=None, interpret=False):
+    """C = act(norm(A) @ B + bias) + residual;  A: [M, K], B: [K, N].
+
+    fp32 accumulation in VMEM; the optional norm prologue and
+    bias/activation/residual epilogue run entirely in-register (see module
+    docstring) — one read of A/B (+gamma/beta/bias/residual), one write of C.
+    """
+    out_dtype = out_dtype or (residual.dtype if residual is not None
+                              else a.dtype)
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
@@ -97,27 +168,141 @@ def matmul(a, b, *, activation="none", block_m=128, block_n=128, block_k=512,
     bp = _pad2(b, block_k, block_n)
     gm, gn, gk = (ap.shape[0] // block_m, bp.shape[1] // block_n,
                   ap.shape[1] // block_k)
+
+    operands = [ap, bp]
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+    ]
+    if norm != "none":
+        operands.append(_pad2(_row2d(gamma), 1, block_k))
+        in_specs.append(pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)))
+    if norm == "layernorm":
+        operands.append(_pad2(_row2d(nbeta), 1, block_k))
+        in_specs.append(pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)))
+    if bias is not None:
+        operands.append(_pad2(_row2d(bias), 1, block_n))
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)))
+    if residual is not None:
+        operands.append(_pad2(residual, block_m, block_n))
+        in_specs.append(pl.BlockSpec((block_m, block_n),
+                                     lambda i, j, k: (i, j)))
+
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
+    if norm != "none":
+        scratch.append(pltpu.VMEM((block_m, 1), jnp.float32))     # s2
+    if norm == "layernorm":
+        scratch.append(pltpu.VMEM((block_m, 1), jnp.float32))     # s1
+        scratch.append(pltpu.VMEM((1, block_n), jnp.float32))     # gamma @ W
+        scratch.append(pltpu.VMEM((1, block_n), jnp.float32))     # beta @ W
+
     out = pl.pallas_call(
-        functools.partial(_mm_kernel, activation=activation),
+        functools.partial(_fused_mm_kernel, norm=norm, activation=activation,
+                          has_bias=bias is not None,
+                          has_res=residual is not None, eps=eps, k_true=K),
         grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gm * block_m, gn * block_n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((gm * block_m, gn * block_n),
+                                       out_dtype),
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(ap, bp)
+    )(*operands)
     return out[:M, :N]
 
 
+def _fused_gated_kernel(*refs, norm, has_res, eps, k_true):
+    """SwiGLU-fused GEMM: o = silu(norm(A) @ Bg) * (norm(A) @ Bu) + residual
+    in one pass — the gated analogue of the paper's GELU-fused linear.
+    refs: a, bg, bu, [gamma], [nbeta], [residual], o,
+          accg, accu, [s2], [s1], [gaccg], [baccg], [gaccu], [baccu]."""
+    it = iter(refs)
+    a_ref, bg_ref, bu_ref = next(it), next(it), next(it)
+    g_ref = next(it) if norm != "none" else None
+    nb_ref = next(it) if norm == "layernorm" else None
+    res_ref = next(it) if has_res else None
+    o_ref = next(it)
+    accg_ref, accu_ref = next(it), next(it)
+    s2_ref = next(it) if norm != "none" else None
+    s1_ref = next(it) if norm == "layernorm" else None
+    gaccg_ref = next(it) if norm == "layernorm" else None
+    baccg_ref = next(it) if norm == "layernorm" else None
+    gaccu_ref = next(it) if norm == "layernorm" else None
+    baccu_ref = next(it) if norm == "layernorm" else None
+
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+        if norm != "none":
+            s2_ref[...] = jnp.zeros_like(s2_ref)
+        if norm == "layernorm":
+            for r in (s1_ref, gaccg_ref, baccg_ref, gaccu_ref, baccu_ref):
+                r[...] = jnp.zeros_like(r)
+
+    a = a_ref[...]
+    bg = bg_ref[...]
+    bu = bu_ref[...]
+    if norm != "none":
+        # normalized `a` tile is f32 — keep the weight tiles' dtype matched
+        # (a mixed-dtype dot would fail/promote on the MXU)
+        af = a.astype(jnp.float32)
+        bg = bg.astype(jnp.float32)
+        bu = bu.astype(jnp.float32)
+        s2_ref[...] += jnp.sum(af * af, axis=1, keepdims=True)
+        g = g_ref[...].astype(jnp.float32)
+        if norm == "layernorm":
+            s1_ref[...] += jnp.sum(af, axis=1, keepdims=True)
+            nb = nb_ref[...].astype(jnp.float32)
+            for bf, ga, ba in ((bg, gaccg_ref, baccg_ref),
+                               (bu, gaccu_ref, baccu_ref)):
+                ga[...] += jax.lax.dot_general(
+                    g, bf, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                ba[...] += jax.lax.dot_general(
+                    nb, bf, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+        a = af * g
+    accg_ref[...] += jax.lax.dot_general(
+        a, bg, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    accu_ref[...] += jax.lax.dot_general(
+        a, bu, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        s1 = s1_ref[...] if s1_ref is not None else None
+        s2 = s2_ref[...] if s2_ref is not None else None
+        g = _finalize_norm(accg_ref[...], norm=norm, k_true=k_true, eps=eps,
+                           s1=s1, s2=s2,
+                           gacc=gaccg_ref[...] if gaccg_ref is not None
+                           else None)
+        u = _finalize_norm(accu_ref[...], norm=norm, k_true=k_true, eps=eps,
+                           s1=s1, s2=s2,
+                           gacc=gaccu_ref[...] if gaccu_ref is not None
+                           else None)
+        if norm == "layernorm":
+            g = g + baccg_ref[...]
+            u = u + baccu_ref[...]
+        y = jax.nn.silu(g) * u
+        if has_res:
+            y = y + res_ref[...].astype(jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "block_m", "block_n", "block_k", "out_dtype", "interpret"))
-def matmul_swiglu(a, b_gate, b_up, *, block_m=128, block_n=128, block_k=512,
-                  out_dtype=None, interpret=False):
-    """o = silu(A @ Bg) * (A @ Bu) — single fused pass (paper T5 for gated MLPs)."""
-    out_dtype = out_dtype or a.dtype
+    "norm", "eps", "block_m", "block_n", "block_k", "out_dtype",
+    "interpret"))
+def matmul_swiglu(a, b_gate, b_up, *, norm="none", gamma=None, nbeta=None,
+                  residual=None, eps=RMS_EPS, block_m=128, block_n=128,
+                  block_k=512, out_dtype=None, interpret=False):
+    """o = silu(norm(A) @ Bg) * (norm(A) @ Bu) + residual — single fused
+    pass (paper T5 for gated MLPs, with the prologue/epilogue extensions)."""
+    out_dtype = out_dtype or (residual.dtype if residual is not None
+                              else a.dtype)
     M, K = a.shape
     _, N = b_gate.shape
     assert b_gate.shape == b_up.shape == (K, N)
@@ -129,18 +314,41 @@ def matmul_swiglu(a, b_gate, b_up, *, block_m=128, block_n=128, block_k=512,
     bu = _pad2(b_up, block_k, block_n)
     gm, gn, gk = (ap.shape[0] // block_m, bg.shape[1] // block_n,
                   ap.shape[1] // block_k)
+
+    operands = [ap, bg, bu]
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+    ]
+    if norm != "none":
+        operands.append(_pad2(_row2d(gamma), 1, block_k))
+        in_specs.append(pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)))
+    if norm == "layernorm":
+        operands.append(_pad2(_row2d(nbeta), 1, block_k))
+        in_specs.append(pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)))
+    if residual is not None:
+        operands.append(_pad2(residual, block_m, block_n))
+        in_specs.append(pl.BlockSpec((block_m, block_n),
+                                     lambda i, j, k: (i, j)))
+
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+               pltpu.VMEM((block_m, block_n), jnp.float32)]
+    if norm != "none":
+        scratch.append(pltpu.VMEM((block_m, 1), jnp.float32))
+    if norm == "layernorm":
+        scratch.append(pltpu.VMEM((block_m, 1), jnp.float32))
+        scratch += [pltpu.VMEM((1, block_n), jnp.float32) for _ in range(4)]
+
     out = pl.pallas_call(
-        _mm_gated_kernel,
+        functools.partial(_fused_gated_kernel, norm=norm,
+                          has_res=residual is not None, eps=eps, k_true=K),
         grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gm * block_m, gn * block_n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
-                        pltpu.VMEM((block_m, block_n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((gm * block_m, gn * block_n),
+                                       out_dtype),
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(ap, bg, bu)
+    )(*operands)
     return out[:M, :N]

@@ -11,7 +11,37 @@ Every model-facing op goes through this module.  Dispatch modes:
   ``interpret``         force Pallas interpret mode (CPU correctness runs).
   ``ref``               force the jnp oracle.
 
-Set with `repro.kernels.ops.set_mode(...)` or env `REPRO_KERNEL_MODE`.
+Set with `repro.kernels.ops.set_mode(...)` or env `REPRO_KERNEL_MODE`
+(validated at read time — a typo'd mode raises instead of silently falling
+through dispatch).
+
+Fused entry points (the prologue/epilogue pipeline)
+---------------------------------------------------
+The block stack emits *fused* GEMM pipelines by default (`fuse_epilogues`
+on the sharding `Plan`): the pre-norm, bias/activation, and residual-add of
+each transformer sub-layer fold into the GEMM that consumes/produces them,
+so those [T, E] intermediates never round-trip HBM.  The declarative specs
+live in `kernels/epilogue.py` (`Prologue`, `Epilogue`); the entry points:
+
+  ``fused_matmul(x, w, prologue=, epilogue=)``     norm -> GEMM -> bias/
+                                                   act/residual/cast
+  ``fused_matmul_swiglu(x, wg, wu, prologue=, residual=)``
+                                                   norm -> gated GEMM pair
+                                                   -> silu-mul -> residual
+  ``residual_norm(x, y, params, kind)``            r = x + y; h = norm(r)
+                                                   in one pass (the spot a
+                                                   GEMM can't absorb)
+  ``expert_swiglu(xe, wg, wu)``                    batched per-expert gated
+                                                   GEMMs (MoE), silu-mul
+                                                   kept in VMEM
+
+On the reference path these compose the standalone oracles in exactly the
+unfused order/casts (bit-identical — greedy decode is token-identical when
+fusion toggles); on the Pallas path they hit the streamed-statistics fused
+kernels in `kernels/matmul.py` / `kernels/rmsnorm.py`.  Reference-path
+fused pipelines run under ``vmemk_*`` named scopes so the HLO-based
+roofline (analysis/hlo.py) attributes their eliminated intermediate
+traffic correctly.
 """
 from __future__ import annotations
 
@@ -28,13 +58,28 @@ from repro.kernels import flash_decode as _fd
 from repro.kernels import matmul as _mm
 from repro.kernels import rmsnorm as _norm
 from repro.kernels import ssd as _ssd
+from repro.kernels.epilogue import Epilogue, Prologue, norm_prologue
+
+__all__ = [
+    "Epilogue", "Prologue", "norm_prologue", "get_mode", "set_mode",
+    "kernel_mode", "flash_attention", "decode_attention",
+    "paged_decode_attention", "paged_decode_partials",
+    "paged_chunk_partials", "matmul", "matmul_swiglu", "fused_matmul",
+    "fused_matmul_swiglu", "expert_swiglu", "residual_norm", "rmsnorm",
+    "layernorm", "norm", "ssd", "ssd_decode",
+]
 
 _STATE = threading.local()
 _VALID = ("auto", "pallas", "interpret", "ref")
 
 
 def _default_mode() -> str:
-    return os.environ.get("REPRO_KERNEL_MODE", "auto")
+    mode = os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if mode not in _VALID:
+        raise ValueError(
+            f"REPRO_KERNEL_MODE={mode!r} is not a valid kernel mode; "
+            f"expected one of {_VALID}")
+    return mode
 
 
 def get_mode() -> str:
@@ -148,7 +193,7 @@ def paged_chunk_partials(q, k_pool, v_pool, block_tables, q_pos, lengths):
 
 
 # --------------------------------------------------------------------------
-# GEMM + fused epilogues (T1/T5)
+# GEMM + fused prologues/epilogues (T1/T5)
 # --------------------------------------------------------------------------
 
 def matmul(a, b, *, activation="none", out_dtype=None,
@@ -175,6 +220,125 @@ def matmul_swiglu(a, b_gate, b_up, *, out_dtype=None,
         u = _ref.matmul_ref(a, b_up, activation="none", out_dtype=out_dtype)
         return (jax.nn.silu(g.astype(jnp.float32))
                 * u.astype(jnp.float32)).astype(out_dtype)
+
+
+def _prologue_fields(prologue):
+    if prologue is None:
+        return dict(norm="none", gamma=None, nbeta=None, eps=1e-6)
+    return dict(norm=prologue.kind, gamma=prologue.scale, nbeta=prologue.bias,
+                eps=prologue.eps)
+
+
+def fused_matmul(x, w, *, prologue=None, epilogue=None, compute_dtype=None,
+                 dot_dtype=None, block_m=128, block_n=128, block_k=512):
+    """y = epilogue(norm(x) @ w);  x: [..., K], w: [K, N] -> [..., N].
+
+    The model-facing fused GEMM: `prologue` (kernels.epilogue.Prologue)
+    normalizes x in-register before the K-loop; `epilogue`
+    (kernels.epilogue.Epilogue) applies bias + activation + residual-add +
+    output cast in the accumulator before the single store.  With both None
+    this is a plain GEMM emitting `dot_dtype`.
+
+    `compute_dtype`: operand dtype of the contraction (the policy compute
+    dtype); `dot_dtype`: preferred_element_type the unfused `pdot` would
+    emit (the reference path matches it exactly for bit-identical fallback).
+    """
+    ep = epilogue or Epilogue()
+    out_dtype = ep.out_dtype or dot_dtype or x.dtype
+    use, interp = _use_pallas()
+    if use:
+        lead = x.shape[:-1]
+        K = x.shape[-1]
+        N = w.shape[-1]
+        x2 = x.reshape(-1, K)
+        cd = compute_dtype or x.dtype
+        if prologue is None:
+            x2 = x2.astype(cd)      # normalized operands stay fp32 in-kernel
+        res2 = (ep.residual.reshape(-1, N) if ep.residual is not None
+                else None)
+        pf = _prologue_fields(prologue)
+        out = _mm.matmul(x2, w.astype(cd), activation=ep.activation,
+                         bias=ep.bias, residual=res2, out_dtype=out_dtype,
+                         block_m=block_m, block_n=block_n, block_k=block_k,
+                         interpret=interp, **pf)
+        return out.reshape(*lead, N)
+    pf = _prologue_fields(prologue)
+    with jax.named_scope("vmemk_fused_mm"):
+        return _ref.fused_matmul_ref(
+            x, w, bias=ep.bias, residual=ep.residual,
+            activation=ep.activation, compute_dtype=compute_dtype,
+            dot_dtype=dot_dtype, out_dtype=out_dtype, **pf)
+
+
+def fused_matmul_swiglu(x, wg, wu, *, prologue=None, residual=None,
+                        compute_dtype=None, out_dtype=None,
+                        block_m=128, block_n=128, block_k=512):
+    """y = silu(norm(x) @ wg) * (norm(x) @ wu) [+ residual]."""
+    use, interp = _use_pallas()
+    if use:
+        lead = x.shape[:-1]
+        K = x.shape[-1]
+        N = wg.shape[-1]
+        x2 = x.reshape(-1, K)
+        cd = compute_dtype or x.dtype
+        if prologue is None:
+            x2 = x2.astype(cd)
+        res2 = residual.reshape(-1, N) if residual is not None else None
+        pf = _prologue_fields(prologue)
+        out = _mm.matmul_swiglu(x2, wg.astype(cd), wu.astype(cd),
+                                residual=res2, out_dtype=out_dtype,
+                                block_m=block_m, block_n=block_n,
+                                block_k=block_k, interpret=interp, **pf)
+        return out.reshape(*lead, N)
+    pf = _prologue_fields(prologue)
+    with jax.named_scope("vmemk_fused_mlp"):
+        return _ref.fused_matmul_swiglu_ref(
+            x, wg, wu, residual=residual, compute_dtype=compute_dtype,
+            out_dtype=out_dtype, **pf)
+
+
+def expert_swiglu(xe, wg, wu, *, compute_dtype=None, out_dtype=None):
+    """Batched per-expert gated FFN: xe [NE, C, E] @ wg/wu [NE, E, F] ->
+    silu(g) * u [NE, C, F].  The silu-mul epilogue never leaves VMEM; the
+    Pallas path vmaps the fused swiglu kernel over the expert dim."""
+    out_dtype = out_dtype or xe.dtype
+    use, interp = _use_pallas()
+    if use:
+        cd = compute_dtype or xe.dtype
+        import functools
+        f = functools.partial(_mm.matmul_swiglu, out_dtype=out_dtype,
+                              interpret=interp)
+        return jax.vmap(f)(xe.astype(cd), wg.astype(cd), wu.astype(cd))
+    cd = compute_dtype or xe.dtype
+    with jax.named_scope("vmemk_moe"):
+        g = jax.lax.dot_general(xe.astype(cd), wg.astype(cd),
+                                (((2,), (1,)), ((0,), (0,))),
+                                preferred_element_type=out_dtype)
+        u = jax.lax.dot_general(xe.astype(cd), wu.astype(cd),
+                                (((2,), (1,)), ((0,), (0,))),
+                                preferred_element_type=out_dtype)
+        return (jax.nn.silu(g.astype(jnp.float32))
+                * u.astype(jnp.float32)).astype(out_dtype)
+
+
+def residual_norm(x, y, params, kind: str):
+    """Fused residual-add + pre-norm: r = x + y; h = norm(r) in one pass —
+    the sub-layer boundary a GEMM epilogue can't absorb (the sum is both
+    the next residual and the norm input).  -> (h, r)."""
+    use, interp = _use_pallas()
+    if use:
+        if kind == "rmsnorm":
+            return _norm.residual_rmsnorm(x, y, params["scale"],
+                                          interpret=interp)
+        return _norm.residual_layernorm(x, y, params["scale"],
+                                        params["bias"], interpret=interp)
+    r = x + y
+    with jax.named_scope("vmemk_fused_norm"):
+        if kind == "rmsnorm":
+            h = _ref.rmsnorm_ref(r, params["scale"])
+        else:
+            h = _ref.layernorm_ref(r, params["scale"], params["bias"])
+    return h, r
 
 
 # --------------------------------------------------------------------------

@@ -372,3 +372,80 @@ def ssd_decode_ref(x, dt, A, B, C, D, h, *, out_dtype=None):
     y = jnp.einsum("bhpn,bn->bhp", h, C.astype(jnp.float32))
     y = y + D.astype(jnp.float32)[None, :, None] * xf
     return y.astype(out_dtype), h
+
+
+# --------------------------------------------------------------------------
+# fused prologue/epilogue oracles
+# --------------------------------------------------------------------------
+#
+# These compose the standalone oracles in EXACTLY the order (and with
+# exactly the casts) the unfused op chain uses, so on the reference path a
+# fused pipeline is bit-identical to the discrete chain it replaces —
+# greedy decode stays token-identical when `fuse_epilogues` toggles.  The
+# Pallas kernels compute the same math with streamed statistics and are
+# tolerance-validated against these.
+
+def norm_prologue_ref(x, *, norm, gamma, nbeta=None, eps):
+    """Normalize the GEMM `a` operand (output in x.dtype, like ops.norm)."""
+    if norm == "rmsnorm":
+        return rmsnorm_ref(x, gamma, eps=eps)
+    if norm == "layernorm":
+        return layernorm_ref(x, gamma, nbeta, eps=eps)
+    assert norm == "none", norm
+    return x
+
+
+def fused_matmul_ref(x, w, *, norm="none", gamma=None, nbeta=None,
+                     bias=None, residual=None, activation="none",
+                     eps=1e-6, compute_dtype=None, dot_dtype=None,
+                     out_dtype=None):
+    """act(norm(x) @ w + bias) cast to out_dtype, + residual.
+
+    `compute_dtype`: operand cast before the dot (the policy compute
+    dtype); `dot_dtype`: preferred_element_type of the dot (what `pdot`
+    would emit); `out_dtype`: dtype of the result before the residual add.
+    """
+    h = norm_prologue_ref(x, norm=norm, gamma=gamma, nbeta=nbeta, eps=eps)
+    cd = compute_dtype or h.dtype
+    od = dot_dtype or out_dtype or h.dtype
+    y = jax.lax.dot_general(
+        h.astype(cd), w.astype(cd),
+        (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=od)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if activation != "none":
+        from repro.core.activations import get_activation
+        y = get_activation(activation)(y)
+    if out_dtype is not None:
+        y = y.astype(out_dtype)
+    if residual is not None:
+        y = residual + y
+    return y
+
+
+def fused_matmul_swiglu_ref(x, w_gate, w_up, *, norm="none", gamma=None,
+                            nbeta=None, residual=None, eps=1e-6,
+                            compute_dtype=None, out_dtype=None):
+    """silu(norm(x) @ wg) * (norm(x) @ wu) [+ residual] — the exact op
+    chain of ops.matmul_swiglu's reference path with the pre-norm folded
+    in front and the residual add behind."""
+    h = norm_prologue_ref(x, norm=norm, gamma=gamma, nbeta=nbeta, eps=eps)
+    cd = compute_dtype or h.dtype
+    od = out_dtype or h.dtype
+    a = h.astype(cd)
+    g = matmul_ref(a, w_gate.astype(cd), activation="none", out_dtype=od)
+    u = matmul_ref(a, w_up.astype(cd), activation="none", out_dtype=od)
+    y = (jax.nn.silu(g.astype(jnp.float32))
+         * u.astype(jnp.float32)).astype(od)
+    if residual is not None:
+        y = residual + y
+    return y
+
+
+def residual_norm_ref(x, y, *, norm, gamma, nbeta=None, eps=1e-6):
+    """r = x + y; h = norm(r) — same two ops as the unfused chain.
+    -> (h, r)."""
+    r = x + y
+    return norm_prologue_ref(r, norm=norm, gamma=gamma, nbeta=nbeta,
+                             eps=eps), r

@@ -4,6 +4,12 @@ Paper mapping: LayerNorm is spatially tiled on rows across clusters with
 row statistics accumulated via streamed SSR loops (V-A3).  Here: rows are
 grid cells, each block reduces its rows in fp32 in VMEM and writes the
 normalized output once (no separate mean/var pass over HBM).
+
+`residual_rmsnorm` / `residual_layernorm` fuse the residual-stream add with
+the following pre-norm — the one spot in a pre-norm block a GEMM epilogue
+can't absorb (the sum is needed both as the next residual and as the norm
+input).  One pass reads (x, y) and writes (r = x + y, norm(r)): the
+separate read-back of r that the unfused chain pays is eliminated.
 """
 from __future__ import annotations
 
@@ -74,3 +80,70 @@ def layernorm(x, gamma, beta, *, eps=1e-5, block_rows=256, interpret=False):
         interpret=interpret,
     )(xf, gamma, beta)
     return out[:R].reshape(shape)
+
+
+def _res_rms_kernel(x_ref, y_ref, g_ref, h_ref, r_ref, *, eps):
+    r = x_ref[...].astype(jnp.float32) + y_ref[...].astype(jnp.float32)
+    r_ref[...] = r.astype(r_ref.dtype)
+    rq = r_ref[...].astype(jnp.float32)     # norm what was stored
+    var = jnp.mean(rq * rq, axis=-1, keepdims=True)
+    h_ref[...] = (rq * jax.lax.rsqrt(var + eps)
+                  * g_ref[...].astype(jnp.float32)).astype(h_ref.dtype)
+
+
+def _res_ln_kernel(x_ref, y_ref, g_ref, b_ref, h_ref, r_ref, *, eps):
+    r = x_ref[...].astype(jnp.float32) + y_ref[...].astype(jnp.float32)
+    r_ref[...] = r.astype(r_ref.dtype)
+    rq = r_ref[...].astype(jnp.float32)
+    mu = jnp.mean(rq, axis=-1, keepdims=True)
+    var = jnp.mean((rq - mu) ** 2, axis=-1, keepdims=True)
+    h = (rq - mu) * jax.lax.rsqrt(var + eps)
+    h_ref[...] = (h * g_ref[...].astype(jnp.float32)
+                  + b_ref[...].astype(jnp.float32)).astype(h_ref.dtype)
+
+
+def _residual_norm_call(kernel, inputs, vec_params, shape, dtype,
+                        block_rows, interpret):
+    """Shared launch for the fused add+norm kernels -> (h, r)."""
+    D = shape[-1]
+    flats = [x.reshape(-1, D) for x in inputs]
+    R = flats[0].shape[0]
+    block_rows = min(block_rows, R)
+    pad = -R % block_rows
+    if pad:
+        flats = [jnp.pad(x, ((0, pad), (0, 0))) for x in flats]
+    rows = flats[0].shape[0]
+    in_specs = ([pl.BlockSpec((block_rows, D), lambda i: (i, 0))
+                 for _ in flats]
+                + [pl.BlockSpec((D,), lambda i: (0,)) for _ in vec_params])
+    h, r = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows, D), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((rows, D), dtype),
+                   jax.ShapeDtypeStruct((rows, D), dtype)),
+        interpret=interpret,
+    )(*flats, *vec_params)
+    return h[:R].reshape(shape), r[:R].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def residual_rmsnorm(x, y, gamma, *, eps=1e-6, block_rows=256,
+                     interpret=False):
+    """r = x + y; h = rmsnorm(r) in one pass.  -> (h, r), both x.dtype."""
+    return _residual_norm_call(
+        functools.partial(_res_rms_kernel, eps=eps), [x, y], [gamma],
+        x.shape, x.dtype, block_rows, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def residual_layernorm(x, y, gamma, beta, *, eps=1e-5, block_rows=256,
+                       interpret=False):
+    """r = x + y; h = layernorm(r) in one pass.  -> (h, r), both x.dtype."""
+    return _residual_norm_call(
+        functools.partial(_res_ln_kernel, eps=eps), [x, y], [gamma, beta],
+        x.shape, x.dtype, block_rows, interpret)

@@ -43,7 +43,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              tag: str = "baseline", naive: bool = False,
              ssm_seqp: bool = False, kv_cache_dtype: str = "bfloat16",
              attn_sharding: str = "", comm_fp8: bool = False,
-             mlp_ws: bool = False) -> dict:
+             mlp_ws: bool = False, fuse: bool = True) -> dict:
     import jax
     from repro.analysis.hlo import parse_hlo
     from repro.analysis.roofline import model_flops, roofline_from_summary
@@ -69,7 +69,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         bundle = steps.make_train_step(cfg, shape, mesh, policy=pol,
                                        reduce_method=reduce_method,
                                        naive_attention=naive,
-                                       ssm_seq_parallel=ssm_seqp)
+                                       ssm_seq_parallel=ssm_seqp,
+                                       fuse_epilogues=fuse)
     elif shape.kind == "prefill":
         bundle = steps.make_prefill_step(cfg, shape, mesh, policy=pol,
                                          reduce_method=reduce_method,
@@ -78,11 +79,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
                                          kv_cache_dtype=kv_cache_dtype,
                                          attention_sharding=attn_sharding,
                                          comm_fp8=comm_fp8,
-                                         mlp_weight_stationary=mlp_ws)
+                                         mlp_weight_stationary=mlp_ws,
+                                         fuse_epilogues=fuse)
     else:
         bundle = steps.make_decode_step(cfg, shape, mesh, policy=pol,
                                         reduce_method=reduce_method,
-                                        kv_cache_dtype=kv_cache_dtype)
+                                        kv_cache_dtype=kv_cache_dtype,
+                                        fuse_epilogues=fuse)
     lowered = bundle.lower()
     t1 = time.time()
     compiled = lowered.compile()
@@ -156,6 +159,9 @@ def main() -> int:
                     choices=["", "head_tp", "seq_sp"])
     ap.add_argument("--comm-fp8", action="store_true")
     ap.add_argument("--mlp-ws", action="store_true")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable the fused prologue/epilogue pipeline "
+                         "(A/B baseline for the fusion benchmark)")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
@@ -169,7 +175,8 @@ def main() -> int:
                            ssm_seqp=args.ssm_seqp,
                            kv_cache_dtype=args.kv_dtype,
                            attn_sharding=args.attn_sharding,
-                           comm_fp8=args.comm_fp8, mlp_ws=args.mlp_ws)
+                           comm_fp8=args.comm_fp8, mlp_ws=args.mlp_ws,
+                           fuse=not args.no_fuse)
             safe = args.shape.replace(":", "-")
             fname = os.path.join(
                 args.out, f"{args.arch}__{safe}__{mk}__{args.tag}.json")

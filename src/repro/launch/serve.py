@@ -90,6 +90,9 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
                     help="KV pool capacity in blocks (0 => engine default); "
                          "undersize it to exercise preemption")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable the fused prologue/epilogue GEMM "
+                         "pipeline (A/B parity baseline)")
     ap.add_argument("--single-device", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -107,7 +110,8 @@ def main(argv=None) -> int:
         cfg, params, batch_size=args.batch, max_seq=args.max_seq, mesh=mesh,
         block_size=args.block_size,
         kv_pool_blocks=args.kv_pool_blocks or None,
-        scheduler=make_policy(args.policy, chunk_tokens=args.prefill_chunk))
+        scheduler=make_policy(args.policy, chunk_tokens=args.prefill_chunk),
+        fuse_epilogues=not args.no_fuse)
     if (args.policy == "chunked"
             and not engine.runner.supports_chunked):
         print(f"note: {cfg.name} cannot chunk prefills "

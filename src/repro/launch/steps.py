@@ -283,7 +283,8 @@ def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
                     reduce_method: str = "ring",
                     gelu_impl: str = "i_gelu",
                     naive_attention: bool = False,
-                    ssm_seq_parallel: bool = False) -> StepBundle:
+                    ssm_seq_parallel: bool = False,
+                    fuse_epilogues: bool = True) -> StepBundle:
     import dataclasses
     policy = policy or default_policy(cfg, "train")
     lr_fn = lr_fn or cosine_schedule(3e-4, 100, 10_000)
@@ -291,7 +292,8 @@ def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
                      reduce_method=reduce_method)
     plan = dataclasses.replace(plan, gelu_impl=gelu_impl,
                                naive_attention=naive_attention,
-                               ssm_seq_parallel=ssm_seq_parallel)
+                               ssm_seq_parallel=ssm_seq_parallel,
+                               fuse_epilogues=fuse_epilogues)
 
     p_dims = lm.lm_param_dims(cfg)
     p_specs = resolve_pspecs(p_dims, plan)
@@ -409,7 +411,8 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                       comm_fp8: bool = False,
                       mlp_weight_stationary: bool = False,
                       with_sampling: bool = False,
-                      compact_kv: bool = False) -> StepBundle:
+                      compact_kv: bool = False,
+                      fuse_epilogues: bool = True) -> StepBundle:
     """`compact_kv`: emit full-context KV caches at the batch's own
     sequence length instead of padded to `max_seq` — paged admission
     scatters them into pool blocks, so the dense B x max_seq buffer never
@@ -422,7 +425,8 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
         plan, naive_attention=naive_attention,
         ssm_seq_parallel=ssm_seq_parallel, kv_cache_dtype=kv_cache_dtype,
         attention_sharding=attention_sharding or plan.attention_sharding,
-        comm_fp8=comm_fp8, mlp_weight_stationary=mlp_weight_stationary)
+        comm_fp8=comm_fp8, mlp_weight_stationary=mlp_weight_stationary,
+        fuse_epilogues=fuse_epilogues)
     max_seq = max_seq or shape.seq_len
 
     p_dims = lm.lm_param_dims(cfg)
@@ -480,7 +484,8 @@ def make_encode_step(cfg: ModelConfig, shape: ShapeConfig,
                      policy: Optional[Policy] = None,
                      pooling: str = "last",
                      reduce_method: str = "ring",
-                     naive_attention: bool = False) -> StepBundle:
+                     naive_attention: bool = False,
+                     fuse_epilogues: bool = True) -> StepBundle:
     """Encoder-only serving step: one full-sequence forward, no KV cache,
     returning a pooled [B, d_model] float32 embedding per row (the paper's
     encoder topology — ViT/BERT-style configs — served through the same
@@ -493,7 +498,8 @@ def make_encode_step(cfg: ModelConfig, shape: ShapeConfig,
     policy = policy or default_policy(cfg, "serve")
     plan = make_plan(cfg, shape, mesh, mode="serve",
                      reduce_method=reduce_method)
-    plan = dataclasses.replace(plan, naive_attention=naive_attention)
+    plan = dataclasses.replace(plan, naive_attention=naive_attention,
+                               fuse_epilogues=fuse_epilogues)
 
     p_dims = lm.lm_param_dims(cfg)
     p_specs = resolve_pspecs(p_dims, plan)
@@ -535,7 +541,8 @@ def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                             max_seq: Optional[int] = None,
                             reduce_method: str = "ring",
                             kv_cache_dtype: str = "bfloat16",
-                            with_sampling: bool = False) -> StepBundle:
+                            with_sampling: bool = False,
+                            fuse_epilogues: bool = True) -> StepBundle:
     """One chunked-prefill piece over the *decode* cache layout: encodes up
     to `chunk_tokens` consecutive prompt tokens per row straight into the
     paged KV pools, so a long admission interleaves with decode steps
@@ -555,7 +562,8 @@ def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
     policy = policy or default_policy(cfg, "serve")
     plan = make_plan(cfg, shape, mesh, mode="serve",
                      reduce_method=reduce_method)
-    plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype)
+    plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype,
+                               fuse_epilogues=fuse_epilogues)
     max_seq = max_seq or shape.seq_len
     assert plan.dp == 1, (
         f"chunked prefill requires an unsharded decode batch: dp={plan.dp}")
@@ -620,7 +628,8 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
                      reduce_method: str = "ring",
                      kv_cache_dtype: str = "bfloat16",
                      with_sampling: bool = False,
-                     paged: Optional[Tuple[int, int]] = None) -> StepBundle:
+                     paged: Optional[Tuple[int, int]] = None,
+                     fuse_epilogues: bool = True) -> StepBundle:
     """`paged`: (num_blocks, block_size) — build the step against a
     block-paged KV cache: full-attention k/v leaves become global pools and
     the step takes a [B, max_blocks] block-table operand after the caches
@@ -632,7 +641,8 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
     policy = policy or default_policy(cfg, "serve")
     plan = make_plan(cfg, shape, mesh, mode="serve",
                      reduce_method=reduce_method)
-    plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype)
+    plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype,
+                               fuse_epilogues=fuse_epilogues)
     max_seq = max_seq or shape.seq_len
 
     layout = None

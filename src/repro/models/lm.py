@@ -255,6 +255,14 @@ def forward_train(params, batch, *, plan: Plan, cfg, policy):
     return loss_for_grad, metrics
 
 
+def _head_norm(params, plan: Plan, cfg):
+    """Final-norm prologue for the logits head when the fused pipeline is
+    on (None = apply ops.norm separately, the unfused chain)."""
+    if not blocks.block_fused(plan):
+        return None
+    return ops.norm_prologue(params["final_norm"], cfg.norm)
+
+
 def _last_position(x, plan: Plan):
     """x: [B, S_loc, E] sequence-sharded -> [B, E] residual of the final
     global position (fixed-length convenience over `_residual_at`)."""
@@ -303,21 +311,26 @@ def forward_prefill(params, batch, *, plan: Plan, cfg, policy, max_seq: int,
                                       policy=policy, max_seq=max_seq,
                                       memory=memory, memory_len=memory_len,
                                       compact_kv=compact_kv)
-    x = ops.norm(x, params["final_norm"], cfg.norm)
+    head_norm = _head_norm(params, plan, cfg)
+    if head_norm is None:
+        x = ops.norm(x, params["final_norm"], cfg.norm)
     B = batch["tokens"].shape[0]
     if prompt_len is None:
         pos = jnp.full((B,), total_seq(cfg, batch["tokens"].shape[1]),
                        jnp.int32)
     else:
         pos = (cfg.n_patches or 0) + prompt_len.astype(jnp.int32)
+    # fused head: select the raw residual row first (norm is row-wise, so
+    # select-then-norm == norm-then-select) and fold the final norm into
+    # the logits GEMM — the full-sequence normalized copy never exists
     x_last = _residual_at(x, pos - 1, plan)
     if lane is None:
         tok = greedy_token(x_last, params["embedding"]["unemb"], plan=plan,
-                           cfg=cfg, policy=policy)
+                           cfg=cfg, policy=policy, norm=head_norm)
     else:
         tok = sample_token(x_last, params["embedding"]["unemb"],
                            dict(lane, step=pos), plan=plan, cfg=cfg,
-                           policy=policy)
+                           policy=policy, norm=head_norm)
     return tok, caches, pos
 
 
@@ -345,7 +358,11 @@ def forward_encode(params, batch, *, plan: Plan, cfg, policy,
     x, _ = _run_segments_prefill(params, x, plan=plan, cfg=cfg,
                                  policy=policy, max_seq=0, memory=memory,
                                  memory_len=memory_len, with_cache=False)
-    x = ops.norm(x, params["final_norm"], cfg.norm)
+    fused_head = blocks.block_fused(plan) and pooling == "last"
+    if not fused_head:
+        # mean pooling needs every position normalized — norm of the mean
+        # is not the mean of the norms, so the full-seq norm stays
+        x = ops.norm(x, params["final_norm"], cfg.norm)
 
     B, S_loc = x.shape[0], x.shape[1]
     n_p = cfg.n_patches or 0
@@ -354,6 +371,10 @@ def forward_encode(params, batch, *, plan: Plan, cfg, policy,
     else:
         pos = n_p + prompt_len.astype(jnp.int32)
     if pooling == "last":
+        if fused_head:      # select the raw row, then norm just that row
+            row = _residual_at(x, pos - 1, plan)
+            return ops.norm(row, params["final_norm"],
+                            cfg.norm).astype(jnp.float32)
         return _residual_at(x, pos - 1, plan).astype(jnp.float32)
     # masked mean over true text positions (patch prefix excluded)
     off = col.axis_index(plan.seq_axes) * S_loc
@@ -393,18 +414,20 @@ def forward_chunk(params, tokens, pos0, chunk_len, caches, block_tables, *,
             return h2, c2
         x, c_new = jax.lax.scan(body, x, (p_seg, c_seg))
         new_caches.append(c_new)
-    x = ops.norm(x, params["final_norm"], cfg.norm)
+    head_norm = _head_norm(params, plan, cfg)
+    if head_norm is None:
+        x = ops.norm(x, params["final_norm"], cfg.norm)
 
     pos = pos0 + chunk_len.astype(jnp.int32)
     last = jnp.clip(chunk_len - 1, 0, C - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
     if lane is None:
         tok = greedy_token(x_last, params["embedding"]["unemb"], plan=plan,
-                           cfg=cfg, policy=policy)
+                           cfg=cfg, policy=policy, norm=head_norm)
     else:
         tok = sample_token(x_last, params["embedding"]["unemb"],
                            dict(lane, step=pos), plan=plan, cfg=cfg,
-                           policy=policy)
+                           policy=policy, norm=head_norm)
     return tok, tuple(new_caches), pos
 
 
@@ -430,12 +453,14 @@ def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy,
                                      memory_len=memory_len,
                                      block_tables=block_tables,
                                      paged_segments=paged_segments)
-    x = ops.norm(x, params["final_norm"], cfg.norm)
+    head_norm = _head_norm(params, plan, cfg)
+    if head_norm is None:
+        x = ops.norm(x, params["final_norm"], cfg.norm)
     if lane is None:
         tok = greedy_token(x, params["embedding"]["unemb"], plan=plan,
-                           cfg=cfg, policy=policy)
+                           cfg=cfg, policy=policy, norm=head_norm)
     else:
         tok = sample_token(x, params["embedding"]["unemb"],
                            dict(lane, step=pos + 1), plan=plan, cfg=cfg,
-                           policy=policy)
+                           policy=policy, norm=head_norm)
     return tok, caches

@@ -66,14 +66,16 @@ class InferenceEngine:
                  min_bucket: int = 8, paged: bool = True,
                  block_size: int = 16, kv_pool_blocks: Optional[int] = None,
                  scheduler: Optional[SchedulerPolicy] = None,
-                 encode_batch: Optional[int] = None):
+                 encode_batch: Optional[int] = None,
+                 fuse_epilogues: bool = True):
         # `policy` is the PRECISION policy (pre-split name, kept for
         # back-compat); the scheduling policy is `scheduler`
         self.runner = ModelRunner(cfg, params, batch_size=batch_size,
                                   max_seq=max_seq, mesh=mesh, policy=policy,
                                   min_bucket=min_bucket, paged=paged,
                                   block_size=block_size,
-                                  kv_pool_blocks=kv_pool_blocks)
+                                  kv_pool_blocks=kv_pool_blocks,
+                                  fuse_epilogues=fuse_epilogues)
         self.scheduler = scheduler or FCFSPolicy()
         self.encode_batch = encode_batch or batch_size
         self.queue: List[Task] = []

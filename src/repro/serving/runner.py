@@ -51,7 +51,8 @@ class ModelRunner:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
                  max_seq: int = 256, mesh=None, policy=None,
                  min_bucket: int = 8, paged: bool = True,
-                 block_size: int = 16, kv_pool_blocks: Optional[int] = None):
+                 block_size: int = 16, kv_pool_blocks: Optional[int] = None,
+                 fuse_epilogues: bool = True):
         assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
         self.cfg = cfg
         self.params = params
@@ -60,6 +61,10 @@ class ModelRunner:
         self.min_bucket = min_bucket
         self.mesh = mesh
         self.policy = policy                 # precision policy (not sched)
+        # fused prologue/epilogue GEMM pipeline (sharding/plan.py); the
+        # unfused chain is kept for A/B parity (token-identical on the
+        # reference dispatch path)
+        self.fuse_epilogues = fuse_epilogues
         # pad-to-bucket is exact only for linear attention caches; recurrent
         # / ring-buffer archs (SSM hybrids, sliding window) prefill at exact
         # prompt length — their state would absorb pad positions
@@ -86,7 +91,8 @@ class ModelRunner:
             paged_arg = None
         self.decode_step = steps_mod.make_decode_step(
             cfg, dshape, mesh, policy=policy, max_seq=max_seq,
-            with_sampling=True, paged=paged_arg)
+            with_sampling=True, paged=paged_arg,
+            fuse_epilogues=fuse_epilogues)
         self.layout = self.decode_step.aux["paged"]
         self._prefill_steps: Dict[tuple, steps_mod.StepBundle] = {}
         self._encode_steps: Dict[tuple, steps_mod.StepBundle] = {}
@@ -173,7 +179,7 @@ class ModelRunner:
             step = steps_mod.make_prefill_step(
                 self.cfg, pshape, self.mesh, policy=self.policy,
                 max_seq=self.max_seq, with_sampling=True,
-                compact_kv=self.paged)
+                compact_kv=self.paged, fuse_epilogues=self.fuse_epilogues)
             self._prefill_steps[(bucket, group)] = step
             stats.prefill_compiles += 1
         return step
@@ -186,7 +192,7 @@ class ModelRunner:
                                  "prefill", bucket + self._n_prefix, group)
             step = steps_mod.make_encode_step(
                 self.cfg, eshape, self.mesh, policy=self.policy,
-                pooling=pooling)
+                pooling=pooling, fuse_epilogues=self.fuse_epilogues)
             self._encode_steps[(bucket, group, pooling)] = step
             stats.encode_compiles += 1
         return step
@@ -199,7 +205,8 @@ class ModelRunner:
             step = steps_mod.make_chunk_prefill_step(
                 self.cfg, cshape, self.mesh, layout=self.layout,
                 chunk_tokens=chunk_tokens, policy=self.policy,
-                max_seq=self.max_seq, with_sampling=True)
+                max_seq=self.max_seq, with_sampling=True,
+                fuse_epilogues=self.fuse_epilogues)
             self._chunk_steps[chunk_tokens] = step
         return step
 

@@ -48,6 +48,13 @@ class Plan:
     reduce_method: str = "ring"           # ring | tree  (T3 schedule)
     gelu_impl: str = "i_gelu"             # i_gelu | gelu | gelu_exact (T5)
     naive_attention: bool = False         # paper-baseline: no flash fusion
+    # fused prologue/epilogue pipeline (paper T5 generalized): pre-norms,
+    # bias/activations and residual adds fold into the GEMM kernels that
+    # consume/produce them (kernels/epilogue.py), so the [T, E] norm and
+    # residual intermediates never round-trip HBM.  Off = the discrete
+    # ops.norm -> matmul -> add chain (A/B parity baseline).  On the
+    # reference dispatch path the fused pipeline is bit-identical.
+    fuse_epilogues: bool = True
     # beyond-paper (§Perf P2): sequence-parallel SSD — the state recurrence
     # crosses seq shards via a log2(tp)-step associative scan of tiny
     # (decay, state) pairs instead of gathering the full sequence
