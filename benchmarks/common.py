@@ -13,6 +13,10 @@ import os
 import subprocess
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.cell_variant import variant_key
+
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 V5E_TDP_W = 170.0          # per-chip board power estimate (public v5e figure)
 
@@ -24,8 +28,13 @@ def cell(arch: str, shape: str, *, mesh: str = "none", policy: str = "",
     os.makedirs(ART, exist_ok=True)
     safe = shape.replace(":", "-")
     fname = os.path.join(ART, f"{arch}__{safe}__{mesh}__{tag}.json")
+    want = variant_key(policy=policy, naive=naive, reduce_method=reduce,
+                       fuse=not nofuse)
     if os.path.exists(fname):
-        return json.load(open(fname))
+        rec = json.load(open(fname))
+        if rec.get("variant") == want:
+            return rec
+        os.remove(fname)   # tag collision or legacy cache: recompute
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
            "--shape", shape, "--mesh", mesh, "--out", ART, "--tag", tag,
            "--reduce", reduce]

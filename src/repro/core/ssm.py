@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core import collectives as col
 from repro.core.nn import act_dtype, gather_w, pdot
 from repro.kernels import ops
+from repro.kernels.epilogue import RMS_EPS
 from repro.sharding.plan import Plan
 
 TP_PAD = 16     # heads padded to multiples of this (= production model axis)
@@ -98,7 +99,7 @@ def _conv_step(x_t, state, w):
     return jax.nn.silu(y).astype(x_t.dtype), window[:, 1:]
 
 
-def _masked_rmsnorm(y, z, scale, plan: Plan, real_dip: int, *, eps=1e-6):
+def _masked_rmsnorm(y, z, scale, plan: Plan, real_dip: int, *, eps=RMS_EPS):
     """Gated RMSNorm over the (tp-sharded, possibly padded) d_inner dim:
     y <- rmsnorm(y * silu(z)) * scale with statistics over real dims only,
     psum'd across tp shards."""
@@ -253,7 +254,7 @@ def _ssm_full_seqp(p, x, *, plan: Plan, cfg, policy, with_cache: bool):
     g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
     g = jnp.where(real, g, 0.0)
     var = jnp.sum(g * g, axis=-1, keepdims=True) / (cfg.ssm_heads * P)
-    y = (g * jax.lax.rsqrt(var + 1e-6)
+    y = (g * jax.lax.rsqrt(var + RMS_EPS)
          * norm_scale.astype(jnp.float32)).astype(ad)
 
     out = pdot(y, w_out, policy)                     # stays seq-sharded

@@ -31,8 +31,10 @@ from typing import Any
 NORM_KINDS = ("rmsnorm", "layernorm")
 ACTIVATION_KINDS = ("none", "gelu", "gelu_exact", "i_gelu", "silu")
 
-RMS_EPS = 1e-6       # must match ops.rmsnorm's default
-LN_EPS = 1e-5        # must match ops.layernorm's default
+# Canonical norm-statistics epsilons.  ops/ref/rmsnorm/matmul all default
+# their eps arguments to these, so fused and unfused paths cannot drift.
+RMS_EPS = 1e-6
+LN_EPS = 1e-5
 
 
 @dataclass(frozen=True)

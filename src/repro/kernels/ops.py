@@ -58,7 +58,8 @@ from repro.kernels import flash_decode as _fd
 from repro.kernels import matmul as _mm
 from repro.kernels import rmsnorm as _norm
 from repro.kernels import ssd as _ssd
-from repro.kernels.epilogue import Epilogue, Prologue, norm_prologue
+from repro.kernels.epilogue import (LN_EPS, RMS_EPS, Epilogue, Prologue,
+                                    norm_prologue)
 
 __all__ = [
     "Epilogue", "Prologue", "norm_prologue", "get_mode", "set_mode",
@@ -224,7 +225,7 @@ def matmul_swiglu(a, b_gate, b_up, *, out_dtype=None,
 
 def _prologue_fields(prologue):
     if prologue is None:
-        return dict(norm="none", gamma=None, nbeta=None, eps=1e-6)
+        return dict(norm="none", gamma=None, nbeta=None, eps=RMS_EPS)
     return dict(norm=prologue.kind, gamma=prologue.scale, nbeta=prologue.bias,
                 eps=prologue.eps)
 
@@ -345,14 +346,14 @@ def residual_norm(x, y, params, kind: str):
 # normalization
 # --------------------------------------------------------------------------
 
-def rmsnorm(x, gamma, *, eps=1e-6):
+def rmsnorm(x, gamma, *, eps=RMS_EPS):
     use, interp = _use_pallas()
     if use:
         return _norm.rmsnorm(x, gamma, eps=eps, interpret=interp)
     return _ref.rmsnorm_ref(x, gamma, eps=eps)
 
 
-def layernorm(x, gamma, beta, *, eps=1e-5):
+def layernorm(x, gamma, beta, *, eps=LN_EPS):
     use, interp = _use_pallas()
     if use:
         return _norm.layernorm(x, gamma, beta, eps=eps, interpret=interp)

@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.epilogue import LN_EPS, RMS_EPS
+
 NEG_INF = -1e30
 
 
@@ -250,7 +252,7 @@ def paged_chunk_partials_ref(q, k_pool, v_pool, block_tables, q_pos,
             l.reshape(B, C, H))
 
 
-def rmsnorm_ref(x, gamma, *, eps=1e-6, out_dtype=None):
+def rmsnorm_ref(x, gamma, *, eps=RMS_EPS, out_dtype=None):
     out_dtype = out_dtype or x.dtype
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
@@ -258,7 +260,7 @@ def rmsnorm_ref(x, gamma, *, eps=1e-6, out_dtype=None):
     return y.astype(out_dtype)
 
 
-def layernorm_ref(x, gamma, beta, *, eps=1e-5, out_dtype=None):
+def layernorm_ref(x, gamma, beta, *, eps=LN_EPS, out_dtype=None):
     out_dtype = out_dtype or x.dtype
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
@@ -397,7 +399,7 @@ def norm_prologue_ref(x, *, norm, gamma, nbeta=None, eps):
 
 def fused_matmul_ref(x, w, *, norm="none", gamma=None, nbeta=None,
                      bias=None, residual=None, activation="none",
-                     eps=1e-6, compute_dtype=None, dot_dtype=None,
+                     eps=RMS_EPS, compute_dtype=None, dot_dtype=None,
                      out_dtype=None):
     """act(norm(x) @ w + bias) cast to out_dtype, + residual.
 
@@ -425,7 +427,7 @@ def fused_matmul_ref(x, w, *, norm="none", gamma=None, nbeta=None,
 
 
 def fused_matmul_swiglu_ref(x, w_gate, w_up, *, norm="none", gamma=None,
-                            nbeta=None, residual=None, eps=1e-6,
+                            nbeta=None, residual=None, eps=RMS_EPS,
                             compute_dtype=None, out_dtype=None):
     """silu(norm(x) @ wg) * (norm(x) @ wu) [+ residual] — the exact op
     chain of ops.matmul_swiglu's reference path with the pre-norm folded
@@ -443,7 +445,7 @@ def fused_matmul_swiglu_ref(x, w_gate, w_up, *, norm="none", gamma=None,
     return y
 
 
-def residual_norm_ref(x, y, *, norm, gamma, nbeta=None, eps=1e-6):
+def residual_norm_ref(x, y, *, norm, gamma, nbeta=None, eps=RMS_EPS):
     """r = x + y; h = norm(r) — same two ops as the unfused chain.
     -> (h, r)."""
     r = x + y

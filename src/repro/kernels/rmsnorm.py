@@ -17,6 +17,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.epilogue import LN_EPS, RMS_EPS
 from jax.experimental import pallas as pl
 
 
@@ -37,7 +39,7 @@ def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
-def rmsnorm(x, gamma, *, eps=1e-6, block_rows=256, interpret=False):
+def rmsnorm(x, gamma, *, eps=RMS_EPS, block_rows=256, interpret=False):
     """x: [..., D] -> same shape; statistics in fp32."""
     shape = x.shape
     D = shape[-1]
@@ -60,7 +62,7 @@ def rmsnorm(x, gamma, *, eps=1e-6, block_rows=256, interpret=False):
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
-def layernorm(x, gamma, beta, *, eps=1e-5, block_rows=256, interpret=False):
+def layernorm(x, gamma, beta, *, eps=LN_EPS, block_rows=256, interpret=False):
     shape = x.shape
     D = shape[-1]
     xf = x.reshape(-1, D)
@@ -131,7 +133,7 @@ def _residual_norm_call(kernel, inputs, vec_params, shape, dtype,
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows",
                                              "interpret"))
-def residual_rmsnorm(x, y, gamma, *, eps=1e-6, block_rows=256,
+def residual_rmsnorm(x, y, gamma, *, eps=RMS_EPS, block_rows=256,
                      interpret=False):
     """r = x + y; h = rmsnorm(r) in one pass.  -> (h, r), both x.dtype."""
     return _residual_norm_call(
@@ -141,7 +143,7 @@ def residual_rmsnorm(x, y, gamma, *, eps=1e-6, block_rows=256,
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows",
                                              "interpret"))
-def residual_layernorm(x, y, gamma, beta, *, eps=1e-5, block_rows=256,
+def residual_layernorm(x, y, gamma, beta, *, eps=LN_EPS, block_rows=256,
                        interpret=False):
     """r = x + y; h = layernorm(r) in one pass.  -> (h, r), both x.dtype."""
     return _residual_norm_call(

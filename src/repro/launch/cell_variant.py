@@ -1,0 +1,34 @@
+"""Cache key for dry-run cell records — importable without side effects.
+
+`repro.launch.dryrun` sets XLA_FLAGS at import time (it must land before
+jax initializes in its subprocesses), so cache *readers* that never touch
+jax — `benchmarks/common.cell()` in particular — import the key from here
+instead.  Keep every result-affecting `run_cell` knob in this dict: a
+cached record whose ``variant`` differs from the requested flags (tag
+collision, legacy record, changed default) must be recomputed, never
+returned verbatim.
+"""
+from __future__ import annotations
+
+# Single source of the knob defaults: variant_key()'s signature, dryrun's
+# argparse defaults, and run_cell()'s signature all derive from this dict —
+# a default that drifts in one copy would make every cached record's
+# variant mismatch and silently recompile every cell on every bench run.
+DEFAULTS = {"policy": "", "naive": False, "reduce": "ring", "nofuse": False,
+            "ssm_seqp": False, "kv_cache_dtype": "bfloat16",
+            "attn_sharding": "", "comm_fp8": False, "mlp_ws": False}
+
+
+def variant_key(*, policy: str = DEFAULTS["policy"],
+                naive: bool = DEFAULTS["naive"],
+                reduce_method: str = DEFAULTS["reduce"],
+                fuse: bool = not DEFAULTS["nofuse"],
+                ssm_seqp: bool = DEFAULTS["ssm_seqp"],
+                kv_cache_dtype: str = DEFAULTS["kv_cache_dtype"],
+                attn_sharding: str = DEFAULTS["attn_sharding"],
+                comm_fp8: bool = DEFAULTS["comm_fp8"],
+                mlp_ws: bool = DEFAULTS["mlp_ws"]) -> dict:
+    return {"policy": policy, "naive": naive, "reduce": reduce_method,
+            "nofuse": not fuse, "ssm_seqp": ssm_seqp,
+            "kv_cache_dtype": kv_cache_dtype, "attn_sharding": attn_sharding,
+            "comm_fp8": comm_fp8, "mlp_ws": mlp_ws}

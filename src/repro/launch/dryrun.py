@@ -25,6 +25,8 @@ import subprocess
 import sys
 import time
 
+from repro.launch.cell_variant import DEFAULTS, variant_key
+
 CELL_TIMEOUT_S = 1500
 
 
@@ -39,9 +41,10 @@ def _parse_shape(shape_name: str):
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
-             reduce_method: str = "ring", policy: str = "",
+             reduce_method: str = DEFAULTS["reduce"], policy: str = "",
              tag: str = "baseline", naive: bool = False,
-             ssm_seqp: bool = False, kv_cache_dtype: str = "bfloat16",
+             ssm_seqp: bool = False,
+             kv_cache_dtype: str = DEFAULTS["kv_cache_dtype"],
              attn_sharding: str = "", comm_fp8: bool = False,
              mlp_ws: bool = False, fuse: bool = True) -> dict:
     import jax
@@ -55,6 +58,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     cfg = get_config(arch)
     shape = _parse_shape(shape_name)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+           "variant": variant_key(policy=policy, naive=naive,
+                                  reduce_method=reduce_method, fuse=fuse,
+                                  ssm_seqp=ssm_seqp,
+                                  kv_cache_dtype=kv_cache_dtype,
+                                  attn_sharding=attn_sharding,
+                                  comm_fp8=comm_fp8, mlp_ws=mlp_ws),
            "ok": False}
     if not supports_shape(cfg, shape):
         rec.update(skipped=True, reason="shape unsupported for this arch "
@@ -109,9 +118,15 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         hdir = os.path.join(out_dir, "hlo")
         os.makedirs(hdir, exist_ok=True)
         hname = f"{arch}__{shape_name.replace(':', '-')}__{mesh_kind}__{tag}"
-        with gzip.open(os.path.join(hdir, hname + ".hlo.gz"), "wt") as f:
+        hfile = os.path.join(hdir, hname + ".hlo.gz")
+        with gzip.open(hfile, "wt") as f:
             f.write(hlo_text)
-        rec["hlo_path"] = os.path.join(hdir, hname + ".hlo.gz")
+        # Record repo-relative so cached cells stay valid across checkouts.
+        repo_root = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+        hrel = os.path.relpath(os.path.abspath(hfile), repo_root)
+        rec["hlo_path"] = (os.path.abspath(hfile)
+                           if hrel.startswith("..") else hrel)
     from repro.core.nn import act_dtype as _ad
     summary = parse_hlo(
         hlo_text, default_dot_dtype=dt_name,
@@ -149,12 +164,13 @@ def main() -> int:
                     choices=["single", "multi", "both", "none"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="artifacts/dryrun")
-    ap.add_argument("--reduce", default="ring", choices=["ring", "tree"])
+    ap.add_argument("--reduce", default=DEFAULTS["reduce"],
+                    choices=["ring", "tree"])
     ap.add_argument("--policy", default="")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--naive", action="store_true")
     ap.add_argument("--ssm-seqp", action="store_true")
-    ap.add_argument("--kv-dtype", default="bfloat16")
+    ap.add_argument("--kv-dtype", default=DEFAULTS["kv_cache_dtype"])
     ap.add_argument("--attn-sharding", default="",
                     choices=["", "head_tp", "seq_sp"])
     ap.add_argument("--comm-fp8", action="store_true")
@@ -186,21 +202,38 @@ def main() -> int:
         return 0
 
     # orchestrate: one subprocess per cell
+    want = variant_key(policy=args.policy, naive=args.naive,
+                       reduce_method=args.reduce, fuse=not args.no_fuse,
+                       ssm_seqp=args.ssm_seqp, kv_cache_dtype=args.kv_dtype,
+                       attn_sharding=args.attn_sharding,
+                       comm_fp8=args.comm_fp8, mlp_ws=args.mlp_ws)
     results = []
     for arch, shape in cell_list():
         for mk in meshes:
             fname = os.path.join(
                 args.out, f"{arch}__{shape}__{mk}__{args.tag}.json")
             if os.path.exists(fname):
-                results.append(json.load(open(fname)))
-                print(f"[cached] {arch} {shape} {mk}")
-                continue
+                cached = json.load(open(fname))
+                if cached.get("variant") == want:
+                    results.append(cached)
+                    print(f"[cached] {arch} {shape} {mk}")
+                    continue
+                os.remove(fname)   # tag collision or legacy cache
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
                    "--arch", arch, "--shape", shape, "--mesh", mk,
                    "--out", args.out, "--reduce", args.reduce,
-                   "--tag", args.tag]
+                   "--tag", args.tag, "--kv-dtype", args.kv_dtype]
             if args.policy:
                 cmd += ["--policy", args.policy]
+            if args.attn_sharding:
+                cmd += ["--attn-sharding", args.attn_sharding]
+            for flag, on in [("--naive", args.naive),
+                             ("--ssm-seqp", args.ssm_seqp),
+                             ("--comm-fp8", args.comm_fp8),
+                             ("--mlp-ws", args.mlp_ws),
+                             ("--no-fuse", args.no_fuse)]:
+                if on:
+                    cmd += [flag]
             t0 = time.time()
             try:
                 p = subprocess.run(cmd, capture_output=True, text=True,
