@@ -14,6 +14,7 @@ from repro.configs.hymba_1_5b import CONFIG as HYMBA_1_5B
 from repro.configs.mamba2_2_7b import CONFIG as MAMBA2_2_7B
 from repro.configs.whisper_base import CONFIG as WHISPER_BASE
 from repro.configs.paper_models import PAPER_MODELS
+from repro.configs.drafts import DRAFTS, make_draft
 
 ASSIGNED = {
     c.name: c for c in (
@@ -24,6 +25,7 @@ ASSIGNED = {
 
 REGISTRY = dict(ASSIGNED)
 REGISTRY.update(PAPER_MODELS)
+REGISTRY.update(DRAFTS)
 
 # CLI-friendly aliases (--arch <id>)
 ALIASES = {
@@ -60,5 +62,5 @@ def get_config(arch: str) -> ModelConfig:
 __all__ = [
     "ModelConfig", "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
     "DECODE_32K", "LONG_500K", "supports_shape", "get_config", "REGISTRY",
-    "ASSIGNED", "PAPER_MODELS",
+    "ASSIGNED", "PAPER_MODELS", "DRAFTS", "make_draft",
 ]

@@ -1,0 +1,68 @@
+"""Draft-model configs for speculative decoding (serving/spec.py).
+
+A draft is a *small* causal LM that shares the target's tokenizer — same
+`vocab` (and therefore the same padded/sharded vocabulary geometry) — so
+its proposed token ids are directly comparable to the target's.  The
+serving stack never needs the draft to be *good*: acceptance is verified
+against the target exactly (serving/spec.py), so a weak draft only costs
+acceptance rate, never correctness.
+
+`make_draft(cfg)` derives a 2-layer GPT-J-shaped draft from any decoder
+config: plain global-attention layers (no MoE / SSM / sliding window /
+encoder — those change the cache layout, and the draft keeps a trivially
+dense per-slot cache), same widths so every sharding divisibility the
+target satisfies carries over, and `reduced()` targets derive reduced
+drafts automatically.  Named drafts (`<target>-draft`) for the paper
+families are registered in `repro.configs.REGISTRY` via `DRAFTS`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+DRAFT_LAYERS = 2
+
+
+def make_draft(cfg: ModelConfig, n_layers: int = DRAFT_LAYERS) -> ModelConfig:
+    """A tiny draft LM sharing `cfg`'s vocabulary: `n_layers` plain
+    causal-attention layers, everything cache-layout-exotic stripped."""
+    if not cfg.vocab:
+        raise ValueError(
+            f"{cfg.name} has no token vocabulary — a draft LM needs the "
+            f"target's tokenizer (decoder LMs only)")
+    n = max(1, min(n_layers, cfg.n_layers))
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-draft",
+        family="dense",
+        n_layers=n,
+        schedule=(("attn", n),),
+        sliding_window=0,
+        n_experts=0,
+        top_k=0,
+        ssm_state=0,
+        d_inner=0,
+        n_enc_layers=0,
+        enc_schedule=(),
+        enc_seq=0,
+        n_patches=0,
+        n_classes=0,
+        image_seq=0,
+    )
+
+
+def _paper_drafts() -> dict:
+    # one registered draft per decoder family (paper LMs + the assigned
+    # plain-decoder archs); the rest derive on demand via make_draft
+    from repro.configs.chatglm3_6b import CONFIG as CHATGLM3
+    from repro.configs.deepseek_67b import CONFIG as DEEPSEEK67B
+    from repro.configs.mixtral_8x7b import CONFIG as MIXTRAL_8X7B
+    from repro.configs.paper_models import GPT3_XL, GPT_J
+    from repro.configs.phi4_mini_3_8b import CONFIG as PHI4_MINI
+    targets = (GPT_J, GPT3_XL, PHI4_MINI, CHATGLM3, DEEPSEEK67B,
+               MIXTRAL_8X7B)
+    return {d.name: d for d in (make_draft(t) for t in targets)}
+
+
+DRAFTS = _paper_drafts()

@@ -15,6 +15,15 @@ Scheduler/runner split knobs:
   --prefill-chunk N                  chunk budget for --policy chunked
   --task {generate,encode}           decoder AR traffic vs encoder-only
                                      pooled-embedding traffic (EncodeTask)
+
+Speculative decoding (serving/spec.py):
+  --spec-draft NAME                  turn on speculation: "self" (the
+                                     target proposes for itself — the
+                                     zero-risk upper bound), "auto"
+                                     (derive a 2-layer draft), or a
+                                     registered draft config (e.g.
+                                     "gpt-j-draft")
+  --spec-k K                         draft tokens proposed per verify step
 """
 from __future__ import annotations
 
@@ -30,7 +39,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_mesh_for
 from repro.models import lm
 from repro.serving import (EncodeTask, InferenceEngine, Request,
-                           SamplingParams, make_policy)
+                           SamplingParams, SpecConfig, make_policy)
 
 
 def build_trace(cfg, args) -> list:
@@ -85,6 +94,12 @@ def main(argv=None) -> int:
                          "encoder-only pooled-embedding requests")
     ap.add_argument("--pooling", choices=("last", "mean"), default="last",
                     help="EncodeTask pooling (--task encode)")
+    ap.add_argument("--spec-draft", default="",
+                    help="speculative decoding draft: 'self', 'auto', or a "
+                         "registered draft config name (empty = off)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculation length: draft tokens proposed per "
+                         "verify step (--spec-draft)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV pool block size (tokens)")
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
@@ -106,12 +121,14 @@ def main(argv=None) -> int:
     mesh = None if args.single_device else make_mesh_for(len(jax.devices()))
     params = lm.init_lm(jax.random.key(args.seed), cfg, jnp.bfloat16)
 
+    spec = (SpecConfig(draft=args.spec_draft, k=args.spec_k)
+            if args.spec_draft else None)
     engine = InferenceEngine(
         cfg, params, batch_size=args.batch, max_seq=args.max_seq, mesh=mesh,
         block_size=args.block_size,
         kv_pool_blocks=args.kv_pool_blocks or None,
         scheduler=make_policy(args.policy, chunk_tokens=args.prefill_chunk),
-        fuse_epilogues=not args.no_fuse)
+        fuse_epilogues=not args.no_fuse, spec=spec)
     if (args.policy == "chunked"
             and not engine.runner.supports_chunked):
         print(f"note: {cfg.name} cannot chunk prefills "
@@ -131,6 +148,13 @@ def main(argv=None) -> int:
           f"({stats.prefill_compiles} prefill buckets compiled: "
           f"{sorted(stats.bucket_hits)})")
     print(stats.summary())
+    if spec is not None:
+        print(f"  spec: draft={engine.runner.draft_cfg.name} k={args.spec_k}"
+              f" | {stats.spec_acceptance_rate:.0%} of "
+              f"{stats.spec_proposed_tokens} proposals accepted, "
+              f"{stats.spec_tokens_per_step:.2f} tokens/target-step, "
+              f"draft p50 {stats.draft_time_ms_p50:.1f}ms p95 "
+              f"{stats.draft_time_ms_p95:.1f}ms")
     for r in sorted(done, key=lambda r: r.uid)[:3]:
         if isinstance(r, EncodeTask):
             e = np.asarray(r.embedding)

@@ -533,6 +533,60 @@ def make_encode_step(cfg: ModelConfig, shape: ShapeConfig,
 # chunked-prefill step
 # --------------------------------------------------------------------------
 
+def _chunk_scaffold(cfg: ModelConfig, shape: ShapeConfig,
+                    mesh: Optional[Mesh], *, layout: PagedLayout,
+                    width: int, policy: Optional[Policy],
+                    max_seq: Optional[int], reduce_method: str,
+                    kv_cache_dtype: str, fuse_epilogues: bool, kind: str):
+    """Shared plan/spec/struct scaffolding for the chunk-shaped steps —
+    chunked prefill and speculative verify both run lm's paged chunk stack
+    over `width` consecutive tokens per row against the decode cache
+    layout, with the same operand schema:
+
+      (params, tokens [n, width], pos0 [n], chunk_len [n], caches,
+       tables [n, MB][, lane])
+
+    Returns (plan, policy, max_seq, p_specs, row_spec, tok_spec, c_struct,
+    c_specs, in_specs, in_structs) with the lane NOT yet appended (the two
+    builders differ in whether sampling is optional)."""
+    import dataclasses
+    policy = policy or default_policy(cfg, "serve")
+    plan = make_plan(cfg, shape, mesh, mode="serve",
+                     reduce_method=reduce_method)
+    plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype,
+                               fuse_epilogues=fuse_epilogues)
+    max_seq = max_seq or shape.seq_len
+    assert plan.dp == 1, (
+        f"{kind} requires an unsharded decode batch: dp={plan.dp}")
+    assert all(layout.segments), (
+        f"{kind} requires every segment's KV to be paged "
+        f"(segments={layout.segments})")
+
+    p_dims = lm.lm_param_dims(cfg)
+    p_specs = resolve_pspecs(p_dims, plan)
+    p_struct = _param_struct(cfg, policy.param_dtype)
+    c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
+                                    policy, paged=layout)
+    c_specs = resolve_pspecs(c_dims, plan)
+    n = shape.global_batch
+    row_spec = plan.pspec("batch")
+    tok_spec = plan.pspec("batch", None)
+    in_specs = (p_specs, tok_spec, row_spec, row_spec, c_specs, tok_spec)
+    in_structs = (
+        with_shardings(p_struct, p_specs, mesh),
+        with_shardings(jax.ShapeDtypeStruct((n, width), jnp.int32),
+                       tok_spec, mesh),
+        with_shardings(jax.ShapeDtypeStruct((n,), jnp.int32), row_spec,
+                       mesh),
+        with_shardings(jax.ShapeDtypeStruct((n,), jnp.int32), row_spec,
+                       mesh),
+        with_shardings(c_struct, c_specs, mesh),
+        with_shardings(jax.ShapeDtypeStruct((n, layout.max_blocks),
+                                            jnp.int32), tok_spec, mesh))
+    return (plan, policy, max_seq, p_specs, row_spec, tok_spec, c_struct,
+            c_specs, in_specs, in_structs)
+
+
 def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                             mesh: Optional[Mesh], *,
                             layout: PagedLayout,
@@ -558,28 +612,12 @@ def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
     The returned token is meaningful only for rows whose chunk completes
     the prompt (it then equals the unchunked prefill's sample; see
     lm.forward_chunk)."""
-    import dataclasses
-    policy = policy or default_policy(cfg, "serve")
-    plan = make_plan(cfg, shape, mesh, mode="serve",
-                     reduce_method=reduce_method)
-    plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype,
-                               fuse_epilogues=fuse_epilogues)
-    max_seq = max_seq or shape.seq_len
-    assert plan.dp == 1, (
-        f"chunked prefill requires an unsharded decode batch: dp={plan.dp}")
-    assert all(layout.segments), (
-        "chunked prefill requires every segment's KV to be paged "
-        f"(segments={layout.segments})")
-
-    p_dims = lm.lm_param_dims(cfg)
-    p_specs = resolve_pspecs(p_dims, plan)
-    p_struct = _param_struct(cfg, policy.param_dtype)
-    c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
-                                    policy, paged=layout)
-    c_specs = resolve_pspecs(c_dims, plan)
-    n = shape.global_batch
-    row_spec = plan.pspec("batch")
-    tok_spec = plan.pspec("batch", None)
+    (plan, policy, max_seq, p_specs, row_spec, tok_spec, c_struct, c_specs,
+     in_specs, in_structs) = _chunk_scaffold(
+        cfg, shape, mesh, layout=layout, width=chunk_tokens, policy=policy,
+        max_seq=max_seq, reduce_method=reduce_method,
+        kv_cache_dtype=kv_cache_dtype, fuse_epilogues=fuse_epilogues,
+        kind="chunked prefill")
 
     def run(params, tokens, pos0, chunk_len, caches, tables, lane):
         col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
@@ -591,22 +629,11 @@ def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
             else (lambda params, tokens, pos0, chunk_len, caches, tables:
                   run(params, tokens, pos0, chunk_len, caches, tables,
                       None)))
-    in_specs = (p_specs, tok_spec, row_spec, row_spec, c_specs, tok_spec)
-    in_structs = (
-        with_shardings(p_struct, p_specs, mesh),
-        with_shardings(jax.ShapeDtypeStruct((n, chunk_tokens), jnp.int32),
-                       tok_spec, mesh),
-        with_shardings(jax.ShapeDtypeStruct((n,), jnp.int32), row_spec,
-                       mesh),
-        with_shardings(jax.ShapeDtypeStruct((n,), jnp.int32), row_spec,
-                       mesh),
-        with_shardings(c_struct, c_specs, mesh),
-        with_shardings(jax.ShapeDtypeStruct((n, layout.max_blocks),
-                                            jnp.int32), tok_spec, mesh))
     if with_sampling:
         l_specs = resolve_pspecs(lane_dims(False), plan)
         in_specs += (l_specs,)
-        in_structs += (with_shardings(lane_struct(n, False), l_specs, mesh),)
+        in_structs += (with_shardings(lane_struct(shape.global_batch, False),
+                                      l_specs, mesh),)
     sm = _maybe_shard_map(body, mesh, in_specs=in_specs,
                           out_specs=(row_spec, c_specs, row_spec))
     fn = jax.jit(sm, donate_argnums=(4,))
@@ -615,6 +642,65 @@ def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                       aux={"param_specs": p_specs, "cache_struct": c_struct,
                            "cache_specs": c_specs, "max_seq": max_seq,
                            "paged": layout, "chunk_tokens": chunk_tokens})
+
+
+# --------------------------------------------------------------------------
+# speculative verify step (multi-token AR)
+# --------------------------------------------------------------------------
+
+def make_verify_step(cfg: ModelConfig, shape: ShapeConfig,
+                     mesh: Optional[Mesh], *,
+                     layout: PagedLayout,
+                     num_tokens: int,
+                     policy: Optional[Policy] = None,
+                     max_seq: Optional[int] = None,
+                     reduce_method: str = "ring",
+                     kv_cache_dtype: str = "bfloat16",
+                     fuse_epilogues: bool = True) -> StepBundle:
+    """Speculative-decoding verification: one target forward over
+    `num_tokens` = k+1 consecutive tokens per decode slot (the pending
+    token + k draft proposals), writing their KV straight into the slot's
+    paged blocks and returning the target's own next-token choice at EVERY
+    position (lm.forward_verify) — the chunked-prefill machinery pointed
+    at decode-time positions, with a per-position sampling head instead of
+    a final-position one.
+
+    `shape` must be the decode shape the engine's decode step was built
+    with: the cache pytree (and its shardings) is shared across
+    decode / chunk / verify steps, and caches are donated here for the
+    same in-place update.
+
+    fn(params, tokens [B, C], pos0 [B], chunk_len [B], caches,
+       tables [B, MB], lane) -> (choices [B, C], caches, pos [B])
+
+    Rows whose chunk_len is 0 (empty / still-prefilling slots) write
+    nothing (their table rows are -1, so scatters drop) and their choices
+    are garbage the caller ignores."""
+    (plan, policy, max_seq, p_specs, row_spec, tok_spec, c_struct, c_specs,
+     in_specs, in_structs) = _chunk_scaffold(
+        cfg, shape, mesh, layout=layout, width=num_tokens, policy=policy,
+        max_seq=max_seq, reduce_method=reduce_method,
+        kv_cache_dtype=kv_cache_dtype, fuse_epilogues=fuse_epilogues,
+        kind="speculative verify")
+
+    def body(params, tokens, pos0, chunk_len, caches, tables, lane):
+        col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
+        return lm.forward_verify(params, tokens, pos0, chunk_len, caches,
+                                 tables, plan=plan, cfg=cfg, policy=policy,
+                                 lane=lane, paged_segments=layout.segments)
+
+    l_specs = resolve_pspecs(lane_dims(False), plan)
+    in_specs += (l_specs,)
+    in_structs += (with_shardings(lane_struct(shape.global_batch, False),
+                                  l_specs, mesh),)
+    sm = _maybe_shard_map(body, mesh, in_specs=in_specs,
+                          out_specs=(tok_spec, c_specs, row_spec))
+    fn = jax.jit(sm, donate_argnums=(4,))
+    return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
+                      in_structs=in_structs, in_specs=in_specs,
+                      aux={"param_specs": p_specs, "cache_struct": c_struct,
+                           "cache_specs": c_specs, "max_seq": max_seq,
+                           "paged": layout, "num_tokens": num_tokens})
 
 
 # --------------------------------------------------------------------------

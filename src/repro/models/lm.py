@@ -386,6 +386,37 @@ def forward_encode(params, batch, *, plan: Plan, cfg, policy,
     return s / n[:, None]
 
 
+def _run_chunk_stack(params, tokens, pos0, chunk_len, caches, block_tables,
+                     *, plan: Plan, cfg, policy, paged_segments):
+    """The shared chunk body: embed C consecutive tokens per row, run every
+    segment's `block_chunk` (KV scattered into the paged blocks), apply the
+    final norm unless the fused head will fold it.  Both `forward_chunk`
+    (chunked prefill: sample the last position) and `forward_verify`
+    (speculative decoding: sample every position) sit on THIS stack — the
+    verify path's losslessness rests on the two sharing one body.
+    -> (x [B, C, E], caches, head_norm-or-None)."""
+    B, C = tokens.shape
+    x = embed_token(params["embedding"]["embed"], tokens.reshape(B * C),
+                    plan=plan, policy=policy).reshape(B, C, -1)
+    paged_segments = paged_segments or (True,) * len(cfg.schedule)
+    new_caches = []
+    for (kind, _), p_seg, c_seg, pgd in zip(cfg.schedule, params["segments"],
+                                            caches, paged_segments):
+        assert pgd, f"chunk forward requires paged segments: {kind}"
+        def body(h, inp, _kind=kind):
+            p_layer, c_layer = inp
+            h2, c2 = blocks.block_chunk(_kind, p_layer, h, pos0, chunk_len,
+                                        c_layer, block_tables, plan=plan,
+                                        cfg=cfg, policy=policy)
+            return h2, c2
+        x, c_new = jax.lax.scan(body, x, (p_seg, c_seg))
+        new_caches.append(c_new)
+    head_norm = _head_norm(params, plan, cfg)
+    if head_norm is None:
+        x = ops.norm(x, params["final_norm"], cfg.norm)
+    return x, tuple(new_caches), head_norm
+
+
 def forward_chunk(params, tokens, pos0, chunk_len, caches, block_tables, *,
                   plan: Plan, cfg, policy, lane=None, paged_segments=None):
     """One chunked-prefill piece: encode C consecutive prompt tokens into
@@ -399,24 +430,9 @@ def forward_chunk(params, tokens, pos0, chunk_len, caches, block_tables, *,
     draw).  Requires every segment paged (ModelRunner.supports_chunked);
     `lane` as in forward_prefill (sans prompt_len); greedy when None."""
     B, C = tokens.shape
-    x = embed_token(params["embedding"]["embed"], tokens.reshape(B * C),
-                    plan=plan, policy=policy).reshape(B, C, -1)
-    paged_segments = paged_segments or (True,) * len(cfg.schedule)
-    new_caches = []
-    for (kind, _), p_seg, c_seg, pgd in zip(cfg.schedule, params["segments"],
-                                            caches, paged_segments):
-        assert pgd, f"chunked prefill requires paged segments: {kind}"
-        def body(h, inp, _kind=kind):
-            p_layer, c_layer = inp
-            h2, c2 = blocks.block_chunk(_kind, p_layer, h, pos0, chunk_len,
-                                        c_layer, block_tables, plan=plan,
-                                        cfg=cfg, policy=policy)
-            return h2, c2
-        x, c_new = jax.lax.scan(body, x, (p_seg, c_seg))
-        new_caches.append(c_new)
-    head_norm = _head_norm(params, plan, cfg)
-    if head_norm is None:
-        x = ops.norm(x, params["final_norm"], cfg.norm)
+    x, new_caches, head_norm = _run_chunk_stack(
+        params, tokens, pos0, chunk_len, caches, block_tables, plan=plan,
+        cfg=cfg, policy=policy, paged_segments=paged_segments)
 
     pos = pos0 + chunk_len.astype(jnp.int32)
     last = jnp.clip(chunk_len - 1, 0, C - 1)
@@ -428,7 +444,52 @@ def forward_chunk(params, tokens, pos0, chunk_len, caches, block_tables, *,
         tok = sample_token(x_last, params["embedding"]["unemb"],
                            dict(lane, step=pos), plan=plan, cfg=cfg,
                            policy=policy, norm=head_norm)
-    return tok, tuple(new_caches), pos
+    return tok, new_caches, pos
+
+
+def forward_verify(params, tokens, pos0, chunk_len, caches, block_tables, *,
+                   plan: Plan, cfg, policy, lane=None, paged_segments=None):
+    """Multi-token verification pass for speculative decoding: one target
+    forward over C = k+1 consecutive tokens (the pending token + k draft
+    proposals) straight into the paged KV cache, returning the target's
+    OWN next-token choice at every position.  tokens: [B, C]; pos0: [B]
+    absolute start position (== the slot's decode pos); chunk_len: [B]
+    real tokens this row carries (<= C; tail is padding).
+    -> (choices [B, C], caches, pos [B]).
+
+    choices[b, j] is the token the target would emit after the prefix
+    ending at absolute position pos0[b] + j — i.e. exactly what a
+    non-speculative decode step at that state would produce: greedy rows
+    take the argmax, sampled rows the (seed, step)-keyed Gumbel-max draw
+    with step = pos0 + j + 1, matching forward_decode's step = pos + 1.
+    The host accepts the longest prefix where the draft's proposal equals
+    the target's choice (serving/spec.py), so committed outputs are
+    token-identical to step-by-step decoding.  KV for every chunk position
+    is scattered into the slot's blocks; rejected positions sit beyond the
+    committed `pos` and are masked / overwritten — rollback is a
+    fill-count rewind, not a cache edit.  Requires every segment paged
+    (same gate as forward_chunk, whose stack this shares)."""
+    B, C = tokens.shape
+    x, new_caches, head_norm = _run_chunk_stack(
+        params, tokens, pos0, chunk_len, caches, block_tables, plan=plan,
+        cfg=cfg, policy=policy, paged_segments=paged_segments)
+
+    # every position samples: flatten [B, C, E] -> [B*C, E] and draw with
+    # step = pos0 + j + 1 per position (the decode-step contract: the token
+    # occupying position p is drawn with step p)
+    E = x.shape[-1]
+    x_flat = x.reshape(B * C, E)
+    steps = (pos0[:, None] + 1 + jnp.arange(C)[None, :]).astype(jnp.int32)
+    if lane is None:
+        tok = greedy_token(x_flat, params["embedding"]["unemb"], plan=plan,
+                           cfg=cfg, policy=policy, norm=head_norm)
+    else:
+        lane_flat = {k: jnp.repeat(v, C) for k, v in lane.items()}
+        tok = sample_token(x_flat, params["embedding"]["unemb"],
+                           dict(lane_flat, step=steps.reshape(B * C)),
+                           plan=plan, cfg=cfg, policy=policy, norm=head_norm)
+    return (tok.reshape(B, C), new_caches,
+            pos0 + chunk_len.astype(jnp.int32))
 
 
 def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy,

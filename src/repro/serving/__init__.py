@@ -1,9 +1,11 @@
 from repro.serving.engine import InferenceEngine, ServingEngine
 from repro.serving.runner import ModelRunner
-from repro.serving.sampling import GREEDY, SamplingParams
+from repro.serving.sampling import GREEDY, SamplingParams, validate_sampling
 from repro.serving.scheduler import (ChunkedPrefillPolicy, FCFSPolicy,
                                      PriorityPolicy, SchedulerPolicy,
                                      make_policy)
+from repro.serving.spec import (DraftState, SpecConfig, resolve_draft,
+                                spec_support_reason)
 from repro.serving.stats import EngineStats
 from repro.serving.tasks import (EncodeTask, GenerateTask, Request, Task,
                                  TokenEvent)

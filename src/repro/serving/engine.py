@@ -54,7 +54,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serving.runner import ModelRunner
+from repro.serving.sampling import validate_sampling
 from repro.serving.scheduler import FCFSPolicy, SchedulerPolicy
+from repro.serving.spec import SpecConfig
 from repro.serving.stats import EngineStats
 from repro.serving.tasks import (EncodeTask, GenerateTask, Request, Task,
                                  TokenEvent)
@@ -67,15 +69,21 @@ class InferenceEngine:
                  block_size: int = 16, kv_pool_blocks: Optional[int] = None,
                  scheduler: Optional[SchedulerPolicy] = None,
                  encode_batch: Optional[int] = None,
-                 fuse_epilogues: bool = True):
+                 fuse_epilogues: bool = True,
+                 spec: Optional[SpecConfig] = None, draft_params=None):
         # `policy` is the PRECISION policy (pre-split name, kept for
-        # back-compat); the scheduling policy is `scheduler`
+        # back-compat); the scheduling policy is `scheduler`.  `spec`
+        # turns on speculative decoding (serving/spec.py): the runner
+        # owns a draft LM (params from `draft_params`, the target itself
+        # for draft="self", or a seeded init) and replaces per-token
+        # decode steps with propose->verify->commit rounds.
         self.runner = ModelRunner(cfg, params, batch_size=batch_size,
                                   max_seq=max_seq, mesh=mesh, policy=policy,
                                   min_bucket=min_bucket, paged=paged,
                                   block_size=block_size,
                                   kv_pool_blocks=kv_pool_blocks,
-                                  fuse_epilogues=fuse_epilogues)
+                                  fuse_epilogues=fuse_epilogues,
+                                  spec=spec, draft_params=draft_params)
         self.scheduler = scheduler or FCFSPolicy()
         self.encode_batch = encode_batch or batch_size
         self.queue: List[Task] = []
@@ -150,6 +158,19 @@ class InferenceEngine:
             assert task.max_new_tokens >= 1, (
                 f"max_new_tokens must be >= 1 (the prefill emits the first "
                 f"token): {task.max_new_tokens}")
+            # submit-time sampling validation: a clear ValueError here
+            # instead of a silent clamp (top_k) or misbehavior deep in the
+            # jitted step (covers params built around __post_init__ too)
+            validate_sampling(task.sampling)
+            spec = self.runner.spec
+            if (spec is not None and spec.acceptance == "greedy"
+                    and not task.sampling.is_greedy):
+                raise ValueError(
+                    f"request {task.uid} samples (temperature="
+                    f"{task.sampling.temperature}) but SpecConfig "
+                    f"acceptance='greedy' serves greedy traffic only; "
+                    f"use acceptance='lossless' for exact sampled "
+                    f"speculation")
         task.prompt_len = n
         task._t_submit = time.perf_counter()
         self.queue.append(task)
@@ -328,9 +349,13 @@ class InferenceEngine:
         if runner.decoding_slots():
             victim = lambda running: self.scheduler.select_victim(
                 running, time.perf_counter())
+            # speculation needs the verify chunk's blocks up front: the
+            # lookahead extends the per-slot need to pos + k_eff
+            la = runner.spec_lookahead() if runner.spec else None
             # each eviction goes to the queue head (most recently evicted
             # first), matching the pre-split engine's re-queue order
-            for task in runner.ensure_decode_blocks(victim, self._stats):
+            for task in runner.ensure_decode_blocks(victim, self._stats,
+                                                    lookahead=la):
                 self.queue.insert(0, task)
             if runner.decoding_slots():
                 t0 = time.perf_counter()
@@ -340,7 +365,8 @@ class InferenceEngine:
                     # here (chunked prefill exists to bound it)
                     self._stats.add_decode_stall_ms(
                         (t0 - self._t_last_decode) * 1e3)
-                fresh.extend(runner.decode(self._stats))
+                fresh.extend(runner.spec_decode(self._stats) if runner.spec
+                             else runner.decode(self._stats))
                 self._t_last_decode = time.perf_counter()
                 self._retire()
         if not runner.decoding_slots():

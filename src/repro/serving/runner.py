@@ -10,6 +10,10 @@ token/pos state — and exposes exactly four execution verbs:
   chunk_step(task, stats)     advance one chunked-prefill piece for a task
                               parked in a slot (see begin_chunked)
   decode(stats)               one AR step over every *decoding* slot
+  spec_decode(stats)          one speculative round (draft proposals ->
+                              multi-token verify -> commit/rollback) over
+                              every decoding slot, replacing decode() when
+                              a SpecConfig is set (serving/spec.py)
   encode(group, stats)        one pooled full-sequence pass for a batch of
                               EncodeTasks (no slots, no cache)
 
@@ -31,6 +35,7 @@ from __future__ import annotations
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -41,6 +46,9 @@ from repro.serving.kv_cache import (BlockAllocator, make_prefill_scatter,
                                     zero_caches)
 from repro.serving.sampling import (device_lane, set_lane, stack_lanes,
                                     stack_prefill_lanes, zero_lane)
+from repro.serving.spec import (DraftState, SpecConfig, accept_length,
+                                resolve_draft, spec_support_reason,
+                                trim_emitted)
 from repro.serving.stats import EngineStats
 from repro.serving.tasks import EncodeTask, GenerateTask, Task
 
@@ -52,7 +60,8 @@ class ModelRunner:
                  max_seq: int = 256, mesh=None, policy=None,
                  min_bucket: int = 8, paged: bool = True,
                  block_size: int = 16, kv_pool_blocks: Optional[int] = None,
-                 fuse_epilogues: bool = True):
+                 fuse_epilogues: bool = True,
+                 spec: Optional[SpecConfig] = None, draft_params=None):
         assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
         self.cfg = cfg
         self.params = params
@@ -123,6 +132,54 @@ class ModelRunner:
         self._slot_blocks: List[List[int]] = [[] for _ in range(batch_size)]
         self._tables_dev = None            # device copy, rebuilt when dirty
         self._admit_seq = 0
+        # -- speculative decoding (serving/spec.py) --------------------
+        # the draft LM is a second, much smaller model sharing the
+        # target's vocabulary: its own dense per-slot cache, its own
+        # decode/prefill bundles, proposals verified by ONE multi-token
+        # target pass (make_verify_step) per round instead of one target
+        # pass per token
+        self.spec = spec
+        if spec is not None:
+            reason = spec_support_reason(cfg)
+            if reason is None and not self.supports_chunked:
+                reason = ("engine layout cannot carry multi-token verify "
+                          "state (paged KV cache with every segment paged "
+                          "and dp == 1 required)")
+            if reason is not None:
+                raise ValueError(f"speculative decoding unsupported for "
+                                 f"{cfg.name}: {reason}")
+            self.draft_cfg = resolve_draft(spec, cfg)
+            if spec.draft == "self":
+                self.draft_params = params
+            elif draft_params is not None:
+                self.draft_params = draft_params
+            else:
+                from repro.models import lm as lm_mod
+                pdtype = jax.tree.leaves(params)[0].dtype
+                self.draft_params = lm_mod.init_lm(
+                    jax.random.key(spec.draft_seed), self.draft_cfg, pdtype)
+            self.draft_decode_step = steps_mod.make_decode_step(
+                self.draft_cfg, ShapeConfig("draft_decode", "decode",
+                                            max_seq, batch_size),
+                mesh, policy=policy, max_seq=max_seq, with_sampling=True,
+                paged=None, fuse_epilogues=fuse_epilogues)
+            self.draft_caches = zero_caches(
+                self.draft_decode_step.aux["cache_struct"],
+                steps_mod.to_shardings(
+                    self.draft_decode_step.aux["cache_specs"], mesh))
+            self._draft_prefill_steps: Dict[tuple,
+                                            steps_mod.StepBundle] = {}
+            self._draft_scatter = make_prefill_scatter(
+                (False,) * len(self.draft_cfg.schedule), 1)
+            self.verify_step = steps_mod.make_verify_step(
+                cfg, dshape, mesh, layout=self.layout,
+                num_tokens=spec.k + 1, policy=policy, max_seq=max_seq,
+                fuse_epilogues=fuse_epilogues)
+            self.draft_states: List[Optional[DraftState]] = (
+                [None] * batch_size)
+        else:
+            self.draft_cfg = None
+            self.draft_states = [None] * batch_size
         # token/pos live HOST-side: per-slot updates (prefill landing, chunk
         # completion) index by a python int, and a device `.at[b].set()`
         # would jit-compile once per distinct slot index — a 20-50ms spike
@@ -250,6 +307,7 @@ class ModelRunner:
             self._tables_dev = None
         self.slots[b] = None
         self.prefilling[b] = False
+        self.draft_states[b] = None
 
     def evict(self, b: int) -> GenerateTask:
         """Pull the task out of slot `b`, freeing its blocks (recompute
@@ -267,11 +325,14 @@ class ModelRunner:
 
     def ensure_decode_blocks(
             self, select_victim: Callable[[Sequence[Task]], Task],
-            stats: EngineStats) -> List[GenerateTask]:
+            stats: EngineStats,
+            lookahead: Optional[np.ndarray] = None) -> List[GenerateTask]:
         """Before a decode step: every decoding slot must own the block its
-        next token lands in (pos // block_size).  Allocation failure evicts
-        `select_victim(running)` until it succeeds; returns the evicted
-        tasks (the engine re-queues them)."""
+        next token lands in (pos // block_size) — plus, under speculation,
+        the blocks the verify chunk's `lookahead[b]` extra positions write
+        into (spec_lookahead() caps each row so the need always fits the
+        pool).  Allocation failure evicts `select_victim(running)` until it
+        succeeds; returns the evicted tasks (the engine re-queues them)."""
         if not self.paged:
             return []
         evicted: List[GenerateTask] = []
@@ -280,7 +341,8 @@ class ModelRunner:
         for b in range(self.B):
             if self.slots[b] is None or self.prefilling[b]:
                 continue
-            need = int(pos[b]) // bs + 1
+            la = int(lookahead[b]) if lookahead is not None else 0
+            need = (int(pos[b]) + la) // bs + 1
             if need > self.allocator.num_blocks:
                 # impossible to ever satisfy — fail before preempting (and
                 # discarding) every other in-flight request's progress
@@ -380,6 +442,8 @@ class ModelRunner:
         # preempting and non-preempting runs
         stats.nar_time_s += (now - t0) * n_first / n
         stats.recompute_time_s += (now - t0) * (n - n_first) / n
+        if self.spec is not None:
+            self._draft_prefill(fulls, slots, stats)
         return fresh
 
     def _seat(self, task: GenerateTask, b: int, blk: List[int]):
@@ -389,6 +453,42 @@ class ModelRunner:
         self.slots[b] = task
         self.prefilling[b] = False
         self._slot_blocks[b] = list(blk)
+
+    # -- execution: draft prefill (speculative decoding) ----------------
+    def _draft_prefill(self, fulls: List[np.ndarray], slots: List[int],
+                       stats: EngineStats):
+        """Build the draft LM's dense cache rows for freshly (re-)admitted
+        tasks: one batched draft prefill over the same padded token batch
+        the target encoded, row-scattered into the draft cache at the
+        assigned slots.  Pad positions beyond each row's true length hold
+        junk KV the draft never attends (decode masks by pos).  The
+        sampled token is discarded — the draft is only ever fed COMMITTED
+        tokens, so its first proposal conditions on the target's first
+        token, not its own guess."""
+        n = len(fulls)
+        bucket = self.bucket_for(max(len(f) for f in fulls))
+        step = self._draft_prefill_steps.get((bucket, n))
+        if step is None:
+            pshape = ShapeConfig(f"draft_prefill_{bucket}x{n}", "prefill",
+                                 bucket, n)
+            step = steps_mod.make_prefill_step(
+                self.draft_cfg, pshape, self.mesh, policy=self.policy,
+                max_seq=self.max_seq, with_sampling=False, compact_kv=False,
+                fuse_epilogues=self.fuse_epilogues)
+            self._draft_prefill_steps[(bucket, n)] = step
+        t0 = time.perf_counter()
+        padded = np.zeros((n, bucket), np.int32)
+        for j, seq in enumerate(fulls):
+            padded[j, :len(seq)] = seq
+        _, dcaches, _ = step.fn(self.draft_params,
+                                {"tokens": jnp.asarray(padded)})
+        self.draft_caches = self._draft_scatter(
+            self.draft_caches, dcaches, jnp.asarray(slots, jnp.int32),
+            jnp.zeros((n, 1), jnp.int32))
+        jax.block_until_ready(self.draft_caches)   # honest overhead timing
+        for j, b in enumerate(slots):
+            self.draft_states[b] = DraftState(pos=len(fulls[j]))
+        stats.spec_draft_time_s += time.perf_counter() - t0
 
     # -- execution: chunked prefill ------------------------------------
     def begin_chunked(self, task: GenerateTask, blk: List[int], b: int):
@@ -454,6 +554,10 @@ class ModelRunner:
         if first_admit:
             task.ttft_ms = (now - task._t_submit) * 1e3
             stats.add_ttft_ms(task.ttft_ms)
+        if self.spec is not None:
+            # the draft (being small) prefills whole even when the target
+            # chunked — one cheap pass once the final chunk lands
+            self._draft_prefill([full], [b], stats)
         return (task, len(task.output) - 1)
 
     # -- execution: AR decode ------------------------------------------
@@ -500,6 +604,160 @@ class ModelRunner:
     def decoding_slots(self) -> List[int]:
         return [b for b in range(self.B)
                 if self.slots[b] is not None and not self.prefilling[b]]
+
+    # -- execution: speculative decode (propose -> verify -> commit) ----
+    def spec_lookahead(self) -> np.ndarray:
+        """Per-slot speculation depth for the next round: `spec.k` capped
+        so the verify chunk's writes stay inside the sequence horizon
+        (committing past max_seq - 1 would emit tokens a step-by-step
+        decode never reaches), inside the pool's total block capacity (so
+        ensure_decode_blocks can always satisfy the lookahead, by
+        preemption if necessary), and inside the request's remaining
+        max_new_tokens budget (a round commits at most room = budget
+        tokens, so proposing past room - 1 would reserve blocks — and
+        possibly preempt a neighbor for them — that trim_emitted then
+        discards; capping cannot change outputs, each position's verify
+        choice being independent of how many proposals follow it)."""
+        la = np.zeros((self.B,), np.int64)
+        cap_tokens = self.allocator.num_blocks * self.layout.block_size
+        for b in self.decoding_slots():
+            p = int(self.pos[b])
+            task = self.slots[b]
+            room = task.max_new_tokens - len(task.output)
+            la[b] = max(0, min(self.spec.k, self.max_seq - 1 - p,
+                               cap_tokens - 1 - p, room - 1))
+        return la
+
+    def _token_at(self, task: GenerateTask, p: int) -> int:
+        """Committed token occupying absolute position `p` (prompt, then
+        output history; patch prefixes are unsupported under spec)."""
+        if p < task.prompt_len:
+            return int(task.prompt[p])
+        return int(task.output[p - task.prompt_len])
+
+    def spec_decode(self, stats: EngineStats
+                    ) -> List[Tuple[GenerateTask, int]]:
+        """One speculative round over every decoding slot: k lockstep
+        draft-decode proposal steps, ONE multi-token target verify pass
+        (the whole round's target weight traffic), then host-side
+        longest-prefix acceptance with rollback — pos rewinds to the
+        committed length, blocks allocated solely for rejected tokens are
+        freed, and the draft cache rewinds alongside.  Returns the
+        committed (task, output index) token events: between 1 and k+1
+        per slot, token-identical to `decode()` run step-by-step for
+        greedy AND sampled requests (serving/spec.py)."""
+        active = self.decoding_slots()
+        if not active:
+            return []
+        k = self.spec.k
+        C = k + 1
+        la = self.spec_lookahead()
+        pos0 = np.array(self.pos, np.int64)
+
+        # -- propose.  The draft may lag the committed sequence by one
+        # position after an all-accept round (the bonus token's
+        # predecessor was never fed through it); `known` replays the gap
+        # from committed history before the draft feeds its own guesses.
+        starts = np.zeros((self.B,), np.int64)
+        known: Dict[int, List[int]] = {}
+        for b in active:
+            ds = self.draft_states[b]
+            starts[b] = ds.pos
+            known[b] = [self._token_at(self.slots[b], p)
+                        for p in range(ds.pos, int(pos0[b]) + 1)]
+        n_steps = max(max(len(known[b]) - 1 + int(la[b]) for b in active), 1)
+        t0 = time.perf_counter()
+        lane_d = device_lane(self.lane)
+        feed = np.zeros((self.B,), np.int32)
+        proposals: Dict[int, List[int]] = {b: [] for b in active}
+        last_out = np.zeros((self.B,), np.int32)
+        for s in range(n_steps):
+            for b in active:
+                feed[b] = (known[b][s] if s < len(known[b])
+                           else int(last_out[b]))
+            out_d, _, self.draft_caches = self.draft_decode_step.fn(
+                self.draft_params, jnp.asarray(feed),
+                jnp.asarray(starts + s, jnp.int32), self.draft_caches,
+                lane_d)
+            last_out = np.asarray(out_d)
+            for b in active:
+                if (s >= len(known[b]) - 1
+                        and len(proposals[b]) < int(la[b])):
+                    proposals[b].append(int(last_out[b]))
+        t_draft = time.perf_counter() - t0
+        stats.spec_draft_time_s += t_draft
+        stats.add_draft_time_ms(t_draft * 1e3)
+
+        # -- verify: target forwards [pending token, d_1..d_ke] into the
+        # slot's paged blocks, returning its own choice at every position
+        chunk = np.zeros((self.B, C), np.int32)
+        chunk_len = np.zeros((self.B,), np.int32)
+        for b in active:
+            chunk[b, 0] = self.tokens[b]
+            props = proposals[b]
+            chunk[b, 1:1 + len(props)] = props
+            chunk_len[b] = 1 + len(props)
+        t1 = time.perf_counter()
+        choices_d, self.caches, _ = self.verify_step.fn(
+            self.params, jnp.asarray(chunk), jnp.asarray(pos0, jnp.int32),
+            jnp.asarray(chunk_len), self.caches, self._tables(), lane_d)
+        choices = np.asarray(choices_d)           # blocks: honest timing
+        dt = time.perf_counter() - t1
+        self.steps_run += 1
+
+        # -- commit + rollback
+        fresh: List[Tuple[GenerateTask, int]] = []
+        occupied = live_tokens = emitted_total = 0
+        for b in active:
+            task = self.slots[b]
+            occupied += 1
+            ke = len(proposals[b])
+            cand = [int(c) for c in choices[b, :ke + 1]]
+            j = accept_length(proposals[b], cand)
+            stats.spec_proposed_tokens += ke
+            stats.spec_accepted_tokens += j
+            # commit c_0..c_j, clamped to step-by-step retirement
+            # semantics (max_new / max_seq budget, cut at the first EOS)
+            room = min(task.max_new_tokens - len(task.output),
+                       self.max_seq - 1 - int(pos0[b]))
+            emitted = trim_emitted(cand[:j + 1], room=room,
+                                   eos_id=task.eos_id)
+            for tok in emitted:
+                task.output.append(tok)
+                fresh.append((task, len(task.output) - 1))
+            m = len(emitted)
+            emitted_total += m
+            pos_new = int(pos0[b]) + m
+            self.tokens[b] = emitted[-1]
+            self.pos[b] = pos_new
+            task.decode_ms += dt * 1e3
+            live_tokens += pos_new
+            # rollback: free blocks holding only rejected-token KV (the
+            # garbage inside kept blocks sits beyond pos and is masked,
+            # then overwritten as decoding advances)
+            keep = self.allocator.blocks_for(pos_new)
+            if len(self._slot_blocks[b]) > keep:
+                extra = self._slot_blocks[b][keep:]
+                del self._slot_blocks[b][keep:]
+                self.allocator.free(extra)
+                self.block_tables[b, keep:] = -1
+                self._tables_dev = None
+            # draft rewind: valid through the last draft-cache position
+            # whose written token matches the committed sequence (and
+            # never past the committed horizon)
+            self.draft_states[b].pos = min(int(starts[b]) + n_steps,
+                                           int(pos0[b]) + j + 1, pos_new)
+        stats.decode_steps += 1
+        stats.spec_rounds += 1
+        stats.spec_slot_steps += occupied
+        stats.spec_emitted_tokens += emitted_total
+        stats.ar_tokens += emitted_total
+        stats.ar_time_s += dt
+        stats.add_decode_step_ms(dt * 1e3)
+        stats.occupied_slot_steps += occupied
+        stats.block_slot_steps += self.allocator.num_used
+        stats.token_slot_steps += live_tokens
+        return fresh
 
     # -- execution: encoder-only NAR -----------------------------------
     def encode(self, group: List[EncodeTask], stats: EngineStats):

@@ -15,6 +15,27 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.embedding import TOP_K_CAP
+
+
+def validate_sampling(params: "SamplingParams") -> None:
+    """Reject unservable sampling parameters with a clear ValueError at
+    construction/submit time — the jitted step would otherwise silently
+    clamp them (top_k beyond the exact distributed threshold-search depth)
+    or misbehave (negative temperature), deep inside the engine loop."""
+    if params.temperature < 0:
+        raise ValueError(
+            f"temperature must be >= 0 (0 = greedy): {params.temperature}")
+    if params.top_k < 0:
+        raise ValueError(f"top_k must be >= 0 (0 = full vocabulary): "
+                         f"{params.top_k}")
+    if params.top_k > TOP_K_CAP:
+        raise ValueError(
+            f"top_k {params.top_k} exceeds TOP_K_CAP={TOP_K_CAP}: the "
+            f"distributed top-k threshold search is exact only up to the "
+            f"cap (each tp shard contributes its local top-{TOP_K_CAP}); "
+            f"pass top_k <= {TOP_K_CAP}, or 0 for full-vocabulary sampling")
+
 
 @dataclass(frozen=True)
 class SamplingParams:
@@ -24,8 +45,10 @@ class SamplingParams:
                  > 0 => softmax(z/temperature) via Gumbel-max
     top_k        truncate to the k highest-logit tokens before sampling;
                  0 => full vocabulary (ignored when temperature == 0;
-                 clamped to core.embedding.TOP_K_CAP inside the step —
-                 the distributed threshold search is exact up to the cap)
+                 must be <= core.embedding.TOP_K_CAP — the distributed
+                 threshold search is exact only up to the cap, and
+                 out-of-range values are rejected here rather than
+                 silently clamped inside the jitted step)
     seed         the request's RNG lane — (seed, position) maps to one
                  reproducible draw regardless of batching or slot placement
     """
@@ -34,10 +57,7 @@ class SamplingParams:
     seed: int = 0
 
     def __post_init__(self):
-        if self.temperature < 0:
-            raise ValueError(f"temperature must be >= 0: {self.temperature}")
-        if self.top_k < 0:
-            raise ValueError(f"top_k must be >= 0: {self.top_k}")
+        validate_sampling(self)
 
     @property
     def is_greedy(self) -> bool:

@@ -1,0 +1,175 @@
+"""Speculative decoding: draft-model proposer + multi-token verification.
+
+The paper's AR mode is memory-bound — every decode step streams the full
+weight set from HBM to produce ONE token per slot.  Speculative decoding
+amortizes that weight read: a small *draft* LM proposes `k` tokens per
+round at negligible cost, and the *target* model verifies all `k` (+ the
+mandatory next token) in a single multi-token forward over the paged KV
+cache — the chunked-prefill machinery (lm.forward_chunk /
+attn_chunk_paged) pointed at decode-time positions.  Accepted tokens cost
+one target weight read for up to k+1 tokens; rejected tokens cost nothing
+but their (already-written, position-masked) KV entries, which are rolled
+back by rewinding the slot's block-table fill count.
+
+Acceptance is *exact*, not approximate.  The engine's sampler is
+deterministic: `core.embedding.sample_token` maps (residual, seed,
+position) to one token — greedy rows are an argmax, sampled rows a
+(seed, position)-keyed Gumbel-max draw.  Verification therefore computes,
+at every proposed position, the token the target WOULD have chosen
+step-by-step, and accepts the longest prefix where the draft guessed it.
+The committed sequence is token-identical to non-speculative decoding for
+greedy AND sampled requests (the same lossless guarantee exact rejection
+sampling provides, obtained by determinism instead of accept/reject
+coin-flips) — speculation changes how many target steps a sequence costs,
+never which tokens it contains.
+
+Round lifecycle (ModelRunner.spec_decode):
+
+  propose   k lockstep draft-decode steps over the decode batch (the draft
+            keeps a dense per-slot cache + per-slot `DraftState`), fed the
+            same per-slot sampling lane as the target
+  verify    one `launch/steps.make_verify_step` call: the target forwards
+            [pending token, d_1..d_k] straight into the slot's paged
+            blocks and returns its own choice at every position
+  commit    host-side longest-prefix acceptance (+ EOS / max_new_tokens /
+            max_seq trimming so retirement semantics match non-spec
+            decode), then rollback: pos rewinds to the committed length,
+            trailing blocks allocated solely for rejected tokens are
+            freed, and the draft cache rewinds with it
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+
+ACCEPTANCE_MODES = ("lossless", "greedy")
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs for an InferenceEngine.
+
+    draft       which model proposes: "self" (the target itself — 100%
+                greedy acceptance, useful as the zero-risk upper bound and
+                for overhead measurement), "auto" (derive a 2-layer draft
+                from the target via configs.drafts.make_draft), or a
+                registered config name (e.g. "gpt-j-draft") sharing the
+                target's vocabulary.
+    k           speculation length: draft tokens proposed per round; each
+                verify step commits between 1 and k+1 tokens.
+    acceptance  "lossless" (default): per-request greedy/sampled acceptance
+                against the target's deterministic sampler — outputs are
+                token-identical to non-speculative decoding for every
+                request.  "greedy": the engine additionally REJECTS sampled
+                submissions at submit time (a pure-greedy deployment that
+                wants the constraint enforced, not silently absorbed).
+    draft_seed  RNG seed used to initialize draft parameters when the
+                caller does not supply `draft_params` (matching the
+                engine's init-at-construction convention).
+    """
+    draft: str = "auto"
+    k: int = 4
+    acceptance: str = "lossless"
+    draft_seed: int = 0
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"speculation length k must be >= 1: {self.k}")
+        if self.acceptance not in ACCEPTANCE_MODES:
+            raise ValueError(
+                f"acceptance must be one of {ACCEPTANCE_MODES}: "
+                f"{self.acceptance!r}")
+        if not self.draft:
+            raise ValueError("draft must name a config, 'auto', or 'self'")
+
+
+@dataclass
+class DraftState:
+    """Per-slot draft bookkeeping (owned by ModelRunner, one per seated
+    GenerateTask when speculation is on).
+
+    pos   valid draft-cache length for this slot: positions [0, pos) of
+          the draft's dense cache row hold KV for the committed token
+          sequence.  Lags the target's pos by at most one after an
+          all-accept round (the bonus token's predecessor was never fed
+          through the draft); the next round's proposal phase replays the
+          gap from the known committed tokens.
+    """
+    pos: int
+
+
+def spec_support_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why `cfg` cannot decode speculatively (None = statically eligible).
+
+    Verification rides the chunked-prefill machinery, so the gate is the
+    same cache-layout one: every segment's KV must live in the paged pool
+    (multi-token verify writes straight into the slot's blocks and the
+    rollback is a fill-count rewind).  Recurrent / ring / cross-attention
+    state cannot rewind that way.  The engine additionally requires its
+    runtime layout to be paged with dp == 1 (ModelRunner.supports_chunked).
+    """
+    if not cfg.vocab:
+        return "no token vocabulary (encoder-only topology)"
+    if cfg.has_ssm:
+        return "recurrent SSM state cannot roll back rejected tokens"
+    if cfg.sliding_window > 0:
+        return ("sliding-window ring caches stay dense per-slot — no "
+                "block-table fill count to rewind")
+    if cfg.enc_schedule:
+        return "encoder-decoder cross-attention memory is not paged"
+    if cfg.n_patches:
+        return "VLM patch prefixes are not supported in verify chunks"
+    if cfg.rope_theta == 0:
+        return "absolute-position (sinusoidal) models lack the chunk path"
+    return None
+
+
+def resolve_draft(spec: SpecConfig, cfg: ModelConfig) -> ModelConfig:
+    """The draft ModelConfig for (spec, target): "self" / "auto" / a
+    registered name, reduced alongside a reduced target, vocabulary
+    checked against the target's (shared tokenizer is the contract that
+    makes proposed ids comparable)."""
+    from repro.configs import get_config, make_draft
+    if spec.draft == "self":
+        return cfg
+    if spec.draft == "auto":
+        return make_draft(cfg)
+    draft = get_config(spec.draft)
+    if cfg.name.endswith("-reduced") and not draft.name.endswith("-reduced"):
+        draft = draft.reduced()
+    if draft.vocab != cfg.vocab:
+        raise ValueError(
+            f"draft {draft.name} does not share the target's tokenizer: "
+            f"vocab {draft.vocab} != {cfg.vocab} ({cfg.name})")
+    return draft
+
+
+def accept_length(proposed: Sequence[int], target: Sequence[int]) -> int:
+    """Longest accepted prefix: the number of leading positions where the
+    draft's proposal equals the target's own (deterministic) choice for
+    that position.  `target[j]` is the target's token for the position
+    `proposed[j]` claims; acceptance stops at the first disagreement."""
+    n = 0
+    for d, c in zip(proposed, target):
+        if int(d) != int(c):
+            break
+        n += 1
+    return n
+
+
+def trim_emitted(emitted: List[int], *, room: int,
+                 eos_id: Optional[int]) -> List[int]:
+    """Clamp one round's committed tokens to non-speculative retirement
+    semantics: at most `room` tokens (max_new_tokens / max_seq budget,
+    pre-clamped by the caller), cut at the first EOS inclusive — exactly
+    where step-by-step decoding would have stopped."""
+    out = emitted[:max(room, 1)]
+    if eos_id is not None and eos_id in out:
+        out = out[:out.index(eos_id) + 1]
+    return out
+
+
+__all__ = ["SpecConfig", "DraftState", "spec_support_reason",
+           "resolve_draft", "accept_length", "trim_emitted"]

@@ -61,6 +61,14 @@ class EngineStats:
     # -- chunked prefill ----------------------------------------------------
     prefill_chunks: int = 0        # chunk steps run
     chunked_prefill_tokens: int = 0  # true prompt tokens through chunks
+    # -- speculative decoding -----------------------------------------------
+    spec_rounds: int = 0           # propose->verify->commit rounds run
+    spec_slot_steps: int = 0       # decoding slots summed over rounds
+    spec_proposed_tokens: int = 0  # draft tokens proposed
+    spec_accepted_tokens: int = 0  # of those, accepted by the target
+    spec_emitted_tokens: int = 0   # tokens committed by verify steps
+    spec_draft_time_s: float = 0.0  # wall time in draft propose phases
+    draft_time_ms: List[float] = field(default_factory=list)
     # -- serving-level ------------------------------------------------------
     ttft_ms: List[float] = field(default_factory=list)
     queue_wait_ms: List[float] = field(default_factory=list)
@@ -95,6 +103,9 @@ class EngineStats:
     def add_encode_latency_ms(self, v: float) -> None:
         _bounded_append(self.encode_latency_ms, v)
 
+    def add_draft_time_ms(self, v: float) -> None:
+        _bounded_append(self.draft_time_ms, v)
+
     # -- derived ------------------------------------------------------------
     @property
     def nar_tok_s(self) -> float:
@@ -117,6 +128,30 @@ class EngineStats:
     def encode_completed(self) -> int:
         """EncodeTasks finished (== latency samples; bounded window)."""
         return len(self.encode_latency_ms)
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of draft-proposed tokens the target accepted."""
+        if not self.spec_proposed_tokens:
+            return 0.0
+        return self.spec_accepted_tokens / self.spec_proposed_tokens
+
+    @property
+    def spec_tokens_per_step(self) -> float:
+        """Mean tokens committed per target decode step per decoding slot
+        under speculation (non-speculative decoding sits at exactly 1.0;
+        the k+1 upper bound is the all-accept round)."""
+        if not self.spec_slot_steps:
+            return 0.0
+        return self.spec_emitted_tokens / self.spec_slot_steps
+
+    @property
+    def draft_time_ms_p50(self) -> float:
+        return percentile(self.draft_time_ms, 50)
+
+    @property
+    def draft_time_ms_p95(self) -> float:
+        return percentile(self.draft_time_ms, 95)
 
     @property
     def slot_occupancy(self) -> float:
@@ -215,6 +250,15 @@ class EngineStats:
             "encode_latency_p95_ms": self.encode_latency_p95_ms,
             "prefill_chunks": self.prefill_chunks,
             "chunked_prefill_tokens": self.chunked_prefill_tokens,
+            "spec_rounds": self.spec_rounds,
+            "spec_proposed_tokens": self.spec_proposed_tokens,
+            "spec_accepted_tokens": self.spec_accepted_tokens,
+            "spec_emitted_tokens": self.spec_emitted_tokens,
+            "spec_acceptance_rate": self.spec_acceptance_rate,
+            "spec_tokens_per_step": self.spec_tokens_per_step,
+            "spec_draft_time_s": self.spec_draft_time_s,
+            "draft_time_ms_p50": self.draft_time_ms_p50,
+            "draft_time_ms_p95": self.draft_time_ms_p95,
             "ttft_p50_ms": self.ttft_p50_ms,
             "ttft_p95_ms": self.ttft_p95_ms,
             "queue_wait_p50_ms": self.queue_wait_p50_ms,
@@ -253,9 +297,14 @@ class EngineStats:
             chunk = (f" | chunked {self.chunked_prefill_tokens} tok in "
                      f"{self.prefill_chunks} chunks, decode-stall p95 "
                      f"{self.decode_stall_p95_ms:.0f}ms")
+        spec = ""
+        if self.spec_rounds:
+            spec = (f" | SPEC {self.spec_acceptance_rate:.0%} accept, "
+                    f"{self.spec_tokens_per_step:.2f} tok/step, draft p95 "
+                    f"{self.draft_time_ms_p95:.1f}ms")
         return (f"NAR {self.nar_tok_s:8.1f} tok/s ({self.nar_tokens} prompt "
                 f"tokens, {self.padding_overhead:.0%} pad) | "
                 f"AR {self.ar_tok_s:8.1f} tok/s ({self.ar_tokens} tokens, "
                 f"occupancy {self.slot_occupancy:.0%}) | "
                 f"TTFT p50 {self.ttft_p50_ms:.0f}ms p95 "
-                f"{self.ttft_p95_ms:.0f}ms" + enc + chunk + pool)
+                f"{self.ttft_p95_ms:.0f}ms" + enc + chunk + spec + pool)

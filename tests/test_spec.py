@@ -1,0 +1,314 @@
+"""Speculative decoding: acceptance exactness, rollback hygiene, and the
+submit-time SamplingParams validation satellite.
+
+The load-bearing property is *token identity*: with speculation on, every
+committed sequence — greedy AND sampled — must equal what step-by-step
+decoding produces, because acceptance is checked against the target's own
+deterministic sampler (serving/spec.py).  Identity is asserted across
+draft regimes that stress different paths: draft="self" (all-accept, the
+draft-lag/catch-up path), a deliberately mis-seeded draft (near-zero
+acceptance, maximal rejection + KV rollback), chunked-prefill admission
+mixed in, and recompute preemption under a starved pool.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, make_draft
+from repro.core.embedding import TOP_K_CAP
+from repro.core.precision import FP32
+from repro.models import lm
+from repro.serving import (ChunkedPrefillPolicy, FCFSPolicy, InferenceEngine,
+                           Request, SamplingParams, SpecConfig,
+                           spec_support_reason)
+from repro.serving.spec import (DraftState, accept_length, resolve_draft,
+                                trim_emitted)
+
+# a draft seeded away from the target's init: its proposals are
+# effectively random over the reduced vocab, so almost every round
+# rejects — the KV-rollback / draft-rewind stress regime
+REJECTY = SpecConfig(draft="auto", k=3, draft_seed=1234)
+
+
+# --------------------------------------------------------------------------
+# pure host-side pieces
+# --------------------------------------------------------------------------
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError, match="acceptance"):
+        SpecConfig(acceptance="approximate")
+    with pytest.raises(ValueError, match="draft"):
+        SpecConfig(draft="")
+    assert SpecConfig().acceptance == "lossless"
+
+
+def test_accept_length_and_trim():
+    assert accept_length([1, 2, 3], [1, 2, 9, 5]) == 2
+    assert accept_length([7], [1]) == 0
+    assert accept_length([], [4]) == 0
+    assert trim_emitted([5, 6, 7], room=2, eos_id=None) == [5, 6]
+    assert trim_emitted([5, 6, 7], room=9, eos_id=6) == [5, 6]
+    assert trim_emitted([5, 6, 7], room=1, eos_id=7) == [5]
+
+
+def test_make_draft_shape_and_registry():
+    cfg = get_config("gpt-j")
+    d = make_draft(cfg)
+    assert d.schedule == (("attn", 2),) and d.vocab == cfg.vocab
+    assert d.n_experts == 0 and d.ssm_state == 0 and d.sliding_window == 0
+    # registered paper-family drafts resolve by name and share the vocab
+    assert get_config("gpt-j-draft").vocab == cfg.vocab
+    assert get_config("gpt3-xl-draft").vocab == get_config("gpt3-xl").vocab
+    with pytest.raises(ValueError, match="vocabulary"):
+        make_draft(get_config("vit-b"))
+
+
+def test_resolve_draft():
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    assert resolve_draft(SpecConfig(draft="self"), cfg) is cfg
+    auto = resolve_draft(SpecConfig(draft="auto"), cfg)
+    assert auto.vocab == cfg.vocab and auto.n_layers == 2
+    # a named full-size draft reduces alongside a reduced target
+    named = resolve_draft(SpecConfig(draft="phi4-mini-3.8b-draft"), cfg)
+    assert named.vocab == cfg.vocab
+    with pytest.raises(ValueError, match="tokenizer"):
+        resolve_draft(SpecConfig(draft="gpt-j-draft"),
+                      get_config("gpt3-xl"))   # 50400 != 50257
+
+
+def test_spec_support_reason():
+    assert spec_support_reason(get_config("gpt-j")) is None
+    assert spec_support_reason(get_config("phi4-mini-3.8b")) is None
+    assert "ring" in spec_support_reason(get_config("gemma3-27b"))
+    assert "SSM" in spec_support_reason(get_config("mamba2-2.7b"))
+    assert spec_support_reason(get_config("whisper-base")) is not None
+    assert spec_support_reason(get_config("vit-b")) is not None
+
+
+# --------------------------------------------------------------------------
+# SamplingParams validation satellite
+# --------------------------------------------------------------------------
+
+def test_sampling_params_rejects_out_of_range():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.5)
+    with pytest.raises(ValueError, match="TOP_K_CAP"):
+        SamplingParams(temperature=1.0, top_k=TOP_K_CAP + 1)
+    # the cap itself and 0 (full vocab) stay valid
+    SamplingParams(temperature=1.0, top_k=TOP_K_CAP)
+    SamplingParams(temperature=1.0, top_k=0)
+
+
+def test_submit_rejects_bad_sampling():
+    """Validation fires at submit even for params smuggled past
+    __post_init__ (object.__setattr__ on the frozen dataclass)."""
+    cfg, params = _reduced("phi4-mini-3.8b")
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32)
+    bad = SamplingParams(temperature=1.0, top_k=1)
+    object.__setattr__(bad, "top_k", TOP_K_CAP + 7)
+    with pytest.raises(ValueError, match="TOP_K_CAP"):
+        engine.submit(Request(uid=0, prompt=np.zeros(4, np.int32),
+                              sampling=bad))
+
+
+# --------------------------------------------------------------------------
+# end-to-end identity
+# --------------------------------------------------------------------------
+
+_PARAMS_CACHE = {}
+
+
+def _reduced(arch):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_config(arch).reduced()
+        _PARAMS_CACHE[arch] = (cfg, lm.init_lm(jax.random.key(0), cfg,
+                                               jnp.float32))
+    return _PARAMS_CACHE[arch]
+
+
+def _trace(cfg, lens, *, max_new=7, sampled=(), eos=None):
+    rng = np.random.default_rng(29)
+    reqs = []
+    for uid, n in enumerate(lens):
+        reqs.append(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, n, dtype=np.int32),
+            max_new_tokens=max_new, eos_id=eos,
+            sampling=SamplingParams(temperature=0.8, top_k=8, seed=uid)
+            if uid in sampled else SamplingParams()))
+    return reqs
+
+
+def _run(cfg, params, reqs, **kw):
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32, **kw)
+    for r in reqs:
+        engine.submit(r)
+    done = {t.uid: t.output for t in engine.run()}
+    return engine, done
+
+
+@pytest.mark.parametrize("arch", ["gpt-j", "gpt3-xl", "phi4-mini-3.8b",
+                                  "chatglm3-6b"])
+def test_greedy_token_identity(arch):
+    """Greedy decode with speculation on is token-identical to speculation
+    off, under both the all-accept (self) and rejection-heavy drafts."""
+    cfg, params = _reduced(arch)
+    lens = (5, 12, 9)
+    base = _run(cfg, params, _trace(cfg, lens))[1]
+    for spec in (SpecConfig(draft="self", k=3), REJECTY):
+        eng, got = _run(cfg, params, _trace(cfg, lens), spec=spec)
+        st = eng.stats()
+        assert got == base, f"{arch} diverged under {spec.draft}"
+        assert st.spec_rounds > 0
+        if spec.draft == "self":
+            # proposing with the target itself makes greedy acceptance
+            # exact: every proposal commits, so rounds emit multiple
+            # tokens (the max_new_tokens budget trims the final round
+            # below the k+1 ceiling)
+            assert st.spec_acceptance_rate == 1.0
+            assert 1.0 < st.spec_tokens_per_step <= spec.k + 1
+        # pool fully drained — verify writes + rollback leak no blocks
+        assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_sampled_lossless_parity():
+    """Sampled requests (fixed seeds) are exactly reproduced: acceptance
+    compares against the target's deterministic (seed, position)-keyed
+    draws, so speculation is lossless in the strongest sense — the same
+    guarantee exact rejection sampling gives, with bitwise token identity
+    instead of distribution equality."""
+    cfg, params = _reduced("gpt-j")
+    lens = (6, 14, 10, 8)
+    reqs = lambda: _trace(cfg, lens, sampled=(0, 1, 3))
+    base = _run(cfg, params, reqs())[1]
+    for spec in (SpecConfig(draft="self", k=4), REJECTY):
+        _, got = _run(cfg, params, reqs(), spec=spec)
+        assert got == base
+
+
+def test_spec_with_chunked_prefill_mix():
+    """Speculation + ChunkedPrefillPolicy: long prompts chunk into their
+    paged blocks while seated slots decode speculatively; the draft
+    prefills whole at final-chunk landing.  Outputs match plain FCFS with
+    speculation off."""
+    cfg, params = _reduced("phi4-mini-3.8b")
+    lens = (5, 40, 12, 33)
+    base = _run(cfg, params, _trace(cfg, lens, sampled=(1,)),
+                scheduler=FCFSPolicy())[1]
+    eng, got = _run(cfg, params, _trace(cfg, lens, sampled=(1,)),
+                    scheduler=ChunkedPrefillPolicy(16), spec=REJECTY)
+    st = eng.stats()
+    assert st.prefill_chunks >= 5 and st.spec_rounds > 0
+    assert got == base
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_kv_rollback_leak_free_and_bounded():
+    """A rejection-heavy draft rolls KV back every round: the pool's peak
+    must stay within capacity and fully drain at the end (no block leaked
+    by verify-write + trailing-block free cycles)."""
+    cfg, params = _reduced("gpt-j")
+    eng, _ = _run(cfg, params, _trace(cfg, (9, 17), max_new=12),
+                  spec=REJECTY, block_size=4)
+    st = eng.stats()
+    assert st.spec_proposed_tokens > st.spec_accepted_tokens
+    assert st.peak_blocks_used <= eng.allocator.num_blocks
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_preemption_then_resume_parity_with_spec():
+    """Recompute preemption under a starved pool, with speculation on:
+    evicted requests re-prefill (target AND draft) and continue
+    token-exactly; lookahead allocation never deadlocks the pool."""
+    cfg, params = _reduced("phi4-mini-3.8b")
+    lens = (5, 11, 7, 16)
+    reqs = lambda: _trace(cfg, lens, max_new=9, sampled=(1, 3))
+    base = _run(cfg, params, reqs())[1]
+    eng, got = _run(cfg, params, reqs(), spec=REJECTY,
+                    block_size=8, kv_pool_blocks=5)
+    st = eng.stats()
+    assert st.preemptions > 0
+    assert got == base
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_eos_inside_accepted_prefix_trims():
+    """An EOS landing mid-round must end the sequence exactly where
+    step-by-step decoding stops — committed tokens after the EOS would
+    break token identity and retirement."""
+    cfg, params = _reduced("gpt-j")
+    base = _run(cfg, params, _trace(cfg, (6,), max_new=9))[1]
+    eos = base[0][2]   # a token the greedy run emits early becomes EOS
+    want = _run(cfg, params, _trace(cfg, (6,), max_new=9, eos=eos))[1]
+    _, got = _run(cfg, params, _trace(cfg, (6,), max_new=9, eos=eos),
+                  spec=SpecConfig(draft="self", k=4))
+    assert got == want
+    # the trim actually fired inside the first all-accept round: the
+    # sequence ends at the first EOS, short of the max_new budget
+    assert want[0][-1] == eos and len(want[0]) < 9
+    assert want[0] == base[0][:len(want[0])]
+
+
+def test_max_seq_cap_identity():
+    """When the sequence horizon (max_seq - 1) retires requests before
+    max_new_tokens, speculative lookahead must not commit past it."""
+    cfg, params = _reduced("gpt-j")
+    reqs = lambda: _trace(cfg, (6, 6), max_new=200)
+    engine_kw = dict(batch_size=2, max_seq=32, policy=FP32)
+    base_eng = InferenceEngine(cfg, params, **engine_kw)
+    spec_eng = InferenceEngine(cfg, params, spec=SpecConfig(draft="self",
+                                                           k=4), **engine_kw)
+    for r in reqs():
+        base_eng.submit(r)
+    for r in reqs():
+        spec_eng.submit(r)
+    base = {t.uid: t.output for t in base_eng.run()}
+    got = {t.uid: t.output for t in spec_eng.run()}
+    assert base == got
+    assert all(len(v) < 200 for v in base.values())  # the cap actually bound
+
+
+def test_unsupported_arch_raises():
+    cfg = get_config("gemma3-27b").reduced()     # sliding-window ring cache
+    params = lm.init_lm(jax.random.key(1), cfg, jnp.float32)
+    with pytest.raises(ValueError, match="unsupported"):
+        InferenceEngine(cfg, params, batch_size=2, max_seq=64, policy=FP32,
+                        spec=SpecConfig(draft="auto"))
+
+
+def test_greedy_acceptance_mode_rejects_sampled_submissions():
+    cfg, params = _reduced("phi4-mini-3.8b")
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32,
+                             spec=SpecConfig(draft="self", k=2,
+                                             acceptance="greedy"))
+    engine.submit(Request(uid=0, prompt=np.zeros(4, np.int32)))  # greedy ok
+    with pytest.raises(ValueError, match="greedy"):
+        engine.submit(Request(uid=1, prompt=np.zeros(4, np.int32),
+                              sampling=SamplingParams(temperature=0.7)))
+
+
+def test_spec_stats_and_draft_state():
+    """The telemetry satellite: acceptance/throughput/draft-latency fields
+    populate, serialize, and stay internally consistent."""
+    cfg, params = _reduced("gpt-j")
+    eng, done = _run(cfg, params, _trace(cfg, (5, 9), max_new=8),
+                     spec=SpecConfig(draft="self", k=3))
+    st = eng.stats()
+    assert st.spec_rounds > 0
+    assert st.spec_emitted_tokens == st.ar_tokens
+    assert 1.0 <= st.spec_tokens_per_step <= 4.0
+    assert st.draft_time_ms_p95 >= st.draft_time_ms_p50 > 0
+    assert st.spec_draft_time_s > 0
+    d = st.to_dict()
+    for key in ("spec_acceptance_rate", "spec_tokens_per_step",
+                "draft_time_ms_p50", "draft_time_ms_p95", "spec_rounds"):
+        assert key in d
+    assert "SPEC" in st.summary()
+    # per-slot DraftState cleared on retirement
+    assert all(s is None for s in eng.runner.draft_states)
+    assert isinstance(DraftState(pos=0), DraftState)
