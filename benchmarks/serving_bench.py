@@ -28,6 +28,12 @@ Three scheduler/runner-split scenarios ride along in `record["scenarios"]`:
                    decode time) must be >= the non-spec baseline with a
                    positive acceptance rate, or the bench exits nonzero
                    (the CI gate for the subsystem)
+  shared_prefix    N requests sharing a long system prompt, prefix cache
+                   off (cold) vs on (warm, measured after a populating
+                   pass): warm must prefill strictly fewer prompt tokens
+                   AND land a strictly lower TTFT p95 than cold, with
+                   token-identical outputs, or the bench exits nonzero
+                   (the CI gate for the prefix-cache subsystem)
 """
 from __future__ import annotations
 
@@ -47,7 +53,7 @@ from repro.configs import get_config
 from repro.models import lm
 from repro.serving import (ChunkedPrefillPolicy, EncodeTask, FCFSPolicy,
                            InferenceEngine, Request, SamplingParams,
-                           SpecConfig, spec_support_reason)
+                           SpecConfig, make_policy, spec_support_reason)
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -241,6 +247,123 @@ def spec_workload(cfg, params, args, baseline_ar_tok_s: float) -> dict:
     }
 
 
+def shared_prefix_workload(cfg, params, args) -> dict:
+    """N requests share a long system prompt (each with a short unique
+    tail): prefix cache off (cold) vs on (warm).  The warm engine runs two
+    populating passes first — pass 1 fills the radix index (and picks up
+    in-batch sharing), pass 2 hits it end to end so every warm suffix
+    bucket is compiled — then `reset_stats()` and a measured third pass,
+    mirroring the cold engine's warmup/measure split.  Request uids differ
+    across passes but sampling seeds are keyed by trace position, so the
+    measured passes must be token-identical cold vs warm.
+
+    The scenario pins its own geometry rather than inheriting --batch /
+    --kv-pool-blocks:
+
+      batch=2            admissions interleave, so pass 1 already exercises
+                         in-batch sharing (request i hits blocks request
+                         i-1 indexed at prefill landing)
+      max_seq>=128       the shared prefix (3/4 of max_seq) must dwarf the
+                         unique tails for the TTFT gap to clear the
+                         per-call dispatch-overhead noise floor
+      pool = 2x default  retired blocks stay indexed only while the pool
+                         has room; a pool sized for live slots alone would
+                         evict the prefix between passes and the gate
+                         would measure reclaim, not reuse"""
+    seq = max(args.max_seq, 128)
+    n_req, batch = 6, 2
+    blocks = 2 * batch * (-(-seq // args.block_size))
+    prefix_len = min((3 * seq) // 4, seq - args.max_new - 12)
+
+    rng = np.random.default_rng(args.seed + 3)
+    prefix = rng.integers(0, cfg.vocab, prefix_len, dtype=np.int32)
+    tails = [rng.integers(0, cfg.vocab, int(rng.integers(3, 9)),
+                          dtype=np.int32) for _ in range(n_req)]
+
+    def run_pass(engine, uid0):
+        for i in range(n_req):
+            engine.submit(Request(
+                uid=uid0 + i,
+                prompt=np.concatenate([prefix, tails[i]]),
+                max_new_tokens=args.max_new,
+                sampling=SamplingParams(temperature=0.8, top_k=40, seed=i)
+                if i % 2 else SamplingParams()))
+        t0 = time.perf_counter()
+        done = engine.run()
+        wall = time.perf_counter() - t0
+        return {r.uid - uid0: list(r.output) for r in done}, wall
+
+    def mk(prefix_cache):
+        return InferenceEngine(
+            cfg, params, batch_size=batch, max_seq=seq,
+            block_size=args.block_size, kv_pool_blocks=blocks,
+            scheduler=make_policy("fcfs", cache_aware=prefix_cache),
+            prefix_cache=prefix_cache)
+
+    cold = mk(False)
+    run_pass(cold, 0)                             # warmup: compile buckets
+    cold.reset_stats()
+    cold_out, cold_wall = run_pass(cold, 100)
+    cst = cold.stats()
+
+    warm = mk(True)
+    if warm.prefix_cache is None:
+        return {"supported": False,
+                "reason": warm.runner.prefix_cache_reason}
+    run_pass(warm, 200)                           # populate the index
+    run_pass(warm, 300)                           # compile warm buckets
+    warm.reset_stats()
+    warm_out, warm_wall = run_pass(warm, 400)
+    wst = warm.stats()
+
+    return {
+        "supported": True,
+        "requests": n_req,
+        "shared_prefix_len": prefix_len,
+        "tokens_match": warm_out == cold_out,
+        "cold": {
+            "wall_s": cold_wall,
+            "prefill_tokens": cst.nar_tokens,
+            "ttft_p50_ms": cst.ttft_p50_ms,
+            "ttft_p95_ms": cst.ttft_p95_ms,
+        },
+        "warm": {
+            "wall_s": warm_wall,
+            "prefill_tokens": wst.nar_tokens,
+            "ttft_p50_ms": wst.ttft_p50_ms,
+            "ttft_p95_ms": wst.ttft_p95_ms,
+            "prefix_cache_hit_rate": wst.prefix_cache_hit_rate,
+            "cached_prefix_tokens": wst.cached_prefix_tokens,
+            "cached_blocks": wst.cached_blocks,
+            "cow_copies": wst.cow_copies,
+            "evicted_blocks": wst.evicted_blocks,
+        },
+    }
+
+
+def check_shared_prefix(rec: dict) -> list:
+    """The prefix-cache acceptance gate: the warm pass must show the cache
+    actually skipping prefill work — correctly — not just running."""
+    if not rec.get("supported"):
+        return []
+    problems = []
+    if not rec["tokens_match"]:
+        problems.append("warm outputs diverged from cold — cached-prefix "
+                        "reuse changed the sampled tokens")
+    if not rec["warm"]["prefix_cache_hit_rate"] > 0:
+        problems.append("prefix_cache_hit_rate is 0 — no admission ever "
+                        "reused a cached prefix")
+    if not rec["warm"]["prefill_tokens"] < rec["cold"]["prefill_tokens"]:
+        problems.append(
+            f"warm prefilled {rec['warm']['prefill_tokens']} prompt tokens, "
+            f"not strictly fewer than cold's {rec['cold']['prefill_tokens']}")
+    if not rec["warm"]["ttft_p95_ms"] < rec["cold"]["ttft_p95_ms"]:
+        problems.append(
+            f"warm TTFT p95 {rec['warm']['ttft_p95_ms']:.1f}ms is not "
+            f"strictly below cold's {rec['cold']['ttft_p95_ms']:.1f}ms")
+    return problems
+
+
 def check_spec(spec_rec: dict) -> list:
     """The spec-decode acceptance gate: recorded numbers must show the
     subsystem actually amortizing target steps, not just running."""
@@ -343,6 +466,7 @@ def main(argv=None) -> int:
         chunked = long_admission(cfg, params, args,
                                  ChunkedPrefillPolicy(args.prefill_chunk))
         spec_rec = spec_workload(cfg, params, args, stats.ar_tok_s)
+        prefix_rec = shared_prefix_workload(cfg, params, args)
         record["scenarios"] = {
             "mixed": mixed,
             "chunked_prefill": {
@@ -355,6 +479,7 @@ def main(argv=None) -> int:
                     if unchunked["decode_stall_p95_ms"] else 0.0),
             },
             "spec_decode": spec_rec,
+            "shared_prefix": prefix_rec,
         }
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
@@ -390,10 +515,23 @@ def main(argv=None) -> int:
                   f"{spec_rec['draft_time_ms_p95']:.1f}ms")
         else:
             print(f"  spec decode: skipped ({spec_rec.get('reason')})")
+        if prefix_rec.get("supported"):
+            pw, pc = prefix_rec["warm"], prefix_rec["cold"]
+            print(f"  shared prefix ({prefix_rec['shared_prefix_len']} "
+                  f"tokens x {prefix_rec['requests']} requests): "
+                  f"{pc['prefill_tokens']} -> {pw['prefill_tokens']} "
+                  f"prefill tokens, TTFT p95 {pc['ttft_p95_ms']:.1f} -> "
+                  f"{pw['ttft_p95_ms']:.1f}ms "
+                  f"({pw['prefix_cache_hit_rate']:.0%} hit, "
+                  f"{pw['cow_copies']} COW), tokens "
+                  f"{'identical' if prefix_rec['tokens_match'] else 'DIVERGED'}")
+        else:
+            print(f"  shared prefix: skipped ({prefix_rec.get('reason')})")
         problems = check_spec(spec_rec)
+        problems += [f"PREFIX: {p}" for p in check_shared_prefix(prefix_rec)]
         if problems:
             for p in problems:
-                print(f"  SPEC CHECK FAILED: {p}", file=sys.stderr)
+                print(f"  SCENARIO CHECK FAILED: {p}", file=sys.stderr)
             return 1
     print(f"  -> {args.out}")
     return 0

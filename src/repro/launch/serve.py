@@ -24,6 +24,13 @@ Speculative decoding (serving/spec.py):
                                      registered draft config (e.g.
                                      "gpt-j-draft")
   --spec-k K                         draft tokens proposed per verify step
+
+Prefix caching (serving/prefix_cache.py, on by default):
+  --no-prefix-cache                  cold prefills: no KV block sharing
+                                     across requests
+  --cache-blocks N                   cap the radix index at N pool blocks
+                                     (default: bounded by pool pressure —
+                                     lazy LRU eviction on alloc failure)
 """
 from __future__ import annotations
 
@@ -105,6 +112,14 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
                     help="KV pool capacity in blocks (0 => engine default); "
                          "undersize it to exercise preemption")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share cached prompt-prefix KV blocks across "
+                         "requests (serving/prefix_cache.py); "
+                         "--no-prefix-cache restores cold prefills")
+    ap.add_argument("--cache-blocks", type=int, default=0,
+                    help="cap on pool blocks the prefix-cache index may "
+                         "hold (0 => bounded by pool pressure alone)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable the fused prologue/epilogue GEMM "
                          "pipeline (A/B parity baseline)")
@@ -127,13 +142,19 @@ def main(argv=None) -> int:
         cfg, params, batch_size=args.batch, max_seq=args.max_seq, mesh=mesh,
         block_size=args.block_size,
         kv_pool_blocks=args.kv_pool_blocks or None,
-        scheduler=make_policy(args.policy, chunk_tokens=args.prefill_chunk),
-        fuse_epilogues=not args.no_fuse, spec=spec)
+        scheduler=make_policy(args.policy, chunk_tokens=args.prefill_chunk,
+                              cache_aware=args.prefix_cache),
+        fuse_epilogues=not args.no_fuse, spec=spec,
+        prefix_cache=args.prefix_cache,
+        cache_blocks=args.cache_blocks or None)
     if (args.policy == "chunked"
             and not engine.runner.supports_chunked):
         print(f"note: {cfg.name} cannot chunk prefills "
               f"(recurrent/ring/cross-attn cache state) — "
               f"falling back to whole-prompt admission")
+    if args.prefix_cache and engine.prefix_cache is None:
+        print(f"note: prefix cache disabled for {cfg.name} — "
+              f"{engine.runner.prefix_cache_reason}")
     for req in build_trace(cfg, args):
         engine.submit(req)
 

@@ -533,6 +533,27 @@ def make_encode_step(cfg: ModelConfig, shape: ShapeConfig,
 # chunked-prefill step
 # --------------------------------------------------------------------------
 
+def chunk_support_reason(cfg: ModelConfig,
+                         layout: Optional[PagedLayout]) -> Optional[str]:
+    """Why this (cfg, layout) cannot run the chunk-shaped stack — None when
+    it can.  The chunk stack underpins chunked prefill, speculative verify,
+    AND the prefix cache's suffix-only prefill (all three resume encoding at
+    an arbitrary `pos0` against the paged decode caches), so the runner,
+    spec gating, and prefix-cache gating all consult this one predicate."""
+    if layout is None or not layout.any_paged or not all(layout.segments):
+        return ("every KV segment must be block-paged (dense, ring, and SSM "
+                "caches cannot carry resumable chunk state)")
+    if cfg.has_ssm:
+        return "recurrent SSM state absorbs chunk boundaries"
+    if cfg.enc_schedule:
+        return "cross-attention memory is not paged"
+    if cfg.n_patches:
+        return "patch prefixes occupy unpaged cache positions"
+    if cfg.rope_theta <= 0:
+        return "the chunk stack requires rotary positions"
+    return None
+
+
 def _chunk_scaffold(cfg: ModelConfig, shape: ShapeConfig,
                     mesh: Optional[Mesh], *, layout: PagedLayout,
                     width: int, policy: Optional[Policy],
@@ -611,7 +632,12 @@ def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
 
     The returned token is meaningful only for rows whose chunk completes
     the prompt (it then equals the unchunked prefill's sample; see
-    lm.forward_chunk)."""
+    lm.forward_chunk).
+
+    `pos0` is an arbitrary per-row start offset: besides mid-prompt chunk
+    resumption, the prefix cache's warm admissions reuse this step with
+    pos0 = cached-prefix length to prefill only the uncached suffix against
+    blocks already holding the shared prefix's KV."""
     (plan, policy, max_seq, p_specs, row_spec, tok_spec, c_struct, c_specs,
      in_specs, in_structs) = _chunk_scaffold(
         cfg, shape, mesh, layout=layout, width=chunk_tokens, policy=policy,

@@ -1,4 +1,6 @@
 from repro.serving.engine import InferenceEngine, ServingEngine
+from repro.serving.kv_cache import BlockAllocator
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.runner import ModelRunner
 from repro.serving.sampling import GREEDY, SamplingParams, validate_sampling
 from repro.serving.scheduler import (ChunkedPrefillPolicy, FCFSPolicy,

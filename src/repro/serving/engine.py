@@ -70,25 +70,35 @@ class InferenceEngine:
                  scheduler: Optional[SchedulerPolicy] = None,
                  encode_batch: Optional[int] = None,
                  fuse_epilogues: bool = True,
-                 spec: Optional[SpecConfig] = None, draft_params=None):
+                 spec: Optional[SpecConfig] = None, draft_params=None,
+                 prefix_cache: bool = False,
+                 cache_blocks: Optional[int] = None):
         # `policy` is the PRECISION policy (pre-split name, kept for
         # back-compat); the scheduling policy is `scheduler`.  `spec`
         # turns on speculative decoding (serving/spec.py): the runner
         # owns a draft LM (params from `draft_params`, the target itself
         # for draft="self", or a seeded init) and replaces per-token
         # decode steps with propose->verify->commit rounds.
+        # `prefix_cache` turns on refcounted KV prefix sharing
+        # (serving/prefix_cache.py): retired requests' blocks stay indexed
+        # by token content and warm admissions prefill only their uncached
+        # suffix; `cache_blocks` caps how many pool blocks the index may
+        # hold (None = bounded by pool pressure alone).
         self.runner = ModelRunner(cfg, params, batch_size=batch_size,
                                   max_seq=max_seq, mesh=mesh, policy=policy,
                                   min_bucket=min_bucket, paged=paged,
                                   block_size=block_size,
                                   kv_pool_blocks=kv_pool_blocks,
                                   fuse_epilogues=fuse_epilogues,
-                                  spec=spec, draft_params=draft_params)
+                                  spec=spec, draft_params=draft_params,
+                                  prefix_cache=prefix_cache,
+                                  cache_blocks=cache_blocks)
         self.scheduler = scheduler or FCFSPolicy()
         self.encode_batch = encode_batch or batch_size
         self.queue: List[Task] = []
         self.completed: List[Task] = []
         self._stats = self._fresh_stats()
+        self._prefix_base = self._prefix_snapshot()
         self._t_last_decode: Optional[float] = None
 
     # -- delegated runner state (back-compat surface) -------------------
@@ -123,6 +133,10 @@ class InferenceEngine:
     @property
     def block_tables(self):
         return self.runner.block_tables
+
+    @property
+    def prefix_cache(self):
+        return self.runner.prefix_cache
 
     @property
     def slots(self):
@@ -226,8 +240,9 @@ class InferenceEngine:
 
     def _admit(self, fresh: List) -> int:
         """Admit generate tasks into free slots per the scheduling policy:
-        whole-prompt groups prefill immediately; prompts over the chunk
-        budget park in their slot and advance chunk-by-chunk."""
+        cached-prefix hits seat with shared blocks and prefill only their
+        suffix; whole-prompt groups prefill immediately; prompts over the
+        chunk budget park in their slot and advance chunk-by-chunk."""
         runner = self.runner
         admitted = 0
         while True:
@@ -239,7 +254,39 @@ class InferenceEngine:
             # ran blocking prefills, which age the remaining queue
             order = self.scheduler.admission_order(gen,
                                                    time.perf_counter())
+            if runner.prefix_cache is not None:
+                order = self.scheduler.cached_order(
+                    order, runner.cached_tokens_for)
             head = order[0]
+            if runner.prefix_cache is not None:
+                res = runner.admit_cached(head, free[0])
+                if res is False:
+                    if runner.has_running():
+                        return admitted    # retirement will free blocks
+                    # nothing running and the warm layout still does not
+                    # fit (e.g. the COW duplicate when the pool exactly
+                    # matches the request): flush the cache and admit cold
+                    runner.prefix_cache.clear()
+                    res = None
+                if res:
+                    self.queue.remove(head)
+                    if not head.output:
+                        self._first_admission(head)
+                    ct = self.scheduler.chunk_tokens
+                    suffix = runner.full_len(head) - head.prefilled
+                    if ct is not None and suffix > ct:
+                        # over the chunk budget: stays parked, the budget
+                        # loop in step() advances it
+                        admitted += 1
+                        continue
+                    # run the whole suffix now (one bucketed chunk pass)
+                    width = runner.bucket_for(suffix)
+                    while runner.prefilling[free[0]]:
+                        ev = runner.chunk_step(head, width, self._stats)
+                        if ev is not None:
+                            fresh.append(ev)
+                    admitted += 1
+                    continue
             if self._chunkable(head):
                 blk = runner.alloc_for(head)
                 if blk is None:
@@ -396,6 +443,16 @@ class InferenceEngine:
         return self.completed[start:]
 
     # -- telemetry --------------------------------------------------------
+    def _prefix_snapshot(self):
+        """Prefix-cache counters are cumulative on the cache/runner; the
+        engine diffs them against the last reset so `stats()` windows
+        compose like every other counter."""
+        pc = self.runner.prefix_cache
+        if pc is None:
+            return None
+        return (pc.lookups, pc.hits, pc.hit_tokens, pc.evicted_blocks,
+                self.runner.cow_copies)
+
     def stats(self) -> EngineStats:
         """Live serving telemetry (accumulated since construction or the
         last `reset_stats()`)."""
@@ -403,14 +460,25 @@ class InferenceEngine:
             # the allocator tracks the true high-water mark on every alloc,
             # including admissions that never reach a decode step
             self._stats.peak_blocks_used = self.runner.allocator.peak_used
+        pc = self.runner.prefix_cache
+        if pc is not None:
+            base = self._prefix_base
+            self._stats.prefix_lookups = pc.lookups - base[0]
+            self._stats.prefix_hits = pc.hits - base[1]
+            self._stats.cached_prefix_tokens = pc.hit_tokens - base[2]
+            self._stats.evicted_blocks = pc.evicted_blocks - base[3]
+            self._stats.cow_copies = self.runner.cow_copies - base[4]
+            self._stats.cached_blocks = pc.cached_blocks
         return self._stats
 
     def reset_stats(self):
-        """Drop accumulated telemetry, keeping compiled steps (benchmarks:
-        warm buckets up, reset, then measure)."""
+        """Drop accumulated telemetry, keeping compiled steps AND the
+        prefix-cache contents (benchmarks: warm buckets + cache up, reset,
+        then measure)."""
         if self.runner.paged:
             self.runner.allocator.peak_used = self.runner.allocator.num_used
         self._stats = self._fresh_stats()
+        self._prefix_base = self._prefix_snapshot()
         # a stall sample must never span a reset (warm-up-then-measure)
         self._t_last_decode = None
 

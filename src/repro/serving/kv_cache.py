@@ -66,21 +66,44 @@ def insert_row(batch_caches, single_caches, row: int):
 # --------------------------------------------------------------------------
 
 class BlockAllocator:
-    """Host-side free-list over a global pool of `num_blocks` KV blocks of
-    `block_size` tokens each.  The engine allocates ceil(tokens / bs) blocks
-    at admission, one more whenever a slot's decode position crosses a block
-    boundary, and frees a request's blocks the moment it retires (or is
-    preempted back to the queue) — pool occupancy tracks *live tokens*, not
-    slots x max_seq."""
+    """Host-side refcounted free-list over a global pool of `num_blocks` KV
+    blocks of `block_size` tokens each.  The engine allocates
+    ceil(tokens / bs) blocks at admission, one more whenever a slot's decode
+    position crosses a block boundary, and releases a request's blocks the
+    moment it retires (or is preempted back to the queue) — pool occupancy
+    tracks *live tokens*, not slots x max_seq.
+
+    Refcounts (serving/prefix_cache.py): a block may be shared by several
+    holders — decode slots reusing a cached prompt prefix, plus the prefix
+    cache's radix index itself.  `alloc` hands out blocks at refcount 1,
+    `retain` adds a holder, and `free` drops one — the block returns to the
+    free list only when the last holder lets go.  When the free list cannot
+    satisfy an `alloc`, the optional `reclaim` hook (the prefix cache's LRU
+    evictor) is asked to release index-only blocks first, so cached prefixes
+    survive exactly as long as the pool has room for them (lazy eviction
+    replaces the pre-cache eager free).
+
+    Invariant guards raise `RuntimeError` (not `assert`) so double frees and
+    stale retains stay fatal under `python -O`; the free-set mirror makes the
+    membership check O(1)."""
 
     def __init__(self, num_blocks: int, block_size: int):
-        assert num_blocks >= 1 and block_size >= 1, (num_blocks, block_size)
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(f"pool needs >= 1 block of >= 1 token: "
+                             f"({num_blocks}, {block_size})")
         self.num_blocks = num_blocks
         self.block_size = block_size
         # LIFO free list: freshly freed blocks are reused first (their pool
-        # slots are the warmest in cache)
+        # slots are the warmest in cache); the set mirrors it for O(1)
+        # membership checks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._free_set = set(self._free)
+        self._ref: List[int] = [0] * num_blocks
         self.peak_used = 0
+        # lazy-reclaim hook: called with the shortfall when alloc() would
+        # otherwise fail; returns how many blocks it pushed back to the
+        # free list (serving/prefix_cache.py registers its LRU evictor)
+        self.reclaim = None
 
     @property
     def num_free(self) -> int:
@@ -90,24 +113,53 @@ class BlockAllocator:
     def num_used(self) -> int:
         return self.num_blocks - len(self._free)
 
+    def refcount(self, block: int) -> int:
+        """Live holder count for `block` (0 = on the free list)."""
+        return self._ref[block]
+
     def blocks_for(self, tokens: int) -> int:
         """Blocks needed to hold `tokens` cache positions."""
         return -(-tokens // self.block_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop `n` blocks, or None (allocation is all-or-nothing) when the
-        pool cannot satisfy the request."""
-        assert n >= 0, n
+        """Pop `n` blocks at refcount 1, or None (allocation is
+        all-or-nothing) when the pool cannot satisfy the request even after
+        asking `reclaim` to evict cached blocks."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free) and self.reclaim is not None:
+            self.reclaim(n - len(self._free))
         if n > len(self._free):
             return None
-        out = [self._free.pop() for _ in range(n)]
+        out = []
+        for _ in range(n):
+            b = self._free.pop()
+            self._free_set.discard(b)
+            self._ref[b] = 1
+            out.append(b)
         self.peak_used = max(self.peak_used, self.num_used)
         return out
 
+    def retain(self, blocks: List[int]) -> None:
+        """Add one holder to each allocated block (prefix-cache sharing)."""
+        for b in blocks:
+            if self._ref[b] <= 0:
+                raise RuntimeError(f"retain of unallocated block {b}")
+            self._ref[b] += 1
+
     def free(self, blocks: List[int]) -> None:
-        assert len(set(blocks)) == len(blocks), "double free within batch"
-        assert not set(blocks) & set(self._free), "double free"
-        self._free.extend(blocks)
+        """Drop one holder from each block; a block whose last holder lets
+        go returns to the free list."""
+        if len(set(blocks)) != len(blocks):
+            raise RuntimeError(f"double free within batch: {blocks}")
+        for b in blocks:
+            if b in self._free_set or self._ref[b] <= 0:
+                raise RuntimeError(f"double free of block {b}")
+        for b in blocks:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free.append(b)
+                self._free_set.add(b)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
@@ -162,3 +214,40 @@ def make_prefill_scatter(paged_segments, block_size: int):
                              paged_segments=tuple(bool(p)
                                                   for p in paged_segments),
                              block_size=block_size)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("paged_segments",))
+def _block_copy(caches, src, dst, *, paged_segments):
+    out = []
+    for seg, paged in zip(caches, paged_segments):
+        d = dict(seg)
+        if paged:
+            for key in ("k", "v"):
+                leaf = d[key]                    # [count, NB, BS, KV, hd]
+                row = jax.lax.dynamic_index_in_dim(leaf, src, axis=1,
+                                                   keepdims=True)
+                d[key] = jax.lax.dynamic_update_slice_in_dim(leaf, row, dst,
+                                                             axis=1)
+        out.append(d)
+    return tuple(out)
+
+
+def make_block_copy(paged_segments):
+    """The jitted copy-on-write block duplicator for one engine layout.
+
+    copy(caches, src, dst) -> caches
+
+    Copies pool block `src` into pool block `dst` across every paged k/v
+    leaf (dense leaves pass through untouched).  The prefix cache calls this
+    before a slot writes into a *shared* block — a partially filled tail
+    whose content other holders (the radix index, or another slot) still
+    depend on — so the writer mutates its private duplicate instead.
+    `src`/`dst` are traced scalars: one compile serves every block pair."""
+    segs = tuple(bool(p) for p in paged_segments)
+
+    def copy(caches, src, dst):
+        return _block_copy(caches, jnp.asarray(src, jnp.int32),
+                           jnp.asarray(dst, jnp.int32), paged_segments=segs)
+
+    return copy

@@ -42,8 +42,9 @@ import numpy as np
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import blocks
 from repro.launch import steps as steps_mod
-from repro.serving.kv_cache import (BlockAllocator, make_prefill_scatter,
-                                    zero_caches)
+from repro.serving.kv_cache import (BlockAllocator, make_block_copy,
+                                    make_prefill_scatter, zero_caches)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import (device_lane, set_lane, stack_lanes,
                                     stack_prefill_lanes, zero_lane)
 from repro.serving.spec import (DraftState, SpecConfig, accept_length,
@@ -61,7 +62,9 @@ class ModelRunner:
                  min_bucket: int = 8, paged: bool = True,
                  block_size: int = 16, kv_pool_blocks: Optional[int] = None,
                  fuse_epilogues: bool = True,
-                 spec: Optional[SpecConfig] = None, draft_params=None):
+                 spec: Optional[SpecConfig] = None, draft_params=None,
+                 prefix_cache: bool = False,
+                 cache_blocks: Optional[int] = None):
         assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
         self.cfg = cfg
         self.params = params
@@ -124,11 +127,23 @@ class ModelRunner:
                 (False,) * len(cfg.schedule), 1)
         # chunked prefill needs every segment's KV in the pool (the tables
         # ARE the chunk state) and a token-only causal stack
-        self.supports_chunked = bool(
-            self.paged and self.layout.any_paged
-            and all(self.layout.segments) and not cfg.has_ssm
-            and not cfg.enc_schedule and not self._n_prefix
-            and cfg.rope_theta > 0)
+        self.chunk_unsupported_reason = steps_mod.chunk_support_reason(
+            cfg, self.layout if self.paged else None)
+        self.supports_chunked = self.chunk_unsupported_reason is None
+        # -- prefix cache (serving/prefix_cache.py): warm admissions reuse
+        # cached prompt-prefix blocks and chunk-prefill only the suffix;
+        # requires the chunk stack (suffix prefill IS a chunk at pos0 > 0)
+        self.prefix_cache: Optional[PrefixCache] = None
+        self.prefix_cache_reason: Optional[str] = None
+        self.cow_copies = 0
+        if prefix_cache:
+            if self.supports_chunked:
+                self.prefix_cache = PrefixCache(
+                    self.allocator, self.layout.block_size,
+                    max_blocks=cache_blocks)
+                self._block_copy = make_block_copy(self.layout.segments)
+            else:
+                self.prefix_cache_reason = self.chunk_unsupported_reason
         self._slot_blocks: List[List[int]] = [[] for _ in range(batch_size)]
         self._tables_dev = None            # device copy, rebuilt when dirty
         self._admit_seq = 0
@@ -300,6 +315,8 @@ class ModelRunner:
 
     def release_slot(self, b: int):
         if self.paged and self._slot_blocks[b]:
+            if self.prefix_cache is not None:
+                self._index_slot(b)
             self.allocator.free(self._slot_blocks[b])
         self._slot_blocks[b] = []
         if self.paged:
@@ -310,13 +327,109 @@ class ModelRunner:
         self.draft_states[b] = None
 
     def evict(self, b: int) -> GenerateTask:
-        """Pull the task out of slot `b`, freeing its blocks (recompute
+        """Pull the task out of slot `b`, releasing its blocks (recompute
         preemption: the engine re-queues it; a mid-chunk prefill restarts
-        from scratch on re-admission)."""
+        from scratch on re-admission — with the prefix cache on, the
+        released blocks stay indexed, so the recompute is itself a warm
+        admission as long as the pool doesn't reclaim them first)."""
         task = self.slots[b]
+        self.release_slot(b)      # indexes [0, prefilled/pos) before reset
         task.prefilled = 0
-        self.release_slot(b)
         return task
+
+    # -- prefix cache (serving/prefix_cache.py) ------------------------
+    def cached_tokens_for(self, task: GenerateTask) -> int:
+        """Peek at the cached-prefix length for `task` (no LRU touch, no
+        hit-rate accounting) — the scheduler's cache-aware admission probe."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.lookup(
+            self.full_prompt(task), limit=self.full_len(task) - 1,
+            touch=False, record=False)[1]
+
+    def admit_cached(self, task: GenerateTask, b: int) -> Optional[bool]:
+        """Warm admission: look up the longest cached prefix of the (re-)
+        prefill sequence, share those blocks into slot `b`'s table, and
+        park the task prefilling with `prefilled = hit` so only the suffix
+        gets encoded (chunk_step at pos0 = hit).
+
+        The hit is capped at full_len - 1: the final position must be
+        prefilled live to produce the sampling logits.  A hit ending
+        mid-block copy-on-writes the shared tail before the suffix
+        overwrites its trailing positions.
+
+        Returns None on a cache miss (caller falls back to whole-prompt
+        admission), False when the pool cannot supply the uncached blocks
+        (caller stops admitting this step), True when seated."""
+        pc = self.prefix_cache
+        full = self.full_prompt(task)
+        hit_blocks, hit = pc.lookup(full, limit=len(full) - 1)
+        if hit <= 0:
+            return None
+        # pin the shared blocks before anything that could evict them
+        self.allocator.retain(hit_blocks)
+        bs = self.layout.block_size
+        n_hit = len(hit_blocks)
+        partial = hit % bs != 0
+        need = self.blocks_needed(task) - n_hit + (1 if partial else 0)
+        new = self.allocator.alloc(need)
+        if new is None:
+            self.allocator.free(hit_blocks)     # drop the pins
+            return False
+        table = list(hit_blocks)
+        if partial:
+            # COW: the suffix writes positions [hit, ...) of the tail block
+            # other holders still depend on — duplicate it first and swap
+            # the private copy into this slot's table
+            src, dst = table[n_hit - 1], new[0]
+            self.caches = self._block_copy(self.caches, src, dst)
+            self.allocator.free([src])          # un-pin the shared original
+            table[n_hit - 1] = dst
+            new = new[1:]
+            self.cow_copies += 1
+        table.extend(new)
+        # parked prefilling like begin_chunked: the decode-table row stays
+        # -1 (interleaved decode writes drop) until the final suffix chunk
+        # lands in chunk_step
+        self._seat(task, b, table)
+        self.prefilling[b] = True
+        task.prefilled = hit
+        task.cached_prefix = hit
+        return True
+
+    def _index_slot(self, b: int):
+        """Index slot `b`'s committed tokens before its blocks are
+        released: the full (re-)prefill sequence for a slot that reached
+        decode (KV covers [0, pos)), or the prefix landed so far for a slot
+        still chunk-prefilling.  Newly indexed blocks gain an allocator
+        reference and survive the slot's release until LRU reclaim."""
+        task = self.slots[b]
+        if task is None:
+            return
+        n_kv = task.prefilled if self.prefilling[b] else int(self.pos[b])
+        if n_kv <= 0:
+            return
+        nb = self.allocator.blocks_for(n_kv)
+        self.prefix_cache.insert(self.full_prompt(task)[:n_kv],
+                                 self._slot_blocks[b][:nb])
+
+    def _index_prompt_blocks(self, task: GenerateTask, blk: List[int]):
+        """Index the *full* blocks of a freshly prefilled prompt the moment
+        its KV lands — later admissions in the same batch already hit.  The
+        partial tail keeps changing as the slot decodes, so it only joins
+        the index at release time (_index_slot).
+
+        Called after landing appends its sampled token to `task.output`, so
+        the landed KV extent is full_len - 1: that last token's KV only
+        materializes on the next decode step, and indexing a block that
+        straddles it would publish a position the pool hasn't written."""
+        if self.prefix_cache is None:
+            return
+        bs = self.layout.block_size
+        n_full = ((self.full_len(task) - 1) // bs) * bs
+        if n_full > 0:
+            self.prefix_cache.insert(self.full_prompt(task)[:n_full],
+                                     blk[:n_full // bs])
 
     def _tables(self):
         if self._tables_dev is None:
@@ -359,6 +472,35 @@ class ModelRunner:
                     self._slot_blocks[b].extend(got)
                     self._tables_dev = None
                     continue
+                cand = self.running()
+                if not cand:
+                    raise RuntimeError(
+                        "KV pool exhausted with no running request to "
+                        "preempt")
+                victim = select_victim(cand)
+                vb = self.slots.index(victim)
+                evicted.append(self.evict(vb))
+                stats.preemptions += 1
+            # write discipline under prefix sharing: the block the next
+            # token lands in must be private to this slot.  Warm admission
+            # already COWs the shared tail, so this guard is belt-and-
+            # braces — but it makes decode safe against any future sharing
+            # path by construction.
+            while (self.prefix_cache is not None
+                   and self.slots[b] is not None):
+                e = int(pos[b]) // bs
+                blk = self._slot_blocks[b][e]
+                if self.allocator.refcount(blk) <= 1:
+                    break
+                got = self.allocator.alloc(1)
+                if got is not None:
+                    self.caches = self._block_copy(self.caches, blk, got[0])
+                    self._slot_blocks[b][e] = got[0]
+                    self.block_tables[b, e] = got[0]
+                    self._tables_dev = None
+                    self.allocator.free([blk])
+                    self.cow_copies += 1
+                    break
                 cand = self.running()
                 if not cand:
                     raise RuntimeError(
@@ -427,6 +569,7 @@ class ModelRunner:
             if self.paged:
                 self.block_tables[b] = tables[j]
                 self._tables_dev = None
+            self._index_prompt_blocks(task, blk)
             fresh.append((task, len(task.output) - 1))
             stats.bucket_hits[bucket] = stats.bucket_hits.get(bucket, 0) + 1
             if first_admit:
@@ -551,6 +694,7 @@ class ModelRunner:
         if self.paged:
             self.block_tables[b] = row_table[0]
             self._tables_dev = None
+        self._index_prompt_blocks(task, self._slot_blocks[b])
         if first_admit:
             task.ttft_ms = (now - task._t_submit) * 1e3
             stats.add_ttft_ms(task.ttft_ms)

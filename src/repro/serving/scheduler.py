@@ -43,6 +43,12 @@ class SchedulerPolicy(ABC):
 
     name: str = "policy"
     chunk_tokens: Optional[int] = None
+    # cache-aware admission (prefix cache only): stable-resort the
+    # admission order by descending cached-prefix length — a mostly-cached
+    # request admits almost for free, so serving it first costs the rest of
+    # the queue the least prefill wall-time.  Off by default: plain FCFS
+    # order stays byte-for-byte the pre-split behavior.
+    cache_aware: bool = False
 
     @abstractmethod
     def admission_order(self, queue: Sequence[Task],
@@ -50,6 +56,15 @@ class SchedulerPolicy(ABC):
         """The queue in the order admission should consider it (a new list;
         the engine's queue itself is arrival-ordered and never reordered —
         completed/admitted entries are removed by identity)."""
+
+    def cached_order(self, order: List[Task], cached_tokens) -> List[Task]:
+        """Apply cache-aware admission to an `admission_order` result.
+        `cached_tokens(task) -> int` is the engine's peek into the prefix
+        cache (no LRU touch, no hit-rate skew).  The sort is stable: ties —
+        including the all-cold case — preserve the policy's own order."""
+        if not self.cache_aware:
+            return order
+        return sorted(order, key=lambda t: -cached_tokens(t))
 
     def select_victim(self, running: Sequence[Task], now: float) -> Task:
         """The running task to preempt when the KV pool is exhausted.
@@ -125,12 +140,16 @@ POLICIES = {
 
 
 def make_policy(name: str, *, chunk_tokens: Optional[int] = None,
-                aging_s: float = 10.0) -> SchedulerPolicy:
+                aging_s: float = 10.0,
+                cache_aware: bool = False) -> SchedulerPolicy:
     """CLI-friendly factory (launch/serve.py --policy)."""
     if name == "fcfs":
-        return FCFSPolicy()
-    if name == "priority":
-        return PriorityPolicy(aging_s=aging_s)
-    if name == "chunked":
-        return ChunkedPrefillPolicy(chunk_tokens or 32)
-    raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}")
+        p = FCFSPolicy()
+    elif name == "priority":
+        p = PriorityPolicy(aging_s=aging_s)
+    elif name == "chunked":
+        p = ChunkedPrefillPolicy(chunk_tokens or 32)
+    else:
+        raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}")
+    p.cache_aware = cache_aware
+    return p

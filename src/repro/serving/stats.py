@@ -86,6 +86,13 @@ class EngineStats:
     recompute_time_s: float = 0.0  # prefill wall time spent on recomputes
     block_slot_steps: int = 0      # sum over decode steps of blocks in use
     token_slot_steps: int = 0      # sum over decode steps of live tokens
+    # -- prefix cache (serving/prefix_cache.py) -----------------------------
+    prefix_lookups: int = 0        # admission-time cache lookups
+    prefix_hits: int = 0           # of those, lookups matching >= 1 token
+    cached_prefix_tokens: int = 0  # prompt tokens served from cached blocks
+    cached_blocks: int = 0         # blocks the index holds now (gauge)
+    evicted_blocks: int = 0        # index blocks LRU-reclaimed by the pool
+    cow_copies: int = 0            # shared blocks duplicated before a write
 
     # -- recorders (bounded: percentiles cover the recent MAX_SAMPLES) ------
     def add_ttft_ms(self, v: float) -> None:
@@ -207,6 +214,13 @@ class EngineStats:
         return percentile(self.encode_latency_ms, 95)
 
     @property
+    def prefix_cache_hit_rate(self) -> float:
+        """Fraction of admission lookups that matched a cached prefix."""
+        if not self.prefix_lookups:
+            return 0.0
+        return self.prefix_hits / self.prefix_lookups
+
+    @property
     def pool_utilization(self) -> float:
         """Peak fraction of the KV block pool in use (0.0 = dense layout)."""
         if not self.kv_pool_blocks:
@@ -278,6 +292,13 @@ class EngineStats:
             "preemptions": self.preemptions,
             "recompute_tokens": self.recompute_tokens,
             "recompute_time_s": self.recompute_time_s,
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_cache_hit_rate": self.prefix_cache_hit_rate,
+            "cached_prefix_tokens": self.cached_prefix_tokens,
+            "cached_blocks": self.cached_blocks,
+            "evicted_blocks": self.evicted_blocks,
+            "cow_copies": self.cow_copies,
         }
 
     def summary(self) -> str:
@@ -302,9 +323,16 @@ class EngineStats:
             spec = (f" | SPEC {self.spec_acceptance_rate:.0%} accept, "
                     f"{self.spec_tokens_per_step:.2f} tok/step, draft p95 "
                     f"{self.draft_time_ms_p95:.1f}ms")
+        prefix = ""
+        if self.prefix_lookups:
+            prefix = (f" | PREFIX {self.prefix_cache_hit_rate:.0%} hit, "
+                      f"{self.cached_prefix_tokens} tok reused, "
+                      f"{self.cow_copies} COW, "
+                      f"{self.evicted_blocks} evicted")
         return (f"NAR {self.nar_tok_s:8.1f} tok/s ({self.nar_tokens} prompt "
                 f"tokens, {self.padding_overhead:.0%} pad) | "
                 f"AR {self.ar_tok_s:8.1f} tok/s ({self.ar_tokens} tokens, "
                 f"occupancy {self.slot_occupancy:.0%}) | "
                 f"TTFT p50 {self.ttft_p50_ms:.0f}ms p95 "
-                f"{self.ttft_p95_ms:.0f}ms" + enc + chunk + spec + pool)
+                f"{self.ttft_p95_ms:.0f}ms"
+                + enc + chunk + spec + prefix + pool)

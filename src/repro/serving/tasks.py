@@ -79,6 +79,10 @@ class GenerateTask(Task):
     # cache (0 = not admitted / whole-prompt prefill; == full length once
     # the final chunk lands and the first token is sampled)
     prefilled: int = 0
+    # prompt tokens served from the prefix cache at the most recent
+    # admission (0 = cold); the suffix actually encoded was
+    # prompt_len - cached_prefix
+    cached_prefix: int = 0
 
     def __post_init__(self):
         _require_keyword_prompt(self)

@@ -49,11 +49,14 @@ def test_allocator_all_or_nothing_exhaustion():
 
 
 def test_allocator_double_free_rejected():
+    # RuntimeError, not assert: the guard must survive `python -O`
     a = BlockAllocator(num_blocks=3, block_size=2)
     x = a.alloc(2)
     a.free(x)
-    with pytest.raises(AssertionError):
+    with pytest.raises(RuntimeError, match="double free"):
         a.free(x)
+    with pytest.raises(RuntimeError, match="within batch"):
+        a.free([a.alloc(1)[0]] * 2)
 
 
 def test_allocator_blocks_for():

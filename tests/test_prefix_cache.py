@@ -1,0 +1,498 @@
+"""Prefix cache: radix index + refcounted COW block sharing + LRU eviction.
+
+The load-bearing property is *token identity*: a warm admission that reuses
+cached prefix blocks must produce exactly the tokens a cold prefill would —
+greedy AND sampled, across paper archs, including chunked admission,
+preemption-recompute, and speculative decoding.  KV for position p depends
+only on tokens [0, p] (causal attention), so sharing is exact by
+construction as long as the write discipline holds: a slot only ever writes
+a block it owns at refcount 1 (fresh alloc or copy-on-write duplicate).
+These tests pin the discipline at every layer — allocator refcounts, radix
+lookup/insert/evict, engine admission — plus a hypothesis property test
+driving random admit/retire/pressure sequences against the refcount
+invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import FP32
+from repro.models import lm
+from repro.serving import (ChunkedPrefillPolicy, InferenceEngine, PrefixCache,
+                           Request, SamplingParams, SpecConfig, make_policy)
+from repro.serving.kv_cache import BlockAllocator
+
+# --------------------------------------------------------------------------
+# BlockAllocator refcounts
+# --------------------------------------------------------------------------
+
+
+def test_allocator_retain_release():
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    x = a.alloc(2)
+    assert [a.refcount(b) for b in x] == [1, 1]
+    a.retain(x)
+    assert [a.refcount(b) for b in x] == [2, 2]
+    a.free(x)                       # drops to 1: still allocated
+    assert a.num_used == 2
+    a.free(x)                       # drops to 0: back on the free list
+    assert a.num_used == 0
+    with pytest.raises(RuntimeError, match="double free"):
+        a.free(x)
+
+
+def test_allocator_retain_unallocated_raises():
+    a = BlockAllocator(num_blocks=2, block_size=2)
+    with pytest.raises(RuntimeError, match="retain"):
+        a.retain([0])
+    with pytest.raises(ValueError):
+        a.alloc(-1)
+    with pytest.raises(ValueError):
+        BlockAllocator(num_blocks=0, block_size=2)
+
+
+def test_allocator_reclaim_hook():
+    """alloc() consults the reclaim hook before failing, and only takes
+    what the hook actually freed back."""
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    held = a.alloc(4)
+    calls = []
+
+    def reclaim(shortfall):
+        calls.append(shortfall)
+        give = held[:min(shortfall, 2)]
+        del held[:len(give)]
+        a.free(give)
+        return len(give)
+
+    a.reclaim = reclaim
+    got = a.alloc(2)                # hook frees 2 -> satisfied
+    assert got is not None and calls == [2]
+    assert a.alloc(3) is None       # hook frees 2, still short of 3
+    assert calls == [1, 3][1:] or calls[-1] == 3
+
+
+# --------------------------------------------------------------------------
+# radix index: lookup / insert / evict (host-side, no engine)
+# --------------------------------------------------------------------------
+
+
+def _cache(num_blocks=16, bs=4, **kw):
+    a = BlockAllocator(num_blocks=num_blocks, block_size=bs)
+    return a, PrefixCache(a, bs, **kw)
+
+
+def test_lookup_insert_longest_prefix():
+    a, pc = _cache()
+    blk = a.alloc(3)
+    toks = list(range(1, 12))           # 11 tokens: 2 full blocks + tail(3)
+    pc.insert(toks, blk)
+    pc.check()
+    assert pc.cached_blocks == 3
+    # exact prefix: full blocks then the partial tail
+    got, n = pc.lookup(toks)
+    assert n == 11 and got == blk
+    # diverging inside the second block: only the first full block matches
+    q = toks[:5] + [99] * 6
+    got, n = pc.lookup(q)
+    assert n == 5 and got[0] == blk[0] and len(got) == 2
+    # the partial use of block 1 matched 1 extra token (position 4)
+    assert got[1] == blk[1]
+    # a miss from token zero
+    assert pc.lookup([99, 98, 97])[1] == 0
+    # limit caps the match even when more is cached
+    got, n = pc.lookup(toks, limit=6)
+    assert n == 6 and len(got) == 2
+
+
+def test_lookup_partial_of_full_block():
+    """A full-block child matched only partway is still a hit — causality
+    makes its leading positions valid for the shorter query."""
+    a, pc = _cache()
+    blk = a.alloc(2)
+    pc.insert(list(range(8)), blk)          # two full blocks
+    got, n = pc.lookup([0, 1, 2, 3, 4, 5, 70, 71])
+    assert n == 6 and got == blk            # 4 exact + 2 into block 1
+
+
+def test_insert_dedup_first_writer_wins():
+    a, pc = _cache()
+    b1, b2 = a.alloc(2), a.alloc(2)
+    toks = list(range(7))
+    pc.insert(toks, b1)
+    pc.insert(toks, b2)                     # same content: no new nodes
+    pc.check()
+    assert pc.cached_blocks == 2
+    assert pc.lookup(toks)[0] == b1
+    assert a.refcount(b2[0]) == 1           # duplicate content not retained
+
+
+def test_lru_eviction_order_and_reclaim():
+    a, pc = _cache(num_blocks=6, bs=4)
+    b1, b2 = a.alloc(1), a.alloc(1)
+    pc.insert([1, 2, 3, 4], b1)
+    pc.insert([5, 6, 7, 8], b2)
+    a.free(b1)
+    a.free(b2)                   # both index-only now (refcount 1)
+    pc.lookup([1, 2, 3, 4])      # touch b1: b2 becomes LRU
+    got = a.alloc(5)             # 4 free + 1 via reclaim -> evicts b2
+    assert got is not None
+    pc.check()
+    assert pc.cached_blocks == 1 and pc.evicted_blocks == 1
+    assert pc.lookup([5, 6, 7, 8], record=False)[1] == 0    # b2 gone
+    assert pc.lookup([1, 2, 3, 4], record=False)[1] == 4    # b1 survives
+
+
+def test_eviction_skips_pinned_blocks():
+    a, pc = _cache(num_blocks=2, bs=4)
+    b1 = a.alloc(1)
+    pc.insert([1, 2, 3, 4], b1)  # refcount 2: caller + index
+    assert a.alloc(2) is None    # b1 pinned by its holder: nothing to evict
+    a.free(b1)                   # index-only now
+    assert a.alloc(2) is not None     # reclaim evicts it
+    assert pc.cached_blocks == 0
+
+
+def test_max_blocks_cap():
+    a, pc = _cache(num_blocks=16, bs=4, max_blocks=2)
+    for i in range(4):
+        b = a.alloc(1)
+        pc.insert([10 * i + j for j in range(4)], b)
+        a.free(b)
+        pc.check()
+    assert pc.cached_blocks <= 2
+    assert pc.evicted_blocks >= 2
+
+
+def test_cache_parameter_validation():
+    a = BlockAllocator(num_blocks=4, block_size=4)
+    with pytest.raises(ValueError, match="max_blocks"):
+        PrefixCache(a, 4, max_blocks=-1)
+    pc = PrefixCache(a, 4)
+    with pytest.raises(ValueError, match="cannot cover"):
+        pc.insert(list(range(9)), a.alloc(1))
+
+
+# --------------------------------------------------------------------------
+# engine-level identity: warm admission == cold prefill
+# --------------------------------------------------------------------------
+
+_PARAMS_CACHE = {}
+
+
+def _reduced(arch):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_config(arch).reduced()
+        _PARAMS_CACHE[arch] = (cfg, lm.init_lm(jax.random.key(0), cfg,
+                                               jnp.float32))
+    return _PARAMS_CACHE[arch]
+
+
+def _shared_trace(cfg, n=4, *, uid0=0, pre_len=40, max_new=6, sampled=(),
+                  seed=7):
+    """n requests sharing a `pre_len`-token system prompt + unique tails.
+    Request i's sampling seed is i (not uid), so re-submitted copies with
+    shifted uids reproduce identical token streams."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, pre_len, dtype=np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab, 4 + i, dtype=np.int32)
+        reqs.append(Request(
+            uid=uid0 + i,
+            prompt=np.concatenate([shared, tail]) if i else shared.copy(),
+            max_new_tokens=max_new,
+            sampling=SamplingParams(temperature=0.8, top_k=8, seed=i)
+            if i in sampled else SamplingParams()))
+    return reqs
+
+
+def _run(cfg, params, reqs, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("max_seq", 64)
+    engine = InferenceEngine(cfg, params, policy=FP32, **kw)
+    for r in reqs:
+        engine.submit(r)
+    done = {t.uid: t.output for t in engine.run()}
+    return engine, done
+
+
+def _drained(engine):
+    """With the cache on, a drained engine's only live blocks are the
+    index's: free + cached == pool, and every indexed block is index-only."""
+    alloc, pc = engine.allocator, engine.prefix_cache
+    assert alloc.num_free == alloc.num_blocks - pc.cached_blocks
+    assert all(alloc.refcount(b) == 1 for b in pc.index_blocks())
+    pc.check()
+
+
+@pytest.mark.parametrize("arch", ["gpt-j", "gpt3-xl", "phi4-mini-3.8b",
+                                  "chatglm3-6b"])
+def test_warm_identity_greedy_and_sampled(arch):
+    """A fully warmed cache serves every request token-identically to cold
+    prefill, computing strictly fewer prompt tokens."""
+    cfg, params = _reduced(arch)
+    mk = lambda uid0, : _shared_trace(cfg, uid0=uid0, sampled=(1, 3))
+    base = _run(cfg, params, mk(0), prefix_cache=False)[1]
+    eng, got1 = _run(cfg, params, mk(0), prefix_cache=True,
+                     kv_pool_blocks=24)
+    assert got1 == base, f"{arch}: first (cold-ish) pass diverged"
+    cold_nar = eng.stats().nar_tokens
+    eng.reset_stats()
+    for r in mk(100):
+        eng.submit(r)
+    got2 = {t.uid - 100: t.output for t in eng.run()}
+    assert got2 == base, f"{arch}: warm pass diverged"
+    st = eng.stats()
+    assert st.prefix_hits == 4 and st.prefix_cache_hit_rate == 1.0
+    assert st.cached_prefix_tokens > 0
+    assert st.nar_tokens < cold_nar         # strictly fewer computed
+    _drained(eng)
+
+
+def test_in_batch_sharing_first_pass():
+    """Prefix blocks are indexed the moment a prompt's KV lands, so later
+    requests in the SAME trace already hit the shared system prompt."""
+    cfg, params = _reduced("phi4-mini-3.8b")
+    base = _run(cfg, params, _shared_trace(cfg), prefix_cache=False)[1]
+    eng, got = _run(cfg, params, _shared_trace(cfg), prefix_cache=True,
+                    kv_pool_blocks=24)
+    assert got == base
+    st = eng.stats()
+    assert st.prefix_hits >= 2 and st.cached_prefix_tokens >= 80
+    _drained(eng)
+
+
+def test_cow_on_shared_partial_tail():
+    """A hit ending mid-block duplicates the shared tail before the suffix
+    writes into it — and the second sharer still decodes identically."""
+    cfg, params = _reduced("gpt-j")
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, cfg.vocab, 18, dtype=np.int32)     # 18 = 16 + 2
+    first = [Request(uid=0, prompt=p.copy(), max_new_tokens=6)]
+    eng, done = _run(cfg, params, first, prefix_cache=True, block_size=16,
+                     kv_pool_blocks=16)
+    # retirement indexed [0, pos): 18 + 5 committed tokens incl. a partial
+    # tail block; a prompt extending into that tail must COW it
+    p2 = np.concatenate([p, np.asarray(done[0][:2], np.int32)])
+    second = [Request(uid=1, prompt=p2, max_new_tokens=6)]
+    base = _run(cfg, params,
+                [Request(uid=1, prompt=p2.copy(), max_new_tokens=6)],
+                prefix_cache=False)[1]
+    for r in second:
+        eng.submit(r)
+    got = {t.uid: t.output for t in eng.run()}
+    st = eng.stats()
+    assert got[1] == base[1]
+    assert st.cow_copies >= 1
+    assert st.cached_prefix_tokens >= 18
+    _drained(eng)
+
+
+def test_boundary_prompt_indexes_only_landed_kv():
+    """Regression: prompt_len % bs == bs - 1.  Landing appends the first
+    sampled token to task.output before the blocks are indexed, so naive
+    full_len indexing would publish a "full" block whose last position's
+    KV only lands on the NEXT decode step — a later prompt extending
+    across that boundary would then attend to never-written KV."""
+    cfg, params = _reduced("gpt-j")
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, cfg.vocab, 31, dtype=np.int32)     # 31 = 2*16 - 1
+    eng = InferenceEngine(cfg, params, policy=FP32, batch_size=2,
+                          max_seq=64, block_size=16, kv_pool_blocks=16,
+                          prefix_cache=True)
+    eng.submit(Request(uid=0, prompt=p.copy(), max_new_tokens=6))
+    eng.step()                       # prefill lands; one token sampled
+    out = eng.runner.slots[0].output if eng.runner.slots[0] else []
+    assert len(out) >= 1
+    # mid-flight the index may cover the first block only: position 31
+    # (the sampled token) has no KV in the pool yet
+    _, matched = eng.prefix_cache.lookup(
+        np.concatenate([p, np.asarray(out, np.int32)]),
+        touch=False, record=False)
+    assert matched <= 16, f"index published {matched} tokens of unlanded KV"
+    done = {t.uid: t.output for t in eng.run()}
+    # after retirement the boundary block HAS landed ([0, pos) indexed):
+    # a prompt continuing through it must be a hit and stay identical
+    p2 = np.concatenate([p, np.asarray(done[0][:2], np.int32)])
+    base = _run(cfg, params,
+                [Request(uid=1, prompt=p2.copy(), max_new_tokens=6)],
+                prefix_cache=False)[1]
+    eng.submit(Request(uid=1, prompt=p2, max_new_tokens=6))
+    got = {t.uid: t.output for t in eng.run()}
+    assert got[1] == base[1]
+    assert eng.stats().cached_prefix_tokens >= 31
+    _drained(eng)
+
+
+def test_chunked_policy_warm_identity():
+    """Cache + ChunkedPrefillPolicy: cached long prompts park with
+    prefilled = hit and the chunk budget loop finishes the suffix."""
+    cfg, params = _reduced("phi4-mini-3.8b")
+    mk = lambda uid0: _shared_trace(cfg, uid0=uid0, sampled=(2,))
+    base = _run(cfg, params, mk(0), prefix_cache=False)[1]
+    eng, got1 = _run(cfg, params, mk(0), prefix_cache=True,
+                     kv_pool_blocks=24,
+                     scheduler=ChunkedPrefillPolicy(16))
+    assert got1 == base
+    for r in mk(100):
+        eng.submit(r)
+    got2 = {t.uid - 100: t.output for t in eng.run()}
+    assert got2 == base
+    assert eng.stats().prefix_hits >= 4
+    _drained(eng)
+
+
+def test_preemption_recompute_warm_identity():
+    """A starved pool with the cache on: preempted requests re-admit as
+    cache hits (their released blocks stay indexed) and still finish
+    token-identically; nothing leaks."""
+    cfg, params = _reduced("phi4-mini-3.8b")
+    mk = lambda: _shared_trace(cfg, pre_len=20, max_new=9, sampled=(1, 3))
+    base = _run(cfg, params, mk(), prefix_cache=False)[1]
+    eng, got = _run(cfg, params, mk(), prefix_cache=True,
+                    block_size=8, kv_pool_blocks=6)
+    st = eng.stats()
+    assert st.preemptions > 0
+    assert got == base
+    _drained(eng)
+
+
+def test_spec_decode_warm_identity():
+    """Cache + speculative decoding: warm admissions draft-prefill at
+    suffix landing and verify/rollback respects shared-block refcounts."""
+    cfg, params = _reduced("gpt-j")
+    mk = lambda uid0: _shared_trace(cfg, uid0=uid0, pre_len=24, max_new=8,
+                                    sampled=(1,))
+    base = _run(cfg, params, mk(0), prefix_cache=False)[1]
+    spec = SpecConfig(draft="auto", k=3, draft_seed=1234)   # rejection-heavy
+    eng, got1 = _run(cfg, params, mk(0), prefix_cache=True,
+                     kv_pool_blocks=24, spec=spec)
+    assert got1 == base
+    for r in mk(100):
+        eng.submit(r)
+    got2 = {t.uid - 100: t.output for t in eng.run()}
+    assert got2 == base
+    st = eng.stats()
+    assert st.spec_rounds > 0 and st.prefix_hits >= 4
+    _drained(eng)
+
+
+def test_cache_aware_admission_order():
+    """With cache_aware on, a mostly-cached request jumps a cold one in the
+    admission order (stable within equal cached lengths)."""
+    cfg, params = _reduced("gpt-j")
+    rng = np.random.default_rng(11)
+    warm_p = rng.integers(0, cfg.vocab, 32, dtype=np.int32)
+    cold_p = rng.integers(0, cfg.vocab, 32, dtype=np.int32)
+    for aware, expect_warm_first in ((True, True), (False, False)):
+        eng, _ = _run(cfg, params,
+                      [Request(uid=0, prompt=warm_p.copy(),
+                               max_new_tokens=4)],
+                      prefix_cache=True, batch_size=1, kv_pool_blocks=12,
+                      scheduler=make_policy("fcfs", cache_aware=aware))
+        cold = Request(uid=1, prompt=cold_p.copy(), max_new_tokens=4)
+        warm = Request(uid=2, prompt=warm_p.copy(), max_new_tokens=4)
+        eng.submit(cold)
+        eng.submit(warm)       # arrives second; cached almost entirely
+        eng.run()
+        assert (warm._seq < cold._seq) == expect_warm_first, f"{aware=}"
+
+
+def test_unsupported_arch_disables_with_reason():
+    for arch in ("mamba2-2.7b", "gemma3-27b"):
+        cfg = get_config(arch).reduced()
+        params = lm.init_lm(jax.random.key(1), cfg, jnp.float32)
+        eng = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                              policy=FP32, prefix_cache=True)
+        assert eng.prefix_cache is None
+        assert eng.runner.prefix_cache_reason
+        for r in _shared_trace(cfg, 2, pre_len=12, max_new=3):
+            eng.submit(r)
+        assert len(eng.run()) == 2      # serves fine, just cold
+
+
+def test_stats_fields_and_summary():
+    cfg, params = _reduced("gpt-j")
+    eng, _ = _run(cfg, params, _shared_trace(cfg), prefix_cache=True,
+                  kv_pool_blocks=24)
+    st = eng.stats()
+    d = st.to_dict()
+    for key in ("prefix_lookups", "prefix_hits", "prefix_cache_hit_rate",
+                "cached_prefix_tokens", "cached_blocks", "evicted_blocks",
+                "cow_copies"):
+        assert key in d
+    assert 0.0 <= st.prefix_cache_hit_rate <= 1.0
+    assert st.prefix_lookups >= st.prefix_hits > 0
+    assert "PREFIX" in st.summary()
+    # reset re-bases the cumulative cache counters
+    eng.reset_stats()
+    st2 = eng.stats()
+    assert st2.prefix_lookups == 0 and st2.cached_prefix_tokens == 0
+    assert st2.cached_blocks == eng.prefix_cache.cached_blocks
+
+
+# --------------------------------------------------------------------------
+# hypothesis property: refcount-consistent state under random sequences
+# --------------------------------------------------------------------------
+
+def test_random_admit_retire_pressure_invariants():
+    hyp = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed in this env")
+    from hypothesis import given, settings, strategies as st_
+
+    BS, NB = 4, 10
+
+    op = st_.tuples(st_.integers(0, 2), st_.integers(0, 2 ** 30))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st_.lists(op, min_size=1, max_size=50))
+    def run(ops):
+        alloc = BlockAllocator(num_blocks=NB, block_size=BS)
+        pc = PrefixCache(alloc, BS)
+        holders = []        # (table, tokens) — simulated live slots
+
+        def invariants():
+            pc.check()
+            idx = pc.index_blocks()
+            assert len(idx) == pc.cached_blocks
+            for blk in range(NB):
+                want = sum(t.count(blk) for t, _ in holders)
+                want += 1 if blk in idx else 0
+                assert alloc.refcount(blk) == want, (blk, ops)
+            assert alloc.num_used == sum(
+                1 for b in range(NB) if alloc.refcount(b) > 0)
+
+        for kind, v in ops:
+            if kind == 0:       # admit: lookup -> retain -> alloc -> COW
+                n_tok = 1 + v % 14
+                toks = [(v >> j) & 1 for j in range(n_tok)]  # tiny alphabet
+                blocks, hit = pc.lookup(toks, limit=max(1, n_tok - 1))
+                alloc.retain(blocks)
+                partial = hit % BS != 0
+                need = (-(-n_tok // BS)) - len(blocks) + (1 if partial
+                                                          else 0)
+                new = alloc.alloc(need)
+                if new is None:
+                    alloc.free(blocks)
+                else:
+                    table = list(blocks)
+                    if partial:
+                        alloc.free([table[-1]])
+                        table[-1] = new[0]
+                        new = new[1:]
+                    table.extend(new)
+                    holders.append((table, toks))
+            elif kind == 1 and holders:     # retire: insert then release
+                table, toks = holders.pop(v % len(holders))
+                pc.insert(toks, table)
+                alloc.free(table)
+            else:               # pressure: force reclaim, then give back
+                got = alloc.alloc(1 + v % NB)
+                if got is not None:
+                    alloc.free(got)
+            invariants()
+
+    run()
