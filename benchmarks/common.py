@@ -23,13 +23,15 @@ V5E_TDP_W = 170.0          # per-chip board power estimate (public v5e figure)
 
 def cell(arch: str, shape: str, *, mesh: str = "none", policy: str = "",
          tag: str = "baseline", naive: bool = False, reduce: str = "ring",
-         nofuse: bool = False, timeout: int = 1200) -> dict:
+         nofuse: bool = False, kv_dtype: str = "bfloat16",
+         weight_dtype: str = "bfloat16", timeout: int = 1200) -> dict:
     """Run (or fetch cached) one dry-run cell; returns its record."""
     os.makedirs(ART, exist_ok=True)
     safe = shape.replace(":", "-")
     fname = os.path.join(ART, f"{arch}__{safe}__{mesh}__{tag}.json")
     want = variant_key(policy=policy, naive=naive, reduce_method=reduce,
-                       fuse=not nofuse)
+                       fuse=not nofuse, kv_cache_dtype=kv_dtype,
+                       weight_dtype=weight_dtype)
     if os.path.exists(fname):
         rec = json.load(open(fname))
         if rec.get("variant") == want:
@@ -37,7 +39,8 @@ def cell(arch: str, shape: str, *, mesh: str = "none", policy: str = "",
         os.remove(fname)   # tag collision or legacy cache: recompute
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
            "--shape", shape, "--mesh", mesh, "--out", ART, "--tag", tag,
-           "--reduce", reduce]
+           "--reduce", reduce, "--kv-dtype", kv_dtype,
+           "--weight-dtype", weight_dtype]
     if policy:
         cmd += ["--policy", policy]
     if naive:

@@ -1,0 +1,341 @@
+"""Low-precision serving gates: int8 weights + int8 paged KV ->
+artifacts/bench/BENCH_quant.json  (the CI gate for the PR's two knobs).
+
+Two evidence layers, matching the repo's split between roofline-projected
+and host-measured numbers (EXPERIMENTS.md §Methodology):
+
+  roofline (dry-run cells, full GPT-J arch)
+    weight-only int8 must shrink the AR step's HBM-traffic proxy
+    (`mem_bytes_per_device`) to <= 0.62x bf16 and make the roofline-
+    projected decode step STRICTLY faster — decode is weight-read-bound,
+    so streaming int8 tiles instead of bf16 halves the dominant term.
+
+  engine (reduced GPT-J on this host)
+    int8 KV at equal cache_blocks must (about) halve the pool bytes
+    (<= 0.53x: the per-block-per-head fp32 scales cost a few bytes per
+    block) — equivalently, resident-context capacity at a fixed pool-byte
+    budget rises >= 1.9x.  Weight-only int8 greedy choices are compared
+    TEACHER-FORCED: every param set conditions on the identical
+    bf16-generated prefix (the verification stack pointed at the engine's
+    rollout), so one flip counts once instead of cascading.  The gate
+    requires the full-model max logit perturbation under 1% of the logit
+    span AND one of: zero flips; flip rate < 1% (the real-checkpoint
+    criterion, where semantic argmax margins dwarf quantization noise);
+    or flips within 2x + 2 of a noise-floor control — the same model
+    perturbed by independent unbiased noise of exactly quantization
+    magnitude (+- scale/2 per weight).  Random-init reduced weights have
+    razor-thin exchangeable-logit margins, so SOME flips are forced by
+    ANY perturbation that size; matching the noise floor shows rounding
+    adds no systematic decision bias beyond it.  The free-running engine
+    divergence is recorded alongside for context.  Host-measured decode
+    tok/s is recorded for audit but NOT gated: on this CPU host the
+    reference GEMM path dequantizes before the dot, so the
+    memory-bandwidth win the kernels exist for is only visible in the
+    roofline numbers.
+
+Exits nonzero when any check fails.  `--smoke` shrinks the dry-run shape
+for CI (same gates, smaller compile).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import ART, cell, step_time, throughput
+
+WEIGHT_MEM_RATIO_MAX = 0.62
+KV_POOL_RATIO_MAX = 0.53
+KV_CAPACITY_MIN = 1.9
+GREEDY_DIVERGENCE_MAX = 0.01
+LOGIT_ERR_SPAN_MAX = 0.01
+
+
+def roofline_section(smoke: bool, cells: dict, checks: dict) -> None:
+    shape = "decode:64:4" if smoke else "decode:256:8"
+    bf = cell("gpt-j", shape, tag="quant_wbf16")
+    w8 = cell("gpt-j", shape, tag="quant_wint8", weight_dtype="int8")
+    kv8 = cell("gpt-j", shape, tag="quant_kvint8", kv_dtype="int8")
+    cells["roofline"] = {"shape": shape, "wbf16": bf, "wint8": w8,
+                         "kvint8": kv8}
+    if not (bf.get("ok") and w8.get("ok")):
+        return                       # incomplete: required checks stay absent
+    mb = bf["roofline"]["mem_bytes_per_device"]
+    m8 = w8["roofline"]["mem_bytes_per_device"]
+    ratio = m8 / mb
+    checks["weight_mem_ratio_le_0.62"] = bool(ratio <= WEIGHT_MEM_RATIO_MAX)
+    checks["weight_decode_toks_strictly_better"] = bool(
+        step_time(w8) < step_time(bf))
+    cells["roofline"]["weight_mem_ratio"] = ratio
+    cells["roofline"]["decode_tok_s_roofline"] = {
+        "bf16": throughput(bf), "int8": throughput(w8)}
+    print(f"  roofline {shape}: AR mem/device {mb / 2**30:.2f} -> "
+          f"{m8 / 2**30:.2f} GiB ({ratio:.3f}x), decode "
+          f"{throughput(bf):.0f} -> {throughput(w8):.0f} tok/s projected")
+
+
+def _noise_params(params, seed: int):
+    """The noise-floor control: the same bf16 tree with every would-be-
+    quantized weight perturbed by INDEPENDENT uniform noise of exactly the
+    quantization error magnitude (+- scale/2 per element, the worst-case
+    round-to-nearest error).  Greedy flips under this perturbation are the
+    flips any unbiased noise of quantization size causes on this model's
+    argmax margins — int8 should not flip meaningfully more."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.quantize import quantize_params
+
+    qp = quantize_params(params)
+    key = [jax.random.key(seed)]
+
+    def walk(p, q):
+        if isinstance(q, dict) and set(q) == {"q", "scale"}:
+            key[0], k = jax.random.split(key[0])
+            amp = 0.5 * q["scale"][..., None, :]     # scale drops axis -2
+            noise = jax.random.uniform(k, p.shape, jnp.float32, -1.0, 1.0)
+            return (p.astype(jnp.float32) + noise * amp).astype(p.dtype)
+        if isinstance(p, dict):
+            return {name: walk(p[name], q[name]) for name in p}
+        if isinstance(p, tuple):
+            return tuple(walk(a, b) for a, b in zip(p, q))
+        return p
+
+    return walk(params, qp)
+
+
+def _teacher_forced_logits(cfg, params, reqs, base, max_new):
+    """Full-vocab logits at every position of the bf16-generated sequences,
+    conditioned on identical prefixes (the verification stack pointed at
+    the engine's rollout), for three parameter sets: bf16 reference, int8
+    weights, and the bf16 noise-floor control.
+    -> dict of [B, C, V] fp32 arrays keyed "bf16" / "int8" / "noise"."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import ShapeConfig
+    from repro.core.embedding import logits_local
+    from repro.core.precision import FP32
+    from repro.launch import steps as steps_mod
+    from repro.models.quantize import quantize_params
+
+    B, max_seq, bs = len(reqs), 64, 8
+    nb = B * (max_seq // bs)
+    dshape = ShapeConfig("quant_tf", "decode", max_seq, B)
+    plens = np.array([len(r.prompt) for r in reqs], np.int32)
+    cont = np.zeros((B, max_new), np.int32)
+    for b, r in enumerate(reqs):
+        cont[b] = base[r.uid][:max_new]
+
+    def logits(weight_dtype, p):
+        # FP32 compute policy throughout (the engine runs match): chunk /
+        # verify numerics are then bit-identical to prefill / decode, so
+        # the only perturbation between ref and int8 is quantization
+        dstep = steps_mod.make_decode_step(
+            cfg, dshape, None, max_seq=max_seq, with_sampling=True,
+            paged=(nb, bs), weight_dtype=weight_dtype, policy=FP32)
+        layout = dstep.aux["paged"]
+        chunk = steps_mod.make_chunk_prefill_step(
+            cfg, dshape, None, layout=layout, chunk_tokens=16,
+            max_seq=max_seq, weight_dtype=weight_dtype, policy=FP32)
+        caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                              dstep.aux["cache_struct"])
+        if weight_dtype == "int8":
+            p = quantize_params(p)
+        per_row = max_seq // bs
+        tables = np.full((B, layout.max_blocks), -1, np.int32)
+        for b in range(B):
+            tables[b, :per_row] = np.arange(b * per_row, (b + 1) * per_row)
+        tables = jnp.asarray(tables)
+        for start in range(0, int(plens.max()), 16):
+            take = np.clip(plens - start, 0, 16).astype(np.int32)
+            toks = np.zeros((B, 16), np.int32)
+            for b, r in enumerate(reqs):
+                got = r.prompt[start:start + take[b]]
+                toks[b, :len(got)] = got
+            _, caches, _ = chunk.fn(p, jnp.asarray(toks),
+                                    jnp.full((B,), start, jnp.int32),
+                                    jnp.asarray(take), caches, tables)
+        # the verification stack, unrolled one level (single device, no
+        # shard_map) so the per-position logits are observable — the
+        # verify step itself folds them straight into its sampling head
+        from repro.models import lm as lm_mod
+        plan, policy = dstep.plan, dstep.policy
+        x, _, head_norm = lm_mod._run_chunk_stack(
+            p, jnp.asarray(cont), jnp.asarray(plens),
+            jnp.full((B,), max_new, jnp.int32), caches, tables,
+            plan=plan, cfg=cfg, policy=policy,
+            paged_segments=layout.segments)
+        E = x.shape[-1]
+        z, _ = logits_local(x.reshape(B * max_new, E),
+                            p["embedding"]["unemb"], plan=plan, cfg=cfg,
+                            policy=policy, norm=head_norm)
+        return np.asarray(z, np.float32).reshape(B, max_new, -1)
+
+    z_ref = logits("bfloat16", params)
+    # self-consistency: teacher-forcing the bf16 model over its own greedy
+    # rollout must reproduce that rollout
+    ref_choice = z_ref.argmax(-1)
+    for b in range(B):
+        want = list(base[reqs[b].uid][1:max_new])
+        assert list(ref_choice[b][:max_new - 1]) == want, \
+            f"teacher-forced stack disagrees with the engine (row {b})"
+    return {"bf16": z_ref,
+            "int8": logits("int8", params),
+            "noise": logits("bfloat16", _noise_params(params, seed=17))}
+
+
+def engine_section(checks: dict) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.precision import FP32
+    from repro.models import lm
+    from repro.serving import InferenceEngine, Request
+
+    cfg = get_config("gpt-j").reduced()
+    params = lm.init_lm(jax.random.key(0), cfg, jnp.bfloat16)
+    rng = np.random.default_rng(3)
+    max_new = 16
+
+    def trace():
+        return [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab, 12 + 3 * i,
+                                            dtype=np.int32),
+                        max_new_tokens=max_new) for i in range(8)]
+
+    reqs = trace()
+
+    def run(**kw):
+        eng = InferenceEngine(cfg, params, batch_size=4, max_seq=64,
+                              policy=FP32, **kw)
+        for r in reqs:
+            eng.submit(Request(uid=r.uid, prompt=r.prompt.copy(),
+                               max_new_tokens=r.max_new_tokens))
+        done = {t.uid: list(t.output) for t in eng.run()}
+        st = eng.stats()
+        return done, st
+
+    base, bst = run()
+    quant, qst = run(weight_dtype="int8", kv_dtype="int8")
+
+    pool_ratio = qst.kv_pool_bytes / bst.kv_pool_bytes
+    capacity = bst.kv_pool_bytes / qst.kv_pool_bytes
+    checks["kv_pool_ratio_le_0.53"] = bool(pool_ratio <= KV_POOL_RATIO_MAX)
+    checks["kv_capacity_ge_1.9"] = bool(capacity >= KV_CAPACITY_MIN)
+
+    # free-running divergence (recorded, not gated): once one argmax flips,
+    # the two engines decode different prefixes and every later position
+    # counts as "diverged" — a cascade artifact, not 1 flip per position
+    total = diverged = 0
+    for uid in base:
+        for a, b in zip(base[uid], quant[uid]):
+            total += 1
+            diverged += int(a != b)
+    div_frac = diverged / max(total, 1)
+
+    # the gated metric: teacher-forced greedy agreement.  Land each
+    # request's bf16-generated sequence in the paged cache, then take the
+    # full-vocab logits at EVERY position through the verification stack —
+    # all param sets condition on the identical prefix at each step, so a
+    # flip counts once, where the quantized logits actually crossed.
+    z = _teacher_forced_logits(cfg, params, reqs, base, max_new)
+    c_ref = z["bf16"].argmax(-1)
+    flips = int((c_ref != z["int8"].argmax(-1)).sum())
+    noise_flips = int((c_ref != z["noise"].argmax(-1)).sum())
+    tf_total = c_ref.size
+    flip_frac = flips / max(tf_total, 1)
+    logit_span = float(z["bf16"].max() - z["bf16"].min())
+    logit_err = float(np.abs(z["int8"] - z["bf16"]).max())
+    noise_err = float(np.abs(z["noise"] - z["bf16"]).max())
+    top2 = np.sort(z["bf16"], axis=-1)[..., -2:]
+    margin_med = float(np.median(top2[..., 1] - top2[..., 0]))
+
+    # two ways to pass, both with the full-model logit perturbation bounded
+    # under 1% of the observed logit span:
+    #   (a) flip rate < 1% of teacher-forced positions — the real-
+    #       checkpoint criterion, where semantic argmax margins dwarf
+    #       quantization noise;
+    #   (b) flips within 2x + 2 of the noise-floor control — random-init
+    #       reduced weights have razor-thin exchangeable-logit margins, so
+    #       SOME flips are forced by ANY perturbation of quantization
+    #       magnitude; int8 passes iff it flips no more than equally-sized
+    #       unbiased noise, i.e. rounding adds no systematic decision bias.
+    checks["greedy_match_or_bounded_divergence"] = bool(
+        logit_err < LOGIT_ERR_SPAN_MAX * logit_span
+        and (flips == 0 or flip_frac < GREEDY_DIVERGENCE_MAX
+             or flips <= 2 * noise_flips + 2))
+
+    print(f"  engine: pool {bst.kv_pool_bytes} -> {qst.kv_pool_bytes} B "
+          f"({pool_ratio:.3f}x, capacity {capacity:.2f}x)")
+    print(f"  teacher-forced: int8 flips {flips}/{tf_total} vs noise-floor "
+          f"{noise_flips}/{tf_total} (free-running divergence "
+          f"{diverged}/{total}); logit err {logit_err:.4f} (noise "
+          f"{noise_err:.4f}) of span {logit_span:.2f}, median argmax "
+          f"margin {margin_med:.4f}")
+    print(f"  measured (CPU host, audit only): decode "
+          f"{bst.ar_tok_s:.1f} tok/s bf16 vs {qst.ar_tok_s:.1f} tok/s int8")
+    return {
+        "arch": cfg.name,
+        "weight_bytes_per_device": {"bf16": bst.weight_bytes_per_device,
+                                    "int8": qst.weight_bytes_per_device},
+        "kv_pool_bytes": {"bf16": bst.kv_pool_bytes,
+                          "int8": qst.kv_pool_bytes},
+        "kv_pool_ratio": pool_ratio,
+        "kv_capacity_x": capacity,
+        "teacher_forced_positions": tf_total,
+        "teacher_forced_flips": flips,
+        "teacher_forced_flip_frac": flip_frac,
+        "noise_floor_flips": noise_flips,
+        "noise_floor_logit_err_max": noise_err,
+        "free_running_tokens_total": total,
+        "free_running_tokens_diverged": diverged,
+        "free_running_divergence_frac": div_frac,
+        "logit_err_max": logit_err,
+        "logit_span": logit_span,
+        "median_argmax_margin": margin_med,
+        "measured_ar_tok_s": {"bf16": bst.ar_tok_s, "int8": qst.ar_tok_s},
+    }
+
+
+REQUIRED = ("weight_mem_ratio_le_0.62", "weight_decode_toks_strictly_better",
+            "kv_pool_ratio_le_0.53", "kv_capacity_ge_1.9",
+            "greedy_match_or_bounded_divergence")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small dry-run shape (CI bench smoke)")
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_quant.json"))
+    args = ap.parse_args(argv)
+
+    cells: dict = {}
+    checks: dict = {}
+    print("== low-precision serving gates (weights + paged KV int8) ==")
+    roofline_section(args.smoke, cells, checks)
+    cells["engine"] = engine_section(checks)
+    # a cell that failed to build must fail the bench, not silently drop
+    # its checks
+    complete = all(k in checks for k in REQUIRED)
+    out = {"cells": cells, "checks": checks,
+           "ok": complete and all(checks.values())}
+    os.makedirs(ART, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"  checks: {checks}")
+    print(f"  -> {args.out}")
+    if not out["ok"]:
+        print("QUANT CHECKS FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -80,7 +80,9 @@ def _mk_engine(cfg, params, args, scheduler=None):
                            max_seq=args.max_seq,
                            block_size=args.block_size,
                            kv_pool_blocks=args.kv_pool_blocks or None,
-                           scheduler=scheduler)
+                           scheduler=scheduler,
+                           weight_dtype=args.weight_dtype,
+                           kv_dtype=args.kv_dtype)
 
 
 def mixed_workload(cfg, params, args) -> dict:
@@ -413,6 +415,16 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
                     help="KV pool capacity in blocks (0 => engine default "
                          "of batch * ceil(max_seq / block_size))")
+    ap.add_argument("--weight-dtype", choices=("bfloat16", "int8"),
+                    default="bfloat16",
+                    help="base trace + mixed scenario weight storage "
+                         "(scenario engines gating other subsystems stay "
+                         "bf16); int8 quantizes per output channel")
+    ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"),
+                    default="bfloat16",
+                    help="base trace + mixed scenario paged-KV pool "
+                         "storage; quant-specific gates live in "
+                         "benchmarks/quant_bench.py")
     ap.add_argument("--skip-scenarios", action="store_true",
                     help="base trace only (no mixed / chunked scenarios)")
     ap.add_argument("--seed", type=int, default=0)
@@ -494,6 +506,9 @@ def main(argv=None) -> int:
               f"{stats.blocks_per_token:.2f} block-positions/live-token, "
               f"decode step p50 {stats.decode_step_p50_ms:.2f}ms "
               f"p95 {stats.decode_step_p95_ms:.2f}ms")
+    print(f"  bytes: weights {stats.weight_bytes_per_device / 2**20:.1f}MiB"
+          f"/device ({stats.weight_dtype}), KV pool "
+          f"{stats.kv_pool_bytes / 2**20:.1f}MiB ({stats.kv_dtype})")
     if not args.skip_scenarios:
         print(f"  mixed: {mixed['encode_completed']} encode @ "
               f"{mixed['encode_tok_s']:.0f} tok/s + generate @ "

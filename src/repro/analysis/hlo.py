@@ -266,6 +266,43 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
             costs[p] = min(full, cheap) if ok else full
         param_cost[cname] = costs
 
+    def movement_root(cname, on):
+        """Follow `on`'s movement chain (convert / slice / reshape,
+        movement-only fusions) back to the stored symbol it reads from."""
+        prod = comp_producer.get(cname, {})
+        seen = set()
+        cur = on
+        while cur not in seen:
+            seen.add(cur)
+            po = prod.get(cur)
+            if po is None:
+                break
+            op, callee, src = po
+            if src is None or op == "parameter":
+                break
+            if op in _MOVEMENT_OPS or (op == "fusion"
+                                       and pure_movement.get(callee, False)):
+                cur = src
+                continue
+            break
+        return cur
+
+    def roots_at_param(cname, on):
+        po = comp_producer.get(cname, {}).get(movement_root(cname, on))
+        return po is None or po[0] == "parameter"
+
+    def stored_width(cname, on):
+        """Bytes/elem of the tensor dot operand `on` actually streams from:
+        the dtype of its movement-chain root.  The CPU backend widens
+        narrow dot operands (bf16, and int8 weights) to f32 before the dot
+        — the TPU streams them at storage width, so an s8 weight tile must
+        charge 1 byte/elem no matter what the lowered operand says.
+        Returns None when the chain dead-ends."""
+        sh = comp_syms.get(cname, {}).get(movement_root(cname, on), [])
+        if not sh:
+            return None
+        return max(_DTYPE_BYTES.get(dt, 4) for dt, _ in sh)
+
     def operand_cost(cname, rest, syms):
         """Effective operand bytes at a fusion/dot call site."""
         callee = None
@@ -346,9 +383,23 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                 lowered_dt = lhs_shapes[0][0] if lhs_shapes else "f32"
                 scale = min(1.0, _DTYPE_BYTES.get(lhs_dt, 4)
                             / max(_DTYPE_BYTES.get(lowered_dt, 4), 1))
+
+                def op_scale(on):
+                    # per-operand width: an operand whose movement chain
+                    # roots in a NARROWER stored tensor than the policy dtype
+                    # (int8 weight tiles) streams at that storage width
+                    ow = max((_DTYPE_BYTES.get(dt, 4)
+                              for dt, _ in syms.get(on, [])), default=4)
+                    rw = stored_width(cname, on)
+                    if rw is None:
+                        return scale
+                    return min(scale, rw / max(ow, 1))
+
                 if not vmemk:
                     cur.mem_bytes += _nbytes(shapes) * scale
-                    cur.mem_bytes += operand_cost(cname, rest, syms) * scale
+                    for on in _operands(rest):
+                        cur.mem_bytes += (_nbytes(syms.get(on, []))
+                                          * op_scale(on))
                 else:
                     # kernel-interior dot: operands stream from HBM only if
                     # they come from outside the kernel (params / slices of
@@ -366,7 +417,8 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                             or (po[0] == "fusion"
                                 and pure_movement.get(po[1], False)))
                         if streams:
-                            charged += _nbytes(syms.get(on, [])) * scale
+                            charged += (_nbytes(syms.get(on, []))
+                                        * op_scale(on))
                     cur.mem_bytes += charged
                     cur.elided_bytes += max(naive - charged, 0.0)
             elif opcode in COLLECTIVES:
@@ -472,6 +524,14 @@ def parse_hlo(text: str, default_dot_dtype: Optional[str] = None,
                     # plumbing the TPU backend elides (input_output_alias
                     # is declared for state/caches) — CPU artifact
                     continue
+                if opcode == "convert":
+                    # bare convert whose movement chain roots at a parameter:
+                    # the inlined form of the CPU float-normalization upcast
+                    # (see the wrapped_convert skip above).  The TPU reads
+                    # params at storage dtype — consumers charge the stream.
+                    ops_ = _operands(rest)
+                    if ops_ and roots_at_param(cname, ops_[0]):
+                        continue
                 if not vmemk:
                     cur.mem_bytes += _nbytes(shapes)
                     cur.mem_bytes += operand_cost(cname, rest, syms)

@@ -265,7 +265,7 @@ def _attn_head_tp(p, x, *, plan, cfg, policy, causal, window,
                               v_loc.astype(ad), causal=causal, window=window)
     o = out.reshape(B, S, h_loc * hd)
 
-    wo = col.all_gather(p["wo"], plan.fsdp_axes, axis=1)       # [h_loc*hd, E]
+    wo = gather_w(p["wo"], plan, fsdp_dim=1)                   # [h_loc*hd, E]
     # head_tp only runs with tp > 1 (attn_full routes tp == 1 to seq_sp),
     # so a tp-partial reduction is always pending: the residual add lands
     # after the reduce-scatter, never in the GEMM epilogue
@@ -441,6 +441,58 @@ def attn_decode(p, x, pos, cache, *, plan: Plan, cfg, policy: Policy,
                             residual=residual), cache
 
 
+SCALE_EPS = 1e-30      # guards zero-amax blocks and unwritten scale slots
+
+
+def _quantized_kv(cache) -> bool:
+    """True when the paged pools store int8 K/V with per-block-per-head
+    scales ({"ks","vs"} [NB_loc, KV] fp32 leaves alongside {"k","v"})."""
+    return "ks" in cache
+
+
+def _append_quantized(pool, scales, x_new, loc, off):
+    """Quantize-on-write for a single-token paged append.  x_new: [B, KV, hd]
+    fp-valued rows; loc [B] local block ids (out-of-range => dropped);
+    off [B] in-block offsets.  Blocks fill front-to-back, so a token landing
+    at offset 0 is the block's first (re)use: it (re)sets the block scale
+    from its own amax.  Later offsets reuse the stored scale and clip —
+    entries already in the block never move, which is what makes speculative
+    rollback (a fill-count rewind) and COW sharing safe."""
+    NB_loc = pool.shape[0]
+    xf = x_new.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)                       # [B, KV]
+    s_new = jnp.maximum(amax, SCALE_EPS) / 127.0
+    fresh = off == 0
+    s_old = scales[jnp.clip(loc, 0, NB_loc - 1)]               # [B, KV]
+    s = jnp.where(fresh[:, None], s_new, jnp.maximum(s_old, SCALE_EPS))
+    q = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
+    sloc = jnp.where(fresh, loc, NB_loc)     # only fresh blocks write scale
+    return (pool.at[loc, off].set(q, mode="drop"),
+            scales.at[sloc].set(s_new, mode="drop"))
+
+
+def _scatter_quantized(pool, scales, x_new, loc, off, fresh):
+    """Quantize-on-write for a multi-token chunk scatter.  x_new:
+    [B, C, KV, hd]; loc/off [B, C] (non-owned / pad tokens routed to
+    loc == NB_loc => dropped); `fresh` [B, C] marks tokens whose block's
+    offset 0 lies inside this write.  Fresh blocks take their scale from a
+    scatter-max over the chunk's own token amaxes (exactly the per-block
+    amax of what lands in them); stale blocks keep their stored scale and
+    this chunk's tokens clip against it — same invariant as
+    `_append_quantized`, vectorized."""
+    NB_loc = pool.shape[0]
+    xf = x_new.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)                       # [B, C, KV]
+    zloc = jnp.where(fresh & (off == 0), loc, NB_loc)
+    scales = scales.at[zloc].set(0.0, mode="drop")             # reset fresh
+    floc = jnp.where(fresh, loc, NB_loc)
+    scales = scales.at[floc].max(jnp.maximum(amax, SCALE_EPS) / 127.0,
+                                 mode="drop")
+    s = jnp.maximum(scales[jnp.clip(loc, 0, NB_loc - 1)], SCALE_EPS)
+    q = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
+    return pool.at[loc, off].set(q, mode="drop"), scales
+
+
 def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
                      plan: Plan, cfg, policy: Policy, norm=None,
                      residual=None):
@@ -486,12 +538,20 @@ def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
     owned = real & (gb >= 0) & (loc >= 0) & (loc < NB_loc)
     loc = jnp.where(owned, loc, NB_loc)      # out of range => mode="drop"
     off = pos % BS
-    cache = {
-        "k": cache["k"].at[loc, off].set(
-            k_new.astype(cache["k"].dtype), mode="drop"),
-        "v": cache["v"].at[loc, off].set(
-            v_new.astype(cache["v"].dtype), mode="drop"),
-    }
+    if _quantized_kv(cache):
+        fresh = (pos - off) >= pos0[:, None]   # block's offset 0 is ours
+        kp, ks = _scatter_quantized(cache["k"], cache["ks"], k_new,
+                                    loc, off, fresh)
+        vp, vs = _scatter_quantized(cache["v"], cache["vs"], v_new,
+                                    loc, off, fresh)
+        cache = {"k": kp, "v": vp, "ks": ks, "vs": vs}
+    else:
+        cache = {
+            "k": cache["k"].at[loc, off].set(
+                k_new.astype(cache["k"].dtype), mode="drop"),
+            "v": cache["v"].at[loc, off].set(
+                v_new.astype(cache["v"].dtype), mode="drop"),
+        }
 
     # local table view (entries this shard owns, local ids)
     length = pos0 + chunk_len                  # valid tokens incl. the chunk
@@ -500,7 +560,9 @@ def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
     loc_tab = jnp.where(present, loc_tab, -1)
 
     o, m, l = ops.paged_chunk_partials(q.astype(ad), cache["k"], cache["v"],
-                                       loc_tab, pos, length)
+                                       loc_tab, pos, length,
+                                       k_scale=cache.get("ks"),
+                                       v_scale=cache.get("vs"))
     merged = merge_partials(o, m, l, c_ax).reshape(B * C, H * hd)
     y = _decode_out_proj(p, merged, plan=plan, policy=policy,
                          residual=residual.reshape(B * C, E)
@@ -544,12 +606,17 @@ def attn_decode_paged(p, x, pos, cache, block_tables, *, plan: Plan, cfg,
     owned = (gb >= 0) & (loc >= 0) & (loc < NB_loc)
     loc = jnp.where(owned, loc, NB_loc)
     off = pos % BS
-    cache = {
-        "k": cache["k"].at[loc, off].set(
-            k_new.astype(cache["k"].dtype), mode="drop"),
-        "v": cache["v"].at[loc, off].set(
-            v_new.astype(cache["v"].dtype), mode="drop"),
-    }
+    if _quantized_kv(cache):
+        kp, ks = _append_quantized(cache["k"], cache["ks"], k_new, loc, off)
+        vp, vs = _append_quantized(cache["v"], cache["vs"], v_new, loc, off)
+        cache = {"k": kp, "v": vp, "ks": ks, "vs": vs}
+    else:
+        cache = {
+            "k": cache["k"].at[loc, off].set(
+                k_new.astype(cache["k"].dtype), mode="drop"),
+            "v": cache["v"].at[loc, off].set(
+                v_new.astype(cache["v"].dtype), mode="drop"),
+        }
 
     # local view of the table: entries this shard owns, local ids
     length = pos + 1                               # incl. the token just cached
@@ -558,7 +625,9 @@ def attn_decode_paged(p, x, pos, cache, block_tables, *, plan: Plan, cfg,
     loc_tab = jnp.where(present, loc_tab, -1)
 
     o, m, l = ops.paged_decode_partials(q.astype(ad), cache["k"], cache["v"],
-                                        loc_tab, length)
+                                        loc_tab, length,
+                                        k_scale=cache.get("ks"),
+                                        v_scale=cache.get("vs"))
     merged = merge_partials(o, m, l, c_ax).reshape(B, H * hd)  # T4 merge
     return _decode_out_proj(p, merged, plan=plan, policy=policy,
                             residual=residual), cache

@@ -276,7 +276,7 @@ def block_chunk(kind: str, p, x, pos0, chunk_len, cache, block_tables, *,
     fused = block_fused(plan)
     moe_like = kind in MOE_KINDS
 
-    kv_in = {"k": cache["k"], "v": cache["v"]}
+    kv_in = {k: cache[k] for k in ("k", "v", "ks", "vs") if k in cache}
     y = None
     if fused and not moe_like:
         x, kv = attn.attn_chunk_paged(p["attn"], x, pos0, chunk_len, kv_in,
@@ -298,7 +298,7 @@ def block_chunk(kind: str, p, x, pos0, chunk_len, cache, block_tables, *,
                                       policy=policy)
         x = x + y
         y = None
-    new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+    new_cache.update(kv)
 
     if moe_like:
         if fused:
@@ -345,7 +345,7 @@ def block_decode(kind: str, p, x, pos, cache, *, plan: Plan, cfg, policy,
 
     hybrid = kind in ("hybrid_attn", "hybrid_local")
     moe_like = kind in MOE_KINDS
-    kv_in = {"k": cache["k"], "v": cache["v"]}
+    kv_in = {k: cache[k] for k in ("k", "v", "ks", "vs") if k in cache}
     attn_fused = fused and not hybrid
     nspec = (ops.norm_prologue(p["ln1"], cfg.norm) if attn_fused else None)
     res = x if attn_fused and not moe_like else None
@@ -364,7 +364,7 @@ def block_decode(kind: str, p, x, pos, cache, *, plan: Plan, cfg, policy,
         y, kv = attn.attn_decode(p["attn"], q_in, pos, kv_in, plan=plan,
                                  cfg=cfg, policy=policy, window=window,
                                  norm=nspec, residual=res)
-    new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+    new_cache.update(kv)
     if res is not None:         # y IS the updated stream
         x, y = y, None
     if hybrid:

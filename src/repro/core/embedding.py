@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import collectives as col
 from repro.core.nn import act_dtype, fused_pdot, pdot
+from repro.kernels import ops
 from repro.sharding.plan import Plan
 
 NEG_INF = -1e30
@@ -129,9 +130,16 @@ def logits_local(x, unemb, *, plan: Plan, cfg, policy, norm=None):
 
     `norm` (kernels.epilogue.Prologue, optional): the model's final norm
     fused into the logits GEMM — x arrives as the raw residual and the
-    normalization happens in-register ahead of the contraction."""
-    w = col.all_gather(unemb, plan.fsdp_axes, axis=0)
-    v_loc = w.shape[1]
+    normalization happens in-register ahead of the contraction.
+
+    A weight-only-int8 head ({"q", "scale"}, models/quantize) gathers the
+    int8 tensor over fsdp (the E contraction dim); the per-vocab-column
+    scale is already tp-local and passes straight to the GEMM."""
+    q, scale = ops.split_quantized(unemb)
+    w = col.all_gather(q, plan.fsdp_axes, axis=0)
+    if scale is not None:
+        w = {"q": w, "scale": scale}
+    v_loc = q.shape[1]
     v0 = col.axis_index(plan.tp_axes) * v_loc
     with jax.named_scope("ce_f32"):
         z = fused_pdot(x, w, policy, prologue=norm, out_dtype=jnp.float32)

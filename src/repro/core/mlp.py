@@ -54,6 +54,12 @@ def init_mlp(key, cfg, dtype):
             for (n, s), k in zip(sorted(shapes.items()), ks)}
 
 
+def _wcast(w, cd):
+    """Cast a gathered weight to the compute dtype — weight-only-int8
+    dicts pass through untouched (the GEMM entry points dequantize)."""
+    return w if isinstance(w, dict) else w.astype(cd)
+
+
 def _first_gemm(xt, p, plan: Plan, cfg, policy, *, norm=None, tp_dim=None):
     """First FFN GEMM(s) with the pre-norm fused as a prologue and the
     activation as the epilogue: xt [T, E] -> h [T, F(/tp)] at act dtype."""
@@ -63,8 +69,8 @@ def _first_gemm(xt, p, plan: Plan, cfg, policy, *, norm=None, tp_dim=None):
         wg = gather_w(p["wg"], plan, tp_dim=tp_dim)
         wu = gather_w(p["wu"], plan, tp_dim=tp_dim)
         if norm is None:
-            return ops.matmul_swiglu(xt.astype(cd), wg.astype(cd),
-                                     wu.astype(cd), out_dtype=ad)
+            return ops.matmul_swiglu(xt.astype(cd), _wcast(wg, cd),
+                                     _wcast(wu, cd), out_dtype=ad)
         return ops.fused_matmul_swiglu(xt, wg, wu, prologue=norm,
                                        compute_dtype=cd, out_dtype=ad)
     w1 = gather_w(p["w1"], plan, tp_dim=tp_dim)

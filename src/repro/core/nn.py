@@ -29,13 +29,23 @@ def pdot(x, w, policy: Policy, *, out_dtype=None):
     the MXU accumulates fp32 internally either way, and emitting the narrow
     dtype keeps the *backward* dots narrow too (the cast transpose would
     otherwise promote every cotangent to f32).  Paper T6: conversions sit at
-    GEMM outputs.  Explicit out_dtype=f32 (CE logits) accumulates visibly."""
+    GEMM outputs.  Explicit out_dtype=f32 (CE logits) accumulates visibly.
+
+    `w` may be a weight-only-int8 dict {"q", "scale"} (models/quantize):
+    the dot runs on the int8 tensor cast to compute dtype (exact — |q| is
+    <= 127) and the per-output-channel dequant applies to the fp32 result,
+    matching kernels/ref.fused_matmul_ref bit-for-bit."""
+    w, w_scale = ops.split_quantized(w)
     cd = policy.compute_dtype
     od = out_dtype or act_dtype(policy)
-    return jax.lax.dot_general(
+    y = jax.lax.dot_general(
         x.astype(cd), w.astype(cd),
         (((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=od)
+    if w_scale is not None:
+        y = (y.astype(jnp.float32)
+             * w_scale.astype(jnp.float32)).astype(od)
+    return y
 
 
 def fused_pdot(x, w, policy: Policy, *, prologue=None, epilogue=None,
@@ -54,11 +64,23 @@ def fused_pdot(x, w, policy: Policy, *, prologue=None, epilogue=None,
 def gather_w(w, plan, *, fsdp_dim=0, tp_dim=None):
     """FSDP all-gather of a weight shard along `fsdp_dim`; when `tp_dim` is
     given also un-shards the tensor-parallel dim (seq_sp attention needs the
-    full weight on every device)."""
-    w = col.all_gather(w, plan.fsdp_axes, axis=fsdp_dim)
+    full weight on every device).
+
+    Weight-only-int8 dicts gather the int8 tensor as usual; the per-output-
+    channel scale rides along, gathered only when the weight's LAST dim (the
+    output channels it indexes) is among the gathered dims."""
+    q, scale = ops.split_quantized(w)
+    out_dim = q.ndim - 1
+    g = col.all_gather(q, plan.fsdp_axes, axis=fsdp_dim)
     if tp_dim is not None:
-        w = col.all_gather(w, plan.tp_axes, axis=tp_dim)
-    return w
+        g = col.all_gather(g, plan.tp_axes, axis=tp_dim)
+    if scale is None:
+        return g
+    if fsdp_dim == out_dim:
+        scale = col.all_gather(scale, plan.fsdp_axes, axis=scale.ndim - 1)
+    if tp_dim == out_dim:
+        scale = col.all_gather(scale, plan.tp_axes, axis=scale.ndim - 1)
+    return {"q": g, "scale": scale}
 
 
 def sum_sq(x):

@@ -35,14 +35,20 @@ NEG_INF = -1e30
 
 
 def _online_merge(ci, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
-                  mask, live, sm_scale: float):
+                  mask, live, sm_scale: float, k_scale=None, v_scale=None):
     """Shared split-KV cell body: fold one masked KV chunk's scores into the
     (m, l, acc) scratch with the online-softmax rescale rule, initializing
     the scratch on the first chunk.  `mask`: [G, chunk] validity of this
     chunk's positions; `live`: scalar — False when the whole chunk is
     masked, skipping its dot work entirely (a fully-masked chunk is a
     no-op: corr = 1, p = 0).  The caller writes the output on the last
-    chunk."""
+    chunk.
+
+    `k_scale`/`v_scale`: per-(block, head) fp32 dequant scalars for int8
+    K/V chunks.  The scale is constant over this chunk's tokens and dims,
+    so it commutes past both dots: scores pick up `k_scale` after Q.K^T
+    and the P.V contribution picks up `v_scale` — exact dequantization
+    without ever materializing fp K/V tiles."""
     @pl.when(ci == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
@@ -54,9 +60,15 @@ def _online_merge(ci, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
         q = q_ref[0, 0]                                 # [G, D]
         k = k_ref[:, :, 0, :][0]                        # [chunk, D]
         v = v_ref[:, :, 0, :][0]
+        if k_scale is not None:
+            # int8 chunk: run the dots in fp32 (int8 values are exact there)
+            q = q.astype(jnp.float32)
+            k = k.astype(jnp.float32)
 
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * sm_scale
+        if k_scale is not None:
+            s = s * k_scale
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]
@@ -65,9 +77,15 @@ def _online_merge(ci, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
         m_ref[...] = m_new
-        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        if v_scale is not None:
+            pv = jax.lax.dot_general(
+                p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32) * v_scale
+        else:
+            pv = jax.lax.dot_general(
+                p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
@@ -158,19 +176,39 @@ def _paged_mask(tab_ref, len_ref, b, e, g: int, block_size: int):
     return (pos < len_ref[b]) & (tab_ref[b, e] >= 0), live
 
 
-def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, block_size: int,
-                         sm_scale: float):
+def _paged_scales(tab_ref, ks_ref, vs_ref, b, h, e):
+    """Dequant scalars for this grid step's (block, head) — one pool block
+    per step, so a single SMEM lookup each.  Absent entries (t < 0) read
+    block 0's scale; their fold is dead (`live` is False)."""
+    if ks_ref is None:
+        return None, None
+    t = jnp.maximum(tab_ref[b, e], 0)
+    return ks_ref[t, h], vs_ref[t, h]
+
+
+def _paged_decode_kernel(*refs, block_size: int, sm_scale: float,
+                         quantized: bool):
     """q_ref: [1, 1, G, D]; k/v_ref: [1, block_size, 1, D] — the pool block
     the slot's table names for entry `e` (the index map dereferenced it);
     tab_ref: scalar-prefetch [B, MB] block tables (< 0 = absent);
-    len_ref: scalar-prefetch [B] valid lengths."""
+    len_ref: scalar-prefetch [B] valid lengths.  Quantized pools add
+    ks/vs_ref: scalar-prefetch [NB, KV] fp32 per-block-per-head scales."""
+    if quantized:
+        (tab_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        (tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
+    h = pl.program_id(1)
     e = pl.program_id(2)
     mask, live = _paged_mask(tab_ref, len_ref, b, e, q_ref.shape[2],
                              block_size)
+    ks, vs = _paged_scales(tab_ref, ks_ref, vs_ref, b, h, e)
     _online_merge(e, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
-                  mask=mask, live=live, sm_scale=sm_scale)
+                  mask=mask, live=live, sm_scale=sm_scale,
+                  k_scale=ks, v_scale=vs)
 
     @pl.when(e == pl.num_programs(2) - 1)
     def _finish():
@@ -179,18 +217,27 @@ def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        ).astype(o_ref.dtype)
 
 
-def _paged_partials_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                           mo_ref, lo_ref, m_ref, l_ref, acc_ref, *,
-                           block_size: int, sm_scale: float):
+def _paged_partials_kernel(*refs, block_size: int, sm_scale: float,
+                           quantized: bool):
     """As _paged_decode_kernel but emits the raw (o, m, l) online-softmax
     partials instead of normalizing — the cross-shard T4 merge
     (core/attention.merge_partials) combines per-device pool shards."""
+    if quantized:
+        (tab_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
+         mo_ref, lo_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+         mo_ref, lo_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
+    h = pl.program_id(1)
     e = pl.program_id(2)
     mask, live = _paged_mask(tab_ref, len_ref, b, e, q_ref.shape[2],
                              block_size)
+    ks, vs = _paged_scales(tab_ref, ks_ref, vs_ref, b, h, e)
     _online_merge(e, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
-                  mask=mask, live=live, sm_scale=sm_scale)
+                  mask=mask, live=live, sm_scale=sm_scale,
+                  k_scale=ks, v_scale=vs)
 
     @pl.when(e == pl.num_programs(2) - 1)
     def _finish():
@@ -200,27 +247,29 @@ def _paged_partials_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def _paged_call(kernel, q, k_pool, v_pool, block_tables, lengths, out_shape,
-                out_specs, interpret):
+                out_specs, interpret, k_scale=None, v_scale=None):
     """Shared pallas_call plumbing for the paged kernels: grid (slot,
     kv_head, table entry) with scalar-prefetched tables dereferenced by the
-    k/v index maps — each step DMAs exactly one owned pool block."""
+    k/v index maps — each step DMAs exactly one owned pool block.  Int8
+    pools additionally prefetch the [NB, KV] dequant scale tables."""
     B, KV, G, D = q.shape
     _, BS, _, _ = k_pool.shape
     MB = block_tables.shape[1]
     sm_scale = float(1.0 / (D ** 0.5))
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
     block_tables = block_tables.astype(jnp.int32)
+    quantized = k_scale is not None
 
-    def kv_index(b, h, e, tab_ref, len_ref):
+    def kv_index(b, h, e, tab_ref, *_pref):
         t = tab_ref[b, e]
         return (jnp.where(t < 0, 0, t), 0, h, 0)   # absent -> any block, masked
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(B, KV, MB),
         in_specs=[
             pl.BlockSpec((1, 1, G, D),
-                         lambda b, h, e, tab_ref, len_ref: (b, h, 0, 0)),
+                         lambda b, h, e, *_pref: (b, h, 0, 0)),
             pl.BlockSpec((1, BS, 1, D), kv_index),
             pl.BlockSpec((1, BS, 1, D), kv_index),
         ],
@@ -231,22 +280,30 @@ def _paged_call(kernel, q, k_pool, v_pool, block_tables, lengths, out_shape,
             pltpu.VMEM((G, D), jnp.float32),
         ],
     )
+    prefetch = (block_tables, lengths)
+    if quantized:
+        prefetch += (k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32))
     return pl.pallas_call(
-        functools.partial(kernel, block_size=BS, sm_scale=sm_scale),
+        functools.partial(kernel, block_size=BS, sm_scale=sm_scale,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(block_tables, lengths, q, k_pool, v_pool)
+    )(*prefetch, q, k_pool, v_pool)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
-                           interpret=False):
+                           k_scale=None, v_scale=None, interpret=False):
     """Paged split-KV decode.  q: [B, H, D]; k/v_pool: [NB, BS, KV, D] —
     global pool of fixed-size KV blocks; block_tables: [B, MB] int32 pool
     indices in sequence order (< 0 = absent entry); lengths: [B] valid
     tokens per slot.  Returns [B, H, D], softmax fully normalized
-    (single-pool case; sharded pools use `paged_decode_partials`)."""
+    (single-pool case; sharded pools use `paged_decode_partials`).
+
+    `k_scale`/`v_scale` ([NB, KV] fp32): per-block-per-head dequant scales
+    for int8 pools (quantize-on-write lives in the cache scatters)."""
     B, H, D = q.shape
     KV = k_pool.shape[2]
     G = H // KV
@@ -255,14 +312,14 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
         block_tables, lengths,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
         out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, e, tab_ref, len_ref: (b, h, 0, 0)),
-        interpret=interpret)
+                               lambda b, h, e, *_pref: (b, h, 0, 0)),
+        interpret=interpret, k_scale=k_scale, v_scale=v_scale)
     return out.reshape(B, H, D)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths, *,
-                          interpret=False):
+                          k_scale=None, v_scale=None, interpret=False):
     """Paged split-KV decode emitting unnormalized online-softmax partials:
     -> (o [B, H, D] fp32 unnormalized, m [B, H], l [B, H]).  Each cache
     shard runs this over its *local* pool (non-owned table entries < 0) and
@@ -271,7 +328,7 @@ def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths, *,
     KV = k_pool.shape[2]
     G = H // KV
     hw = pl.BlockSpec((1, 1, G),
-                      lambda b, h, e, tab_ref, len_ref: (b, h, 0))
+                      lambda b, h, e, *_pref: (b, h, 0))
     o, m, l = _paged_call(
         _paged_partials_kernel, q.reshape(B, KV, G, D), k_pool, v_pool,
         block_tables, lengths,
@@ -279,8 +336,7 @@ def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths, *,
                    jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
                    jax.ShapeDtypeStruct((B, KV, G), jnp.float32)],
         out_specs=[pl.BlockSpec((1, 1, G, D),
-                                lambda b, h, e, tab_ref, len_ref:
-                                (b, h, 0, 0)),
+                                lambda b, h, e, *_pref: (b, h, 0, 0)),
                    hw, hw],
-        interpret=interpret)
+        interpret=interpret, k_scale=k_scale, v_scale=v_scale)
     return o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H)

@@ -73,15 +73,16 @@ def _finalize_norm(acc, *, norm, k_true, eps, s1, s2, gacc):
     return acc
 
 
-def _fused_mm_kernel(*refs, norm, activation, has_bias, has_res, eps,
-                     k_true):
-    """refs: a, b, [gamma], [nbeta], [bias], [residual], o,
+def _fused_mm_kernel(*refs, norm, activation, has_bias, has_res, has_scale,
+                     eps, k_true):
+    """refs: a, b, [gamma], [nbeta], [scale], [bias], [residual], o,
              acc, [s2], [s1], [gacc], [bacc]."""
     it = iter(refs)
     a_ref = next(it)
     b_ref = next(it)
     g_ref = next(it) if norm != "none" else None
     nb_ref = next(it) if norm == "layernorm" else None
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_res else None
     o_ref = next(it)
@@ -123,6 +124,10 @@ def _fused_mm_kernel(*refs, norm, activation, has_bias, has_res, eps,
             af * g, bf, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
     else:
+        if has_scale:
+            # int8 weight tiles: values fit bf16 exactly (|q| <= 127), so
+            # the cast is lossless and keeps the MXU dot single-dtype
+            b = b.astype(a.dtype)
         acc_ref[...] += jax.lax.dot_general(
             a, b, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -136,6 +141,12 @@ def _fused_mm_kernel(*refs, norm, activation, has_bias, has_res, eps,
             gacc=gacc_ref[...] if gacc_ref is not None else None)
         if norm == "layernorm":
             y = y + bacc_ref[...]
+        if has_scale:
+            # per-output-channel dequant: every term so far (acc, gacc,
+            # bacc) is linear in the quantized W, so one multiply here is
+            # the exact dequantization — bias/activation/residual are
+            # unquantized and come after
+            y = y * scale_ref[...].astype(jnp.float32)
         if has_bias:
             y = y + bias_ref[...].astype(jnp.float32)
         y = _apply_activation(y, activation)
@@ -148,13 +159,18 @@ def _fused_mm_kernel(*refs, norm, activation, has_bias, has_res, eps,
     "activation", "norm", "eps", "block_m", "block_n", "block_k",
     "out_dtype", "interpret"))
 def matmul(a, b, *, activation="none", norm="none", gamma=None, nbeta=None,
-           bias=None, residual=None, eps=RMS_EPS, block_m=128, block_n=128,
-           block_k=512, out_dtype=None, interpret=False):
+           b_scale=None, bias=None, residual=None, eps=RMS_EPS, block_m=128,
+           block_n=128, block_k=512, out_dtype=None, interpret=False):
     """C = act(norm(A) @ B + bias) + residual;  A: [M, K], B: [K, N].
 
     fp32 accumulation in VMEM; the optional norm prologue and
     bias/activation/residual epilogue run entirely in-register (see module
     docstring) — one read of A/B (+gamma/beta/bias/residual), one write of C.
+
+    `b_scale` ([N] fp32): per-output-channel dequant scale for int8 `b`
+    (weight-only quantization).  The kernel streams the int8 weight tiles
+    straight off HBM and applies the scale once in the fp32 accumulator
+    epilogue — exact, since every accumulated term is linear in B.
     """
     out_dtype = out_dtype or (residual.dtype if residual is not None
                               else a.dtype)
@@ -180,6 +196,9 @@ def matmul(a, b, *, activation="none", norm="none", gamma=None, nbeta=None,
     if norm == "layernorm":
         operands.append(_pad2(_row2d(nbeta), 1, block_k))
         in_specs.append(pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)))
+    if b_scale is not None:
+        operands.append(_pad2(_row2d(b_scale), 1, block_n))
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)))
     if bias is not None:
         operands.append(_pad2(_row2d(bias), 1, block_n))
         in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)))
@@ -199,7 +218,8 @@ def matmul(a, b, *, activation="none", norm="none", gamma=None, nbeta=None,
     out = pl.pallas_call(
         functools.partial(_fused_mm_kernel, norm=norm, activation=activation,
                           has_bias=bias is not None,
-                          has_res=residual is not None, eps=eps, k_true=K),
+                          has_res=residual is not None,
+                          has_scale=b_scale is not None, eps=eps, k_true=K),
         grid=(gm, gn, gk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
@@ -211,15 +231,17 @@ def matmul(a, b, *, activation="none", norm="none", gamma=None, nbeta=None,
     return out[:M, :N]
 
 
-def _fused_gated_kernel(*refs, norm, has_res, eps, k_true):
+def _fused_gated_kernel(*refs, norm, has_res, has_scale, eps, k_true):
     """SwiGLU-fused GEMM: o = silu(norm(A) @ Bg) * (norm(A) @ Bu) + residual
     in one pass — the gated analogue of the paper's GELU-fused linear.
-    refs: a, bg, bu, [gamma], [nbeta], [residual], o,
+    refs: a, bg, bu, [gamma], [nbeta], [sg], [su], [residual], o,
           accg, accu, [s2], [s1], [gaccg], [baccg], [gaccu], [baccu]."""
     it = iter(refs)
     a_ref, bg_ref, bu_ref = next(it), next(it), next(it)
     g_ref = next(it) if norm != "none" else None
     nb_ref = next(it) if norm == "layernorm" else None
+    sg_ref = next(it) if has_scale else None
+    su_ref = next(it) if has_scale else None
     res_ref = next(it) if has_res else None
     o_ref = next(it)
     accg_ref, accu_ref = next(it), next(it)
@@ -265,6 +287,10 @@ def _fused_gated_kernel(*refs, norm, has_res, eps, k_true):
                     nb, bf, (((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32)
         a = af * g
+    elif has_scale:
+        # int8 weight tiles (lossless in bf16, |q| <= 127); see matmul
+        bg = bg.astype(a.dtype)
+        bu = bu.astype(a.dtype)
     accg_ref[...] += jax.lax.dot_general(
         a, bg, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -287,6 +313,10 @@ def _fused_gated_kernel(*refs, norm, has_res, eps, k_true):
         if norm == "layernorm":
             g = g + baccg_ref[...]
             u = u + baccu_ref[...]
+        if has_scale:
+            # exact per-channel dequant (all terms linear in Bg/Bu)
+            g = g * sg_ref[...].astype(jnp.float32)
+            u = u * su_ref[...].astype(jnp.float32)
         y = jax.nn.silu(g) * u
         if has_res:
             y = y + res_ref[...].astype(jnp.float32)
@@ -297,10 +327,15 @@ def _fused_gated_kernel(*refs, norm, has_res, eps, k_true):
     "norm", "eps", "block_m", "block_n", "block_k", "out_dtype",
     "interpret"))
 def matmul_swiglu(a, b_gate, b_up, *, norm="none", gamma=None, nbeta=None,
-                  residual=None, eps=RMS_EPS, block_m=128, block_n=128,
-                  block_k=512, out_dtype=None, interpret=False):
+                  bg_scale=None, bu_scale=None, residual=None, eps=RMS_EPS,
+                  block_m=128, block_n=128, block_k=512, out_dtype=None,
+                  interpret=False):
     """o = silu(norm(A) @ Bg) * (norm(A) @ Bu) + residual — single fused
-    pass (paper T5 for gated MLPs, with the prologue/epilogue extensions)."""
+    pass (paper T5 for gated MLPs, with the prologue/epilogue extensions).
+
+    `bg_scale`/`bu_scale` ([N] fp32): per-output-channel dequant scales for
+    int8 Bg/Bu, applied in the fp32 accumulators before the silu gate."""
+    assert (bg_scale is None) == (bu_scale is None)
     out_dtype = out_dtype or (residual.dtype if residual is not None
                               else a.dtype)
     M, K = a.shape
@@ -327,6 +362,11 @@ def matmul_swiglu(a, b_gate, b_up, *, norm="none", gamma=None, nbeta=None,
     if norm == "layernorm":
         operands.append(_pad2(_row2d(nbeta), 1, block_k))
         in_specs.append(pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)))
+    if bg_scale is not None:
+        for sc in (bg_scale, bu_scale):
+            operands.append(_pad2(_row2d(sc), 1, block_n))
+            in_specs.append(pl.BlockSpec((1, block_n),
+                                         lambda i, j, k: (0, j)))
     if residual is not None:
         operands.append(_pad2(residual, block_m, block_n))
         in_specs.append(pl.BlockSpec((block_m, block_n),
@@ -342,7 +382,8 @@ def matmul_swiglu(a, b_gate, b_up, *, norm="none", gamma=None, nbeta=None,
 
     out = pl.pallas_call(
         functools.partial(_fused_gated_kernel, norm=norm,
-                          has_res=residual is not None, eps=eps, k_true=K),
+                          has_res=residual is not None,
+                          has_scale=bg_scale is not None, eps=eps, k_true=K),
         grid=(gm, gn, gk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),

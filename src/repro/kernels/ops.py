@@ -65,7 +65,8 @@ __all__ = [
     "Epilogue", "Prologue", "norm_prologue", "get_mode", "set_mode",
     "kernel_mode", "flash_attention", "decode_attention",
     "paged_decode_attention", "paged_decode_partials",
-    "paged_chunk_partials", "matmul", "matmul_swiglu", "fused_matmul",
+    "paged_chunk_partials", "split_quantized", "matmul", "matmul_swiglu",
+    "fused_matmul",
     "fused_matmul_swiglu", "expert_swiglu", "residual_norm", "rmsnorm",
     "layernorm", "norm", "ssd", "ssd_decode",
 ]
@@ -152,19 +153,24 @@ def decode_attention(q, k_cache, v_cache, length, *, window=0, block_kv=512):
                                      window=window)
 
 
-def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           k_scale=None, v_scale=None):
     """Block-paged decode.  q: [B, H, D]; k/v_pool: [NB, BS, KV, D];
     block_tables: [B, MB] int32 pool indices (< 0 = absent entry);
-    lengths: [B] valid tokens per slot.  Fully normalized output."""
+    lengths: [B] valid tokens per slot.  Fully normalized output.
+    `k_scale`/`v_scale` ([NB, KV] fp32): dequant scales for int8 pools."""
     use, interp = _use_pallas()
     if use:
         return _fd.paged_decode_attention(q, k_pool, v_pool, block_tables,
-                                          lengths, interpret=interp)
+                                          lengths, k_scale=k_scale,
+                                          v_scale=v_scale, interpret=interp)
     return _ref.paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
-                                           lengths)
+                                           lengths, k_scale=k_scale,
+                                           v_scale=v_scale)
 
 
-def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths):
+def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths, *,
+                          k_scale=None, v_scale=None):
     """Block-paged decode partials -> (o unnormalized [B, H, D] fp32,
     m [B, H], l [B, H]) for the cross-shard online-softmax merge
     (core/attention.merge_partials); same operands as
@@ -172,12 +178,15 @@ def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths):
     use, interp = _use_pallas()
     if use:
         return _fd.paged_decode_partials(q, k_pool, v_pool, block_tables,
-                                         lengths, interpret=interp)
+                                         lengths, k_scale=k_scale,
+                                         v_scale=v_scale, interpret=interp)
     return _ref.paged_decode_partials_ref(q, k_pool, v_pool, block_tables,
-                                          lengths)
+                                          lengths, k_scale=k_scale,
+                                          v_scale=v_scale)
 
 
-def paged_chunk_partials(q, k_pool, v_pool, block_tables, q_pos, lengths):
+def paged_chunk_partials(q, k_pool, v_pool, block_tables, q_pos, lengths, *,
+                         k_scale=None, v_scale=None):
     """Chunked-prefill partials -> (o unnormalized [B, C, H, D] fp32,
     m [B, C, H], l [B, C, H]); q_pos [B, C] gives each query's absolute
     position for causal masking.  Run per cache shard on its local pool,
@@ -190,33 +199,58 @@ def paged_chunk_partials(q, k_pool, v_pool, block_tables, q_pos, lengths):
     intermediates live in VMEM once a Pallas chunk kernel lands)."""
     with jax.named_scope("vmemk_chunk"):
         return _ref.paged_chunk_partials_ref(q, k_pool, v_pool, block_tables,
-                                             q_pos, lengths)
+                                             q_pos, lengths, k_scale=k_scale,
+                                             v_scale=v_scale)
 
 
 # --------------------------------------------------------------------------
 # GEMM + fused prologues/epilogues (T1/T5)
 # --------------------------------------------------------------------------
 
+def split_quantized(w):
+    """Unpack a weight-only-int8 param (models/quantize.quantize_params):
+    {"q": int8 [K, N], "scale": fp32 [N]} -> (q, scale); a plain array
+    passes through as (w, None).  Every GEMM entry point accepts either."""
+    if isinstance(w, dict):
+        return w["q"], w["scale"]
+    return w, None
+
+
 def matmul(a, b, *, activation="none", out_dtype=None,
            block_m=128, block_n=128, block_k=512):
+    b, b_scale = split_quantized(b)
     use, interp = _use_pallas()
     if use and a.ndim == 2:
-        return _mm.matmul(a, b, activation=activation, out_dtype=out_dtype,
-                          block_m=block_m, block_n=block_n, block_k=block_k,
+        return _mm.matmul(a, b, activation=activation, b_scale=b_scale,
+                          out_dtype=out_dtype, block_m=block_m,
+                          block_n=block_n, block_k=block_k,
                           interpret=interp)
+    if b_scale is not None:
+        return _ref.fused_matmul_ref(a, b, w_scale=b_scale,
+                                     activation=activation,
+                                     compute_dtype=a.dtype,
+                                     dot_dtype=out_dtype,
+                                     out_dtype=out_dtype or a.dtype)
     return _ref.matmul_ref(a, b, activation=activation, out_dtype=out_dtype)
 
 
 def matmul_swiglu(a, b_gate, b_up, *, out_dtype=None,
                   block_m=128, block_n=128, block_k=512):
     """o = silu(A @ Bg) * (A @ Bu), single fused pass."""
+    b_gate, g_scale = split_quantized(b_gate)
+    b_up, u_scale = split_quantized(b_up)
     use, interp = _use_pallas()
     if use and a.ndim == 2:
-        return _mm.matmul_swiglu(a, b_gate, b_up, out_dtype=out_dtype,
+        return _mm.matmul_swiglu(a, b_gate, b_up, bg_scale=g_scale,
+                                 bu_scale=u_scale, out_dtype=out_dtype,
                                  block_m=block_m, block_n=block_n,
                                  block_k=block_k, interpret=interp)
     out_dtype = out_dtype or a.dtype
     with jax.named_scope("vmemk_mlp"):
+        if g_scale is not None:
+            return _ref.fused_matmul_swiglu_ref(
+                a, b_gate, b_up, wg_scale=g_scale, wu_scale=u_scale,
+                compute_dtype=a.dtype, out_dtype=out_dtype)
         g = _ref.matmul_ref(a, b_gate, activation="none", out_dtype=out_dtype)
         u = _ref.matmul_ref(a, b_up, activation="none", out_dtype=out_dtype)
         return (jax.nn.silu(g.astype(jnp.float32))
@@ -243,7 +277,10 @@ def fused_matmul(x, w, *, prologue=None, epilogue=None, compute_dtype=None,
     `compute_dtype`: operand dtype of the contraction (the policy compute
     dtype); `dot_dtype`: preferred_element_type the unfused `pdot` would
     emit (the reference path matches it exactly for bit-identical fallback).
+    Quantized weight dicts ({"q": int8, "scale": fp32 [N]}) stream the int8
+    tiles and fold the dequant scale into the fp32 accumulator epilogue.
     """
+    w, w_scale = split_quantized(w)
     ep = epilogue or Epilogue()
     out_dtype = ep.out_dtype or dot_dtype or x.dtype
     use, interp = _use_pallas()
@@ -255,10 +292,12 @@ def fused_matmul(x, w, *, prologue=None, epilogue=None, compute_dtype=None,
         cd = compute_dtype or x.dtype
         if prologue is None:
             x2 = x2.astype(cd)      # normalized operands stay fp32 in-kernel
+        # int8 weights stream uncast — the kernel casts tiles in-register
+        wk = w if w_scale is not None else w.astype(cd)
         res2 = (ep.residual.reshape(-1, N) if ep.residual is not None
                 else None)
         pf = _prologue_fields(prologue)
-        out = _mm.matmul(x2, w.astype(cd), activation=ep.activation,
+        out = _mm.matmul(x2, wk, activation=ep.activation, b_scale=w_scale,
                          bias=ep.bias, residual=res2, out_dtype=out_dtype,
                          block_m=block_m, block_n=block_n, block_k=block_k,
                          interpret=interp, **pf)
@@ -266,7 +305,7 @@ def fused_matmul(x, w, *, prologue=None, epilogue=None, compute_dtype=None,
     pf = _prologue_fields(prologue)
     with jax.named_scope("vmemk_fused_mm"):
         return _ref.fused_matmul_ref(
-            x, w, bias=ep.bias, residual=ep.residual,
+            x, w, w_scale=w_scale, bias=ep.bias, residual=ep.residual,
             activation=ep.activation, compute_dtype=compute_dtype,
             dot_dtype=dot_dtype, out_dtype=out_dtype, **pf)
 
@@ -275,6 +314,8 @@ def fused_matmul_swiglu(x, wg, wu, *, prologue=None, residual=None,
                         compute_dtype=None, out_dtype=None,
                         block_m=128, block_n=128, block_k=512):
     """y = silu(norm(x) @ wg) * (norm(x) @ wu) [+ residual]."""
+    wg, g_scale = split_quantized(wg)
+    wu, u_scale = split_quantized(wu)
     use, interp = _use_pallas()
     if use:
         lead = x.shape[:-1]
@@ -284,17 +325,21 @@ def fused_matmul_swiglu(x, wg, wu, *, prologue=None, residual=None,
         cd = compute_dtype or x.dtype
         if prologue is None:
             x2 = x2.astype(cd)
+        wgk = wg if g_scale is not None else wg.astype(cd)
+        wuk = wu if u_scale is not None else wu.astype(cd)
         res2 = residual.reshape(-1, N) if residual is not None else None
         pf = _prologue_fields(prologue)
-        out = _mm.matmul_swiglu(x2, wg.astype(cd), wu.astype(cd),
-                                residual=res2, out_dtype=out_dtype,
-                                block_m=block_m, block_n=block_n,
-                                block_k=block_k, interpret=interp, **pf)
+        out = _mm.matmul_swiglu(x2, wgk, wuk, bg_scale=g_scale,
+                                bu_scale=u_scale, residual=res2,
+                                out_dtype=out_dtype, block_m=block_m,
+                                block_n=block_n, block_k=block_k,
+                                interpret=interp, **pf)
         return out.reshape(*lead, N)
     pf = _prologue_fields(prologue)
     with jax.named_scope("vmemk_fused_mlp"):
         return _ref.fused_matmul_swiglu_ref(
-            x, wg, wu, residual=residual, compute_dtype=compute_dtype,
+            x, wg, wu, wg_scale=g_scale, wu_scale=u_scale,
+            residual=residual, compute_dtype=compute_dtype,
             out_dtype=out_dtype, **pf)
 
 

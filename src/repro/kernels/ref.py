@@ -165,16 +165,27 @@ def decode_attention_ref(q, k_cache, v_cache, length, *, window=0,
     return out.reshape(B, H, D).astype(out_dtype)
 
 
-def _paged_gather(k_pool, v_pool, block_tables, lengths):
+def _paged_gather(k_pool, v_pool, block_tables, lengths,
+                  k_scale=None, v_scale=None):
     """Dereference block tables into a dense [B, MB*BS, KV, D] view plus a
     [B, MB*BS] validity mask (token t of entry e = absolute position
-    e*BS + t; entries < 0 are absent)."""
+    e*BS + t; entries < 0 are absent).
+
+    `k_scale`/`v_scale` ([NB, KV] fp32): per-block-per-head dequant scales
+    for int8 pools — the single dequant hook for the quantized paged KV
+    path (the Pallas kernel applies the same scalar per grid step)."""
     _, BS, KV, D = k_pool.shape
     B, MB = block_tables.shape
     present = block_tables >= 0                                  # [B, MB]
     tab = jnp.where(present, block_tables, 0)
-    k = k_pool.astype(jnp.float32)[tab].reshape(B, MB * BS, KV, D)
-    v = v_pool.astype(jnp.float32)[tab].reshape(B, MB * BS, KV, D)
+    k = k_pool.astype(jnp.float32)[tab]                  # [B, MB, BS, KV, D]
+    v = v_pool.astype(jnp.float32)[tab]
+    if k_scale is not None:
+        k = k * k_scale[tab][:, :, None, :, None]
+    if v_scale is not None:
+        v = v * v_scale[tab][:, :, None, :, None]
+    k = k.reshape(B, MB * BS, KV, D)
+    v = v.reshape(B, MB * BS, KV, D)
     pos = jnp.arange(MB * BS)[None, :]                           # absolute
     msk = pos < jnp.asarray(lengths, jnp.int32)[:, None]
     msk &= jnp.repeat(present, BS, axis=1)
@@ -192,7 +203,7 @@ def _paged_scores(q, k, msk):
 
 
 def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
-                               out_dtype=None):
+                               k_scale=None, v_scale=None, out_dtype=None):
     """Paged single-token decode oracle (block-paged KV cache).
 
     q: [B, H, D]; k/v_pool: [NB, BS, KV, D] — a global pool of fixed-size
@@ -202,19 +213,22 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     dense cache and defers to the dense softmax — ground truth, not fast."""
     out_dtype = out_dtype or q.dtype
     B, H, D = q.shape
-    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths)
+    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths,
+                              k_scale, v_scale)
     s = _paged_scores(q, k, msk)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v)
     return out.reshape(B, H, D).astype(out_dtype)
 
 
-def paged_decode_partials_ref(q, k_pool, v_pool, block_tables, lengths):
+def paged_decode_partials_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                              k_scale=None, v_scale=None):
     """Paged decode oracle emitting unnormalized online-softmax partials
     -> (o [B, H, D] fp32, m [B, H], l [B, H]) for the cross-shard T4 merge
     (each shard passes its local pool; absent entries are masked)."""
     B, H, D = q.shape
-    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths)
+    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths,
+                              k_scale, v_scale)
     s = _paged_scores(q, k, msk)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
@@ -224,7 +238,7 @@ def paged_decode_partials_ref(q, k_pool, v_pool, block_tables, lengths):
 
 
 def paged_chunk_partials_ref(q, k_pool, v_pool, block_tables, q_pos,
-                             lengths):
+                             lengths, *, k_scale=None, v_scale=None):
     """Chunked-prefill partials: C query tokens per row against the paged
     pool (which already holds this chunk's own KV rows), causal-masked per
     query position.
@@ -236,7 +250,8 @@ def paged_chunk_partials_ref(q, k_pool, v_pool, block_tables, q_pos,
     -> (o [B, C, H, D] fp32 unnormalized, m [B, C, H], l [B, C, H]) for the
     cross-shard T4 merge, same contract as `paged_decode_partials_ref`."""
     B, C, H, D = q.shape
-    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths)
+    k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths,
+                              k_scale, v_scale)
     KV = k.shape[2]
     scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
     qf = (q.astype(jnp.float32) * scale).reshape(B, C, KV, H // KV, D)
@@ -398,14 +413,17 @@ def norm_prologue_ref(x, *, norm, gamma, nbeta=None, eps):
 
 
 def fused_matmul_ref(x, w, *, norm="none", gamma=None, nbeta=None,
-                     bias=None, residual=None, activation="none",
-                     eps=RMS_EPS, compute_dtype=None, dot_dtype=None,
-                     out_dtype=None):
+                     w_scale=None, bias=None, residual=None,
+                     activation="none", eps=RMS_EPS, compute_dtype=None,
+                     dot_dtype=None, out_dtype=None):
     """act(norm(x) @ w + bias) cast to out_dtype, + residual.
 
     `compute_dtype`: operand cast before the dot (the policy compute
     dtype); `dot_dtype`: preferred_element_type of the dot (what `pdot`
     would emit); `out_dtype`: dtype of the result before the residual add.
+    `w_scale` ([N] fp32): per-output-channel dequant scale for int8 `w` —
+    applied to the dot output in fp32 before the (unquantized) bias, the
+    same point the Pallas kernel folds it into the accumulator.
     """
     h = norm_prologue_ref(x, norm=norm, gamma=gamma, nbeta=nbeta, eps=eps)
     cd = compute_dtype or h.dtype
@@ -414,6 +432,9 @@ def fused_matmul_ref(x, w, *, norm="none", gamma=None, nbeta=None,
         h.astype(cd), w.astype(cd),
         (((h.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=od)
+    if w_scale is not None:
+        y = (y.astype(jnp.float32)
+             * w_scale.astype(jnp.float32)).astype(y.dtype)
     if bias is not None:
         y = y + bias.astype(y.dtype)
     if activation != "none":
@@ -427,19 +448,25 @@ def fused_matmul_ref(x, w, *, norm="none", gamma=None, nbeta=None,
 
 
 def fused_matmul_swiglu_ref(x, w_gate, w_up, *, norm="none", gamma=None,
-                            nbeta=None, residual=None, eps=RMS_EPS,
+                            nbeta=None, wg_scale=None, wu_scale=None,
+                            residual=None, eps=RMS_EPS,
                             compute_dtype=None, out_dtype=None):
     """silu(norm(x) @ wg) * (norm(x) @ wu) [+ residual] — the exact op
     chain of ops.matmul_swiglu's reference path with the pre-norm folded
-    in front and the residual add behind."""
+    in front and the residual add behind.  `wg_scale`/`wu_scale`: int8
+    per-output-channel dequant, applied in fp32 before the silu gate."""
     h = norm_prologue_ref(x, norm=norm, gamma=gamma, nbeta=nbeta, eps=eps)
     cd = compute_dtype or h.dtype
     od = out_dtype or h.dtype
     a = h.astype(cd)
     g = matmul_ref(a, w_gate.astype(cd), activation="none", out_dtype=od)
     u = matmul_ref(a, w_up.astype(cd), activation="none", out_dtype=od)
-    y = (jax.nn.silu(g.astype(jnp.float32))
-         * u.astype(jnp.float32)).astype(od)
+    gf = g.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if wg_scale is not None:
+        gf = gf * wg_scale.astype(jnp.float32)
+        uf = uf * wu_scale.astype(jnp.float32)
+    y = (jax.nn.silu(gf) * uf).astype(od)
     if residual is not None:
         y = residual + y
     return y

@@ -16,7 +16,8 @@ from __future__ import annotations
 # variant mismatch and silently recompile every cell on every bench run.
 DEFAULTS = {"policy": "", "naive": False, "reduce": "ring", "nofuse": False,
             "ssm_seqp": False, "kv_cache_dtype": "bfloat16",
-            "attn_sharding": "", "comm_fp8": False, "mlp_ws": False}
+            "weight_dtype": "bfloat16", "attn_sharding": "",
+            "comm_fp8": False, "mlp_ws": False}
 
 
 def variant_key(*, policy: str = DEFAULTS["policy"],
@@ -25,10 +26,12 @@ def variant_key(*, policy: str = DEFAULTS["policy"],
                 fuse: bool = not DEFAULTS["nofuse"],
                 ssm_seqp: bool = DEFAULTS["ssm_seqp"],
                 kv_cache_dtype: str = DEFAULTS["kv_cache_dtype"],
+                weight_dtype: str = DEFAULTS["weight_dtype"],
                 attn_sharding: str = DEFAULTS["attn_sharding"],
                 comm_fp8: bool = DEFAULTS["comm_fp8"],
                 mlp_ws: bool = DEFAULTS["mlp_ws"]) -> dict:
     return {"policy": policy, "naive": naive, "reduce": reduce_method,
             "nofuse": not fuse, "ssm_seqp": ssm_seqp,
-            "kv_cache_dtype": kv_cache_dtype, "attn_sharding": attn_sharding,
+            "kv_cache_dtype": kv_cache_dtype, "weight_dtype": weight_dtype,
+            "attn_sharding": attn_sharding,
             "comm_fp8": comm_fp8, "mlp_ws": mlp_ws}

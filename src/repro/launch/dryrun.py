@@ -45,6 +45,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              tag: str = "baseline", naive: bool = False,
              ssm_seqp: bool = False,
              kv_cache_dtype: str = DEFAULTS["kv_cache_dtype"],
+             weight_dtype: str = DEFAULTS["weight_dtype"],
              attn_sharding: str = "", comm_fp8: bool = False,
              mlp_ws: bool = False, fuse: bool = True) -> dict:
     import jax
@@ -62,6 +63,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
                                   reduce_method=reduce_method, fuse=fuse,
                                   ssm_seqp=ssm_seqp,
                                   kv_cache_dtype=kv_cache_dtype,
+                                  weight_dtype=weight_dtype,
                                   attn_sharding=attn_sharding,
                                   comm_fp8=comm_fp8, mlp_ws=mlp_ws),
            "ok": False}
@@ -86,6 +88,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
                                          naive_attention=naive,
                                          ssm_seq_parallel=ssm_seqp,
                                          kv_cache_dtype=kv_cache_dtype,
+                                         weight_dtype=weight_dtype,
                                          attention_sharding=attn_sharding,
                                          comm_fp8=comm_fp8,
                                          mlp_weight_stationary=mlp_ws,
@@ -94,6 +97,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         bundle = steps.make_decode_step(cfg, shape, mesh, policy=pol,
                                         reduce_method=reduce_method,
                                         kv_cache_dtype=kv_cache_dtype,
+                                        weight_dtype=weight_dtype,
                                         fuse_epilogues=fuse)
     lowered = bundle.lower()
     t1 = time.time()
@@ -171,6 +175,8 @@ def main() -> int:
     ap.add_argument("--naive", action="store_true")
     ap.add_argument("--ssm-seqp", action="store_true")
     ap.add_argument("--kv-dtype", default=DEFAULTS["kv_cache_dtype"])
+    ap.add_argument("--weight-dtype", default=DEFAULTS["weight_dtype"],
+                    choices=["bfloat16", "int8"])
     ap.add_argument("--attn-sharding", default="",
                     choices=["", "head_tp", "seq_sp"])
     ap.add_argument("--comm-fp8", action="store_true")
@@ -190,6 +196,7 @@ def main() -> int:
                            tag=args.tag, naive=args.naive,
                            ssm_seqp=args.ssm_seqp,
                            kv_cache_dtype=args.kv_dtype,
+                           weight_dtype=args.weight_dtype,
                            attn_sharding=args.attn_sharding,
                            comm_fp8=args.comm_fp8, mlp_ws=args.mlp_ws,
                            fuse=not args.no_fuse)
@@ -205,6 +212,7 @@ def main() -> int:
     want = variant_key(policy=args.policy, naive=args.naive,
                        reduce_method=args.reduce, fuse=not args.no_fuse,
                        ssm_seqp=args.ssm_seqp, kv_cache_dtype=args.kv_dtype,
+                       weight_dtype=args.weight_dtype,
                        attn_sharding=args.attn_sharding,
                        comm_fp8=args.comm_fp8, mlp_ws=args.mlp_ws)
     results = []
@@ -222,7 +230,8 @@ def main() -> int:
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
                    "--arch", arch, "--shape", shape, "--mesh", mk,
                    "--out", args.out, "--reduce", args.reduce,
-                   "--tag", args.tag, "--kv-dtype", args.kv_dtype]
+                   "--tag", args.tag, "--kv-dtype", args.kv_dtype,
+                   "--weight-dtype", args.weight_dtype]
             if args.policy:
                 cmd += ["--policy", args.policy]
             if args.attn_sharding:

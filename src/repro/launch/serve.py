@@ -31,6 +31,14 @@ Prefix caching (serving/prefix_cache.py, on by default):
   --cache-blocks N                   cap the radix index at N pool blocks
                                      (default: bounded by pool pressure —
                                      lazy LRU eviction on alloc failure)
+
+Low-precision serving (models/quantize.py; both default to lossless bf16):
+  --weight-dtype int8                weight-only int8: per-output-channel
+                                     quantization, dequant fused into the
+                                     GEMM epilogues
+  --kv-dtype int8                    int8 paged KV pools with per-block-
+                                     per-head scales (quantize-on-write,
+                                     dequant-on-read in the paged kernels)
 """
 from __future__ import annotations
 
@@ -120,6 +128,16 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-blocks", type=int, default=0,
                     help="cap on pool blocks the prefix-cache index may "
                          "hold (0 => bounded by pool pressure alone)")
+    ap.add_argument("--weight-dtype", choices=("bfloat16", "int8"),
+                    default="bfloat16",
+                    help="GEMM weight storage: int8 quantizes per output "
+                         "channel once at startup (models/quantize) and "
+                         "dequantizes inside the fused fp32 epilogues")
+    ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"),
+                    default="bfloat16",
+                    help="paged KV pool storage: int8 quantizes on write "
+                         "with per-block-per-head scales (dense fallback "
+                         "layouts stay bf16)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable the fused prologue/epilogue GEMM "
                          "pipeline (A/B parity baseline)")
@@ -146,7 +164,8 @@ def main(argv=None) -> int:
                               cache_aware=args.prefix_cache),
         fuse_epilogues=not args.no_fuse, spec=spec,
         prefix_cache=args.prefix_cache,
-        cache_blocks=args.cache_blocks or None)
+        cache_blocks=args.cache_blocks or None,
+        weight_dtype=args.weight_dtype, kv_dtype=args.kv_dtype)
     if (args.policy == "chunked"
             and not engine.runner.supports_chunked):
         print(f"note: {cfg.name} cannot chunk prefills "

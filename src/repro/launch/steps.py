@@ -32,6 +32,7 @@ from repro.core.attention import CACHE_DTYPE
 from repro.core.nn import act_dtype
 from repro.core.precision import BF16, FP8_SERVE, Policy, get_policy
 from repro.models import frontends, lm
+from repro.models.quantize import quantize_param_dims, quantize_params
 from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
                          cosine_schedule)
 from repro.optim.compression import ef_compressed_psum
@@ -167,9 +168,17 @@ def cache_layout(cfg: ModelConfig, plan: Plan, global_batch: int,
                  max_seq: int, policy: Policy,
                  paged: Optional[PagedLayout] = None):
     """(struct tree, logical-dims tree) mirroring the prefill cache pytree.
-    With `paged`, full-attention k/v leaves become block pools."""
+    With `paged`, full-attention k/v leaves become block pools.
+
+    kv_cache_dtype="int8" applies to the PAGED pools only (per-block-
+    per-head fp32 scale leaves "ks"/"vs" ride alongside "k"/"v"; the
+    scatter/append paths quantize on write and the paged kernels dequantize
+    in-register).  Dense ring / cross-attention caches have no block
+    granularity to hang scales off and stay bf16 — lossless."""
     B = global_batch
     kv_dtype = jnp.dtype(plan.kv_cache_dtype)
+    int8_kv = kv_dtype == jnp.dtype(jnp.int8)
+    dense_dtype = jnp.dtype(CACHE_DTYPE) if int8_kv else kv_dtype
     KV, hd = cfg.n_kv_heads, cfg.head_dim
     Hp, Pd, N = cfg.padded_ssm_heads(), cfg.ssm_head_dim, cfg.ssm_state
     cw, dip = cfg.conv_width, cfg.padded_d_inner()
@@ -185,16 +194,24 @@ def cache_layout(cfg: ModelConfig, plan: Plan, global_batch: int,
                 kv_dims = (None, "cache", None, None, None)
                 d["k"] = jax.ShapeDtypeStruct(shape, kv_dtype)
                 d["v"] = jax.ShapeDtypeStruct(shape, kv_dtype)
+                dm["k"] = dm["v"] = kv_dims
+                if int8_kv:
+                    sshape = (count, paged.num_blocks, KV)
+                    d["ks"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+                    d["vs"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+                    dm["ks"] = dm["vs"] = (None, "cache", None)
             else:
-                d["k"] = jax.ShapeDtypeStruct((count, B, W, KV, hd), kv_dtype)
-                d["v"] = jax.ShapeDtypeStruct((count, B, W, KV, hd), kv_dtype)
-            dm["k"] = dm["v"] = kv_dims
+                d["k"] = jax.ShapeDtypeStruct((count, B, W, KV, hd),
+                                              dense_dtype)
+                d["v"] = jax.ShapeDtypeStruct((count, B, W, KV, hd),
+                                              dense_dtype)
+                dm["k"] = dm["v"] = kv_dims
             if kind == "dec":
                 We = cfg.enc_seq_padded
                 d["ck"] = jax.ShapeDtypeStruct((count, B, We, KV, hd),
-                                               kv_dtype)
+                                               dense_dtype)
                 d["cv"] = jax.ShapeDtypeStruct((count, B, We, KV, hd),
-                                               kv_dtype)
+                                               dense_dtype)
                 # cross-attn memory is per-slot dense even under paging
                 dm["ck"] = dm["cv"] = (None, "batch", "cache", None, None)
         if kind in blocks.SSM_KINDS or kind == "ssm":
@@ -264,10 +281,20 @@ def _maybe_shard_map(fn, mesh, in_specs, out_specs):
                          out_specs=out_specs)
 
 
-def _param_struct(cfg, dtype):
-    return jax.eval_shape(
-        functools.partial(lm.init_lm, cfg=cfg, dtype=dtype),
-        jax.random.key(0))
+def _param_struct(cfg, dtype, weight_dtype: str = "bfloat16"):
+    init = functools.partial(lm.init_lm, cfg=cfg, dtype=dtype)
+    fn = init if weight_dtype != "int8" else (
+        lambda key: quantize_params(init(key)))
+    return jax.eval_shape(fn, jax.random.key(0))
+
+
+def _serve_param_layout(cfg, policy, weight_dtype: str):
+    """(dims, struct) for the serving param tree — weight-only int8 swaps
+    every dense GEMM leaf for its {"q", "scale"} pair (models/quantize)."""
+    p_dims = lm.lm_param_dims(cfg)
+    if weight_dtype == "int8":
+        p_dims = quantize_param_dims(p_dims)
+    return p_dims, _param_struct(cfg, policy.param_dtype, weight_dtype)
 
 
 # --------------------------------------------------------------------------
@@ -407,6 +434,7 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                       naive_attention: bool = False,
                       ssm_seq_parallel: bool = False,
                       kv_cache_dtype: str = "bfloat16",
+                      weight_dtype: str = "bfloat16",
                       attention_sharding: str = "",
                       comm_fp8: bool = False,
                       mlp_weight_stationary: bool = False,
@@ -424,14 +452,14 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
     plan = dataclasses.replace(
         plan, naive_attention=naive_attention,
         ssm_seq_parallel=ssm_seq_parallel, kv_cache_dtype=kv_cache_dtype,
+        weight_dtype=weight_dtype,
         attention_sharding=attention_sharding or plan.attention_sharding,
         comm_fp8=comm_fp8, mlp_weight_stationary=mlp_weight_stationary,
         fuse_epilogues=fuse_epilogues)
     max_seq = max_seq or shape.seq_len
 
-    p_dims = lm.lm_param_dims(cfg)
+    p_dims, p_struct = _serve_param_layout(cfg, policy, weight_dtype)
     p_specs = resolve_pspecs(p_dims, plan)
-    p_struct = _param_struct(cfg, policy.param_dtype)
     b_dims = batch_dims(cfg, "prefill")
     b_specs = resolve_pspecs(b_dims, plan)
     b_struct = frontends.batch_struct(cfg, "prefill", shape.global_batch,
@@ -485,6 +513,7 @@ def make_encode_step(cfg: ModelConfig, shape: ShapeConfig,
                      pooling: str = "last",
                      reduce_method: str = "ring",
                      naive_attention: bool = False,
+                     weight_dtype: str = "bfloat16",
                      fuse_epilogues: bool = True) -> StepBundle:
     """Encoder-only serving step: one full-sequence forward, no KV cache,
     returning a pooled [B, d_model] float32 embedding per row (the paper's
@@ -499,11 +528,11 @@ def make_encode_step(cfg: ModelConfig, shape: ShapeConfig,
     plan = make_plan(cfg, shape, mesh, mode="serve",
                      reduce_method=reduce_method)
     plan = dataclasses.replace(plan, naive_attention=naive_attention,
+                               weight_dtype=weight_dtype,
                                fuse_epilogues=fuse_epilogues)
 
-    p_dims = lm.lm_param_dims(cfg)
+    p_dims, p_struct = _serve_param_layout(cfg, policy, weight_dtype)
     p_specs = resolve_pspecs(p_dims, plan)
-    p_struct = _param_struct(cfg, policy.param_dtype)
     b_dims = batch_dims(cfg, "encode")
     b_specs = resolve_pspecs(b_dims, plan)
     b_struct = frontends.batch_struct(cfg, "encode", shape.global_batch,
@@ -558,7 +587,8 @@ def _chunk_scaffold(cfg: ModelConfig, shape: ShapeConfig,
                     mesh: Optional[Mesh], *, layout: PagedLayout,
                     width: int, policy: Optional[Policy],
                     max_seq: Optional[int], reduce_method: str,
-                    kv_cache_dtype: str, fuse_epilogues: bool, kind: str):
+                    kv_cache_dtype: str, weight_dtype: str,
+                    fuse_epilogues: bool, kind: str):
     """Shared plan/spec/struct scaffolding for the chunk-shaped steps —
     chunked prefill and speculative verify both run lm's paged chunk stack
     over `width` consecutive tokens per row against the decode cache
@@ -575,6 +605,7 @@ def _chunk_scaffold(cfg: ModelConfig, shape: ShapeConfig,
     plan = make_plan(cfg, shape, mesh, mode="serve",
                      reduce_method=reduce_method)
     plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype,
+                               weight_dtype=weight_dtype,
                                fuse_epilogues=fuse_epilogues)
     max_seq = max_seq or shape.seq_len
     assert plan.dp == 1, (
@@ -583,9 +614,8 @@ def _chunk_scaffold(cfg: ModelConfig, shape: ShapeConfig,
         f"{kind} requires every segment's KV to be paged "
         f"(segments={layout.segments})")
 
-    p_dims = lm.lm_param_dims(cfg)
+    p_dims, p_struct = _serve_param_layout(cfg, policy, weight_dtype)
     p_specs = resolve_pspecs(p_dims, plan)
-    p_struct = _param_struct(cfg, policy.param_dtype)
     c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
                                     policy, paged=layout)
     c_specs = resolve_pspecs(c_dims, plan)
@@ -616,6 +646,7 @@ def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                             max_seq: Optional[int] = None,
                             reduce_method: str = "ring",
                             kv_cache_dtype: str = "bfloat16",
+                            weight_dtype: str = "bfloat16",
                             with_sampling: bool = False,
                             fuse_epilogues: bool = True) -> StepBundle:
     """One chunked-prefill piece over the *decode* cache layout: encodes up
@@ -642,8 +673,8 @@ def make_chunk_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
      in_specs, in_structs) = _chunk_scaffold(
         cfg, shape, mesh, layout=layout, width=chunk_tokens, policy=policy,
         max_seq=max_seq, reduce_method=reduce_method,
-        kv_cache_dtype=kv_cache_dtype, fuse_epilogues=fuse_epilogues,
-        kind="chunked prefill")
+        kv_cache_dtype=kv_cache_dtype, weight_dtype=weight_dtype,
+        fuse_epilogues=fuse_epilogues, kind="chunked prefill")
 
     def run(params, tokens, pos0, chunk_len, caches, tables, lane):
         col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
@@ -682,6 +713,7 @@ def make_verify_step(cfg: ModelConfig, shape: ShapeConfig,
                      max_seq: Optional[int] = None,
                      reduce_method: str = "ring",
                      kv_cache_dtype: str = "bfloat16",
+                     weight_dtype: str = "bfloat16",
                      fuse_epilogues: bool = True) -> StepBundle:
     """Speculative-decoding verification: one target forward over
     `num_tokens` = k+1 consecutive tokens per decode slot (the pending
@@ -706,8 +738,8 @@ def make_verify_step(cfg: ModelConfig, shape: ShapeConfig,
      in_specs, in_structs) = _chunk_scaffold(
         cfg, shape, mesh, layout=layout, width=num_tokens, policy=policy,
         max_seq=max_seq, reduce_method=reduce_method,
-        kv_cache_dtype=kv_cache_dtype, fuse_epilogues=fuse_epilogues,
-        kind="speculative verify")
+        kv_cache_dtype=kv_cache_dtype, weight_dtype=weight_dtype,
+        fuse_epilogues=fuse_epilogues, kind="speculative verify")
 
     def body(params, tokens, pos0, chunk_len, caches, tables, lane):
         col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
@@ -739,6 +771,7 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
                      max_seq: Optional[int] = None,
                      reduce_method: str = "ring",
                      kv_cache_dtype: str = "bfloat16",
+                     weight_dtype: str = "bfloat16",
                      with_sampling: bool = False,
                      paged: Optional[Tuple[int, int]] = None,
                      fuse_epilogues: bool = True) -> StepBundle:
@@ -754,6 +787,7 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
     plan = make_plan(cfg, shape, mesh, mode="serve",
                      reduce_method=reduce_method)
     plan = dataclasses.replace(plan, kv_cache_dtype=kv_cache_dtype,
+                               weight_dtype=weight_dtype,
                                fuse_epilogues=fuse_epilogues)
     max_seq = max_seq or shape.seq_len
 
@@ -764,9 +798,8 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
             "paged KV cache requires an unsharded decode batch (the pool is "
             f"shared across slots): dp={plan.dp}")
 
-    p_dims = lm.lm_param_dims(cfg)
+    p_dims, p_struct = _serve_param_layout(cfg, policy, weight_dtype)
     p_specs = resolve_pspecs(p_dims, plan)
-    p_struct = _param_struct(cfg, policy.param_dtype)
     c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
                                     policy, paged=layout)
     c_specs = resolve_pspecs(c_dims, plan)

@@ -1,0 +1,91 @@
+"""Weight-only int8 quantization of the LM parameter tree (§Perf P1b).
+
+One-shot, post-load transform for serving: every dense GEMM weight —
+attention projections (wq/wk/wv/wo, incl. cross-attention), MLP weights
+(wg/wu/w1/w2) and the logit head (unemb) — is replaced by
+
+    {"q": int8 (same shape), "scale": fp32 per-output-channel}
+
+with symmetric per-output-channel scales (optim/compression.py's
+`quantize_int8_axiswise` over everything but the contraction dim).  The
+GEMM entry points in kernels/ops.py accept the dict transparently
+(`split_quantized`) and fold the dequant multiply into the fp32-accumulator
+epilogue of the fused kernels, so the int8 tensor is what streams from HBM.
+
+Deliberately left in bf16: the embedding table (a gather, not a GEMM),
+norm scales/biases, MoE experts + router (capacity-dispatch batched GEMMs
+don't route through the fused kernels) and SSM state parameters.  The
+transform is pure jnp — `jax.eval_shape(quantize_params, params)` gives the
+quantized structure for donation layouts, and `quantize_param_dims` maps
+the logical-dim tree (models/lm.lm_param_dims) alongside it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.optim.compression import quantize_int8_axiswise
+
+# dense-GEMM leaf names inside a (stacked) block param dict; MoE leaves
+# reuse wg/wu/w2 but are 4-D stacked [L, NE, ., .] and excluded by rank
+QUANT_KEYS = frozenset({"wq", "wk", "wv", "wo", "wg", "wu", "w1", "w2"})
+_STACKED_RANK = 3          # [L, K, N] — scanned dense weights
+
+
+def _quantize_leaf(w):
+    """[.., K, N] -> {"q": int8 same shape, "scale": fp32 [.., N]} —
+    per-output-channel: one scale per column of the GEMM, amax'd over the
+    contraction dim K (axis -2)."""
+    keep = tuple(a for a in range(w.ndim) if a != w.ndim - 2)
+    q, scale = quantize_int8_axiswise(w, axis=keep)
+    return {"q": q, "scale": scale}
+
+
+def _quantize_block(node, name=None):
+    if isinstance(node, dict):
+        return {k: _quantize_block(v, k) for k, v in node.items()}
+    if (name in QUANT_KEYS and getattr(node, "ndim", 0) == _STACKED_RANK
+            and jnp.issubdtype(node.dtype, jnp.floating)):
+        return _quantize_leaf(node)
+    return node
+
+
+def quantize_params(params: dict) -> dict:
+    """LM param tree (models/lm.init_lm layout) -> same tree with every
+    dense GEMM weight replaced by its {"q", "scale"} pair.  Pure jnp —
+    jit/eval_shape friendly."""
+    out = dict(params)
+    emb = dict(params["embedding"])
+    emb["unemb"] = _quantize_leaf(params["embedding"]["unemb"])
+    out["embedding"] = emb
+    for key in ("segments", "enc_segments"):
+        if key in params:
+            out[key] = tuple(_quantize_block(seg) for seg in params[key])
+    return out
+
+
+def _dims_leaf(d):
+    """Logical dims of a quantized leaf: q keeps the weight's dims; the
+    per-output-channel scale drops the contraction dim (index -2)."""
+    d = tuple(d)
+    return {"q": d, "scale": d[:-2] + (d[-1],)}
+
+
+def _dims_block(node, name=None):
+    if isinstance(node, dict):
+        return {k: _dims_block(v, k) for k, v in node.items()}
+    if name in QUANT_KEYS and len(node) == _STACKED_RANK:
+        return _dims_leaf(node)
+    return node
+
+
+def quantize_param_dims(dims: dict) -> dict:
+    """Map models/lm.lm_param_dims output through the same transform as
+    `quantize_params`, so sharding specs stay aligned leaf-for-leaf."""
+    out = dict(dims)
+    emb = dict(dims["embedding"])
+    emb["unemb"] = _dims_leaf(dims["embedding"]["unemb"])
+    out["embedding"] = emb
+    for key in ("segments", "enc_segments"):
+        if key in dims:
+            out[key] = tuple(_dims_block(seg) for seg in dims[key])
+    return out

@@ -19,17 +19,49 @@ import jax.numpy as jnp
 from repro.core import collectives as col
 
 
-def quantize_int8(x):
-    """Per-tensor symmetric int8.  -> (q int8, scale fp32 scalar)."""
+def quantize_int8_axiswise(x, axis=None):
+    """Symmetric int8 with one fp32 scale per index along `axis`.
+
+    `axis=None` collapses to per-tensor (scalar scale); an int or tuple of
+    ints keeps those axes and reduces the amax over all others.  The shared
+    core for the gradient path (per-tensor), weight quantization
+    (per-output-channel), and the paged-KV pool (per-block-per-head).
+    -> (q int8 same shape as x, scale fp32 with x.shape restricted to
+    `axis` dims).
+    """
     xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf))
+    if axis is None:
+        reduce_axes = None
+    else:
+        keep = {a % xf.ndim for a in
+                (axis if isinstance(axis, tuple) else (axis,))}
+        reduce_axes = tuple(a for a in range(xf.ndim) if a not in keep)
+    amax = jnp.max(jnp.abs(xf), axis=reduce_axes)
     scale = jnp.maximum(amax, 1e-30) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    if axis is None:
+        s_b = scale
+    else:
+        s_b = jnp.expand_dims(scale, reduce_axes)
+    q = jnp.clip(jnp.round(xf / s_b), -127, 127).astype(jnp.int8)
     return q, scale
 
 
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+def quantize_int8(x):
+    """Per-tensor symmetric int8.  -> (q int8, scale fp32 scalar)."""
+    return quantize_int8_axiswise(x, axis=None)
+
+
+def dequantize_int8(q, scale, axis=None):
+    """Inverse of `quantize_int8_axiswise`: broadcast `scale` back over the
+    reduced axes (scalar scale broadcasts trivially; per-axis scales need
+    `axis` to say which dims they live on)."""
+    qf = q.astype(jnp.float32)
+    if axis is None or jnp.ndim(scale) == 0:
+        return qf * scale
+    keep = {a % qf.ndim for a in
+            (axis if isinstance(axis, tuple) else (axis,))}
+    expand = tuple(a for a in range(qf.ndim) if a not in keep)
+    return qf * jnp.expand_dims(scale, expand)
 
 
 def _halving_exchange(x_send, axis: str, step: int, n: int):

@@ -72,7 +72,9 @@ class InferenceEngine:
                  fuse_epilogues: bool = True,
                  spec: Optional[SpecConfig] = None, draft_params=None,
                  prefix_cache: bool = False,
-                 cache_blocks: Optional[int] = None):
+                 cache_blocks: Optional[int] = None,
+                 weight_dtype: str = "bfloat16",
+                 kv_dtype: Optional[str] = None):
         # `policy` is the PRECISION policy (pre-split name, kept for
         # back-compat); the scheduling policy is `scheduler`.  `spec`
         # turns on speculative decoding (serving/spec.py): the runner
@@ -84,6 +86,10 @@ class InferenceEngine:
         # by token content and warm admissions prefill only their uncached
         # suffix; `cache_blocks` caps how many pool blocks the index may
         # hold (None = bounded by pool pressure alone).
+        # `weight_dtype="int8"` quantizes the dense GEMM weights per output
+        # channel (models/quantize); `kv_dtype="int8"` stores the paged KV
+        # pools int8 with per-block-per-head scales.  Both default to
+        # lossless bf16.
         self.runner = ModelRunner(cfg, params, batch_size=batch_size,
                                   max_seq=max_seq, mesh=mesh, policy=policy,
                                   min_bucket=min_bucket, paged=paged,
@@ -92,7 +98,9 @@ class InferenceEngine:
                                   fuse_epilogues=fuse_epilogues,
                                   spec=spec, draft_params=draft_params,
                                   prefix_cache=prefix_cache,
-                                  cache_blocks=cache_blocks)
+                                  cache_blocks=cache_blocks,
+                                  weight_dtype=weight_dtype,
+                                  kv_dtype=kv_dtype)
         self.scheduler = scheduler or FCFSPolicy()
         self.encode_batch = encode_batch or batch_size
         self.queue: List[Task] = []
@@ -154,6 +162,10 @@ class InferenceEngine:
         if self.runner.paged:
             st.kv_pool_blocks = self.runner.layout.num_blocks
             st.kv_block_size = self.runner.layout.block_size
+        st.weight_dtype = self.runner.weight_dtype
+        st.kv_dtype = self.runner.kv_dtype
+        st.weight_bytes_per_device = self.runner.weight_bytes_per_device()
+        st.kv_pool_bytes = self.runner.kv_pool_bytes()
         return st
 
     # -- admission -----------------------------------------------------

@@ -23,6 +23,8 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.attention import SCALE_EPS
+
 # One compiled zeros-builder per (shape, dtype, sharding) leaf, shared by
 # every engine construction in the process — re-jitting a fresh lambda per
 # leaf per call would recompile each time (the keys here are hashable, the
@@ -169,7 +171,10 @@ def _prefill_scatter(caches, group_caches, slots, tables, *,
     out = []
     for seg, new, paged in zip(caches, group_caches, paged_segments):
         d = {}
+        quantized = paged and "ks" in seg
         for key, leaf in seg.items():
+            if key in ("ks", "vs"):
+                continue                 # written alongside their pools
             val = new[key]
             if paged and key in ("k", "v"):
                 nb_pool = leaf.shape[1]
@@ -184,8 +189,23 @@ def _prefill_scatter(caches, group_caches, slots, tables, *,
                 ids = tables[:, :ne]
                 # -1 wraps in .at[]; route out of range so "drop" applies
                 ids = jnp.where(ids >= 0, ids, nb_pool)
-                d[key] = leaf.at[:, ids].set(val.astype(leaf.dtype),
-                                             mode="drop")
+                if quantized:
+                    # admission covers every written block from offset 0, so
+                    # each block's scale is simply the per-head amax of the
+                    # tokens landing in it (pad positions are zero — inert).
+                    # The prefill step itself ran bf16: quantization happens
+                    # once, here, on admission into the pool.
+                    xf = val.astype(jnp.float32)
+                    amax = jnp.max(jnp.abs(xf), axis=(3, 5))
+                    s = jnp.maximum(amax, SCALE_EPS) / 127.0
+                    q = jnp.clip(jnp.round(xf / s[:, :, :, None, :, None]),
+                                 -127, 127).astype(jnp.int8)
+                    d[key] = leaf.at[:, ids].set(q, mode="drop")
+                    sk = key + "s"
+                    d[sk] = seg[sk].at[:, ids].set(s, mode="drop")
+                else:
+                    d[key] = leaf.at[:, ids].set(val.astype(leaf.dtype),
+                                                 mode="drop")
             else:
                 d[key] = leaf.at[:, slots].set(val.astype(leaf.dtype))
         out.append(d)
@@ -223,8 +243,12 @@ def _block_copy(caches, src, dst, *, paged_segments):
     for seg, paged in zip(caches, paged_segments):
         d = dict(seg)
         if paged:
-            for key in ("k", "v"):
-                leaf = d[key]                    # [count, NB, BS, KV, hd]
+            for key in ("k", "v", "ks", "vs"):
+                if key not in d:
+                    continue
+                leaf = d[key]       # pools [count, NB, BS, KV, hd];
+                #                     scales [count, NB, KV] — dim 1 is NB
+                #                     for both, so one copy path serves them
                 row = jax.lax.dynamic_index_in_dim(leaf, src, axis=1,
                                                    keepdims=True)
                 d[key] = jax.lax.dynamic_update_slice_in_dim(leaf, row, dst,

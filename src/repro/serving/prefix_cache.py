@@ -8,10 +8,14 @@ depends only on tokens [0, p] (causal attention), so any two requests whose
 prompts share a prefix can share the pool blocks that hold that prefix's KV.
 
     PrefixCache     radix/trie index over *token content*: each node owns one
-                    pool block and is keyed by the tuple of tokens it covers.
-                    Full-block nodes (block_size tokens) form the trie spine;
-                    partially filled tails hang off their parent as leaf
-                    nodes and match by longest common prefix.
+                    pool block and covers a tuple of tokens.  Edges are keyed
+                    by a rolling hash of that tuple (O(1)-sized dict keys
+                    instead of block_size-tuple keys); every hash hit is
+                    verified against the node's stored tokens before it is
+                    accepted, so a collision degrades to a miss, never to a
+                    wrong share.  Full-block nodes (block_size tokens) form
+                    the trie spine; partially filled tails hang off their
+                    parent as leaf nodes and match by longest common prefix.
     lookup()        longest cached prefix of a prompt -> (blocks, tokens).
                     A partial match *inside* a block is still a hit — the
                     suffix prefill copy-on-writes the block before
@@ -46,19 +50,61 @@ from repro.serving.kv_cache import BlockAllocator
 class _Node:
     """One indexed pool block.  `key` is the tuple of tokens the block
     covers (len == block_size for spine nodes, < block_size for partial
-    tails); `stamp` is the LRU clock of the last lookup/insert that touched
-    this node's path."""
-    __slots__ = ("key", "block", "tokens", "parent", "children", "partials",
-                 "stamp")
+    tails), kept for collision verification; `hash` is its rolling hash —
+    the dict key under which the node is indexed; `stamp` is the LRU clock
+    of the last lookup/insert that touched this node's path."""
+    __slots__ = ("key", "hash", "block", "tokens", "parent", "children",
+                 "partials", "stamp")
 
     def __init__(self, key: tuple, block: int, parent: Optional["_Node"]):
         self.key = key
+        self.hash = _rhash(key)
         self.block = block
         self.tokens = len(key)
         self.parent = parent
-        self.children: dict = {}    # full-block token tuple -> _Node
-        self.partials: dict = {}    # partial-tail token tuple -> _Node
+        self.children: dict = {}    # rolling hash -> [_Node] (full blocks)
+        self.partials: dict = {}    # rolling hash -> [_Node] (partial tails)
         self.stamp = 0
+
+
+# Polynomial rolling hash over token ids, mod the Mersenne prime 2^61 - 1.
+# Content-derived and incremental (h extends token-by-token), so the index
+# key for a block is a single machine word regardless of block_size.  Hash
+# equality is never trusted on its own — see _get().
+_HASH_BASE = 1_000_003
+_HASH_MOD = (1 << 61) - 1
+
+
+def _rhash(toks, h: int = 0) -> int:
+    for t in toks:
+        h = (h * _HASH_BASE + int(t) + 1) % _HASH_MOD
+    return h
+
+
+def _get(group: dict, key: tuple) -> Optional[_Node]:
+    """Collision-safe probe: a node is returned only if its stored token
+    tuple matches `key` exactly.  A hash collision (same bucket, different
+    tokens) therefore reads as a miss."""
+    for cand in group.get(_rhash(key), ()):
+        if cand.key == key:
+            return cand
+    return None
+
+
+def _put(group: dict, node: _Node) -> None:
+    group.setdefault(node.hash, []).append(node)
+
+
+def _unlink(group: dict, node: _Node) -> None:
+    bucket = group[node.hash]
+    bucket.remove(node)
+    if not bucket:
+        del group[node.hash]
+
+
+def _nodes(group: dict):
+    for bucket in group.values():
+        yield from bucket
 
 
 def _common(a, b) -> int:
@@ -125,7 +171,7 @@ class PrefixCache:
         matched = 0
         i = 0
         while i + bs <= len(toks):
-            child = node.children.get(tuple(toks[i:i + bs]))
+            child = _get(node.children, tuple(toks[i:i + bs]))
             if child is None:
                 break
             node = child
@@ -140,8 +186,8 @@ class PrefixCache:
         rest = toks[i:]
         best = best_cp = None
         for group in (node.partials, node.children):
-            for key, cand in group.items():
-                cp = _common(key, rest)
+            for cand in _nodes(group):
+                cp = _common(cand.key, rest)
                 if cp > 0 and (best is None or cp > best_cp):
                     best, best_cp = cand, cp
         if best is not None:
@@ -179,10 +225,10 @@ class PrefixCache:
         i = bi = 0
         while i + bs <= len(toks):
             key = tuple(toks[i:i + bs])
-            child = node.children.get(key)
+            child = _get(node.children, key)
             if child is None:
                 child = _Node(key, blocks[bi], node)
-                node.children[key] = child
+                _put(node.children, child)
                 self.allocator.retain([child.block])
                 self._n_blocks += 1
                 self.inserted_blocks += 1
@@ -191,9 +237,9 @@ class PrefixCache:
             i += bs
             bi += 1
         rest = tuple(toks[i:])
-        if rest and rest not in node.partials:
+        if rest and _get(node.partials, rest) is None:
             tail = _Node(rest, blocks[bi], node)
-            node.partials[rest] = tail
+            _put(node.partials, tail)
             tail.stamp = self._clock
             self.allocator.retain([tail.block])
             self._n_blocks += 1
@@ -213,8 +259,8 @@ class PrefixCache:
         stack = [self._root]
         while stack:
             n = stack.pop()
-            stack.extend(n.children.values())
-            stack.extend(n.partials.values())
+            stack.extend(_nodes(n.children))
+            stack.extend(_nodes(n.partials))
             if (n is not self._root and not n.children and not n.partials
                     and self.allocator.refcount(n.block) == 1):
                 out.append(n)
@@ -227,9 +273,9 @@ class PrefixCache:
         node = min(victims, key=lambda n: n.stamp)
         parent = node.parent
         if node.tokens == self.block_size:
-            del parent.children[node.key]
+            _unlink(parent.children, node)
         else:
-            del parent.partials[node.key]
+            _unlink(parent.partials, node)
         self.allocator.free([node.block])
         self._n_blocks -= 1
         self.evicted_blocks += 1
@@ -257,18 +303,19 @@ class PrefixCache:
         """The set of pool blocks the index currently references
         (telemetry / invariant tests)."""
         out = set()
-        stack = list(self._root.children.values()) \
-            + list(self._root.partials.values())
+        stack = list(_nodes(self._root.children)) \
+            + list(_nodes(self._root.partials))
         while stack:
             n = stack.pop()
             out.add(n.block)
-            stack.extend(n.children.values())
-            stack.extend(n.partials.values())
+            stack.extend(_nodes(n.children))
+            stack.extend(_nodes(n.partials))
         return out
 
     def check(self) -> None:
         """Structural invariants (tests call this after every operation):
         node count matches the block counter, partial tails are leaves,
+        every node is filed under the rolling hash of its token content,
         every indexed block is live (refcount >= 1) and off the free list,
         and no block is indexed twice."""
         seen = set()
@@ -276,12 +323,16 @@ class PrefixCache:
         stack = [(self._root, True)]
         while stack:
             n, is_root = stack.pop()
-            for c in n.children.values():
-                stack.append((c, False))
-            for p in n.partials.values():
+            for group in (n.children, n.partials):
+                for h, bucket in group.items():
+                    for c in bucket:
+                        if c.hash != h or _rhash(c.key) != h:
+                            raise AssertionError(
+                                f"node filed under stale hash {h}")
+                        stack.append((c, False))
+            for p in _nodes(n.partials):
                 if p.children or p.partials:
                     raise AssertionError("partial tail is not a leaf")
-                stack.append((p, False))
             if is_root:
                 continue
             count += 1

@@ -44,6 +44,7 @@ from repro.core import blocks
 from repro.launch import steps as steps_mod
 from repro.serving.kv_cache import (BlockAllocator, make_block_copy,
                                     make_prefill_scatter, zero_caches)
+from repro.models.quantize import quantize_params
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import (device_lane, set_lane, stack_lanes,
                                     stack_prefill_lanes, zero_lane)
@@ -52,6 +53,16 @@ from repro.serving.spec import (DraftState, SpecConfig, accept_length,
                                 trim_emitted)
 from repro.serving.stats import EngineStats
 from repro.serving.tasks import EncodeTask, GenerateTask, Task
+
+
+def _device_nbytes(x) -> int:
+    """Bytes one device holds for array `x` (first addressable shard;
+    replicated arrays charge their full size, as every device keeps a
+    copy)."""
+    shards = getattr(x, "addressable_shards", None)
+    if shards:
+        return shards[0].data.nbytes
+    return x.nbytes
 
 
 class ModelRunner:
@@ -64,9 +75,20 @@ class ModelRunner:
                  fuse_epilogues: bool = True,
                  spec: Optional[SpecConfig] = None, draft_params=None,
                  prefix_cache: bool = False,
-                 cache_blocks: Optional[int] = None):
+                 cache_blocks: Optional[int] = None,
+                 weight_dtype: str = "bfloat16",
+                 kv_dtype: Optional[str] = None):
         assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
+        assert weight_dtype in ("bfloat16", "int8"), weight_dtype
+        assert kv_dtype in (None, "bfloat16", "int8"), kv_dtype
         self.cfg = cfg
+        # weight-only int8 (models/quantize): the dense GEMM weights are
+        # quantized ONCE here, per output channel; every compiled step then
+        # streams int8 tiles and dequantizes inside the fp32 epilogue.
+        # `params` arrives as the usual full-precision tree.
+        self.weight_dtype = weight_dtype
+        if weight_dtype == "int8":
+            params = quantize_params(params)
         self.params = params
         self.B = batch_size
         self.max_seq = max_seq
@@ -95,6 +117,10 @@ class ModelRunner:
         if paged and steps_mod.serve_dp(cfg, dshape, mesh) > 1:
             paged = False
         self.paged = paged
+        # int8 KV needs the block-paged pools (per-block scale granularity);
+        # a dense fallback layout silently stays lossless bf16
+        self.kv_dtype = ("int8" if kv_dtype == "int8" and paged
+                         else "bfloat16")
         if paged:
             default_blocks = batch_size * (-(-max_seq // block_size))
             paged_arg: Optional[Tuple[int, int]] = (
@@ -104,6 +130,7 @@ class ModelRunner:
         self.decode_step = steps_mod.make_decode_step(
             cfg, dshape, mesh, policy=policy, max_seq=max_seq,
             with_sampling=True, paged=paged_arg,
+            kv_cache_dtype=self.kv_dtype, weight_dtype=weight_dtype,
             fuse_epilogues=fuse_epilogues)
         self.layout = self.decode_step.aux["paged"]
         self._prefill_steps: Dict[tuple, steps_mod.StepBundle] = {}
@@ -164,6 +191,11 @@ class ModelRunner:
                 raise ValueError(f"speculative decoding unsupported for "
                                  f"{cfg.name}: {reason}")
             self.draft_cfg = resolve_draft(spec, cfg)
+            # the draft LM stays bf16 — it is tiny (its weight traffic is
+            # noise next to the target's) — unless it IS the target
+            # ("self"), whose params are already quantized above
+            self._draft_wdt = (weight_dtype if spec.draft == "self"
+                               else "bfloat16")
             if spec.draft == "self":
                 self.draft_params = params
             elif draft_params is not None:
@@ -177,7 +209,8 @@ class ModelRunner:
                 self.draft_cfg, ShapeConfig("draft_decode", "decode",
                                             max_seq, batch_size),
                 mesh, policy=policy, max_seq=max_seq, with_sampling=True,
-                paged=None, fuse_epilogues=fuse_epilogues)
+                paged=None, weight_dtype=self._draft_wdt,
+                fuse_epilogues=fuse_epilogues)
             self.draft_caches = zero_caches(
                 self.draft_decode_step.aux["cache_struct"],
                 steps_mod.to_shardings(
@@ -189,6 +222,7 @@ class ModelRunner:
             self.verify_step = steps_mod.make_verify_step(
                 cfg, dshape, mesh, layout=self.layout,
                 num_tokens=spec.k + 1, policy=policy, max_seq=max_seq,
+                kv_cache_dtype=self.kv_dtype, weight_dtype=weight_dtype,
                 fuse_epilogues=fuse_epilogues)
             self.draft_states: List[Optional[DraftState]] = (
                 [None] * batch_size)
@@ -208,6 +242,18 @@ class ModelRunner:
         # are garbage until the final chunk lands
         self.prefilling: List[bool] = [False] * batch_size
         self.steps_run = 0
+
+    # -- resident-memory telemetry -------------------------------------
+    def weight_bytes_per_device(self) -> int:
+        """Per-device resident bytes of the target params (int8 `q` leaves
+        count 1 byte/elem; their fp32 scales ride along)."""
+        return sum(_device_nbytes(x) for x in jax.tree.leaves(self.params))
+
+    def kv_pool_bytes(self) -> int:
+        """Per-device resident bytes of the live decode caches — the paged
+        pools plus their scale leaves and any dense (ring / cross-attn /
+        SSM) state."""
+        return sum(_device_nbytes(x) for x in jax.tree.leaves(self.caches))
 
     # -- capacity / bucket geometry ------------------------------------
     @property
@@ -248,10 +294,14 @@ class ModelRunner:
         if step is None:
             pshape = ShapeConfig(f"engine_prefill_{bucket}x{group}",
                                  "prefill", bucket, group)
+            # NOTE: no kv_cache_dtype here even when the pool is int8 — the
+            # compact prefill caches stay bf16 and the admission scatter
+            # (kv_cache._prefill_scatter) quantizes on entry to the pool
             step = steps_mod.make_prefill_step(
                 self.cfg, pshape, self.mesh, policy=self.policy,
                 max_seq=self.max_seq, with_sampling=True,
-                compact_kv=self.paged, fuse_epilogues=self.fuse_epilogues)
+                compact_kv=self.paged, weight_dtype=self.weight_dtype,
+                fuse_epilogues=self.fuse_epilogues)
             self._prefill_steps[(bucket, group)] = step
             stats.prefill_compiles += 1
         return step
@@ -264,7 +314,8 @@ class ModelRunner:
                                  "prefill", bucket + self._n_prefix, group)
             step = steps_mod.make_encode_step(
                 self.cfg, eshape, self.mesh, policy=self.policy,
-                pooling=pooling, fuse_epilogues=self.fuse_epilogues)
+                pooling=pooling, weight_dtype=self.weight_dtype,
+                fuse_epilogues=self.fuse_epilogues)
             self._encode_steps[(bucket, group, pooling)] = step
             stats.encode_compiles += 1
         return step
@@ -278,6 +329,8 @@ class ModelRunner:
                 self.cfg, cshape, self.mesh, layout=self.layout,
                 chunk_tokens=chunk_tokens, policy=self.policy,
                 max_seq=self.max_seq, with_sampling=True,
+                kv_cache_dtype=self.kv_dtype,
+                weight_dtype=self.weight_dtype,
                 fuse_epilogues=self.fuse_epilogues)
             self._chunk_steps[chunk_tokens] = step
         return step
@@ -617,6 +670,7 @@ class ModelRunner:
             step = steps_mod.make_prefill_step(
                 self.draft_cfg, pshape, self.mesh, policy=self.policy,
                 max_seq=self.max_seq, with_sampling=False, compact_kv=False,
+                weight_dtype=self._draft_wdt,
                 fuse_epilogues=self.fuse_epilogues)
             self._draft_prefill_steps[(bucket, n)] = step
         t0 = time.perf_counter()

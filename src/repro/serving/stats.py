@@ -93,6 +93,11 @@ class EngineStats:
     cached_blocks: int = 0         # blocks the index holds now (gauge)
     evicted_blocks: int = 0        # index blocks LRU-reclaimed by the pool
     cow_copies: int = 0            # shared blocks duplicated before a write
+    # -- low-precision serving (models/quantize, PR 7) -----------------------
+    weight_dtype: str = "bfloat16"  # GEMM weight storage ("int8" = quantized)
+    kv_dtype: str = "bfloat16"      # paged-pool storage ("int8" = quantized)
+    weight_bytes_per_device: int = 0  # resident param bytes (one device)
+    kv_pool_bytes: int = 0            # resident cache bytes (one device)
 
     # -- recorders (bounded: percentiles cover the recent MAX_SAMPLES) ------
     def add_ttft_ms(self, v: float) -> None:
@@ -299,6 +304,10 @@ class EngineStats:
             "cached_blocks": self.cached_blocks,
             "evicted_blocks": self.evicted_blocks,
             "cow_copies": self.cow_copies,
+            "weight_dtype": self.weight_dtype,
+            "kv_dtype": self.kv_dtype,
+            "weight_bytes_per_device": self.weight_bytes_per_device,
+            "kv_pool_bytes": self.kv_pool_bytes,
         }
 
     def summary(self) -> str:
@@ -323,6 +332,11 @@ class EngineStats:
             spec = (f" | SPEC {self.spec_acceptance_rate:.0%} accept, "
                     f"{self.spec_tokens_per_step:.2f} tok/step, draft p95 "
                     f"{self.draft_time_ms_p95:.1f}ms")
+        quant = ""
+        if self.weight_dtype != "bfloat16" or self.kv_dtype != "bfloat16":
+            quant = (f" | QUANT w={self.weight_dtype} kv={self.kv_dtype}, "
+                     f"params {self.weight_bytes_per_device / 2**20:.1f}MiB, "
+                     f"pool {self.kv_pool_bytes / 2**20:.1f}MiB")
         prefix = ""
         if self.prefix_lookups:
             prefix = (f" | PREFIX {self.prefix_cache_hit_rate:.0%} hit, "
@@ -335,4 +349,4 @@ class EngineStats:
                 f"occupancy {self.slot_occupancy:.0%}) | "
                 f"TTFT p50 {self.ttft_p50_ms:.0f}ms p95 "
                 f"{self.ttft_p95_ms:.0f}ms"
-                + enc + chunk + spec + prefix + pool)
+                + enc + chunk + spec + quant + prefix + pool)

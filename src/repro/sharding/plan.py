@@ -70,6 +70,12 @@ class Plan:
     # reduce-scattering the output.  Wins when tokens/device * E exceeds
     # the per-layer FFN weight bytes (long-prefill serving).
     mlp_weight_stationary: bool = False
+    # beyond-paper (§Perf P1b): weight-only int8 serving — dense GEMM
+    # weights stored as {q: int8, scale: fp32 per-output-channel}
+    # (models/quantize.quantize_params); the dequant scale folds into the
+    # fp32-accumulator epilogue of the fused kernels.  Halves the weight
+    # bytes streamed per decode step; "bfloat16" = lossless default.
+    weight_dtype: str = "bfloat16"
 
     # ---- sizes ---------------------------------------------------------
     def size(self, axes: Tuple[str, ...]) -> int:

@@ -129,6 +129,31 @@ def test_insert_dedup_first_writer_wins():
     assert a.refcount(b2[0]) == 1           # duplicate content not retained
 
 
+def test_hash_collision_reads_as_miss(monkeypatch):
+    """Edges are keyed by a rolling hash of block content; verification
+    against the stored token tuple must make a colliding entry a miss (or a
+    dedup non-match on insert), never a wrong share.  Force every hash to
+    collide and confirm distinct contents still index and resolve apart."""
+    from repro.serving import prefix_cache as pcm
+    monkeypatch.setattr(pcm, "_rhash", lambda toks, h=0: 7)
+    a, pc = _cache()
+    b1, b2 = a.alloc(2), a.alloc(2)
+    t1 = list(range(7))
+    t2 = [50 + t for t in range(7)]         # same lengths, same (forced) hash
+    pc.insert(t1, b1)
+    pc.insert(t2, b2)                       # collides at every edge
+    pc.check()
+    assert pc.cached_blocks == 4            # both indexed despite collision
+    assert pc.lookup(t1) == (b1, 7)
+    assert pc.lookup(t2) == (b2, 7)
+    assert pc.lookup([99, 98, 97])[1] == 0  # colliding probe: clean miss
+    # eviction unlinks the right node out of a shared bucket
+    a.free(b1), a.free(b2)                  # drop our refs: index-only now
+    assert pc.clear() == 4
+    pc.check()
+    assert pc.cached_blocks == 0 and a.num_used == 0
+
+
 def test_lru_eviction_order_and_reclaim():
     a, pc = _cache(num_blocks=6, bs=4)
     b1, b2 = a.alloc(1), a.alloc(1)
