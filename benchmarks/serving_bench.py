@@ -34,6 +34,14 @@ Three scheduler/runner-split scenarios ride along in `record["scenarios"]`:
                    AND land a strictly lower TTFT p95 than cold, with
                    token-identical outputs, or the bench exits nonzero
                    (the CI gate for the prefix-cache subsystem)
+  goodput          the SAME over-capacity open-loop Poisson trace
+                   (serving/loadgen.py) through FCFS vs DeadlinePolicy,
+                   both on the overlapped host loop, scored in goodput —
+                   requests/sec meeting their TTFT SLO.  Capacity and the
+                   TTFT budget are calibrated on this host first; the
+                   deadline policy must strictly beat FCFS goodput at the
+                   calibrated over-capacity rate, or the bench exits
+                   nonzero (the CI gate for the goodput subsystem)
 """
 from __future__ import annotations
 
@@ -51,9 +59,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serving import (ChunkedPrefillPolicy, EncodeTask, FCFSPolicy,
-                           InferenceEngine, Request, SamplingParams,
-                           SpecConfig, make_policy, spec_support_reason)
+from repro.serving import (ArrivalSpec, ChunkedPrefillPolicy, DeadlinePolicy,
+                           EncodeTask, FCFSPolicy, InferenceEngine, LoadSpec,
+                           PromptSpec, Request, SamplingParams, SLOSpec,
+                           SpecConfig, make_policy, make_trace, percentiles,
+                           replay, spec_support_reason)
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -391,6 +401,106 @@ def check_spec(spec_rec: dict) -> list:
     return problems
 
 
+def goodput_workload(cfg, params, args) -> dict:
+    """Open-loop goodput comparison: the same over-capacity Poisson trace
+    through FCFS vs DeadlinePolicy, both on the overlapped host loop,
+    scored in goodput (requests/sec meeting their TTFT SLO).
+
+    The regime is calibrated on this host rather than hardcoded, because
+    the gate only discriminates in the middle: a too-loose TTFT budget
+    lets every request win under both policies (goodput ties on wall
+    noise) and a too-tight one lets none win under either.  A closed-loop
+    drain (arrival clock collapsed, after a compile pass) measures
+    `capacity_rps`; the Poisson rate is `--goodput-overload` times it, and
+    the TTFT budget defaults to 3x the calibrated per-request service
+    time.  At that operating point FCFS burns full prefill + decode on
+    requests that already expired in queue, while the deadline policy
+    sheds them at admission and spends the capacity on requests that can
+    still meet their deadline — a structural win, not a tuning artifact.
+
+    Both engines replay traces built from the same seeds (fresh task
+    objects per engine — tasks are mutable), so arrivals, prompts, and
+    per-uid sampling seeds are identical across policies."""
+    n = args.goodput_requests
+    prompts = PromptSpec(min_len=args.min_prompt_len,
+                         max_len=args.max_prompt_len, sampled_frac=0.5)
+
+    def mk(policy):
+        return InferenceEngine(cfg, params, batch_size=args.batch,
+                               max_seq=args.max_seq,
+                               block_size=args.block_size,
+                               kv_pool_blocks=args.kv_pool_blocks or None,
+                               scheduler=policy, overlap=True,
+                               weight_dtype=args.weight_dtype,
+                               kv_dtype=args.kv_dtype)
+
+    def trace(slo, uid0, rps):
+        spec = LoadSpec(requests=n, vocab=cfg.vocab,
+                        arrival=ArrivalSpec(rate_rps=rps),
+                        prompts=prompts, slo=slo, max_new=args.max_new)
+        return make_trace(spec, arrival_seed=args.seed,
+                          prompt_seed=args.seed, uid0=uid0)
+
+    # calibrate: closed-loop drain (time_scale=0 collapses the arrival
+    # clock) after an identical compile pass = max sustainable throughput
+    cal = mk(FCFSPolicy())
+    replay(cal, trace(SLOSpec(), 10_000, 1.0), time_scale=0)
+    done, wall = replay(cal, trace(SLOSpec(), 20_000, 1.0), time_scale=0)
+    capacity_rps = len(done) / wall
+    service_ms = 1e3 * wall / len(done)
+    rate = args.goodput_overload * capacity_rps
+    ttft_slo = args.goodput_ttft_slo_ms or 3.0 * service_ms
+    slo = SLOSpec(ttft_ms=ttft_slo)
+
+    out = {"requests": n, "capacity_rps": capacity_rps,
+           "service_ms": service_ms, "overload": args.goodput_overload,
+           "rate_rps": rate, "ttft_slo_ms": ttft_slo, "policies": {}}
+    for policy in (FCFSPolicy(), DeadlinePolicy()):
+        engine = mk(policy)
+        # warmup without SLOs, closed-loop: nothing sheds, so every
+        # (bucket, group size) the measured run can hit gets compiled
+        replay(engine, trace(SLOSpec(), 30_000, 1.0), time_scale=0)
+        engine.reset_stats()
+        done, wall = replay(engine, trace(slo, 0, rate))
+        st = engine.stats()
+        att = percentiles(st.ttft_slo_ratio)
+        out["policies"][policy.name] = {
+            "completed": len(done),
+            "wall_s": wall,
+            "slo_met": st.slo_met,
+            "slo_attainment": st.slo_attainment,
+            "goodput_rps": st.slo_met / wall if wall else 0.0,
+            "requests_shed": st.requests_shed,
+            "requests_degraded": st.requests_degraded,
+            "ttft_slo_ratio_p50": att["p50"],
+            "ttft_slo_ratio_p95": att["p95"],
+            "ttft_slo_ratio_p99": att["p99"],
+            "host_overlap_ratio": st.host_overlap_ratio,
+            "overlapped_steps": st.overlapped_steps,
+        }
+    return out
+
+
+def check_goodput(rec: dict) -> list:
+    """The goodput acceptance gate: at the calibrated over-capacity rate
+    the deadline policy must strictly out-goodput FCFS, and must actually
+    be serving (not shedding its way to an empty win)."""
+    f, d = rec["policies"]["fcfs"], rec["policies"]["deadline"]
+    problems = []
+    if not d["goodput_rps"] > f["goodput_rps"]:
+        problems.append(
+            f"deadline goodput {d['goodput_rps']:.2f} req/s does not "
+            f"strictly beat FCFS {f['goodput_rps']:.2f} req/s at "
+            f"{rec['overload']:.1f}x capacity "
+            f"(TTFT SLO {rec['ttft_slo_ms']:.0f}ms)")
+    if not d["slo_met"] > 0:
+        problems.append(
+            f"deadline policy met 0 of {rec['requests']} SLOs — the TTFT "
+            f"budget {rec['ttft_slo_ms']:.0f}ms is unattainable on this "
+            f"host (calibration broke) or shedding ate the whole trace")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi4-mini-3.8b")
@@ -425,6 +535,15 @@ def main(argv=None) -> int:
                     help="base trace + mixed scenario paged-KV pool "
                          "storage; quant-specific gates live in "
                          "benchmarks/quant_bench.py")
+    ap.add_argument("--goodput-requests", type=int, default=28,
+                    help="goodput scenario trace length (open-loop "
+                         "arrivals; smaller in CI smoke)")
+    ap.add_argument("--goodput-overload", type=float, default=3.0,
+                    help="goodput scenario Poisson rate as a multiple of "
+                         "the calibrated closed-loop capacity")
+    ap.add_argument("--goodput-ttft-slo-ms", type=float, default=0.0,
+                    help="goodput scenario per-request TTFT budget (0 => "
+                         "auto: 3x the calibrated service time)")
     ap.add_argument("--skip-scenarios", action="store_true",
                     help="base trace only (no mixed / chunked scenarios)")
     ap.add_argument("--seed", type=int, default=0)
@@ -479,6 +598,7 @@ def main(argv=None) -> int:
                                  ChunkedPrefillPolicy(args.prefill_chunk))
         spec_rec = spec_workload(cfg, params, args, stats.ar_tok_s)
         prefix_rec = shared_prefix_workload(cfg, params, args)
+        goodput_rec = goodput_workload(cfg, params, args)
         record["scenarios"] = {
             "mixed": mixed,
             "chunked_prefill": {
@@ -492,6 +612,7 @@ def main(argv=None) -> int:
             },
             "spec_decode": spec_rec,
             "shared_prefix": prefix_rec,
+            "goodput": goodput_rec,
         }
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
@@ -542,8 +663,19 @@ def main(argv=None) -> int:
                   f"{'identical' if prefix_rec['tokens_match'] else 'DIVERGED'}")
         else:
             print(f"  shared prefix: skipped ({prefix_rec.get('reason')})")
+        gp = goodput_rec["policies"]
+        print(f"  goodput ({goodput_rec['requests']} req @ "
+              f"{goodput_rec['rate_rps']:.1f} rps = "
+              f"{goodput_rec['overload']:.1f}x capacity, TTFT SLO "
+              f"{goodput_rec['ttft_slo_ms']:.0f}ms): fcfs "
+              f"{gp['fcfs']['goodput_rps']:.2f} -> deadline "
+              f"{gp['deadline']['goodput_rps']:.2f} req/s "
+              f"({gp['deadline']['slo_met']}/{goodput_rec['requests']} met, "
+              f"{gp['deadline']['requests_shed']} shed, "
+              f"{gp['deadline']['requests_degraded']} degraded)")
         problems = check_spec(spec_rec)
         problems += [f"PREFIX: {p}" for p in check_shared_prefix(prefix_rec)]
+        problems += [f"GOODPUT: {p}" for p in check_goodput(goodput_rec)]
         if problems:
             for p in problems:
                 print(f"  SCENARIO CHECK FAILED: {p}", file=sys.stderr)

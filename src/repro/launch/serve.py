@@ -11,10 +11,21 @@ prompt lengths, not padded buckets), plus TTFT / queue-wait percentiles,
 decode-slot occupancy, and prefill bucket hits.
 
 Scheduler/runner split knobs:
-  --policy {fcfs,priority,chunked}   scheduling policy (fcfs = classic)
+  --policy {fcfs,priority,chunked,deadline}
+                                     scheduling policy (fcfs = classic;
+                                     deadline = EDF with SLO shedding and
+                                     degrade, serving/scheduler.py)
   --prefill-chunk N                  chunk budget for --policy chunked
   --task {generate,encode}           decoder AR traffic vs encoder-only
                                      pooled-embedding traffic (EncodeTask)
+  --overlap                          overlapped host loop: dispatch decode
+                                     step N+1 before fetching step N's
+                                     tokens (token-identical to the sync
+                                     loop; engine.py)
+  --deadline-ms MS                   per-request TTFT budget stamped onto
+                                     every generated request (0 = none) —
+                                     the deadline policy schedules, sheds,
+                                     and scores SLO attainment on it
 
 Speculative decoding (serving/spec.py):
   --spec-draft NAME                  turn on speculation: "self" (the
@@ -67,10 +78,12 @@ def build_trace(cfg, args) -> list:
     for uid in range(args.requests):
         n = int(rng.integers(lo, args.prompt_len + 1))
         prompt = rng.integers(0, cfg.vocab, n, dtype=np.int32)
+        deadline = args.deadline_ms or None
         if args.task == "encode":
             reqs.append(EncodeTask(uid=uid, prompt=prompt,
                                    pooling=args.pooling,
-                                   priority=uid % 3))
+                                   priority=uid % 3,
+                                   deadline_ms=deadline))
             continue
         sampling = (SamplingParams(temperature=args.temperature,
                                    top_k=args.top_k, seed=uid)
@@ -80,6 +93,7 @@ def build_trace(cfg, args) -> list:
             prompt=prompt,
             max_new_tokens=args.max_new,
             priority=uid % 3,
+            deadline_ms=deadline,
             sampling=sampling))
     return reqs
 
@@ -99,8 +113,16 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 => greedy")
     ap.add_argument("--top-k", type=int, default=0)
-    ap.add_argument("--policy", choices=("fcfs", "priority", "chunked"),
+    ap.add_argument("--policy",
+                    choices=("fcfs", "priority", "chunked", "deadline"),
                     default="fcfs", help="scheduling policy")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped host loop: dispatch the next decode "
+                         "step before fetching the previous step's tokens "
+                         "(token-identical to the sync loop)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request TTFT SLO budget in ms (0 = no "
+                         "deadline); pairs with --policy deadline")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="chunked prefill token budget (--policy chunked)")
     ap.add_argument("--task", choices=("generate", "encode"),
@@ -165,7 +187,8 @@ def main(argv=None) -> int:
         fuse_epilogues=not args.no_fuse, spec=spec,
         prefix_cache=args.prefix_cache,
         cache_blocks=args.cache_blocks or None,
-        weight_dtype=args.weight_dtype, kv_dtype=args.kv_dtype)
+        weight_dtype=args.weight_dtype, kv_dtype=args.kv_dtype,
+        overlap=args.overlap)
     if (args.policy == "chunked"
             and not engine.runner.supports_chunked):
         print(f"note: {cfg.name} cannot chunk prefills "
@@ -184,7 +207,8 @@ def main(argv=None) -> int:
 
     print(f"served {len(done)} requests in {wall:.2f}s over "
           f"{engine.steps_run} AR steps "
-          f"[policy={args.policy}] "
+          f"[policy={args.policy}"
+          f"{', overlap' if args.overlap else ''}] "
           f"({stats.prefill_compiles} prefill buckets compiled: "
           f"{sorted(stats.bucket_hits)})")
     print(stats.summary())

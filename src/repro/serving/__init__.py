@@ -1,13 +1,16 @@
 from repro.serving.engine import InferenceEngine, ServingEngine
 from repro.serving.kv_cache import BlockAllocator
+from repro.serving.loadgen import (ArrivalSpec, LoadSpec, PromptSpec,
+                                   SLOSpec, TimedTask, arrival_times,
+                                   make_trace, replay)
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.runner import ModelRunner
+from repro.serving.runner import DecodeHandle, ModelRunner
 from repro.serving.sampling import GREEDY, SamplingParams, validate_sampling
-from repro.serving.scheduler import (ChunkedPrefillPolicy, FCFSPolicy,
-                                     PriorityPolicy, SchedulerPolicy,
-                                     make_policy)
+from repro.serving.scheduler import (ChunkedPrefillPolicy, DeadlinePolicy,
+                                     FCFSPolicy, PriorityPolicy,
+                                     SchedulerPolicy, make_policy)
 from repro.serving.spec import (DraftState, SpecConfig, resolve_draft,
                                 spec_support_reason)
-from repro.serving.stats import EngineStats
-from repro.serving.tasks import (EncodeTask, GenerateTask, Request, Task,
-                                 TokenEvent)
+from repro.serving.stats import EngineStats, percentile, percentiles
+from repro.serving.tasks import (EncodeTask, GenerateTask, Rejection,
+                                 Request, Task, TokenEvent, validate_task)

@@ -53,13 +53,13 @@ from typing import Iterator, List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.serving.runner import ModelRunner
+from repro.serving.runner import DecodeHandle, ModelRunner
 from repro.serving.sampling import validate_sampling
 from repro.serving.scheduler import FCFSPolicy, SchedulerPolicy
 from repro.serving.spec import SpecConfig
 from repro.serving.stats import EngineStats
-from repro.serving.tasks import (EncodeTask, GenerateTask, Request, Task,
-                                 TokenEvent)
+from repro.serving.tasks import (EncodeTask, GenerateTask, Rejection,
+                                 Request, Task, TokenEvent, validate_task)
 
 
 class InferenceEngine:
@@ -74,7 +74,8 @@ class InferenceEngine:
                  prefix_cache: bool = False,
                  cache_blocks: Optional[int] = None,
                  weight_dtype: str = "bfloat16",
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 overlap: bool = False):
         # `policy` is the PRECISION policy (pre-split name, kept for
         # back-compat); the scheduling policy is `scheduler`.  `spec`
         # turns on speculative decoding (serving/spec.py): the runner
@@ -90,6 +91,12 @@ class InferenceEngine:
         # channel (models/quantize); `kv_dtype="int8"` stores the paged KV
         # pools int8 with per-block-per-head scales.  Both default to
         # lossless bf16.
+        # `overlap=True` switches to the async overlapped host loop: the
+        # engine dispatches a decode step and runs host-side scheduling /
+        # admission (and, in steady state, even the NEXT dispatch) before
+        # fetching the step's tokens, hiding host work under device time.
+        # Token-identical to the synchronous loop for greedy and sampled
+        # traffic (tests/test_goodput.py).
         self.runner = ModelRunner(cfg, params, batch_size=batch_size,
                                   max_seq=max_seq, mesh=mesh, policy=policy,
                                   min_bucket=min_bucket, paged=paged,
@@ -105,6 +112,13 @@ class InferenceEngine:
         self.encode_batch = encode_batch or batch_size
         self.queue: List[Task] = []
         self.completed: List[Task] = []
+        # requests dropped unserved by the scheduler's shed decision, each
+        # carrying a typed `rejection` (they also appear in `completed` so
+        # run()/generate() callers see every submitted uid resolve)
+        self.shed: List[Task] = []
+        self.overlap = overlap
+        self._pending: Optional[DecodeHandle] = None
+        self._degrade = 0                  # current scheduler degrade level
         self._stats = self._fresh_stats()
         self._prefix_base = self._prefix_snapshot()
         self._t_last_decode: Optional[float] = None
@@ -171,6 +185,9 @@ class InferenceEngine:
     # -- admission -----------------------------------------------------
     def submit(self, task: Task):
         """Queue a GenerateTask (alias: Request) or EncodeTask."""
+        # re-validate priority/deadline at submit: construction validated
+        # too, but tasks can be mutated or dataclasses.replace'd since
+        validate_task(task)
         n = len(task.prompt)
         if isinstance(task, EncodeTask):
             cap = self.runner.max_seq - self.runner._n_prefix
@@ -209,10 +226,46 @@ class InferenceEngine:
         task.queue_wait_ms = (time.perf_counter() - task._t_submit) * 1e3
         self._stats.add_queue_wait_ms(task.queue_wait_ms)
 
+    def _chunk_budget(self) -> Optional[int]:
+        """The per-step chunked-prefill token budget at the current
+        degrade level (DeadlinePolicy halves it under pressure; chunk
+        width only moves prefill FLOPs in time, never changes tokens)."""
+        return self.scheduler.effective_chunk_tokens(self._degrade)
+
     def _chunkable(self, task: GenerateTask) -> bool:
-        ct = self.scheduler.chunk_tokens
+        ct = self._chunk_budget()
         return (ct is not None and self.runner.supports_chunked
                 and self.runner.full_len(task) > ct)
+
+    def _note_admitted(self, task: Task):
+        """Degrade ladder, per-request half: a generate task admitted
+        while the scheduler reports pressure is served without speculation
+        (spec_lookahead proposes 0 for it — exact, just no lookahead).
+        The flag is sticky: 'admitted under pressure' stays true for the
+        request's lifetime."""
+        if (self._degrade > 0 and isinstance(task, GenerateTask)
+                and self.runner.spec is not None and not task.degraded):
+            task.degraded = True
+            self._stats.requests_degraded += 1
+
+    def _shed_expired(self):
+        """Drop queued requests whose SLO the policy proves unattainable:
+        each gets a typed Rejection, done=True, and lands in both `shed`
+        and `completed` unserved — capacity goes to requests that can
+        still meet their deadline."""
+        cands = self.scheduler.shed_candidates(self.queue,
+                                               time.perf_counter())
+        for task in cands:
+            self.queue.remove(task)
+            task.rejection = Rejection(
+                "slo_unattainable",
+                f"deadline_ms={task.deadline_ms:.1f} already exceeded "
+                f"after {task.age_s() * 1e3:.1f}ms in queue "
+                f"(policy={self.scheduler.name})")
+            task.done = True
+            self.shed.append(task)
+            self.completed.append(task)
+            self._stats.record_shed(task)
 
     def _next_group(self, order: List[GenerateTask], max_n: int):
         """The next whole-prompt admission group: up to `max_n` tasks
@@ -284,7 +337,8 @@ class InferenceEngine:
                     self.queue.remove(head)
                     if not head.output:
                         self._first_admission(head)
-                    ct = self.scheduler.chunk_tokens
+                    self._note_admitted(head)
+                    ct = self._chunk_budget()
                     suffix = runner.full_len(head) - head.prefilled
                     if ct is not None and suffix > ct:
                         # over the chunk budget: stays parked, the budget
@@ -307,6 +361,7 @@ class InferenceEngine:
                 self.queue.remove(head)
                 if not head.output:
                     self._first_admission(head)
+                self._note_admitted(head)
                 runner.begin_chunked(head, blk, free[0])
                 admitted += 1
                 continue
@@ -317,6 +372,7 @@ class InferenceEngine:
                 self.queue.remove(task)
                 if not task.output:
                     self._first_admission(task)
+                self._note_admitted(task)
             fresh.extend(runner.prefill(group, free, self._stats))
             admitted += len(group)
 
@@ -340,32 +396,84 @@ class InferenceEngine:
             self._first_admission(task)
         runner.encode(group, self._stats)
         for task in group:
+            self._stats.record_slo(task)
             self.completed.append(task)
             self._stats.requests_completed += 1
         return len(group)
 
     # -- retirement ------------------------------------------------------
-    def _retire(self):
+    def _retire(self, skip=()):
+        """Release finished decode slots.  `skip` holds slot indices with
+        an UNCOMMITTED in-flight decode step (overlapped loop): their
+        output/pos lag by one token, so the finished-check would both
+        misjudge and drop the flying token — they retire after commit."""
         runner = self.runner
         pos = np.asarray(runner.pos)
         for b, task in enumerate(runner.slots):
-            if task is None or runner.prefilling[b]:
+            if task is None or runner.prefilling[b] or b in skip:
                 continue
             tok = task.output[-1]
             if (len(task.output) >= task.max_new_tokens
                     or (task.eos_id is not None and tok == task.eos_id)
                     or int(pos[b]) >= self.runner.max_seq - 1):
                 task.done = True
+                now = time.perf_counter()
+                task.latency_ms = (now - task._t_submit) * 1e3
+                n = len(task.output)
+                task.tpot_ms = ((task.latency_ms - task.ttft_ms) / (n - 1)
+                                if n > 1 else 0.0)
+                if n > 1:
+                    self._stats.add_tpot_ms(task.tpot_ms)
+                self._stats.record_slo(task)
                 self.completed.append(task)
                 self._stats.requests_completed += 1
                 runner.release_slot(b)
 
     # -- engine loop ------------------------------------------------------
     def step(self) -> List[TokenEvent]:
-        """One engine iteration: encode batch -> admit -> chunk advance ->
-        AR step -> retire.  Returns the TokenEvents produced (prefill
-        first-tokens + decoded tokens), with `is_last` resolved against
-        retirement."""
+        """One engine iteration: encode batch -> shed -> admit -> chunk
+        advance -> AR step -> retire.  Returns the TokenEvents produced
+        (prefill first-tokens + decoded tokens), with `is_last` resolved
+        against retirement.  With overlap=True the AR step's token fetch
+        is deferred into the NEXT iteration so host scheduling work runs
+        while the device computes (token-identical either way)."""
+        self._shed_expired()
+        self._degrade = self.scheduler.degrade_level(
+            len(self._gen_queue()), self.runner.B)
+        if self.overlap:
+            return self._step_overlapped()
+        return self._step_sync()
+
+    def _advance_chunks(self, fresh: List):
+        """Chunked-prefill advancement under a per-STEP token budget: the
+        point of chunking is bounding the prefill work between two decode
+        steps, so the budget is shared across prefilling slots (oldest
+        admitted first), not per-slot — several long admissions in flight
+        still cost at most ~chunk_tokens before the next AR step."""
+        runner = self.runner
+        ct = self._chunk_budget()
+        budget = ct or 0
+        for task in sorted((runner.slots[b] for b in range(runner.B)
+                            if runner.slots[b] is not None
+                            and runner.prefilling[b]),
+                           key=lambda t: t._seq):
+            if budget <= 0:
+                break
+            ev = runner.chunk_step(task, ct, self._stats)
+            # every call costs one full compiled chunk_tokens-wide pass
+            # (short final chunks are padded), so the budget is spent per
+            # CALL, not per true token — with budget == chunk_tokens that
+            # is exactly one chunk pass between AR steps
+            budget -= ct
+            if ev is not None:
+                fresh.append(ev)
+
+    def _token_events(self, fresh: List) -> List[TokenEvent]:
+        return [TokenEvent(task.uid, task.output[i],
+                           task.done and i == len(task.output) - 1)
+                for task, i in fresh]
+
+    def _step_sync(self) -> List[TokenEvent]:
         runner = self.runner
         fresh: List = []                  # (task, output index) pairs
         self._run_encode()
@@ -382,28 +490,8 @@ class InferenceEngine:
                 break
             if not admitted and len(self.completed) == n_done:
                 break
-        # chunked-prefill advancement under a per-STEP token budget: the
-        # point of chunking is bounding the prefill work between two decode
-        # steps, so the budget is shared across prefilling slots (oldest
-        # admitted first), not per-slot — several long admissions in flight
-        # still cost at most ~chunk_tokens before the next AR step.  Then
-        # retire (the final chunk's token may end the request outright).
-        budget = self.scheduler.chunk_tokens or 0
-        for task in sorted((runner.slots[b] for b in range(runner.B)
-                            if runner.slots[b] is not None
-                            and runner.prefilling[b]),
-                           key=lambda t: t._seq):
-            if budget <= 0:
-                break
-            ev = runner.chunk_step(task, self.scheduler.chunk_tokens,
-                                   self._stats)
-            # every call costs one full compiled chunk_tokens-wide pass
-            # (short final chunks are padded), so the budget is spent per
-            # CALL, not per true token — with budget == chunk_tokens that
-            # is exactly one chunk pass between AR steps
-            budget -= self.scheduler.chunk_tokens
-            if ev is not None:
-                fresh.append(ev)
+        self._advance_chunks(fresh)
+        # retire before decode: the final chunk's token may end its request
         self._retire()
         if runner.decoding_slots():
             victim = lambda running: self.scheduler.select_victim(
@@ -430,12 +518,118 @@ class InferenceEngine:
                 self._retire()
         if not runner.decoding_slots():
             self._t_last_decode = None    # idle gaps are not decode stalls
-        return [TokenEvent(task.uid, task.output[i],
-                           task.done and i == len(task.output) - 1)
-                for task, i in fresh]
+        return self._token_events(fresh)
+
+    # -- async overlapped loop (overlap=True) ----------------------------
+    def _pending_slots(self):
+        return (frozenset(b for b, _ in self._pending.decoding)
+                if self._pending is not None else frozenset())
+
+    def _commit_pending(self, fresh: List):
+        """Fetch the in-flight step's tokens.  Everything the engine did
+        since its dispatch — encode, admission, chunk advancement, even the
+        next dispatch — ran while the device computed it; that hidden host
+        wall is the overlap win (`host_overlap_ratio`)."""
+        handle = self._pending
+        self._pending = None
+        self._stats.overlap_host_s += max(
+            0.0, time.perf_counter() - handle.t0)
+        self._stats.overlapped_steps += 1
+        fresh.extend(self.runner.decode_commit(handle, self._stats))
+        self._t_last_decode = time.perf_counter()
+
+    def _fast_dispatch_ok(self) -> bool:
+        """True when the NEXT decode step may be dispatched BEFORE the
+        pending step's tokens are fetched — the double-buffered steady
+        state.  Requires proving, from host mirrors alone, that the
+        pending commit cannot change any scheduling state: no retirement
+        is possible (no eos watch, output budget and sequence horizon not
+        at their last token) and every decoding slot already owns its next
+        write block exclusively (no allocation, no preemption, no COW).
+        Sampled traffic needs no special-casing: lanes sample inside the
+        step keyed by (seed, position), independent of neighbors."""
+        runner = self.runner
+        if (runner.spec is not None          # acceptance is data-dependent
+                or runner._tok_dev is None   # host token write intervened
+                or self.queue                # admission may reseat slots
+                or any(runner.prefilling)):  # chunk landing writes tokens
+            return False
+        pend = self._pending.decoding
+        if not pend:
+            return False
+        for b, task in pend:
+            if task.eos_id is not None:
+                return False     # the flying token may be EOS
+            if len(task.output) + 1 >= task.max_new_tokens:
+                return False     # commit reaches the output budget
+            if int(runner.pos[b]) >= runner.max_seq - 1:
+                return False     # commit reaches the sequence horizon
+            if not runner.next_token_block_ready(b):
+                return False     # needs allocator/COW work first
+        return True
+
+    def _step_overlapped(self) -> List[TokenEvent]:
+        runner = self.runner
+        fresh: List = []
+        if self._pending is not None and self._fast_dispatch_ok():
+            # steady-state fast path: dispatch step N+1 chained on step
+            # N's device-side token future, THEN fetch N's tokens — the
+            # device never waits for the host round-trip.  No retirement
+            # or admission is possible by _fast_dispatch_ok construction.
+            nxt = runner.decode_dispatch()
+            self._commit_pending(fresh)
+            self._pending = nxt
+            return self._token_events(fresh)
+        # regular path: run every piece of host + non-decode device work
+        # that cannot disturb the in-flight step BEFORE fetching its
+        # tokens (encode batches, admission prefills and chunk advancement
+        # chain device-side behind it; pending slots are skipped by
+        # retirement until the commit lands their token)
+        self._run_encode()
+        pend = self._pending_slots()
+        self._admit(fresh)
+        self._retire(skip=pend)
+        self._advance_chunks(fresh)
+        if self._pending is not None:
+            self._commit_pending(fresh)
+        self._retire()
+        # settle: slots freed by retirement admit more work this step,
+        # exactly like the synchronous loop's admit/retire cycle
+        while True:
+            n_done = len(self.completed)
+            admitted = self._admit(fresh)
+            self._retire()
+            if not self._gen_queue() or not runner.free_slots():
+                break
+            if not admitted and len(self.completed) == n_done:
+                break
+        if runner.decoding_slots():
+            victim = lambda running: self.scheduler.select_victim(
+                running, time.perf_counter())
+            la = runner.spec_lookahead() if runner.spec else None
+            for task in runner.ensure_decode_blocks(victim, self._stats,
+                                                    lookahead=la):
+                self.queue.insert(0, task)
+            if runner.decoding_slots():
+                t0 = time.perf_counter()
+                if self._t_last_decode is not None:
+                    self._stats.add_decode_stall_ms(
+                        (t0 - self._t_last_decode) * 1e3)
+                if runner.spec:
+                    # speculation never pipelines: the round's commit /
+                    # rollback depends on how many proposals verify
+                    fresh.extend(runner.spec_decode(self._stats))
+                    self._t_last_decode = time.perf_counter()
+                    self._retire()
+                else:
+                    self._pending = runner.decode_dispatch()
+        if not runner.decoding_slots() and self._pending is None:
+            self._t_last_decode = None
+        return self._token_events(fresh)
 
     def has_work(self) -> bool:
-        return bool(self.queue) or self.runner.has_running()
+        return (bool(self.queue) or self.runner.has_running()
+                or self._pending is not None)
 
     def generate(self, max_steps: int = 10_000) -> Iterator[TokenEvent]:
         """Streaming interface: run engine steps until queue + slots drain,

@@ -10,6 +10,10 @@ token/pos state — and exposes exactly four execution verbs:
   chunk_step(task, stats)     advance one chunked-prefill piece for a task
                               parked in a slot (see begin_chunked)
   decode(stats)               one AR step over every *decoding* slot
+                              (= decode_dispatch() + decode_commit(): the
+                              overlapped engine loop splits them, running
+                              host scheduling work — or the next dispatch —
+                              between launch and token fetch)
   spec_decode(stats)          one speculative round (draft proposals ->
                               multi-token verify -> commit/rollback) over
                               every decoding slot, replacing decode() when
@@ -33,6 +37,7 @@ count): what PR 2's paged layout already carries.
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -53,6 +58,21 @@ from repro.serving.spec import (DraftState, SpecConfig, accept_length,
                                 trim_emitted)
 from repro.serving.stats import EngineStats
 from repro.serving.tasks import EncodeTask, GenerateTask, Task
+
+
+@dataclass
+class DecodeHandle:
+    """One in-flight AR step: the device token future plus the host
+    snapshot needed to commit it later.  `decode_dispatch` returns one;
+    `decode_commit` consumes it.  The overlapped engine loop
+    (serving/engine.py, overlap=True) holds at most one pending handle and
+    runs host scheduling work — or even dispatches the NEXT step, chained
+    on `tok_d` device-side — before fetching this one's tokens."""
+    tok_d: object                               # [B] int32 device future
+    t0: float                                   # dispatch wall-clock
+    decoding: List[Tuple[int, GenerateTask]]    # slots this step decoded
+    live_tokens: int                            # post-step pos over decoding
+    blocks_used: int                            # allocator.num_used at dispatch
 
 
 def _device_nbytes(x) -> int:
@@ -235,6 +255,12 @@ class ModelRunner:
         # in the middle of serving.  [B] int32 transfers per step are noise.
         self.tokens = np.zeros((batch_size,), np.int32)
         self.pos = np.zeros((batch_size,), np.int32)
+        # device-side copy of `tokens` chained from the last decode step's
+        # output: a dispatch may feed it straight back into the next step
+        # without a host round-trip.  Any HOST write to a token row
+        # (prefill landing, chunk completion, spec commit) invalidates it.
+        self._tok_dev = None
+        self._t_last_commit: Optional[float] = None
         self.lane = zero_lane(batch_size)
         self.slots: List[Optional[GenerateTask]] = [None] * batch_size
         # slots holding a task whose prompt is still chunk-prefilling: their
@@ -605,6 +631,8 @@ class ModelRunner:
                                     jnp.asarray(tables))
         tok_np = np.asarray(tok)
         self.tokens[slots] = tok_np
+        self._tok_dev = None        # host token write: the chained device
+        #                             copy no longer matches the mirror
         self.pos[slots] = np.asarray(pos_g)
         now = time.perf_counter()
         dt_ms = (now - t0) * 1e3
@@ -743,6 +771,7 @@ class ModelRunner:
         task.bucket = -(-len(full) // chunk_tokens) * chunk_tokens
         task.output.append(tok_np)
         self.tokens[b] = tok_np
+        self._tok_dev = None        # host token write invalidates the chain
         self.pos[b] = pos_np
         self.prefilling[b] = False
         if self.paged:
@@ -759,45 +788,93 @@ class ModelRunner:
         return (task, len(task.output) - 1)
 
     # -- execution: AR decode ------------------------------------------
-    def decode(self, stats: EngineStats) -> List[Tuple[GenerateTask, int]]:
-        """One lockstep AR step over every decoding slot.  Returns the
-        (task, output index) token events."""
+    def decode_dispatch(self) -> DecodeHandle:
+        """Launch one lockstep AR step over every decoding slot WITHOUT
+        waiting for its tokens — JAX async dispatch returns device futures
+        immediately.  The host token/pos mirrors advance eagerly: the
+        compiled step returns `pos + 1` for every row (launch/steps.py), so
+        `self.pos += 1` is exact, and the returned token future is kept as
+        `_tok_dev` so a back-to-back dispatch chains on it device-side
+        instead of re-uploading the host mirror."""
         t0 = time.perf_counter()
-        tok_d = jnp.asarray(self.tokens)
+        tok_in = (self._tok_dev if self._tok_dev is not None
+                  else jnp.asarray(self.tokens))
         pos_d = jnp.asarray(self.pos)
         lane_d = device_lane(self.lane)
         if self.paged:
-            tok_d, pos_d, self.caches = self.decode_step.fn(
-                self.params, tok_d, pos_d, self.caches,
+            tok_d, _, self.caches = self.decode_step.fn(
+                self.params, tok_in, pos_d, self.caches,
                 self._tables(), lane_d)
         else:
-            tok_d, pos_d, self.caches = self.decode_step.fn(
-                self.params, tok_d, pos_d, self.caches, lane_d)
-        toks = np.asarray(tok_d)                  # blocks: honest timing
-        self.tokens = np.array(toks, np.int32)
-        self.pos = np.array(pos_d, np.int32)
-        dt = time.perf_counter() - t0
+            tok_d, _, self.caches = self.decode_step.fn(
+                self.params, tok_in, pos_d, self.caches, lane_d)
+        self._tok_dev = tok_d
+        start_d2h = getattr(tok_d, "copy_to_host_async", None)
+        if start_d2h is not None:
+            start_d2h()     # non-blocking device_get: the commit's fetch
+            #                 finds the bytes already on their way
+        self.pos += 1
         self.steps_run += 1
-        occupied = live_tokens = 0
-        pos_np = np.asarray(self.pos)
+        decoding = [(b, self.slots[b]) for b in self.decoding_slots()]
+        live = sum(int(self.pos[b]) for b, _ in decoding)
+        return DecodeHandle(
+            tok_d, t0, decoding, live,
+            self.allocator.num_used if self.paged else 0)
+
+    def decode_commit(self, handle: DecodeHandle, stats: EngineStats,
+                      ) -> List[Tuple[GenerateTask, int]]:
+        """Fetch a dispatched step's tokens (blocking) and commit them to
+        the host mirrors, task outputs and stats.  Under the overlapped
+        loop the elapsed-time sample is floored at the previous commit so
+        back-to-back pipelined steps don't double-count wall time."""
+        toks = np.asarray(handle.tok_d)           # blocks: honest timing
+        now = time.perf_counter()
+        floor = self._t_last_commit
+        dt = now - (max(handle.t0, floor) if floor is not None
+                    else handle.t0)
+        self._t_last_commit = now
         fresh: List[Tuple[GenerateTask, int]] = []
-        for b, task in enumerate(self.slots):
-            if task is None or self.prefilling[b]:
-                continue
-            occupied += 1
-            live_tokens += int(pos_np[b])
-            task.output.append(int(toks[b]))
+        for b, task in handle.decoding:
+            tok = int(toks[b])
+            if self.slots[b] is task:
+                self.tokens[b] = tok    # mirror update, not a host write:
+                #                         _tok_dev stays valid
+            task.output.append(tok)
             task.decode_ms += dt * 1e3
             fresh.append((task, len(task.output) - 1))
         stats.decode_steps += 1
-        stats.ar_tokens += occupied
+        stats.ar_tokens += len(handle.decoding)
         stats.ar_time_s += dt
         stats.add_decode_step_ms(dt * 1e3)
-        stats.occupied_slot_steps += occupied
+        stats.occupied_slot_steps += len(handle.decoding)
         if self.paged:
-            stats.block_slot_steps += self.allocator.num_used
-            stats.token_slot_steps += live_tokens
+            stats.block_slot_steps += handle.blocks_used
+            stats.token_slot_steps += handle.live_tokens
         return fresh
+
+    def decode(self, stats: EngineStats) -> List[Tuple[GenerateTask, int]]:
+        """One lockstep AR step over every decoding slot (synchronous:
+        dispatch + immediate commit).  Returns the (task, output index)
+        token events."""
+        return self.decode_commit(self.decode_dispatch(), stats)
+
+    def next_token_block_ready(self, b: int) -> bool:
+        """Whether decoding slot `b` can take one MORE decode step with no
+        allocator/COW work: it already owns the block position `pos[b]`
+        writes into, and (under prefix sharing) owns it exclusively.  The
+        overlapped loop's dispatch-ahead fast path requires this — it runs
+        before `ensure_decode_blocks` would."""
+        if not self.paged:
+            return True
+        bs = self.layout.block_size
+        need = int(self.pos[b]) // bs + 1
+        if len(self._slot_blocks[b]) < need:
+            return False
+        if self.prefix_cache is not None:
+            blk = self._slot_blocks[b][need - 1]
+            if self.allocator.refcount(blk) > 1:
+                return False
+        return True
 
     def decoding_slots(self) -> List[int]:
         return [b for b in range(self.B)
@@ -815,12 +892,18 @@ class ModelRunner:
         tokens, so proposing past room - 1 would reserve blocks — and
         possibly preempt a neighbor for them — that trim_emitted then
         discards; capping cannot change outputs, each position's verify
-        choice being independent of how many proposals follow it)."""
+        choice being independent of how many proposals follow it).
+        Requests admitted degraded (DeadlinePolicy under pressure) get 0
+        lookahead — their rounds propose nothing and commit exactly the
+        pending token, i.e. plain decode at verify-step cost, still
+        token-identical (speculation is lossless at every k)."""
         la = np.zeros((self.B,), np.int64)
         cap_tokens = self.allocator.num_blocks * self.layout.block_size
         for b in self.decoding_slots():
             p = int(self.pos[b])
             task = self.slots[b]
+            if task.degraded:
+                continue
             room = task.max_new_tokens - len(task.output)
             la[b] = max(0, min(self.spec.k, self.max_seq - 1 - p,
                                cap_tokens - 1 - p, room - 1))
@@ -927,6 +1010,7 @@ class ModelRunner:
             emitted_total += m
             pos_new = int(pos0[b]) + m
             self.tokens[b] = emitted[-1]
+            self._tok_dev = None    # host token write invalidates the chain
             self.pos[b] = pos_new
             task.decode_ms += dt * 1e3
             live_tokens += pos_new

@@ -18,6 +18,16 @@ whether long prompts prefill whole or in token-budget chunks — lives behind
                         state in the paged block tables), so admitting a
                         long prompt never stalls running AR slots for the
                         whole prefill.
+  DeadlinePolicy        earliest-deadline-first over `deadline_ms` slack,
+                        plus the two goodput levers the engine exposes:
+                        SHED queued requests whose TTFT deadline is already
+                        provably unattainable (typed Rejection instead of a
+                        guaranteed-miss serve), and DEGRADE under queue
+                        pressure (speculation off for newly admitted
+                        requests, chunk budget halved) before shedding.
+                        Degrade never changes tokens — speculation is
+                        lossless and chunk width only moves prefill FLOPs
+                        in time.
 
 Policies are pure ordering/selection logic over host-side `Task` objects —
 they never touch device state, steps, or caches, which is what makes them
@@ -71,6 +81,24 @@ class SchedulerPolicy(ABC):
         Default: the most recently admitted (youngest) — it has the least
         decode progress to recompute."""
         return max(running, key=lambda t: t._seq)
+
+    # -- goodput hooks (no-ops outside DeadlinePolicy) ------------------
+    def shed_candidates(self, queue: Sequence[Task],
+                        now: float) -> List[Task]:
+        """Queued tasks to drop with a typed Rejection because their SLO
+        is provably unattainable.  Default: never shed."""
+        return []
+
+    def degrade_level(self, n_queued: int, n_slots: int) -> int:
+        """0 = full service; >= 1 = the engine should degrade (disable
+        speculation for newly admitted requests, shrink the chunk budget)
+        before any shedding.  Default: never degrade."""
+        return 0
+
+    def effective_chunk_tokens(self, level: int) -> Optional[int]:
+        """The chunk budget at a given degrade level (None = whole-prompt
+        prefill regardless of level)."""
+        return self.chunk_tokens
 
 
 class FCFSPolicy(SchedulerPolicy):
@@ -132,10 +160,81 @@ class ChunkedPrefillPolicy(FCFSPolicy):
         self.chunk_tokens = chunk_tokens
 
 
+class DeadlinePolicy(SchedulerPolicy):
+    """Earliest-deadline-first scheduling with load shedding and degrade —
+    the goodput policy (requests/s meeting their SLO, not raw throughput).
+
+    Admission runs in ascending `slack_ms` = deadline_ms - age (tightest
+    deadline first; no-deadline tasks have infinite slack and keep arrival
+    order after every deadlined task).  Preemption evicts the MOST slack
+    (an undeadlined or far-from-deadline task loses the least goodput to a
+    recompute).  Both are stable, so equal-deadline traffic degenerates to
+    exact FCFS.
+
+    shed: a queued request that has not produced its first token and whose
+    `age + ttft_floor_ms` already exceeds its deadline can no longer meet
+    its TTFT SLO under ANY schedule — serving it burns prefill + decode
+    capacity on a guaranteed miss, starving requests that could still win.
+    With the default floor of 0 this is pure expiry (provable with zero
+    assumptions about service time); a measured floor sheds earlier.
+
+    degrade: once the generate backlog exceeds `degrade_depth` requests per
+    decode slot, newly admitted requests are served degraded — speculation
+    disabled (per request) and the chunk budget halved (engine-wide) — to
+    shrink per-step latency variance before any shedding.  Tokens never
+    change: speculation is exact (serving/spec.py) and chunk width only
+    moves prefill FLOPs in time."""
+
+    name = "deadline"
+
+    def __init__(self, chunk_tokens: Optional[int] = None,
+                 shed: bool = True, ttft_floor_ms: float = 0.0,
+                 degrade_depth: float = 2.0):
+        assert ttft_floor_ms >= 0, ttft_floor_ms
+        assert degrade_depth >= 0, degrade_depth
+        self.chunk_tokens = chunk_tokens
+        self.shed = shed
+        self.ttft_floor_ms = ttft_floor_ms
+        self.degrade_depth = degrade_depth
+
+    def admission_order(self, queue: Sequence[Task],
+                        now: float) -> List[Task]:
+        # stable: equal slack (and the all-inf no-deadline tail) keeps
+        # arrival order
+        return sorted(queue, key=lambda t: t.slack_ms(now))
+
+    def select_victim(self, running: Sequence[Task], now: float) -> Task:
+        # evict the most slack; among equals the youngest (least decode
+        # progress lost to the recompute)
+        return max(running, key=lambda t: (t.slack_ms(now), t._seq))
+
+    def shed_candidates(self, queue: Sequence[Task],
+                        now: float) -> List[Task]:
+        if not self.shed:
+            return []
+        # `output` non-empty means the first token was already produced
+        # (a preemption re-queue): its TTFT is decided, shedding it now
+        # throws away real progress for no SLO gain
+        return [t for t in queue
+                if t.deadline_ms is not None
+                and not getattr(t, "output", None)
+                and t.age_s(now) * 1e3 + self.ttft_floor_ms > t.deadline_ms]
+
+    def degrade_level(self, n_queued: int, n_slots: int) -> int:
+        return 1 if n_queued > self.degrade_depth * max(1, n_slots) else 0
+
+    def effective_chunk_tokens(self, level: int) -> Optional[int]:
+        if self.chunk_tokens is None or level <= 0:
+            return self.chunk_tokens
+        # halved, floored: a tiny chunk step is all padding overhead
+        return max(8, self.chunk_tokens // 2)
+
+
 POLICIES = {
     "fcfs": FCFSPolicy,
     "priority": PriorityPolicy,
     "chunked": ChunkedPrefillPolicy,
+    "deadline": DeadlinePolicy,
 }
 
 
@@ -149,6 +248,8 @@ def make_policy(name: str, *, chunk_tokens: Optional[int] = None,
         p = PriorityPolicy(aging_s=aging_s)
     elif name == "chunked":
         p = ChunkedPrefillPolicy(chunk_tokens or 32)
+    elif name == "deadline":
+        p = DeadlinePolicy(chunk_tokens=chunk_tokens)
     else:
         raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}")
     p.cache_aware = cache_aware

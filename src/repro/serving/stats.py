@@ -25,6 +25,19 @@ def percentile(values: List[float], q: float) -> float:
     return s[rank]
 
 
+def percentiles(values: List[float],
+                qs=(50, 95, 99)) -> Dict[str, float]:
+    """{"p50": ..., "p95": ..., "p99": ...} in one sorted pass — THE
+    percentile helper for stats properties, benchmarks and the load
+    harness (replaces the per-call-site hand-rolled p50/p95 math)."""
+    if not values:
+        return {f"p{q:g}": 0.0 for q in qs}
+    s = sorted(values)
+    hi = len(s) - 1
+    return {f"p{q:g}": s[max(0, min(hi, int(round(q / 100.0 * hi))))]
+            for q in qs}
+
+
 # Latency samples kept per metric: percentiles are computed over a sliding
 # recent window so a long-lived engine doesn't grow its stats without bound.
 MAX_SAMPLES = 4096
@@ -98,6 +111,22 @@ class EngineStats:
     kv_dtype: str = "bfloat16"      # paged-pool storage ("int8" = quantized)
     weight_bytes_per_device: int = 0  # resident param bytes (one device)
     kv_pool_bytes: int = 0            # resident cache bytes (one device)
+    # -- goodput / SLO (serving/loadgen.py, DeadlinePolicy) ------------------
+    slo_requests: int = 0          # finished requests that carried an SLO
+    slo_met: int = 0               # of those, TTFT and TPOT budgets both met
+    requests_shed: int = 0         # dropped unserved (SLO provably missed)
+    requests_degraded: int = 0     # served with speculation disabled /
+    #                                chunk budget shrunk (tokens unchanged)
+    # TTFT / deadline per SLO'd request (< 1.0 = met); attainment
+    # percentiles come from this window
+    ttft_slo_ratio: List[float] = field(default_factory=list)
+    tpot_ms_samples: List[float] = field(default_factory=list)
+    # -- async overlapped host loop (engine overlap=True) --------------------
+    overlapped_steps: int = 0      # decode steps whose token fetch was
+    #                                deferred past host scheduling work
+    overlap_host_s: float = 0.0    # host wall spent between dispatching a
+    #                                step and fetching its tokens — work
+    #                                hidden under device time
 
     # -- recorders (bounded: percentiles cover the recent MAX_SAMPLES) ------
     def add_ttft_ms(self, v: float) -> None:
@@ -117,6 +146,37 @@ class EngineStats:
 
     def add_draft_time_ms(self, v: float) -> None:
         _bounded_append(self.draft_time_ms, v)
+
+    def add_tpot_ms(self, v: float) -> None:
+        _bounded_append(self.tpot_ms_samples, v)
+
+    def record_slo(self, task) -> None:
+        """Score a finished task against its SLOs at retirement: TTFT vs
+        `deadline_ms` (EncodeTasks score their end-to-end latency — their
+        only response IS the first response) and mean TPOT vs
+        `slo_tpot_ms`.  No-op for tasks that carry no SLO."""
+        dl = getattr(task, "deadline_ms", None)
+        tpot_budget = getattr(task, "slo_tpot_ms", None)
+        if dl is None and tpot_budget is None:
+            return
+        self.slo_requests += 1
+        met = True
+        if dl is not None:
+            ttft = getattr(task, "ttft_ms", 0.0) or task.latency_ms
+            _bounded_append(self.ttft_slo_ratio, ttft / dl)
+            met = met and ttft <= dl
+        if tpot_budget is not None and len(getattr(task, "output", ())) > 1:
+            met = met and task.tpot_ms <= tpot_budget
+        if met:
+            self.slo_met += 1
+
+    def record_shed(self, task) -> None:
+        """Account a shed request: counted against SLO attainment (an SLO
+        the engine refused to attempt is an SLO missed)."""
+        self.requests_shed += 1
+        if (getattr(task, "deadline_ms", None) is not None
+                or getattr(task, "slo_tpot_ms", None) is not None):
+            self.slo_requests += 1
 
     # -- derived ------------------------------------------------------------
     @property
@@ -185,6 +245,27 @@ class EngineStats:
     @property
     def ttft_p95_ms(self) -> float:
         return percentile(self.ttft_ms, 95)
+
+    @property
+    def ttft_p99_ms(self) -> float:
+        return percentile(self.ttft_ms, 99)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of SLO-carrying requests that met every budget
+        (shed requests count as missed)."""
+        if not self.slo_requests:
+            return 0.0
+        return self.slo_met / self.slo_requests
+
+    @property
+    def host_overlap_ratio(self) -> float:
+        """Fraction of AR decode wall during which the host was doing
+        scheduling/admission work concurrently with an in-flight device
+        step (0.0 under the synchronous loop)."""
+        if not self.ar_time_s:
+            return 0.0
+        return min(1.0, self.overlap_host_s / self.ar_time_s)
 
     @property
     def queue_wait_p50_ms(self) -> float:
@@ -280,6 +361,19 @@ class EngineStats:
             "draft_time_ms_p95": self.draft_time_ms_p95,
             "ttft_p50_ms": self.ttft_p50_ms,
             "ttft_p95_ms": self.ttft_p95_ms,
+            "ttft_p99_ms": self.ttft_p99_ms,
+            "slo_requests": self.slo_requests,
+            "slo_met": self.slo_met,
+            "slo_attainment": self.slo_attainment,
+            "requests_shed": self.requests_shed,
+            "requests_degraded": self.requests_degraded,
+            **{f"ttft_slo_ratio_{k}": v
+               for k, v in percentiles(self.ttft_slo_ratio).items()},
+            **{f"tpot_{k}_ms": v
+               for k, v in percentiles(self.tpot_ms_samples).items()},
+            "overlapped_steps": self.overlapped_steps,
+            "overlap_host_s": self.overlap_host_s,
+            "host_overlap_ratio": self.host_overlap_ratio,
             "queue_wait_p50_ms": self.queue_wait_p50_ms,
             "queue_wait_p95_ms": self.queue_wait_p95_ms,
             "decode_step_p50_ms": self.decode_step_p50_ms,
@@ -337,6 +431,18 @@ class EngineStats:
             quant = (f" | QUANT w={self.weight_dtype} kv={self.kv_dtype}, "
                      f"params {self.weight_bytes_per_device / 2**20:.1f}MiB, "
                      f"pool {self.kv_pool_bytes / 2**20:.1f}MiB")
+        slo = ""
+        if self.slo_requests or self.requests_shed:
+            r = percentiles(self.ttft_slo_ratio)
+            slo = (f" | SLO {self.slo_attainment:.0%} met "
+                   f"({self.slo_met}/{self.slo_requests}, "
+                   f"ttft/deadline p50 {r['p50']:.2f} p99 {r['p99']:.2f}), "
+                   f"{self.requests_shed} shed, "
+                   f"{self.requests_degraded} degraded")
+        ovl = ""
+        if self.overlapped_steps:
+            ovl = (f" | OVERLAP {self.overlapped_steps} steps, "
+                   f"{self.host_overlap_ratio:.0%} host hidden")
         prefix = ""
         if self.prefix_lookups:
             prefix = (f" | PREFIX {self.prefix_cache_hit_rate:.0%} hit, "
@@ -349,4 +455,4 @@ class EngineStats:
                 f"occupancy {self.slot_occupancy:.0%}) | "
                 f"TTFT p50 {self.ttft_p50_ms:.0f}ms p95 "
                 f"{self.ttft_p95_ms:.0f}ms"
-                + enc + chunk + spec + quant + prefix + pool)
+                + enc + chunk + spec + quant + slo + ovl + prefix + pool)

@@ -12,11 +12,17 @@ decides *when* it runs and the `ModelRunner` (serving/runner.py) decides
                  embedding — no KV cache, no decode slot, no AR steps.
 
 Both carry `priority` (higher = more urgent; only PriorityPolicy looks at
-it) and `deadline_ms` (advisory latency budget from submission; exposed to
-policies for deadline-aware ordering, never enforced by the engine).
+it) and `deadline_ms` (TTFT latency budget from submission: DeadlinePolicy
+orders admission by deadline slack and sheds requests that provably cannot
+meet it — see serving/scheduler.py; other policies treat it as advisory).
+GenerateTasks additionally carry `slo_tpot_ms`, a per-output-token budget
+checked at retirement for SLO-attainment accounting (never scheduled on).
+Unservable values fail loudly: `validate_task` runs at construction AND at
+`Engine.submit`, mirroring sampling.validate_sampling.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import List, Optional
@@ -24,6 +30,49 @@ from typing import List, Optional
 import numpy as np
 
 from repro.serving.sampling import SamplingParams
+
+
+def validate_task(task: "Task") -> None:
+    """Reject unservable `priority` / `deadline_ms` / `slo_tpot_ms` values
+    with a clear ValueError instead of silently accepting them (a NaN
+    priority poisons every policy sort; a zero/negative deadline would shed
+    instantly).  Called from Task.__post_init__ AND Engine.submit — the
+    latter covers tasks mutated or `dataclasses.replace`d after
+    construction."""
+    try:
+        p = float(task.priority)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"priority must be a real number (higher = more urgent): "
+            f"{task.priority!r}")
+    if math.isnan(p) or math.isinf(p):
+        raise ValueError(
+            f"priority must be finite (NaN/inf break policy ordering): "
+            f"{task.priority!r}")
+    for name in ("deadline_ms", "slo_tpot_ms"):
+        v = getattr(task, name, None)
+        if v is None:
+            continue
+        try:
+            f = float(v)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"{name} must be a positive finite millisecond budget "
+                f"or None (no SLO): {v!r}")
+        if math.isnan(f) or math.isinf(f) or f <= 0:
+            raise ValueError(
+                f"{name} must be > 0 and finite; got {v!r} "
+                f"(use None for no SLO — 0 would mean 'already missed')")
+
+
+@dataclass(frozen=True)
+class Rejection:
+    """Typed reason a request was shed instead of served.  Attached to
+    `task.rejection` (with `done=True`, empty output) when the scheduler
+    proves the SLO unattainable and the engine drops the request rather
+    than burn prefill/decode capacity on a guaranteed miss."""
+    kind: str       # machine-readable, e.g. "slo_unattainable"
+    detail: str     # human-readable explanation
 
 
 def _require_keyword_prompt(task: "Task") -> None:
@@ -53,6 +102,9 @@ class Task:
     bucket: int = 0                     # padded batch length (set at admit)
     queue_wait_ms: float = 0.0          # submit -> first admission
     done: bool = False
+    # set (with done=True) when the scheduler sheds this request instead of
+    # serving it; None for every served request
+    rejection: Optional[Rejection] = None
     _t_submit: float = field(default=0.0, repr=False)
     _seq: int = field(default=0, repr=False)   # admission order (preemption)
 
@@ -60,6 +112,13 @@ class Task:
         """Seconds this task has been waiting since submission."""
         return max(0.0, (now if now is not None else time.perf_counter())
                    - self._t_submit)
+
+    def slack_ms(self, now: Optional[float] = None) -> float:
+        """Milliseconds of deadline budget left (negative = already
+        missed); +inf when the task has no deadline."""
+        if self.deadline_ms is None:
+            return math.inf
+        return self.deadline_ms - self.age_s(now) * 1e3
 
 
 @dataclass
@@ -70,11 +129,20 @@ class GenerateTask(Task):
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     sampling: SamplingParams = field(default_factory=SamplingParams)
+    # per-output-token latency budget (TPOT SLO, ms/token beyond the
+    # first); checked at retirement for goodput accounting, never scheduled
+    slo_tpot_ms: Optional[float] = None
     # filled by the engine:
     output: List[int] = field(default_factory=list)
     prefill_ms: float = 0.0             # amortized share of group prefills
     decode_ms: float = 0.0
     ttft_ms: float = 0.0                # submit -> first token
+    latency_ms: float = 0.0             # submit -> retirement (e2e)
+    tpot_ms: float = 0.0                # (latency - ttft) / (tokens - 1)
+    # True once the engine served this request in degraded mode (admitted
+    # under pressure: speculation off for this request, chunk budget
+    # shrunk engine-wide) — degrade never changes tokens, only latency
+    degraded: bool = False
     # chunked-prefill progress: prompt tokens whose KV is already in the
     # cache (0 = not admitted / whole-prompt prefill; == full length once
     # the final chunk lands and the first token is sampled)
@@ -86,6 +154,7 @@ class GenerateTask(Task):
 
     def __post_init__(self):
         _require_keyword_prompt(self)
+        validate_task(self)
 
     def remaining_prefill(self) -> int:
         return self.prompt_len + len(self.output) - self.prefilled
@@ -109,6 +178,7 @@ class EncodeTask(Task):
 
     def __post_init__(self):
         _require_keyword_prompt(self)
+        validate_task(self)
         if self.pooling not in ("last", "mean"):
             raise ValueError(f"pooling must be 'last' or 'mean': "
                              f"{self.pooling!r}")

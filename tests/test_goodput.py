@@ -1,0 +1,429 @@
+"""Goodput engine: loadgen determinism + seed independence, task SLO
+validation, the percentiles helper, DeadlinePolicy ordering/shed/degrade
+properties, and the overlapped host loop's token-identity guarantee.
+
+Trace and policy properties are pure host-side logic (no model); the
+end-to-end checks run the reduced phi4 config on one device like
+tests/test_scheduler.py.  The load-bearing invariant throughout: nothing
+in this subsystem — overlap, degrade, scheduling order, traffic seed —
+may ever change a request's sampled tokens.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import FP32
+from repro.models import lm
+from repro.serving import (ArrivalSpec, ChunkedPrefillPolicy, DeadlinePolicy,
+                           EncodeTask, FCFSPolicy, InferenceEngine, LoadSpec,
+                           PromptSpec, Request, SamplingParams, SLOSpec,
+                           SpecConfig, arrival_times, make_policy,
+                           make_trace, percentile, percentiles, replay)
+from repro.serving.tasks import GenerateTask, validate_task
+
+
+# --------------------------------------------------------------------------
+# load generator (no model)
+# --------------------------------------------------------------------------
+
+def _spec(n=2000, **kw):
+    kw.setdefault("prompts", PromptSpec(min_len=8, max_len=64,
+                                        tail_alpha=1.5, shared_frac=0.3,
+                                        prefix_len=8, encode_frac=0.2,
+                                        sampled_frac=0.5))
+    kw.setdefault("slo", SLOSpec(ttft_ms=250.0, tpot_ms=50.0))
+    return LoadSpec(requests=n, vocab=1000, **kw)
+
+
+def _fingerprint(trace):
+    return [(tt.t_s, tt.task.uid, type(tt.task).__name__,
+             len(tt.task.prompt), int(tt.task.prompt[0]),
+             int(tt.task.prompt[-1])) for tt in trace]
+
+
+def test_trace_deterministic_at_scale():
+    """Same (spec, seeds, uid0) => identical trace, across thousands of
+    requests mixing encode/generate, shared prefixes, and a long tail."""
+    a = make_trace(_spec(), arrival_seed=7, prompt_seed=3, uid0=100)
+    b = make_trace(_spec(), arrival_seed=7, prompt_seed=3, uid0=100)
+    assert _fingerprint(a) == _fingerprint(b)
+    assert len(a) == 2000
+    assert [tt.task.uid for tt in a] == list(range(100, 2100))
+    assert all(x.t_s <= y.t_s for x, y in zip(a, a[1:]))
+    # the blend actually happened
+    kinds = {type(tt.task).__name__ for tt in a}
+    assert kinds == {"EncodeTask", "GenerateTask"}
+    lens = [len(tt.task.prompt) for tt in a]
+    assert min(lens) >= 8 and max(lens) == 64      # Pareto tail hits cap
+    # every task carries the SLO
+    assert all(tt.task.deadline_ms == 250.0 for tt in a)
+    gens = [tt.task for tt in a if isinstance(tt.task, GenerateTask)]
+    assert all(t.slo_tpot_ms == 50.0 for t in gens)
+
+
+def test_arrival_seed_never_touches_request_content():
+    """Changing the traffic seed reshuffles WHEN requests arrive, never
+    what any request computes: prompts, task classes, and sampling seeds
+    are identical per uid; only the clock moves."""
+    a = make_trace(_spec(200), arrival_seed=0, prompt_seed=5)
+    b = make_trace(_spec(200), arrival_seed=99, prompt_seed=5)
+    assert [tt.t_s for tt in a] != [tt.t_s for tt in b]
+    for x, y in zip(a, b):
+        assert type(x.task) is type(y.task)
+        np.testing.assert_array_equal(x.task.prompt, y.task.prompt)
+        if isinstance(x.task, GenerateTask):
+            assert x.task.sampling == y.task.sampling
+            if x.task.sampling.temperature > 0:
+                # per-request sampling is keyed by uid, not traffic seed
+                assert x.task.sampling.seed == x.task.uid
+
+
+def test_prompt_seed_never_touches_arrival_clock():
+    a = make_trace(_spec(200), arrival_seed=5, prompt_seed=0)
+    b = make_trace(_spec(200), arrival_seed=5, prompt_seed=99)
+    assert [tt.t_s for tt in a] == [tt.t_s for tt in b]
+    assert any(len(x.task.prompt) != len(y.task.prompt)
+               or not np.array_equal(x.task.prompt, y.task.prompt)
+               for x, y in zip(a, b))
+
+
+def test_shared_prefix_requests_share_tokens():
+    trace = make_trace(_spec(300), prompt_seed=1)
+    tasks = [tt.task for tt in trace]
+    heads = {tuple(t.prompt[:8].tolist()) for t in tasks}
+    # one head is the shared prefix, carried by ~30% of the trace
+    counts = sorted((sum(1 for t in tasks
+                         if tuple(t.prompt[:8].tolist()) == h) for h in heads),
+                    reverse=True)
+    assert counts[0] > 50
+
+
+def test_bursty_arrivals_deterministic_and_bounded():
+    spec = ArrivalSpec(kind="bursty", rate_rps=5.0, dwell_s=0.5)
+    rng = np.random.default_rng(4)
+    t1 = arrival_times(spec, 500, np.random.default_rng(4))
+    t2 = arrival_times(spec, 500, rng)
+    np.testing.assert_array_equal(t1, t2)
+    assert np.all(np.diff(t1) >= 0)
+    mean_rate = 500 / t1[-1]
+    assert spec.rate_rps < mean_rate < spec.hi_rate   # MMPP mixes lo/hi
+
+
+def test_loadgen_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        ArrivalSpec(kind="lumpy")
+    with pytest.raises(ValueError, match="rate_rps"):
+        ArrivalSpec(rate_rps=0.0)
+    with pytest.raises(ValueError, match="min_len"):
+        PromptSpec(min_len=0)
+    with pytest.raises(ValueError, match="prefix_len"):
+        PromptSpec(min_len=4, shared_frac=0.5, prefix_len=0)
+    with pytest.raises(ValueError, match="sampled_frac"):
+        PromptSpec(sampled_frac=1.5)
+    with pytest.raises(ValueError, match="requests"):
+        LoadSpec(requests=0, vocab=100)
+
+
+# --------------------------------------------------------------------------
+# task SLO validation (satellite: construction AND submit)
+# --------------------------------------------------------------------------
+
+def _task(**kw):
+    return GenerateTask(uid=0, prompt=np.zeros((4,), np.int32), **kw)
+
+
+def test_task_validation_at_construction():
+    for bad in (0.0, -5.0, math.nan, math.inf):
+        with pytest.raises(ValueError, match="deadline_ms"):
+            _task(deadline_ms=bad)
+        with pytest.raises(ValueError, match="slo_tpot_ms"):
+            _task(slo_tpot_ms=bad)
+    with pytest.raises(ValueError, match="priority"):
+        _task(priority=math.nan)
+    with pytest.raises(ValueError, match="priority"):
+        _task(priority="urgent")
+    with pytest.raises(ValueError, match="deadline_ms"):
+        EncodeTask(uid=0, prompt=np.zeros((4,), np.int32), deadline_ms=-1.0)
+    # valid combinations construct fine
+    t = _task(deadline_ms=100.0, slo_tpot_ms=20.0, priority=2)
+    validate_task(t)
+    assert t.slack_ms(t._t_submit) == 100.0
+    assert _task().slack_ms() == math.inf
+
+
+def test_submit_revalidates_mutated_task():
+    """Construction validates, but tasks are mutable — Engine.submit must
+    re-check so a corrupted deadline cannot enter the queue."""
+    cfg, params = _phi4()
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32)
+    t = _task(deadline_ms=100.0)
+    t.deadline_ms = -1.0
+    with pytest.raises(ValueError, match="deadline_ms"):
+        engine.submit(t)
+    t2 = _task()
+    t2.priority = math.nan
+    with pytest.raises(ValueError, match="priority"):
+        engine.submit(t2)
+
+
+# --------------------------------------------------------------------------
+# percentiles helper (satellite: one implementation, everywhere)
+# --------------------------------------------------------------------------
+
+def test_percentiles_matches_percentile_and_adds_p99():
+    vals = list(np.random.default_rng(0).uniform(0, 100, 173))
+    out = percentiles(vals)
+    assert set(out) == {"p50", "p95", "p99"}
+    for q in (50, 95, 99):
+        assert out[f"p{q}"] == percentile(vals, q)
+    assert out["p50"] <= out["p95"] <= out["p99"]
+    assert percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert percentiles([7.0], qs=(10, 90)) == {"p10": 7.0, "p90": 7.0}
+
+
+# --------------------------------------------------------------------------
+# DeadlinePolicy properties (no model)
+# --------------------------------------------------------------------------
+
+def _dtasks(specs, now):
+    """specs: (uid, deadline_ms or None, age_s)."""
+    out = []
+    for uid, dl, age in specs:
+        t = GenerateTask(uid=uid, prompt=np.zeros((4,), np.int32),
+                         deadline_ms=dl)
+        t._t_submit = now - age
+        t._seq = uid
+        out.append(t)
+    return out
+
+
+def test_deadline_order_is_ascending_slack_stable():
+    now = 1000.0
+    q = _dtasks([(0, None, 0.0), (1, 500.0, 0.1), (2, 50.0, 0.0),
+                 (3, None, 9.0), (4, 500.0, 0.4)], now)
+    order = DeadlinePolicy().admission_order(q, now)
+    # tightest slack first (uid4: 100ms, uid2: 50ms... uid2=50, uid4=100,
+    # uid1=400), no-deadline tasks keep arrival order at the back
+    assert [t.uid for t in order] == [2, 4, 1, 0, 3]
+
+
+def test_deadline_victim_is_most_slack():
+    now = 1000.0
+    running = _dtasks([(0, 50.0, 0.0), (1, None, 1.0), (2, 900.0, 0.0)],
+                      now)
+    assert DeadlinePolicy().select_victim(running, now).uid == 1
+
+
+def test_shed_candidates_only_provably_expired():
+    now = 1000.0
+    q = _dtasks([(0, 100.0, 0.05),      # 50ms slack left: keep
+                 (1, 100.0, 0.2),       # expired 100ms ago: shed
+                 (2, None, 99.0),       # no deadline: never shed
+                 (3, 100.0, 0.5)], now)  # expired but has a token: keep
+    q[3].output.append(42)
+    shed = DeadlinePolicy().shed_candidates(q, now)
+    assert [t.uid for t in shed] == [1]
+    assert DeadlinePolicy(shed=False).shed_candidates(q, now) == []
+    # a measured TTFT floor sheds earlier: 50ms slack < 60ms floor
+    early = DeadlinePolicy(ttft_floor_ms=60.0).shed_candidates(q, now)
+    assert [t.uid for t in early] == [0, 1]
+
+
+def test_degrade_level_and_chunk_budget():
+    pol = DeadlinePolicy(chunk_tokens=32, degrade_depth=2.0)
+    assert pol.degrade_level(n_queued=4, n_slots=2) == 0
+    assert pol.degrade_level(n_queued=5, n_slots=2) == 1
+    assert pol.effective_chunk_tokens(0) == 32
+    assert pol.effective_chunk_tokens(1) == 16
+    assert DeadlinePolicy(chunk_tokens=12).effective_chunk_tokens(1) == 8
+    assert DeadlinePolicy().effective_chunk_tokens(1) is None
+    assert make_policy("deadline", chunk_tokens=24).chunk_tokens == 24
+
+
+# --------------------------------------------------------------------------
+# end-to-end: overlap identity, shed, degrade, SLO accounting
+# --------------------------------------------------------------------------
+
+_CACHE = {}
+
+
+def _phi4():
+    if "phi4" not in _CACHE:
+        cfg = get_config("phi4-mini-3.8b").reduced()
+        params = lm.init_lm(jax.random.key(0), cfg, jnp.float32)
+        _CACHE["phi4"] = (cfg, params)
+    return _CACHE["phi4"]
+
+
+def _reqs(cfg, lens, *, max_new=6, uid0=0, **kw):
+    rng = np.random.default_rng(31)
+    reqs = []
+    for i, n in enumerate(lens):
+        uid = uid0 + i
+        reqs.append(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, n, dtype=np.int32),
+            max_new_tokens=max_new,
+            sampling=SamplingParams(temperature=0.8, top_k=20, seed=uid)
+            if uid % 2 else SamplingParams(), **kw))
+    return reqs
+
+
+def _run(cfg, params, reqs, **kw):
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32, **kw)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    return engine, {t.uid: list(t.output) for t in done}
+
+
+def test_overlap_token_identical_to_sync():
+    """The overlapped loop dispatches step N+1 before fetching step N's
+    tokens; greedy and sampled outputs must be byte-identical to the
+    synchronous loop, and the fast path must actually engage."""
+    cfg, params = _phi4()
+    lens = [5, 11, 20, 9, 14, 6]
+    _, sync = _run(cfg, params, _reqs(cfg, lens))
+    eng, ovl = _run(cfg, params, _reqs(cfg, lens), overlap=True)
+    assert ovl == sync
+    st = eng.stats()
+    assert st.overlapped_steps > 0
+    assert st.to_dict()["host_overlap_ratio"] > 0
+
+
+def test_overlap_token_identical_chunked():
+    cfg, params = _phi4()
+    lens = [25, 11, 40, 9, 33, 6]
+    _, sync = _run(cfg, params, _reqs(cfg, lens),
+                   scheduler=ChunkedPrefillPolicy(16))
+    eng, ovl = _run(cfg, params, _reqs(cfg, lens),
+                    scheduler=ChunkedPrefillPolicy(16), overlap=True)
+    assert ovl == sync
+    assert eng.stats().overlapped_steps > 0
+
+
+def test_overlap_token_identical_prefix_cache_warm():
+    """Warm prefix-cache traffic through the overlapped loop: the fast
+    path must respect shared block refcounts (a COW hazard if it wrote
+    the next token into a block another request still reads)."""
+    cfg, params = _phi4()
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, cfg.vocab, 18, dtype=np.int32)
+
+    def waves(overlap):
+        engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                                 policy=FP32, prefix_cache=True,
+                                 kv_pool_blocks=16, overlap=overlap)
+        out = {}
+        for uid0 in (0, 100):
+            for i in range(4):
+                tail = np.full((3 + i,), (7 * i + 3) % cfg.vocab, np.int32)
+                engine.submit(Request(
+                    uid=uid0 + i, prompt=np.concatenate([prefix, tail]),
+                    max_new_tokens=5,
+                    sampling=SamplingParams(temperature=0.8, top_k=20,
+                                            seed=i)
+                    if i % 2 else SamplingParams()))
+            for t in engine.run():
+                out[t.uid] = list(t.output)
+        return engine, out
+
+    _, sync = waves(False)
+    eng, ovl = waves(True)
+    assert ovl == sync
+    assert eng.stats().prefix_cache_hit_rate > 0
+    assert eng.stats().overlapped_steps > 0
+
+
+def test_overlap_with_spec_falls_back_and_matches():
+    """Speculation commits multiple tokens per step — the single-token
+    fast path must stand down, and outputs must still match the sync
+    spec run exactly."""
+    cfg, params = _phi4()
+    lens = [5, 11, 9, 6]
+    spec = SpecConfig(draft="self", k=3)
+    _, sync = _run(cfg, params, _reqs(cfg, lens), spec=spec)
+    eng, ovl = _run(cfg, params, _reqs(cfg, lens), spec=spec, overlap=True)
+    assert ovl == sync
+    assert eng.stats().spec_rounds > 0
+    assert eng.stats().overlapped_steps == 0
+
+
+def test_shed_is_typed_and_counted():
+    """An expired deadline sheds with a typed Rejection instead of being
+    served to a guaranteed miss; healthy traffic completes untouched."""
+    cfg, params = _phi4()
+    doomed = _reqs(cfg, [8, 12], uid0=0, deadline_ms=0.001)
+    healthy = _reqs(cfg, [8, 12], uid0=50, deadline_ms=600_000.0)
+    eng, out = _run(cfg, params, doomed + healthy,
+                    scheduler=DeadlinePolicy())
+    assert {t.uid for t in eng.shed} == {0, 1}
+    for t in eng.shed:
+        assert t.rejection.kind == "slo_unattainable"
+        assert "deadline_ms" in t.rejection.detail
+        assert t.output == [] and t.done
+        assert t.uid in out                # shed tasks reach completed too
+    assert all(len(out[u]) == 6 for u in (50, 51))
+    st = eng.stats()
+    assert st.requests_shed == 2
+    assert st.slo_met == 2 and st.slo_requests == 4
+    assert st.slo_attainment == 0.5
+
+
+def test_degraded_spec_is_lossless():
+    """Degrade disables speculation for admitted requests — tokens must
+    not change (speculation is exact), only the proposal count."""
+    cfg, params = _phi4()
+    lens = [5, 11, 9, 6, 13, 7]
+    spec = SpecConfig(draft="self", k=3)
+    _, base = _run(cfg, params, _reqs(cfg, lens), spec=spec)
+    # degrade_depth=0: any queue depth > 0 trips level 1 immediately
+    eng, deg = _run(cfg, params, _reqs(cfg, lens), spec=spec,
+                    scheduler=DeadlinePolicy(degrade_depth=0.0))
+    assert deg == base
+    st = eng.stats()
+    assert st.requests_degraded == len(lens)
+    assert st.spec_proposed_tokens == 0
+
+
+def test_slo_accounting_and_stats_surface():
+    cfg, params = _phi4()
+    reqs = _reqs(cfg, [5, 9, 14], deadline_ms=600_000.0,
+                 slo_tpot_ms=60_000.0)
+    eng, _ = _run(cfg, params, reqs, scheduler=DeadlinePolicy())
+    st = eng.stats()
+    assert st.slo_requests == 3 and st.slo_attainment == 1.0
+    d = st.to_dict()
+    for key in ("slo_attainment", "ttft_p99_ms", "ttft_slo_ratio_p50",
+                "ttft_slo_ratio_p99", "tpot_p50_ms", "tpot_p99_ms",
+                "requests_shed", "requests_degraded", "overlapped_steps",
+                "host_overlap_ratio"):
+        assert key in d, key
+    assert "SLO" in st.summary()
+    for t in eng.completed:
+        assert t.latency_ms > 0 and t.tpot_ms > 0
+
+
+def test_replay_open_loop_end_to_end():
+    """A paced Poisson trace through the overlapped deadline engine: the
+    full loadgen -> replay -> stats path used by the goodput bench."""
+    cfg, params = _phi4()
+    engine = InferenceEngine(cfg, params, batch_size=2, max_seq=64,
+                             policy=FP32, scheduler=DeadlinePolicy(),
+                             overlap=True)
+    spec = LoadSpec(requests=8, vocab=cfg.vocab,
+                    arrival=ArrivalSpec(rate_rps=50.0),
+                    prompts=PromptSpec(min_len=4, max_len=16),
+                    slo=SLOSpec(ttft_ms=600_000.0), max_new=4)
+    replay(engine, make_trace(spec, uid0=1000), time_scale=0)  # compile
+    engine.reset_stats()
+    done, wall = replay(engine, make_trace(spec))
+    assert len(done) == 8 and wall > 0
+    assert all(t.done for t in done)
+    st = engine.stats()
+    assert st.slo_requests == 8 and st.slo_attainment == 1.0
