@@ -28,6 +28,16 @@ Three scheduler/runner-split scenarios ride along in `record["scenarios"]`:
                    decode time) must be >= the non-spec baseline with a
                    positive acceptance rate, or the bench exits nonzero
                    (the CI gate for the subsystem)
+  tree_spec        a k x branch-count sweep of token-tree speculation on a
+                   rejection-heavy draft (the auto draft's params blended
+                   toward a decorrelated init by --tree-alpha, so chain
+                   acceptance sits mid-range instead of the self-draft
+                   100%): every cell must stay token-identical to
+                   non-speculative decode, and at equal k the widest tree
+                   must STRICTLY raise accepted tokens per target step
+                   over single-branch — with at least one sibling-branch
+                   acceptance — or the bench exits nonzero (the CI gate
+                   for the token-tree subsystem)
   shared_prefix    N requests sharing a long system prompt, prefix cache
                    off (cold) vs on (warm, measured after a populating
                    pass): warm must prefill strictly fewer prompt tokens
@@ -257,6 +267,117 @@ def spec_workload(cfg, params, args, baseline_ar_tok_s: float) -> dict:
         "draft_time_ms_p50": st.draft_time_ms_p50,
         "draft_time_ms_p95": st.draft_time_ms_p95,
     }
+
+
+def _rejection_heavy_draft(cfg, args, alpha: float):
+    """A draft with tunable MID-RANGE acceptance, no training required.
+
+    Seeded init gives bimodal drafts: the target's seed reproduces its
+    own embedding / unembedding / leading layers (a truncated-target
+    draft — near-100% acceptance on reduced configs, where the 2-layer
+    "auto" draft IS the reduced target), while any other seed is fully
+    decorrelated (~0%, and its top-k sets carry no signal, so trees
+    can't show their win either).  Interpolating the two parameter trees
+    by `alpha` yields a draft whose distribution is a noisy copy of the
+    target's — top-1 is wrong often enough to reject, but the top-b set
+    still contains the target's choice — exactly the regime real
+    trained drafts occupy and the one the k x branches sweep gates on."""
+    from repro.configs import make_draft
+    dcfg = make_draft(cfg)
+    p0 = lm.init_lm(jax.random.key(args.seed), dcfg, jnp.float32)
+    p1 = lm.init_lm(jax.random.key(args.seed + 1234), dcfg, jnp.float32)
+    mixed = jax.tree.map(lambda a, b: (1 - alpha) * a + alpha * b, p0, p1)
+    return dcfg, jax.tree.map(lambda x: x.astype(jnp.bfloat16), mixed)
+
+
+def tree_spec_workload(cfg, params, args) -> dict:
+    """k x branch-count acceptance sweep on a rejection-heavy draft.
+
+    Every cell runs the base trace through a spec engine sharing ONE
+    interpolated draft (alpha = --tree-alpha) and records acceptance
+    telemetry plus token identity against the non-speculative outputs.
+    The gate (check_tree_spec): all cells token-identical, and at every
+    k the widest tree strictly raises accepted tokens per slot-round
+    over the single-branch chain — the claim the tentpole makes, on a
+    draft that actually rejects (the self-draft smoke can't distinguish
+    tree from chain: at 100% acceptance the chain already saturates)."""
+    reason = spec_support_reason(cfg)
+    if reason is not None:
+        return {"supported": False, "reason": reason}
+    dcfg, draft_params = _rejection_heavy_draft(cfg, args, args.tree_alpha)
+    trace_kw = dict(requests=args.requests, min_len=args.min_prompt_len,
+                    max_len=args.max_prompt_len, max_new=args.max_new)
+    # the identity reference runs on the same default-precision engine
+    # the sweep cells use (the base trace engine may be int8)
+    ref = InferenceEngine(cfg, params, batch_size=args.batch,
+                          max_seq=args.max_seq, block_size=args.block_size,
+                          kv_pool_blocks=args.kv_pool_blocks or None)
+    for req in build_trace(cfg, seed=args.seed, **trace_kw):
+        ref.submit(req)
+    baseline_outputs = {t.uid: list(t.output) for t in ref.run()}
+    ks = sorted({2, args.spec_k})
+    bs = sorted({1, 2, max(2, args.tree_branches)})
+    cells = []
+    for k in ks:
+        for b in bs:
+            spec = SpecConfig(draft="auto", k=k, branches=b)
+            engine = InferenceEngine(cfg, params, batch_size=args.batch,
+                                     max_seq=args.max_seq,
+                                     block_size=args.block_size,
+                                     kv_pool_blocks=args.kv_pool_blocks
+                                     or None,
+                                     spec=spec, draft_params=draft_params)
+            for req in build_trace(cfg, seed=args.seed, **trace_kw):
+                engine.submit(req)
+            done = engine.run()
+            st = engine.stats()
+            outputs = {t.uid: list(t.output) for t in done}
+            cells.append({
+                "k": k,
+                "branches": b,
+                "tokens_match": outputs == baseline_outputs,
+                "spec_acceptance_rate": st.spec_acceptance_rate,
+                "accepted_per_round": (st.spec_accepted_tokens
+                                       / st.spec_slot_steps
+                                       if st.spec_slot_steps else 0.0),
+                "spec_tokens_per_step": st.spec_tokens_per_step,
+                "spec_tree_nodes": st.spec_tree_nodes,
+                "spec_branch_hits": st.spec_branch_hits,
+                "spec_branch_utilization": st.spec_branch_utilization,
+                "spec_path_depth_p50": st.spec_path_depth_p50,
+                "spec_path_depth_p95": st.spec_path_depth_p95,
+            })
+    return {"supported": True, "draft": dcfg.name,
+            "alpha": args.tree_alpha, "ks": ks, "branch_counts": bs,
+            "cells": cells}
+
+
+def check_tree_spec(rec: dict) -> list:
+    """The token-tree acceptance gate: losslessness at every cell, and
+    at equal k the widest tree must STRICTLY out-accept the chain."""
+    if not rec.get("supported"):
+        return []
+    problems = []
+    by = {(c["k"], c["branches"]): c for c in rec["cells"]}
+    for c in rec["cells"]:
+        if not c["tokens_match"]:
+            problems.append(
+                f"k={c['k']} b={c['branches']}: committed outputs diverged "
+                f"from non-speculative decode — tree verify is not lossless")
+    b_max = max(rec["branch_counts"])
+    for k in rec["ks"]:
+        chain, tree = by[(k, 1)], by[(k, b_max)]
+        if not tree["accepted_per_round"] > chain["accepted_per_round"]:
+            problems.append(
+                f"k={k}: tree (b={b_max}) accepted/round "
+                f"{tree['accepted_per_round']:.3f} does not strictly beat "
+                f"single-branch {chain['accepted_per_round']:.3f} on the "
+                f"rejection-heavy draft (alpha={rec['alpha']})")
+        if tree["spec_branch_hits"] <= 0:
+            problems.append(
+                f"k={k}: the b={b_max} tree never accepted through a "
+                f"sibling branch — the tree is decorative at this alpha")
+    return problems
 
 
 def shared_prefix_workload(cfg, params, args) -> dict:
@@ -520,6 +641,14 @@ def main(argv=None) -> int:
                          "amortization win), 'auto', or a config name")
     ap.add_argument("--spec-k", type=int, default=3,
                     help="spec_decode scenario speculation length")
+    ap.add_argument("--tree-branches", type=int, default=3,
+                    help="tree_spec scenario: widest tree in the "
+                         "k x branches sweep")
+    ap.add_argument("--tree-alpha", type=float, default=0.15,
+                    help="tree_spec scenario: draft decorrelation — 0 is "
+                         "the truncated-target draft (near-100%% accept), "
+                         "1 a random draft (~0%%); mid values make the "
+                         "rejection-heavy draft the tree gate needs")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV pool block size (tokens)")
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
@@ -597,6 +726,7 @@ def main(argv=None) -> int:
         chunked = long_admission(cfg, params, args,
                                  ChunkedPrefillPolicy(args.prefill_chunk))
         spec_rec = spec_workload(cfg, params, args, stats.ar_tok_s)
+        tree_rec = tree_spec_workload(cfg, params, args)
         prefix_rec = shared_prefix_workload(cfg, params, args)
         goodput_rec = goodput_workload(cfg, params, args)
         record["scenarios"] = {
@@ -611,6 +741,7 @@ def main(argv=None) -> int:
                     if unchunked["decode_stall_p95_ms"] else 0.0),
             },
             "spec_decode": spec_rec,
+            "tree_spec": tree_rec,
             "shared_prefix": prefix_rec,
             "goodput": goodput_rec,
         }
@@ -651,6 +782,17 @@ def main(argv=None) -> int:
                   f"{spec_rec['draft_time_ms_p95']:.1f}ms")
         else:
             print(f"  spec decode: skipped ({spec_rec.get('reason')})")
+        if tree_rec.get("supported"):
+            print(f"  tree spec sweep (draft={tree_rec['draft']}, "
+                  f"alpha={tree_rec['alpha']}):")
+            for c in tree_rec["cells"]:
+                print(f"    k={c['k']} b={c['branches']}: "
+                      f"{c['accepted_per_round']:.3f} accepted/round, "
+                      f"{c['spec_tokens_per_step']:.2f} tok/step, branch "
+                      f"{c['spec_branch_utilization']:.0%}, tokens "
+                      f"{'identical' if c['tokens_match'] else 'DIVERGED'}")
+        else:
+            print(f"  tree spec: skipped ({tree_rec.get('reason')})")
         if prefix_rec.get("supported"):
             pw, pc = prefix_rec["warm"], prefix_rec["cold"]
             print(f"  shared prefix ({prefix_rec['shared_prefix_len']} "
@@ -674,6 +816,7 @@ def main(argv=None) -> int:
               f"{gp['deadline']['requests_shed']} shed, "
               f"{gp['deadline']['requests_degraded']} degraded)")
         problems = check_spec(spec_rec)
+        problems += [f"TREE: {p}" for p in check_tree_spec(tree_rec)]
         problems += [f"PREFIX: {p}" for p in check_shared_prefix(prefix_rec)]
         problems += [f"GOODPUT: {p}" for p in check_goodput(goodput_rec)]
         if problems:

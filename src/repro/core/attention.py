@@ -495,7 +495,7 @@ def _scatter_quantized(pool, scales, x_new, loc, off, fresh):
 
 def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
                      plan: Plan, cfg, policy: Policy, norm=None,
-                     residual=None):
+                     residual=None, rope_pos=None, tree_mask=None):
     """One chunked-prefill piece against a block-paged KV cache.
 
     x: [B, C, E] — C consecutive prompt tokens per row, starting at absolute
@@ -509,7 +509,14 @@ def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
     causal mask — so one code path covers both the first chunk (empty
     prefix) and every later one.  Per-shard partials merge with the same T4
     rule as decode; projections reuse the decode helpers on the flattened
-    [B*C] token batch.  Returns (y [B, C, E], updated cache)."""
+    [B*C] token batch.  Returns (y [B, C, E], updated cache).
+
+    Tree-speculative verify reuses this path with two overrides: the chunk
+    then carries a token *tree* whose node i is scattered at pos0+i as
+    usual, but `rope_pos` [B, C] rotates q/k at each node's *logical* depth
+    (pos0 + depth, shared by sibling branches) so the winning path's KV is
+    correctly rotated for its final position, and `tree_mask` [B, C, C]
+    replaces the intra-chunk causal mask with the ancestor matrix."""
     c_ax = plan.cache_axes
     B, C, E = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -521,7 +528,7 @@ def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
 
     # projections: decode math on B*C tokens, reshaped back to chunks
     flat = x.reshape(B * C, E)
-    pflat = pos.reshape(B * C)
+    pflat = (pos if rope_pos is None else rope_pos).reshape(B * C)
     q = _decode_q(p, flat, pflat, plan=plan, cfg=cfg,
                   policy=policy, norm=norm).reshape(B, C, H, hd)
     k_new, v_new = _decode_kv_new(p, flat, pflat, plan=plan, cfg=cfg,
@@ -562,7 +569,8 @@ def attn_chunk_paged(p, x, pos0, chunk_len, cache, block_tables, *,
     o, m, l = ops.paged_chunk_partials(q.astype(ad), cache["k"], cache["v"],
                                        loc_tab, pos, length,
                                        k_scale=cache.get("ks"),
-                                       v_scale=cache.get("vs"))
+                                       v_scale=cache.get("vs"),
+                                       tree_mask=tree_mask)
     merged = merge_partials(o, m, l, c_ax).reshape(B * C, H * hd)
     y = _decode_out_proj(p, merged, plan=plan, policy=policy,
                          residual=residual.reshape(B * C, E)

@@ -257,7 +257,7 @@ def block_full(kind: str, p, x, *, plan: Plan, cfg, policy,
 
 
 def block_chunk(kind: str, p, x, pos0, chunk_len, cache, block_tables, *,
-                plan: Plan, cfg, policy):
+                plan: Plan, cfg, policy, rope_pos=None, tree_mask=None):
     """One chunked-prefill piece through a block whose KV cache is paged.
 
     x: [B, C, E] — C consecutive prompt tokens starting at absolute position
@@ -268,7 +268,11 @@ def block_chunk(kind: str, p, x, pos0, chunk_len, cache, block_tables, *,
     runner gates on `ModelRunner.supports_chunked` and falls back to
     whole-prompt prefill.  MLP / MoE run the decode path on the flattened
     [B*C, E] token batch (identical per-token math); only attention needs
-    the chunk structure.  Returns (x', updated cache)."""
+    the chunk structure.  Returns (x', updated cache).
+
+    `rope_pos` / `tree_mask` flow to `attn_chunk_paged` for tree-speculative
+    verify (logical-depth rotation + ancestor attention mask); both None on
+    the plain chunked-prefill path."""
     assert kind in ATTN_KINDS and kind not in SSM_KINDS and kind != "dec", (
         f"chunked prefill unsupported for kind {kind!r}")
     B, C, E = x.shape
@@ -277,6 +281,7 @@ def block_chunk(kind: str, p, x, pos0, chunk_len, cache, block_tables, *,
     moe_like = kind in MOE_KINDS
 
     kv_in = {k: cache[k] for k in ("k", "v", "ks", "vs") if k in cache}
+    tree_kw = dict(rope_pos=rope_pos, tree_mask=tree_mask)
     y = None
     if fused and not moe_like:
         x, kv = attn.attn_chunk_paged(p["attn"], x, pos0, chunk_len, kv_in,
@@ -284,18 +289,19 @@ def block_chunk(kind: str, p, x, pos0, chunk_len, cache, block_tables, *,
                                       policy=policy,
                                       norm=ops.norm_prologue(p["ln1"],
                                                              cfg.norm),
-                                      residual=x)
+                                      residual=x, **tree_kw)
     elif fused:
         y, kv = attn.attn_chunk_paged(p["attn"], x, pos0, chunk_len, kv_in,
                                       block_tables, plan=plan, cfg=cfg,
                                       policy=policy,
                                       norm=ops.norm_prologue(p["ln1"],
-                                                             cfg.norm))
+                                                             cfg.norm),
+                                      **tree_kw)
     else:
         h = ops.norm(x, p["ln1"], cfg.norm)
         y, kv = attn.attn_chunk_paged(p["attn"], h, pos0, chunk_len, kv_in,
                                       block_tables, plan=plan, cfg=cfg,
-                                      policy=policy)
+                                      policy=policy, **tree_kw)
         x = x + y
         y = None
     new_cache.update(kv)

@@ -181,6 +181,17 @@ def sample_token(x, unemb, lane, *, plan: Plan, cfg, policy, norm=None):
     `norm`: final-norm prologue fused into the logits GEMM (logits_local)."""
     z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy,
                          norm=norm)
+    score = _lane_scores(z, lane, plan=plan)
+    _, tok = col.pargmax(score, plan.tp_axes, index_offset=v0)
+    return tok
+
+
+def _lane_scores(z, lane, *, plan: Plan):
+    """The deterministic per-row sampling scores whose argmax IS the
+    sampled token: greedy rows (temperature <= 0) keep the raw logits,
+    sampled rows get top-k-masked, temperature-scaled, (seed, step)-keyed
+    Gumbel-perturbed logits.  Shared verbatim by `sample_token` (argmax)
+    and `sample_topn` (argmax + runners-up) so the two can never drift."""
     B, v_loc = z.shape
     t = lane["temperature"].astype(jnp.float32)
     k = lane["top_k"].astype(jnp.int32)
@@ -207,8 +218,36 @@ def sample_token(x, unemb, lane, *, plan: Plan, cfg, policy, norm=None):
 
     g = jax.vmap(gumbel_row)(lane["seed"], lane["step"])     # [B, v_loc]
     t_safe = jnp.where(sampled, jnp.maximum(t, 1e-6), 1.0)
-    score = jnp.where(sampled[:, None],
-                      jnp.where(keep, z, NEG_INF) / t_safe[:, None] + g,
-                      z)                                     # greedy rows: raw z
+    return jnp.where(sampled[:, None],
+                     jnp.where(keep, z, NEG_INF) / t_safe[:, None] + g,
+                     z)                                      # greedy rows: raw z
+
+
+def sample_topn(x, unemb, lane, n, *, plan: Plan, cfg, policy, norm=None):
+    """`sample_token` plus the score's runners-up: the tree-speculation
+    proposer.  x: [B, E] -> (tok [B], alts [B, n]) with alts[:, 0] == tok
+    (the chain token — bit-identical to what sample_token returns for the
+    same (residual, lane)) and alts[:, 1:] the next-best distinct global
+    ids of the SAME deterministic score, ranked value-descending with
+    lowest-id tie-breaks (pargmax's rule).  Distributed like the top-k
+    threshold search: each tp shard contributes its local top-(n-1), the
+    O(tp*n) union is gathered, never the logits.  Rows whose top-k
+    truncation keeps fewer than n ids pad with NEG_INF-scored ids — the
+    verifier rejects them like any wrong guess, costing acceptance only."""
+    z, v0 = logits_local(x, unemb, plan=plan, cfg=cfg, policy=policy,
+                         norm=norm)
+    score = _lane_scores(z, lane, plan=plan)
     _, tok = col.pargmax(score, plan.tp_axes, index_offset=v0)
-    return tok
+    if n == 1:
+        return tok, tok[:, None]
+    B, v_loc = z.shape
+    gid = jnp.arange(v_loc)[None, :] + v0                    # [B?, v_loc]
+    rest = jnp.where(gid == tok[:, None], NEG_INF, score)
+    vals, idx = jax.lax.top_k(rest, min(n - 1, v_loc))       # [B, n-1] desc
+    ids = idx + v0
+    vals_g = col.all_gather(vals, plan.tp_axes, axis=-1)
+    ids_g = col.all_gather(ids, plan.tp_axes, axis=-1)
+    # value-descending, id-ascending on ties (jnp.lexsort: last key primary)
+    order = jnp.lexsort((ids_g, -vals_g), axis=-1)
+    top_ids = jnp.take_along_axis(ids_g, order, axis=-1)[:, :n - 1]
+    return tok, jnp.concatenate([tok[:, None], top_ids], axis=1)

@@ -186,11 +186,14 @@ def paged_decode_partials(q, k_pool, v_pool, block_tables, lengths, *,
 
 
 def paged_chunk_partials(q, k_pool, v_pool, block_tables, q_pos, lengths, *,
-                         k_scale=None, v_scale=None):
+                         k_scale=None, v_scale=None, tree_mask=None):
     """Chunked-prefill partials -> (o unnormalized [B, C, H, D] fp32,
     m [B, C, H], l [B, C, H]); q_pos [B, C] gives each query's absolute
     position for causal masking.  Run per cache shard on its local pool,
     merged with core/attention.merge_partials like the decode partials.
+    `tree_mask` ([B, C, C] bool, optional) switches the intra-chunk mask
+    from causal to an explicit ancestor matrix for tree-speculative verify
+    (committed prefix + own ancestors only; see the reference oracle).
 
     No hand kernel yet: a prefill chunk is GEMM-throughput-bound on the
     same projections the dense prefill runs, and the score/probability
@@ -200,7 +203,8 @@ def paged_chunk_partials(q, k_pool, v_pool, block_tables, q_pos, lengths, *,
     with jax.named_scope("vmemk_chunk"):
         return _ref.paged_chunk_partials_ref(q, k_pool, v_pool, block_tables,
                                              q_pos, lengths, k_scale=k_scale,
-                                             v_scale=v_scale)
+                                             v_scale=v_scale,
+                                             tree_mask=tree_mask)
 
 
 # --------------------------------------------------------------------------

@@ -238,7 +238,8 @@ def paged_decode_partials_ref(q, k_pool, v_pool, block_tables, lengths, *,
 
 
 def paged_chunk_partials_ref(q, k_pool, v_pool, block_tables, q_pos,
-                             lengths, *, k_scale=None, v_scale=None):
+                             lengths, *, k_scale=None, v_scale=None,
+                             tree_mask=None):
     """Chunked-prefill partials: C query tokens per row against the paged
     pool (which already holds this chunk's own KV rows), causal-masked per
     query position.
@@ -248,7 +249,14 @@ def paged_chunk_partials_ref(q, k_pool, v_pool, block_tables, q_pos,
     (pad queries may point past `lengths` — their outputs are garbage the
     caller discards); lengths: [B] valid tokens incl. this chunk.
     -> (o [B, C, H, D] fp32 unnormalized, m [B, C, H], l [B, C, H]) for the
-    cross-shard T4 merge, same contract as `paged_decode_partials_ref`."""
+    cross-shard T4 merge, same contract as `paged_decode_partials_ref`.
+
+    tree_mask: optional [B, C, C] bool ancestor matrix for tree-speculative
+    verify.  The chunk's C entries then form a token tree scattered at
+    positions q_pos (= pos0 + node index): query node i attends the
+    committed prefix (< pos0) plus in-chunk node j iff tree_mask[b, i, j].
+    A lower-triangular tree_mask reproduces the causal `pos <= q_pos` mask
+    exactly (the degenerate single-branch chain)."""
     B, C, H, D = q.shape
     k, v, msk = _paged_gather(k_pool, v_pool, block_tables, lengths,
                               k_scale, v_scale)
@@ -257,7 +265,19 @@ def paged_chunk_partials_ref(q, k_pool, v_pool, block_tables, q_pos,
     qf = (q.astype(jnp.float32) * scale).reshape(B, C, KV, H // KV, D)
     s = jnp.einsum("bckgd,bskd->bckgs", qf, k)                # [B,C,KV,G,S]
     pos = jnp.arange(k.shape[1])[None, None, :]
-    keep = msk[:, None, :] & (pos <= q_pos[:, :, None])       # [B, C, S]
+    if tree_mask is not None:
+        pos0 = q_pos[:, :1]                                   # [B, 1]
+        s_pos = pos[0]                                        # [1, S]
+        prefix = s_pos < pos0                                 # [B, S]
+        in_chunk = (s_pos >= pos0) & (s_pos < pos0 + C)
+        rel = jnp.clip(s_pos - pos0, 0, C - 1)                # [B, S]
+        anc = jnp.take_along_axis(
+            tree_mask, jnp.broadcast_to(rel[:, None, :],
+                                        (B, C, s_pos.shape[1])), axis=2)
+        keep = msk[:, None, :] & (prefix[:, None, :]
+                                  | (in_chunk[:, None, :] & anc))
+    else:
+        keep = msk[:, None, :] & (pos <= q_pos[:, :, None])   # [B, C, S]
     s = jnp.where(keep[:, :, None, None, :], s, NEG_INF)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])

@@ -35,6 +35,14 @@ Speculative decoding (serving/spec.py):
                                      registered draft config (e.g.
                                      "gpt-j-draft")
   --spec-k K                         draft tokens proposed per verify step
+  --spec-branches B                  token-tree width: B > 1 proposes the
+                                     draft's top-B candidates per depth
+                                     and verifies the whole tree in one
+                                     tree-masked target pass (still
+                                     token-identical; 1 = classic chain)
+  --draft-checkpoint DIR             load draft params from a
+                                     checkpoint/checkpointer.py directory
+                                     instead of seeded init
 
 Prefix caching (serving/prefix_cache.py, on by default):
   --no-prefix-cache                  cold prefills: no KV block sharing
@@ -137,6 +145,12 @@ def main(argv=None) -> int:
     ap.add_argument("--spec-k", type=int, default=4,
                     help="speculation length: draft tokens proposed per "
                          "verify step (--spec-draft)")
+    ap.add_argument("--spec-branches", type=int, default=1,
+                    help="token-tree width: candidates proposed per "
+                         "speculation depth (1 = single-chain rounds)")
+    ap.add_argument("--draft-checkpoint", default="",
+                    help="checkpoint directory to load draft params from "
+                         "(default: seeded init; requires --spec-draft)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV pool block size (tokens)")
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
@@ -176,7 +190,8 @@ def main(argv=None) -> int:
     mesh = None if args.single_device else make_mesh_for(len(jax.devices()))
     params = lm.init_lm(jax.random.key(args.seed), cfg, jnp.bfloat16)
 
-    spec = (SpecConfig(draft=args.spec_draft, k=args.spec_k)
+    spec = (SpecConfig(draft=args.spec_draft, k=args.spec_k,
+                       branches=args.spec_branches)
             if args.spec_draft else None)
     engine = InferenceEngine(
         cfg, params, batch_size=args.batch, max_seq=args.max_seq, mesh=mesh,
@@ -185,6 +200,7 @@ def main(argv=None) -> int:
         scheduler=make_policy(args.policy, chunk_tokens=args.prefill_chunk,
                               cache_aware=args.prefix_cache),
         fuse_epilogues=not args.no_fuse, spec=spec,
+        draft_checkpoint=args.draft_checkpoint or None,
         prefix_cache=args.prefix_cache,
         cache_blocks=args.cache_blocks or None,
         weight_dtype=args.weight_dtype, kv_dtype=args.kv_dtype,
@@ -219,6 +235,12 @@ def main(argv=None) -> int:
               f"{stats.spec_tokens_per_step:.2f} tokens/target-step, "
               f"draft p50 {stats.draft_time_ms_p50:.1f}ms p95 "
               f"{stats.draft_time_ms_p95:.1f}ms")
+        if engine.runner.tree_branches > 1:
+            print(f"  tree: b={engine.runner.tree_branches} | "
+                  f"{stats.spec_tree_nodes} nodes verified, accepted-path "
+                  f"depth p50 {stats.spec_path_depth_p50:.1f} p95 "
+                  f"{stats.spec_path_depth_p95:.1f}, branch utilization "
+                  f"{stats.spec_branch_utilization:.0%}")
     for r in sorted(done, key=lambda r: r.uid)[:3]:
         if isinstance(r, EncodeTask):
             e = np.asarray(r.embedding)

@@ -761,6 +761,73 @@ def make_verify_step(cfg: ModelConfig, shape: ShapeConfig,
                            "paged": layout, "num_tokens": num_tokens})
 
 
+def make_tree_verify_step(cfg: ModelConfig, shape: ShapeConfig,
+                          mesh: Optional[Mesh], *,
+                          layout: PagedLayout,
+                          num_tokens: int,
+                          policy: Optional[Policy] = None,
+                          max_seq: Optional[int] = None,
+                          reduce_method: str = "ring",
+                          kv_cache_dtype: str = "bfloat16",
+                          weight_dtype: str = "bfloat16",
+                          fuse_epilogues: bool = True) -> StepBundle:
+    """Tree-speculative verification: `make_verify_step` generalized from a
+    token *chain* to a flattened token *tree* of `num_tokens` = 1 + k*b
+    nodes per slot (lm.forward_verify_tree).  Two extra operands after
+    chunk_len carry the per-slot tree shape — `depth` [B, C] int32 (each
+    node's tree depth; rope + the sampling step key off pos0 + depth) and
+    `anc` [B, C, C] bool (ancestor-or-self matrix; the intra-chunk
+    attention mask) — while node KV still scatters at pos0 + node index.
+
+    fn(params, tokens [B, C], pos0 [B], chunk_len [B], depth [B, C],
+       anc [B, C, C], caches, tables [B, MB], lane)
+      -> (choices [B, C], caches, pos [B])
+
+    Rows are free to carry any ancestor-closed flatten-order prefix —
+    full trees, shallower trees, or a plain chain (depth == node index,
+    anc lower triangular, which reduces bit-exactly to make_verify_step's
+    math) — so one compiled step serves per-slot tree truncation and the
+    scheduler's shrink-to-chain degrade rung without recompiling."""
+    (plan, policy, max_seq, p_specs, row_spec, tok_spec, c_struct, c_specs,
+     in_specs, in_structs) = _chunk_scaffold(
+        cfg, shape, mesh, layout=layout, width=num_tokens, policy=policy,
+        max_seq=max_seq, reduce_method=reduce_method,
+        kv_cache_dtype=kv_cache_dtype, weight_dtype=weight_dtype,
+        fuse_epilogues=fuse_epilogues, kind="tree speculative verify")
+
+    def body(params, tokens, pos0, chunk_len, depth, anc, caches, tables,
+             lane):
+        col.set_reduce_method(plan.reduce_method)   # T3 schedule selection
+        return lm.forward_verify_tree(params, tokens, pos0, chunk_len,
+                                      depth, anc, caches, tables, plan=plan,
+                                      cfg=cfg, policy=policy, lane=lane,
+                                      paged_segments=layout.segments)
+
+    n = shape.global_batch
+    anc_spec = plan.pspec("batch", None, None)
+    l_specs = resolve_pspecs(lane_dims(False), plan)
+    # splice depth + anc in after chunk_len (scaffold order: params, tokens,
+    # pos0, chunk_len, caches, tables)
+    in_specs = (in_specs[:4] + (tok_spec, anc_spec) + in_specs[4:]
+                + (l_specs,))
+    in_structs = (
+        in_structs[:4]
+        + (with_shardings(jax.ShapeDtypeStruct((n, num_tokens), jnp.int32),
+                          tok_spec, mesh),
+           with_shardings(jax.ShapeDtypeStruct(
+               (n, num_tokens, num_tokens), jnp.bool_), anc_spec, mesh))
+        + in_structs[4:]
+        + (with_shardings(lane_struct(n, False), l_specs, mesh),))
+    sm = _maybe_shard_map(body, mesh, in_specs=in_specs,
+                          out_specs=(tok_spec, c_specs, row_spec))
+    fn = jax.jit(sm, donate_argnums=(6,))
+    return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
+                      in_structs=in_structs, in_specs=in_specs,
+                      aux={"param_specs": p_specs, "cache_struct": c_struct,
+                           "cache_specs": c_specs, "max_seq": max_seq,
+                           "paged": layout, "num_tokens": num_tokens})
+
+
 # --------------------------------------------------------------------------
 # decode step (AR)
 # --------------------------------------------------------------------------
@@ -848,3 +915,64 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig,
                       aux={"param_specs": p_specs, "cache_struct": c_struct,
                            "cache_specs": c_specs, "max_seq": max_seq,
                            "param_dims": p_dims, "paged": layout})
+
+
+def make_draft_topk_step(cfg: ModelConfig, shape: ShapeConfig,
+                         mesh: Optional[Mesh], *,
+                         branches: int,
+                         policy: Optional[Policy] = None,
+                         max_seq: Optional[int] = None,
+                         reduce_method: str = "ring",
+                         weight_dtype: str = "bfloat16",
+                         fuse_epilogues: bool = True) -> StepBundle:
+    """Draft decode step for tree speculation: `make_decode_step`'s dense
+    sampling variant, except each call also returns the row's top
+    `branches` token candidates (candidate 0 == the sampled/greedy token,
+    so the draft chain itself is unchanged — siblings are a free byproduct
+    of the same unembedding matmul).
+
+    fn(params, token [B], pos [B], caches, lane)
+      -> (tok [B], alts [B, branches], pos + 1, caches)
+
+    Dense (non-paged) only, matching the draft cache the runner keeps."""
+    import dataclasses
+    policy = policy or default_policy(cfg, "serve")
+    plan = make_plan(cfg, shape, mesh, mode="serve",
+                     reduce_method=reduce_method)
+    plan = dataclasses.replace(plan, weight_dtype=weight_dtype,
+                               fuse_epilogues=fuse_epilogues)
+    max_seq = max_seq or shape.seq_len
+
+    p_dims, p_struct = _serve_param_layout(cfg, policy, weight_dtype)
+    p_specs = resolve_pspecs(p_dims, plan)
+    c_struct, c_dims = cache_layout(cfg, plan, shape.global_batch, max_seq,
+                                    policy, paged=None)
+    c_specs = resolve_pspecs(c_dims, plan)
+    tok_spec = plan.pspec("batch")
+    alt_spec = plan.pspec("batch", None)
+    d_struct = frontends.decode_struct(shape.global_batch)
+
+    def body(params, token, pos, caches, lane):
+        tok, alts, caches = lm.forward_decode_topk(
+            params, token, pos, caches, n=branches, plan=plan, cfg=cfg,
+            policy=policy, lane=lane)
+        return tok, alts, pos + 1, caches
+
+    l_specs = resolve_pspecs(lane_dims(False), plan)
+    in_specs = (p_specs, tok_spec, tok_spec, c_specs, l_specs)
+    in_structs = (with_shardings(p_struct, p_specs, mesh),
+                  with_shardings(d_struct["token"], tok_spec, mesh),
+                  with_shardings(d_struct["pos"], tok_spec, mesh),
+                  with_shardings(c_struct, c_specs, mesh),
+                  with_shardings(lane_struct(shape.global_batch, False),
+                                 l_specs, mesh))
+    sm = _maybe_shard_map(body, mesh, in_specs=in_specs,
+                          out_specs=(tok_spec, alt_spec, tok_spec, c_specs))
+    fn = jax.jit(sm, donate_argnums=(3,))
+    return StepBundle(fn=fn, plan=plan, policy=policy, cfg=cfg,
+                      in_structs=in_structs,
+                      in_specs=in_specs,
+                      aux={"param_specs": p_specs, "cache_struct": c_struct,
+                           "cache_specs": c_specs, "max_seq": max_seq,
+                           "param_dims": p_dims, "paged": None,
+                           "branches": branches})

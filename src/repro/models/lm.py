@@ -29,7 +29,7 @@ from repro.core import collectives as col
 from repro.core.embedding import (ce_loss, embed_sequence, embed_token,
                                   embedding_param_dims,
                                   embedding_param_shapes, greedy_token,
-                                  init_embedding, sample_token)
+                                  init_embedding, sample_token, sample_topn)
 from repro.core.nn import act_dtype
 from repro.core.rope import sinusoidal_positions
 from repro.kernels import ops
@@ -387,13 +387,16 @@ def forward_encode(params, batch, *, plan: Plan, cfg, policy,
 
 
 def _run_chunk_stack(params, tokens, pos0, chunk_len, caches, block_tables,
-                     *, plan: Plan, cfg, policy, paged_segments):
+                     *, plan: Plan, cfg, policy, paged_segments,
+                     rope_pos=None, tree_mask=None):
     """The shared chunk body: embed C consecutive tokens per row, run every
     segment's `block_chunk` (KV scattered into the paged blocks), apply the
-    final norm unless the fused head will fold it.  Both `forward_chunk`
-    (chunked prefill: sample the last position) and `forward_verify`
-    (speculative decoding: sample every position) sit on THIS stack — the
-    verify path's losslessness rests on the two sharing one body.
+    final norm unless the fused head will fold it.  `forward_chunk`
+    (chunked prefill: sample the last position), `forward_verify`
+    (speculative decoding: sample every position), and
+    `forward_verify_tree` (tree speculation: `rope_pos`/`tree_mask`
+    overrides) all sit on THIS stack — the verify paths' losslessness
+    rests on them sharing one body.
     -> (x [B, C, E], caches, head_norm-or-None)."""
     B, C = tokens.shape
     x = embed_token(params["embedding"]["embed"], tokens.reshape(B * C),
@@ -407,7 +410,9 @@ def _run_chunk_stack(params, tokens, pos0, chunk_len, caches, block_tables,
             p_layer, c_layer = inp
             h2, c2 = blocks.block_chunk(_kind, p_layer, h, pos0, chunk_len,
                                         c_layer, block_tables, plan=plan,
-                                        cfg=cfg, policy=policy)
+                                        cfg=cfg, policy=policy,
+                                        rope_pos=rope_pos,
+                                        tree_mask=tree_mask)
             return h2, c2
         x, c_new = jax.lax.scan(body, x, (p_seg, c_seg))
         new_caches.append(c_new)
@@ -492,6 +497,53 @@ def forward_verify(params, tokens, pos0, chunk_len, caches, block_tables, *,
             pos0 + chunk_len.astype(jnp.int32))
 
 
+def forward_verify_tree(params, tokens, pos0, chunk_len, depth, anc, caches,
+                        block_tables, *, plan: Plan, cfg, policy, lane=None,
+                        paged_segments=None):
+    """Tree-speculative verification: one target forward over C flattened
+    token-tree nodes per row (node 0 = the pending token, then the draft's
+    branches in an ancestor-closed flatten order), returning the target's
+    own next-token choice at every node.  tokens: [B, C] node tokens;
+    pos0: [B] the slot's decode pos; chunk_len: [B] real nodes (<= C);
+    depth: [B, C] int32 each node's tree depth (node 0 -> 0); anc: [B, C, C]
+    bool ancestor-or-self matrix (anc[b, i, j] <=> node j is on node i's
+    root path).  -> (choices [B, C], caches, pos [B]).
+
+    Node i's KV scatters at position pos0 + i (unique per node — the same
+    scatter mechanics as forward_verify), while rope and the sampling step
+    use the node's *logical* position pos0 + depth[i]: sibling branches at
+    one depth share a rotation and a (seed, step) draw key, exactly the
+    state a step-by-step decode would have after committing that node's
+    root path — so choices[b, i] is bit-identical to what non-speculative
+    decode (or forward_verify on the same chain) would emit there, greedy
+    or sampled, and the winning path's KV bytes are already rotated for
+    their final positions (commit is a pure row move, serving/kv_cache.py).
+    The ancestor mask keeps each node blind to its sibling branches:
+    attention sees the committed prefix (< pos0) plus its own root path
+    only.  With a single-branch chain (depth == node index, anc lower
+    triangular) every override reduces to forward_verify's causal math."""
+    B, C = tokens.shape
+    rope_pos = pos0[:, None] + depth                           # [B, C]
+    x, new_caches, head_norm = _run_chunk_stack(
+        params, tokens, pos0, chunk_len, caches, block_tables, plan=plan,
+        cfg=cfg, policy=policy, paged_segments=paged_segments,
+        rope_pos=rope_pos, tree_mask=anc)
+
+    E = x.shape[-1]
+    x_flat = x.reshape(B * C, E)
+    steps = (rope_pos + 1).astype(jnp.int32)     # token after node i's path
+    if lane is None:
+        tok = greedy_token(x_flat, params["embedding"]["unemb"], plan=plan,
+                           cfg=cfg, policy=policy, norm=head_norm)
+    else:
+        lane_flat = {k: jnp.repeat(v, C) for k, v in lane.items()}
+        tok = sample_token(x_flat, params["embedding"]["unemb"],
+                           dict(lane_flat, step=steps.reshape(B * C)),
+                           plan=plan, cfg=cfg, policy=policy, norm=head_norm)
+    return (tok.reshape(B, C), new_caches,
+            pos0 + chunk_len.astype(jnp.int32))
+
+
 def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy,
                    lane=None, block_tables=None, paged_segments=None):
     """One AR step.  token/pos: [B] -> (next_token [B], caches).
@@ -525,3 +577,34 @@ def forward_decode(params, token, pos, caches, *, plan: Plan, cfg, policy,
                            dict(lane, step=pos + 1), plan=plan, cfg=cfg,
                            policy=policy, norm=head_norm)
     return tok, caches
+
+
+def forward_decode_topk(params, token, pos, caches, *, n, plan: Plan, cfg,
+                        policy, lane, block_tables=None, paged_segments=None):
+    """One AR step that also surfaces the sampler's runners-up: the tree
+    proposer's draft step.  token/pos: [B] -> (next_token [B],
+    alts [B, n], caches) where alts[:, 0] == next_token (the chain token —
+    the exact `forward_decode` choice) and alts[:, 1:] are the next-best
+    distinct ids of the SAME deterministic score `sample_token` ranks
+    (greedy rows: raw logits; sampled rows: the (seed, step)-keyed
+    Gumbel-perturbed top-k-masked scores).  The draft's cache advances one
+    position regardless — only the chain is ever fed back."""
+    x = embed_token(params["embedding"]["embed"], token, plan=plan,
+                    policy=policy)                              # [B, E]
+    if cfg.rope_theta == 0:
+        pos_tab = sinusoidal_positions(cfg.max_seq, cfg.d_model)
+        x = x + jnp.take(pos_tab, jnp.clip(pos, 0, cfg.max_seq - 1),
+                         axis=0).astype(x.dtype)
+    memory_len = cfg.enc_seq_padded if cfg.enc_schedule else 0
+    x, caches = _run_segments_decode(params, x, pos, caches, plan=plan,
+                                     cfg=cfg, policy=policy,
+                                     memory_len=memory_len,
+                                     block_tables=block_tables,
+                                     paged_segments=paged_segments)
+    head_norm = _head_norm(params, plan, cfg)
+    if head_norm is None:
+        x = ops.norm(x, params["final_norm"], cfg.norm)
+    tok, alts = sample_topn(x, params["embedding"]["unemb"],
+                            dict(lane, step=pos + 1), n, plan=plan, cfg=cfg,
+                            policy=policy, norm=head_norm)
+    return tok, alts, caches

@@ -71,6 +71,7 @@ class InferenceEngine:
                  encode_batch: Optional[int] = None,
                  fuse_epilogues: bool = True,
                  spec: Optional[SpecConfig] = None, draft_params=None,
+                 draft_checkpoint: Optional[str] = None,
                  prefix_cache: bool = False,
                  cache_blocks: Optional[int] = None,
                  weight_dtype: str = "bfloat16",
@@ -82,6 +83,10 @@ class InferenceEngine:
         # owns a draft LM (params from `draft_params`, the target itself
         # for draft="self", or a seeded init) and replaces per-token
         # decode steps with propose->verify->commit rounds.
+        # `draft_checkpoint` loads the draft params from a
+        # checkpoint/checkpointer.py directory instead (shape-checked
+        # against the spec's resolved draft config; mutually exclusive
+        # with draft_params).
         # `prefix_cache` turns on refcounted KV prefix sharing
         # (serving/prefix_cache.py): retired requests' blocks stay indexed
         # by token content and warm admissions prefill only their uncached
@@ -97,6 +102,15 @@ class InferenceEngine:
         # fetching the step's tokens, hiding host work under device time.
         # Token-identical to the synchronous loop for greedy and sampled
         # traffic (tests/test_goodput.py).
+        if draft_checkpoint is not None:
+            if spec is None:
+                raise ValueError(
+                    "draft_checkpoint requires a SpecConfig (`spec=`)")
+            if draft_params is not None:
+                raise ValueError(
+                    "pass draft_params OR draft_checkpoint, not both")
+            draft_params = self._restore_draft(cfg, params, spec,
+                                               draft_checkpoint)
         self.runner = ModelRunner(cfg, params, batch_size=batch_size,
                                   max_seq=max_seq, mesh=mesh, policy=policy,
                                   min_bucket=min_bucket, paged=paged,
@@ -122,6 +136,27 @@ class InferenceEngine:
         self._stats = self._fresh_stats()
         self._prefix_base = self._prefix_snapshot()
         self._t_last_decode: Optional[float] = None
+
+    @staticmethod
+    def _restore_draft(cfg: ModelConfig, params, spec: SpecConfig,
+                       directory: str):
+        """Load draft params from a Checkpointer directory: resolve the
+        spec's draft config, eval_shape the init to get the reference
+        tree (leaf count / shapes / dtypes checked by restore — a
+        mismatched checkpoint fails loudly, not with silent garbage), and
+        restore into it.  The draft inherits the target params' dtype,
+        matching the in-memory seeded-init convention bit for bit."""
+        import functools
+        import jax
+        from repro.checkpoint.checkpointer import Checkpointer
+        from repro.models import lm as lm_mod
+        from repro.serving.spec import resolve_draft
+        dcfg = resolve_draft(spec, cfg)
+        pdtype = jax.tree.leaves(params)[0].dtype
+        like = jax.eval_shape(
+            functools.partial(lm_mod.init_lm, cfg=dcfg, dtype=pdtype),
+            jax.random.key(0))
+        return Checkpointer(directory).restore(like)
 
     # -- delegated runner state (back-compat surface) -------------------
     @property
@@ -242,8 +277,15 @@ class InferenceEngine:
         while the scheduler reports pressure is served without speculation
         (spec_lookahead proposes 0 for it — exact, just no lookahead).
         The flag is sticky: 'admitted under pressure' stays true for the
-        request's lifetime."""
-        if (self._degrade > 0 and isinstance(task, GenerateTask)
+        request's lifetime.
+
+        Tree runners (spec.branches > 1) have a gentler first rung —
+        level 1 only shrinks their trees to single-branch chains
+        (step() flips runner._tree_chain_only), so per-request
+        speculation-off waits for level 2.  Single-branch runners keep
+        degrading at level 1, exactly as before trees existed."""
+        thresh = 2 if self.runner.tree_branches > 1 else 1
+        if (self._degrade >= thresh and isinstance(task, GenerateTask)
                 and self.runner.spec is not None and not task.degraded):
             task.degraded = True
             self._stats.requests_degraded += 1
@@ -440,6 +482,11 @@ class InferenceEngine:
         self._shed_expired()
         self._degrade = self.scheduler.degrade_level(
             len(self._gen_queue()), self.runner.B)
+        if self.runner.spec is not None and self.runner.tree_branches > 1:
+            # degrade ladder, rung 1 (lossless): backlogged tree rounds
+            # shrink to single-branch chains for as long as the pressure
+            # lasts — a round-scoped flag, not sticky like `degraded`
+            self.runner._tree_chain_only = self._degrade >= 1
         if self.overlap:
             return self._step_overlapped()
         return self._step_sync()

@@ -275,3 +275,54 @@ def make_block_copy(paged_segments):
                            jnp.asarray(dst, jnp.int32), paged_segments=segs)
 
     return copy
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("paged_segments",))
+def _row_copy(caches, src_blk, src_off, dst_blk, dst_off, *, paged_segments):
+    out = []
+    for seg, paged in zip(caches, paged_segments):
+        d = dict(seg)
+        if paged:
+            for key in ("k", "v"):      # NOT ks/vs: per-block int8 scales
+                #                         cannot move one row at a time
+                if key not in d:
+                    continue
+                leaf = d[key]           # [count, NB, BS, KV, hd]
+                count, _, _, kv, hd = leaf.shape
+                row = jax.lax.dynamic_slice(
+                    leaf, (0, src_blk, src_off, 0, 0),
+                    (count, 1, 1, kv, hd))
+                d[key] = jax.lax.dynamic_update_slice(
+                    leaf, row, (0, dst_blk, dst_off, 0, 0))
+        out.append(d)
+    return tuple(out)
+
+
+def make_row_copy(paged_segments):
+    """The jitted single-position KV mover for one engine layout.
+
+    copy(caches, src_blk, src_off, dst_blk, dst_off) -> caches
+
+    Copies ONE cache position — (block, in-block offset) — across every
+    paged k/v pool leaf.  Tree-speculative commit uses this to compact the
+    accepted root path's KV into the slot's canonical positions: tree
+    nodes scatter their KV at pos0 + node_index (unique per node), but the
+    committed sequence needs depth-d's KV at pos0 + d.  Rope was applied
+    at the node's LOGICAL position (pos0 + depth) during verify, so the
+    move is a pure byte relocation — no re-rotation.  Sources sit strictly
+    above their destinations in flatten order, and copies run in
+    increasing depth, so moves never clobber a pending source.  int8 pools
+    are excluded at the runner level (per-block scales pin entries to
+    their block), not here.  All four indices are traced scalars: one
+    compile serves every move."""
+    segs = tuple(bool(p) for p in paged_segments)
+
+    def copy(caches, src_blk, src_off, dst_blk, dst_off):
+        return _row_copy(caches, jnp.asarray(src_blk, jnp.int32),
+                         jnp.asarray(src_off, jnp.int32),
+                         jnp.asarray(dst_blk, jnp.int32),
+                         jnp.asarray(dst_off, jnp.int32),
+                         paged_segments=segs)
+
+    return copy

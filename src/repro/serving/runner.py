@@ -48,14 +48,15 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import blocks
 from repro.launch import steps as steps_mod
 from repro.serving.kv_cache import (BlockAllocator, make_block_copy,
-                                    make_prefill_scatter, zero_caches)
+                                    make_prefill_scatter, make_row_copy,
+                                    zero_caches)
 from repro.models.quantize import quantize_params
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import (device_lane, set_lane, stack_lanes,
                                     stack_prefill_lanes, zero_lane)
 from repro.serving.spec import (DraftState, SpecConfig, accept_length,
-                                resolve_draft, spec_support_reason,
-                                trim_emitted)
+                                accept_tree_path, build_tree, resolve_draft,
+                                spec_support_reason, trim_emitted)
 from repro.serving.stats import EngineStats
 from repro.serving.tasks import EncodeTask, GenerateTask, Task
 
@@ -225,29 +226,60 @@ class ModelRunner:
                 pdtype = jax.tree.leaves(params)[0].dtype
                 self.draft_params = lm_mod.init_lm(
                     jax.random.key(spec.draft_seed), self.draft_cfg, pdtype)
-            self.draft_decode_step = steps_mod.make_decode_step(
-                self.draft_cfg, ShapeConfig("draft_decode", "decode",
-                                            max_seq, batch_size),
-                mesh, policy=policy, max_seq=max_seq, with_sampling=True,
-                paged=None, weight_dtype=self._draft_wdt,
-                fuse_epilogues=fuse_epilogues)
+            # token-tree speculation (spec.branches > 1): the draft's
+            # top-b candidates per depth become sibling leaves verified in
+            # one tree-masked pass.  int8 KV pools force the single-chain
+            # round: accepted-path compaction moves KV rows ACROSS blocks,
+            # which per-block quantization scales cannot follow.
+            self.tree_branches = (1 if self.kv_dtype == "int8"
+                                  else spec.branches)
+            self._tree_chain_only = False  # engine degrade rung 1 sets it
+            self._round_depth: Optional[np.ndarray] = None
+            self._round_width: Optional[np.ndarray] = None
+            dshape_draft = ShapeConfig("draft_decode", "decode",
+                                       max_seq, batch_size)
+            if self.tree_branches > 1:
+                self.draft_topk_step = steps_mod.make_draft_topk_step(
+                    self.draft_cfg, dshape_draft, mesh,
+                    branches=self.tree_branches, policy=policy,
+                    max_seq=max_seq, weight_dtype=self._draft_wdt,
+                    fuse_epilogues=fuse_epilogues)
+                self.draft_decode_step = None
+                self.tree_verify_step = steps_mod.make_tree_verify_step(
+                    cfg, dshape, mesh, layout=self.layout,
+                    num_tokens=1 + spec.k * self.tree_branches,
+                    policy=policy, max_seq=max_seq,
+                    kv_cache_dtype=self.kv_dtype, weight_dtype=weight_dtype,
+                    fuse_epilogues=fuse_epilogues)
+                self.verify_step = None
+                self._row_copy = make_row_copy(self.layout.segments)
+                dstep = self.draft_topk_step
+            else:
+                self.draft_decode_step = steps_mod.make_decode_step(
+                    self.draft_cfg, dshape_draft,
+                    mesh, policy=policy, max_seq=max_seq, with_sampling=True,
+                    paged=None, weight_dtype=self._draft_wdt,
+                    fuse_epilogues=fuse_epilogues)
+                self.draft_topk_step = None
+                self.verify_step = steps_mod.make_verify_step(
+                    cfg, dshape, mesh, layout=self.layout,
+                    num_tokens=spec.k + 1, policy=policy, max_seq=max_seq,
+                    kv_cache_dtype=self.kv_dtype, weight_dtype=weight_dtype,
+                    fuse_epilogues=fuse_epilogues)
+                self.tree_verify_step = None
+                dstep = self.draft_decode_step
             self.draft_caches = zero_caches(
-                self.draft_decode_step.aux["cache_struct"],
-                steps_mod.to_shardings(
-                    self.draft_decode_step.aux["cache_specs"], mesh))
+                dstep.aux["cache_struct"],
+                steps_mod.to_shardings(dstep.aux["cache_specs"], mesh))
             self._draft_prefill_steps: Dict[tuple,
                                             steps_mod.StepBundle] = {}
             self._draft_scatter = make_prefill_scatter(
                 (False,) * len(self.draft_cfg.schedule), 1)
-            self.verify_step = steps_mod.make_verify_step(
-                cfg, dshape, mesh, layout=self.layout,
-                num_tokens=spec.k + 1, policy=policy, max_seq=max_seq,
-                kv_cache_dtype=self.kv_dtype, weight_dtype=weight_dtype,
-                fuse_epilogues=fuse_epilogues)
             self.draft_states: List[Optional[DraftState]] = (
                 [None] * batch_size)
         else:
             self.draft_cfg = None
+            self.tree_branches = 1
             self.draft_states = [None] * batch_size
         # token/pos live HOST-side: per-slot updates (prefill landing, chunk
         # completion) index by a python int, and a device `.at[b].set()`
@@ -896,17 +928,53 @@ class ModelRunner:
         Requests admitted degraded (DeadlinePolicy under pressure) get 0
         lookahead — their rounds propose nothing and commit exactly the
         pending token, i.e. plain decode at verify-step cost, still
-        token-identical (speculation is lossless at every k)."""
+        token-identical (speculation is lossless at every k).
+
+        Token trees (tree_branches > 1) reserve NODE capacity, not chain
+        depth: a depth-d, width-w tree scatters d*w node positions past
+        pos.  Each row uses the deepest tree whose node count fits the
+        same horizon / pool-capacity caps (at least depth 1), else falls
+        back to the plain chain for the round; and when the trees'
+        collective extra blocks exceed the pool's FREE blocks, every row
+        shrinks to its chain — sibling scratch is pure lookahead and must
+        never preempt a neighbor's committed state (the chain lookahead
+        may, exactly as at width 1).  The per-row (depth, width) choice
+        lands in _round_depth/_round_width for the round that follows."""
         la = np.zeros((self.B,), np.int64)
+        chain_la = np.zeros((self.B,), np.int64)
         cap_tokens = self.allocator.num_blocks * self.layout.block_size
+        w = self.tree_branches
+        depths = np.zeros((self.B,), np.int64)
+        widths = np.ones((self.B,), np.int64)
         for b in self.decoding_slots():
             p = int(self.pos[b])
             task = self.slots[b]
             if task.degraded:
                 continue
             room = task.max_new_tokens - len(task.output)
-            la[b] = max(0, min(self.spec.k, self.max_seq - 1 - p,
-                               cap_tokens - 1 - p, room - 1))
+            la_c = max(0, min(self.spec.k, self.max_seq - 1 - p,
+                              cap_tokens - 1 - p, room - 1))
+            chain_la[b] = la_c
+            if w > 1 and not self._tree_chain_only:
+                la_t = min(la_c, (self.max_seq - 1 - p) // w,
+                           (cap_tokens - 1 - p) // w)
+                if la_t >= 1:
+                    depths[b], widths[b], la[b] = la_t, w, la_t * w
+                    continue
+            depths[b], la[b] = la_c, la_c
+        if w > 1 and bool(np.any(widths > 1)):
+            bs = self.layout.block_size
+            need = sum(
+                max(0, (int(self.pos[b]) + int(la[b])) // bs + 1
+                    - len(self._slot_blocks[b]))
+                for b in self.decoding_slots())
+            if need > self.allocator.num_free:
+                for b in self.decoding_slots():
+                    if widths[b] > 1:
+                        depths[b], widths[b] = chain_la[b], 1
+                        la[b] = chain_la[b]
+        self._round_depth = depths
+        self._round_width = widths
         return la
 
     def _token_at(self, task: GenerateTask, p: int) -> int:
@@ -926,7 +994,13 @@ class ModelRunner:
         freed, and the draft cache rewinds alongside.  Returns the
         committed (task, output index) token events: between 1 and k+1
         per slot, token-identical to `decode()` run step-by-step for
-        greedy AND sampled requests (serving/spec.py)."""
+        greedy AND sampled requests (serving/spec.py).
+
+        With `spec.branches > 1` the round goes through the token-tree
+        variant instead (_spec_decode_tree); at branches == 1 this path
+        runs unchanged."""
+        if self.tree_branches > 1:
+            return self._spec_decode_tree(stats)
         active = self.decoding_slots()
         if not active:
             return []
@@ -1029,6 +1103,176 @@ class ModelRunner:
             # never past the committed horizon)
             self.draft_states[b].pos = min(int(starts[b]) + n_steps,
                                            int(pos0[b]) + j + 1, pos_new)
+        stats.decode_steps += 1
+        stats.spec_rounds += 1
+        stats.spec_slot_steps += occupied
+        stats.spec_emitted_tokens += emitted_total
+        stats.ar_tokens += emitted_total
+        stats.ar_time_s += dt
+        stats.add_decode_step_ms(dt * 1e3)
+        stats.occupied_slot_steps += occupied
+        stats.block_slot_steps += self.allocator.num_used
+        stats.token_slot_steps += live_tokens
+        return fresh
+
+    def _spec_decode_tree(self, stats: EngineStats
+                          ) -> List[Tuple[GenerateTask, int]]:
+        """One token-tree speculative round (spec.branches > 1).
+
+        Propose: the same lockstep draft replay loop as the chain round,
+        via `draft_topk_step` — each step also returns the row's top-b
+        candidates, so while the draft's dense cache advances ONLY along
+        its sampled chain, the (b - 1) siblings per depth come free.
+        Verify: per-slot caterpillar trees (spec.build_tree) flatten into
+        one fixed-width [B, 1 + k*b] chunk; `tree_verify_step` scatters
+        node KV at pos0 + node_index, applies rope and the sampler's
+        position key at pos0 + depth, masks intra-chunk attention to each
+        node's ancestors, and returns the target's own choice after every
+        node's root path.  Commit: the deepest root path whose node
+        tokens all match their parent's choice (spec.accept_tree_path) is
+        accepted — its KV rows are compacted into the slot's canonical
+        positions pos0 + d (kv_cache.make_row_copy; rope already matches,
+        the move is bytes only) — then the usual trim / rollback / draft
+        rewind, the draft rewinding to the accepted path's leading CHAIN
+        prefix (siblings never entered its cache).  Lossless: every
+        acceptance test is the same (seed, position)-keyed equality the
+        chain round uses, so committed outputs stay token-identical to
+        plain decode."""
+        active = self.decoding_slots()
+        if not active:
+            return []
+        C = 1 + self.spec.k * self.tree_branches
+        if self._round_depth is None:
+            self.spec_lookahead()
+        depth_la, width = self._round_depth, self._round_width
+        pos0 = np.array(self.pos, np.int64)
+
+        # -- propose (chain replay identical to spec_decode's loop)
+        starts = np.zeros((self.B,), np.int64)
+        known: Dict[int, List[int]] = {}
+        for b in active:
+            ds = self.draft_states[b]
+            starts[b] = ds.pos
+            known[b] = [self._token_at(self.slots[b], p)
+                        for p in range(ds.pos, int(pos0[b]) + 1)]
+        n_steps = max(max(len(known[b]) - 1 + int(depth_la[b])
+                          for b in active), 1)
+        t0 = time.perf_counter()
+        lane_d = device_lane(self.lane)
+        feed = np.zeros((self.B,), np.int32)
+        levels: Dict[int, List[List[int]]] = {b: [] for b in active}
+        last_out = np.zeros((self.B,), np.int32)
+        for s in range(n_steps):
+            for b in active:
+                feed[b] = (known[b][s] if s < len(known[b])
+                           else int(last_out[b]))
+            out_d, alts_d, _, self.draft_caches = self.draft_topk_step.fn(
+                self.draft_params, jnp.asarray(feed),
+                jnp.asarray(starts + s, jnp.int32), self.draft_caches,
+                lane_d)
+            last_out = np.asarray(out_d)
+            alts = np.asarray(alts_d)
+            for b in active:
+                if (s >= len(known[b]) - 1
+                        and len(levels[b]) < int(depth_la[b])):
+                    # alts[b, 0] == the chain token fed next step, by
+                    # sample_topn construction
+                    levels[b].append([int(t)
+                                      for t in alts[b, :int(width[b])]])
+        t_draft = time.perf_counter() - t0
+        stats.spec_draft_time_s += t_draft
+        stats.add_draft_time_ms(t_draft * 1e3)
+
+        # -- verify: one tree-masked target pass over every slot's tree
+        chunk = np.zeros((self.B, C), np.int32)
+        chunk_len = np.zeros((self.B,), np.int32)
+        depth_op = np.zeros((self.B, C), np.int32)
+        anc_op = np.zeros((self.B, C, C), bool)
+        trees = {}
+        for b in active:
+            tree = build_tree(int(self.tokens[b]), levels[b])
+            trees[b] = tree
+            n = tree.n_nodes
+            chunk[b, :n] = tree.tokens
+            depth_op[b, :n] = tree.depth
+            anc_op[b, :n, :n] = tree.anc
+            chunk_len[b] = n
+        t1 = time.perf_counter()
+        choices_d, self.caches, _ = self.tree_verify_step.fn(
+            self.params, jnp.asarray(chunk), jnp.asarray(pos0, jnp.int32),
+            jnp.asarray(chunk_len), jnp.asarray(depth_op),
+            jnp.asarray(anc_op), self.caches, self._tables(), lane_d)
+        choices = np.asarray(choices_d)           # blocks: honest timing
+        dt = time.perf_counter() - t1
+        self.steps_run += 1
+
+        # -- commit + compact + rollback
+        fresh: List[Tuple[GenerateTask, int]] = []
+        occupied = live_tokens = emitted_total = 0
+        bs = self.layout.block_size
+        for b in active:
+            task = self.slots[b]
+            occupied += 1
+            tree = trees[b]
+            n = tree.n_nodes
+            path = accept_tree_path(tree.tokens, tree.parent, choices[b], n)
+            stats.spec_proposed_tokens += n - 1
+            stats.spec_accepted_tokens += len(path)
+            stats.spec_tree_nodes += n
+            stats.add_spec_path_depth(len(path))
+            if any(not tree.chain[i] for i in path):
+                stats.spec_branch_hits += 1
+            full = [0] + path
+            cand = [int(choices[b, i]) for i in full]
+            room = min(task.max_new_tokens - len(task.output),
+                       self.max_seq - 1 - int(pos0[b]))
+            emitted = trim_emitted(cand, room=room, eos_id=task.eos_id)
+            m = len(emitted)
+            # compact: committed position pos0 + d must hold the KV that
+            # node full[d] wrote at pos0 + full[d] (already roped at its
+            # logical position pos0 + d).  full[] is strictly increasing
+            # with full[d] >= d, so ascending-d moves never clobber a
+            # pending source.
+            blks = self._slot_blocks[b]
+            for d in range(1, m):
+                if int(full[d]) == d:
+                    continue
+                src_p = int(pos0[b]) + int(full[d])
+                dst_p = int(pos0[b]) + d
+                self.caches = self._row_copy(
+                    self.caches, blks[src_p // bs], src_p % bs,
+                    blks[dst_p // bs], dst_p % bs)
+            for tok in emitted:
+                task.output.append(tok)
+                fresh.append((task, len(task.output) - 1))
+            emitted_total += m
+            pos_new = int(pos0[b]) + m
+            self.tokens[b] = emitted[-1]
+            self._tok_dev = None    # host token write invalidates the chain
+            self.pos[b] = pos_new
+            task.decode_ms += dt * 1e3
+            live_tokens += pos_new
+            # rollback: free blocks holding only rejected-node KV
+            keep = self.allocator.blocks_for(pos_new)
+            if len(self._slot_blocks[b]) > keep:
+                extra = self._slot_blocks[b][keep:]
+                del self._slot_blocks[b][keep:]
+                self.allocator.free(extra)
+                self.block_tables[b, keep:] = -1
+                self._tables_dev = None
+            # draft rewind: the dense draft cache followed the CHAIN, so
+            # it stays valid through the accepted path's leading chain
+            # prefix only (a sibling acceptance diverges from what the
+            # draft fed itself)
+            j_chain = 0
+            for i in path:
+                if not tree.chain[i]:
+                    break
+                j_chain += 1
+            self.draft_states[b].pos = min(int(starts[b]) + n_steps,
+                                           int(pos0[b]) + j_chain + 1,
+                                           pos_new)
+        self._round_depth = self._round_width = None
         stats.decode_steps += 1
         stats.spec_rounds += 1
         stats.spec_slot_steps += occupied

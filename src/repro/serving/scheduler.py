@@ -178,12 +178,18 @@ class DeadlinePolicy(SchedulerPolicy):
     With the default floor of 0 this is pure expiry (provable with zero
     assumptions about service time); a measured floor sheds earlier.
 
-    degrade: once the generate backlog exceeds `degrade_depth` requests per
-    decode slot, newly admitted requests are served degraded — speculation
-    disabled (per request) and the chunk budget halved (engine-wide) — to
-    shrink per-step latency variance before any shedding.  Tokens never
-    change: speculation is exact (serving/spec.py) and chunk width only
-    moves prefill FLOPs in time."""
+    degrade: a two-rung lossless ladder keyed to the generate backlog.
+    Level 1 (backlog > `degrade_depth` requests per decode slot) shrinks
+    token-tree speculation to single-branch chains (the tree's sibling
+    lookahead is the widest per-step variance source) and halves the
+    chunk budget (engine-wide).  Level 2 (backlog > 2x the same
+    threshold) additionally serves newly admitted requests with
+    speculation off entirely (per request, sticky).  Engines running
+    single-branch speculation have no rung-1 tree to shrink, so the
+    engine applies the per-request half at level >= 1 for them —
+    identical to the pre-tree ladder.  Tokens never change on any rung:
+    speculation is exact at every width and depth (serving/spec.py) and
+    chunk width only moves prefill FLOPs in time."""
 
     name = "deadline"
 
@@ -221,12 +227,17 @@ class DeadlinePolicy(SchedulerPolicy):
                 and t.age_s(now) * 1e3 + self.ttft_floor_ms > t.deadline_ms]
 
     def degrade_level(self, n_queued: int, n_slots: int) -> int:
-        return 1 if n_queued > self.degrade_depth * max(1, n_slots) else 0
+        thresh = self.degrade_depth * max(1, n_slots)
+        if n_queued > 2 * thresh:
+            return 2
+        return 1 if n_queued > thresh else 0
 
     def effective_chunk_tokens(self, level: int) -> Optional[int]:
         if self.chunk_tokens is None or level <= 0:
             return self.chunk_tokens
         # halved, floored: a tiny chunk step is all padding overhead
+        # (levels 1 and 2 share the one halving — the ladder's second
+        # rung is about speculation, not chunk width)
         return max(8, self.chunk_tokens // 2)
 
 

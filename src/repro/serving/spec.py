@@ -68,15 +68,28 @@ class SpecConfig:
     draft_seed  RNG seed used to initialize draft parameters when the
                 caller does not supply `draft_params` (matching the
                 engine's init-at-construction convention).
+    branches    token-tree width: candidates the draft proposes per depth.
+                1 (default) is the classic single-chain round.  b > 1
+                builds a Medusa-style "caterpillar" tree per slot — the
+                sampled draft chain t_1..t_k plus (b - 1) top-k sibling
+                leaves hanging off each chain node — verified in ONE
+                tree-masked target pass; a round then accepts the deepest
+                root path whose nodes all match the target's own choices,
+                which strictly contains the single-chain acceptance
+                (the chain IS one of the root paths).  Still lossless.
     """
     draft: str = "auto"
     k: int = 4
     acceptance: str = "lossless"
     draft_seed: int = 0
+    branches: int = 1
 
     def __post_init__(self):
         if self.k < 1:
             raise ValueError(f"speculation length k must be >= 1: {self.k}")
+        if self.branches < 1:
+            raise ValueError(
+                f"tree branch count must be >= 1: {self.branches}")
         if self.acceptance not in ACCEPTANCE_MODES:
             raise ValueError(
                 f"acceptance must be one of {ACCEPTANCE_MODES}: "
@@ -159,6 +172,104 @@ def accept_length(proposed: Sequence[int], target: Sequence[int]) -> int:
     return n
 
 
+@dataclass
+class TokenTree:
+    """One slot's flattened proposal tree (build_tree output).
+
+    Depth-major flatten order, chain node first within each depth:
+    node 0 is the pending (already-committed) token, then per depth d the
+    draft chain's token followed by its sibling candidates.  Any prefix of
+    this order is ancestor-closed, so per-slot trees of different sizes
+    batch into one fixed-width verify chunk by truncation + masking.
+
+    tokens  [n] node token ids (tokens[0] = pending token)
+    depth   [n] tree depth per node (depth[0] = 0; rope / sampling
+            position of node i is pos0 + depth[i])
+    parent  [n] parent node index (parent[0] = -1)
+    anc     [n, n] bool ancestor-or-self matrix: anc[i, j] = node j lies
+            on the root path of node i.  This IS the intra-chunk
+            attention mask forward_verify_tree applies.
+    chain   [n] bool: node sits on the draft's sampled chain (only chain
+            nodes have children, so an accepted path leaves the chain at
+            most once — at its final node).
+    """
+    tokens: "np.ndarray"
+    depth: "np.ndarray"
+    parent: "np.ndarray"
+    anc: "np.ndarray"
+    chain: "np.ndarray"
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+def build_tree(pending: int, levels: Sequence[Sequence[int]]) -> TokenTree:
+    """Flatten one slot's proposal levels into a TokenTree.
+
+    `levels[d]` holds the candidate tokens for depth d + 1, with
+    `levels[d][0]` the draft's sampled chain token (the token the draft
+    actually fed forward) and the rest its same-step top-k siblings.
+    Every depth's candidates attach to the previous depth's CHAIN node —
+    the draft cache only ever advanced along the chain, so siblings are
+    leaves.  A width-1 levels list reproduces the single-chain layout
+    exactly: depth[i] == i and `anc` lower-triangular."""
+    import numpy as np
+    n = 1 + sum(len(lv) for lv in levels)
+    tokens = np.zeros((n,), np.int32)
+    depth = np.zeros((n,), np.int32)
+    parent = np.full((n,), -1, np.int32)
+    anc = np.zeros((n, n), bool)
+    chain = np.zeros((n,), bool)
+    tokens[0] = pending
+    anc[0, 0] = True
+    chain[0] = True
+    i = 1
+    par = 0
+    for d, lv in enumerate(levels, start=1):
+        nxt = i                          # this depth's chain node
+        for j, t in enumerate(lv):
+            tokens[i] = int(t)
+            depth[i] = d
+            parent[i] = par
+            anc[i] = anc[par]
+            anc[i, i] = True
+            chain[i] = j == 0
+            i += 1
+        par = nxt
+    return TokenTree(tokens=tokens, depth=depth, parent=parent, anc=anc,
+                     chain=chain)
+
+
+def accept_tree_path(tokens: Sequence[int], parent: Sequence[int],
+                     choices: Sequence[int], n_nodes: int) -> List[int]:
+    """Deepest accepted root path through a verified token tree.
+
+    `choices[i]` is the target's own deterministic choice for the
+    position AFTER node i's root path — acceptance of a child node j
+    requires tokens[j] == choices[parent[j]], the same equality
+    `accept_length` tests per chain position.  Walk from the root,
+    descending into the (unique, by distinct-sibling construction) child
+    matching the parent's choice, until no child matches.  Returns the
+    accepted node indices in depth order, root excluded — so the round
+    emits [choices[i] for i in [0] + path], mirroring the chain round's
+    cand[:j + 1].  On a width-1 chain tree (parent[i] == i - 1) this
+    reduces to exactly `accept_length` semantics."""
+    path: List[int] = []
+    cur = 0
+    while True:
+        want = int(choices[cur])
+        nxt = -1
+        for j in range(cur + 1, n_nodes):
+            if int(parent[j]) == cur and int(tokens[j]) == want:
+                nxt = j
+                break
+        if nxt < 0:
+            return path
+        path.append(nxt)
+        cur = nxt
+
+
 def trim_emitted(emitted: List[int], *, room: int,
                  eos_id: Optional[int]) -> List[int]:
     """Clamp one round's committed tokens to non-speculative retirement
@@ -171,5 +282,6 @@ def trim_emitted(emitted: List[int], *, room: int,
     return out
 
 
-__all__ = ["SpecConfig", "DraftState", "spec_support_reason",
-           "resolve_draft", "accept_length", "trim_emitted"]
+__all__ = ["SpecConfig", "DraftState", "TokenTree", "spec_support_reason",
+           "resolve_draft", "accept_length", "accept_tree_path",
+           "build_tree", "trim_emitted"]

@@ -82,6 +82,12 @@ class EngineStats:
     spec_emitted_tokens: int = 0   # tokens committed by verify steps
     spec_draft_time_s: float = 0.0  # wall time in draft propose phases
     draft_time_ms: List[float] = field(default_factory=list)
+    # token-tree speculation (spec.branches > 1; zero under chain rounds)
+    spec_tree_nodes: int = 0       # tree nodes verified (incl. root)
+    spec_branch_hits: int = 0      # slot-rounds whose accepted path left
+    #                                the draft's sampled chain
+    spec_path_depth: List[float] = field(default_factory=list)  # accepted
+    #                                root-path depth per slot-round
     # -- serving-level ------------------------------------------------------
     ttft_ms: List[float] = field(default_factory=list)
     queue_wait_ms: List[float] = field(default_factory=list)
@@ -146,6 +152,9 @@ class EngineStats:
 
     def add_draft_time_ms(self, v: float) -> None:
         _bounded_append(self.draft_time_ms, v)
+
+    def add_spec_path_depth(self, v: float) -> None:
+        _bounded_append(self.spec_path_depth, v)
 
     def add_tpot_ms(self, v: float) -> None:
         _bounded_append(self.tpot_ms_samples, v)
@@ -224,6 +233,24 @@ class EngineStats:
     @property
     def draft_time_ms_p95(self) -> float:
         return percentile(self.draft_time_ms, 95)
+
+    @property
+    def spec_path_depth_p50(self) -> float:
+        return percentile(self.spec_path_depth, 50)
+
+    @property
+    def spec_path_depth_p95(self) -> float:
+        return percentile(self.spec_path_depth, 95)
+
+    @property
+    def spec_branch_utilization(self) -> float:
+        """Fraction of tree slot-rounds whose accepted path used a
+        sibling branch (left the draft's sampled chain) — the share of
+        rounds where the tree beat what the chain alone would have
+        accepted.  0.0 under single-branch rounds."""
+        if not self.spec_slot_steps:
+            return 0.0
+        return self.spec_branch_hits / self.spec_slot_steps
 
     @property
     def slot_occupancy(self) -> float:
@@ -359,6 +386,11 @@ class EngineStats:
             "spec_draft_time_s": self.spec_draft_time_s,
             "draft_time_ms_p50": self.draft_time_ms_p50,
             "draft_time_ms_p95": self.draft_time_ms_p95,
+            "spec_tree_nodes": self.spec_tree_nodes,
+            "spec_branch_hits": self.spec_branch_hits,
+            "spec_branch_utilization": self.spec_branch_utilization,
+            "spec_path_depth_p50": self.spec_path_depth_p50,
+            "spec_path_depth_p95": self.spec_path_depth_p95,
             "ttft_p50_ms": self.ttft_p50_ms,
             "ttft_p95_ms": self.ttft_p95_ms,
             "ttft_p99_ms": self.ttft_p99_ms,
@@ -423,9 +455,15 @@ class EngineStats:
                      f"{self.decode_stall_p95_ms:.0f}ms")
         spec = ""
         if self.spec_rounds:
+            tree = ""
+            if self.spec_tree_nodes:
+                tree = (f", tree {self.spec_tree_nodes} nodes, path p50 "
+                        f"{self.spec_path_depth_p50:.1f} p95 "
+                        f"{self.spec_path_depth_p95:.1f}, branch "
+                        f"{self.spec_branch_utilization:.0%}")
             spec = (f" | SPEC {self.spec_acceptance_rate:.0%} accept, "
                     f"{self.spec_tokens_per_step:.2f} tok/step, draft p95 "
-                    f"{self.draft_time_ms_p95:.1f}ms")
+                    f"{self.draft_time_ms_p95:.1f}ms" + tree)
         quant = ""
         if self.weight_dtype != "bfloat16" or self.kv_dtype != "bfloat16":
             quant = (f" | QUANT w={self.weight_dtype} kv={self.kv_dtype}, "
