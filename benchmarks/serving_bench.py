@@ -51,7 +51,17 @@ Three scheduler/runner-split scenarios ride along in `record["scenarios"]`:
                    TTFT budget are calibrated on this host first; the
                    deadline policy must strictly beat FCFS goodput at the
                    calibrated over-capacity rate, or the bench exits
-                   nonzero (the CI gate for the goodput subsystem)
+                   nonzero (the CI gate for the goodput subsystem).  A
+                   third, TRACED deadline run then re-plays the same load
+                   with serving/trace.py attached: it must emit a
+                   schema-clean non-empty Chrome trace (--trace-out, the
+                   CI artifact) and land within 5% of the untraced
+                   goodput, or the bench exits nonzero (the overhead gate
+                   for the observability subsystem).  Per-phase MFU/MBU
+                   attribution rides along in the artifact: the base
+                   record's `phase_util` (from EngineStats.to_dict) and
+                   the traced run's `traced.phase_util`.  Pass
+                   --trace-dir to also capture per-scenario traces.
 """
 from __future__ import annotations
 
@@ -72,8 +82,9 @@ from repro.models import lm
 from repro.serving import (ArrivalSpec, ChunkedPrefillPolicy, DeadlinePolicy,
                            EncodeTask, FCFSPolicy, InferenceEngine, LoadSpec,
                            PromptSpec, Request, SamplingParams, SLOSpec,
-                           SpecConfig, make_policy, make_trace, percentiles,
-                           replay, spec_support_reason)
+                           SpecConfig, Tracer, make_policy, make_trace,
+                           percentiles, replay, spec_support_reason,
+                           validate_chrome_trace)
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -95,17 +106,33 @@ def build_trace(cfg, *, requests: int, min_len: int, max_len: int,
     return out
 
 
-def _mk_engine(cfg, params, args, scheduler=None):
+def _mk_engine(cfg, params, args, scheduler=None, tracer=None):
     return InferenceEngine(cfg, params, batch_size=args.batch,
                            max_seq=args.max_seq,
                            block_size=args.block_size,
                            kv_pool_blocks=args.kv_pool_blocks or None,
                            scheduler=scheduler,
                            weight_dtype=args.weight_dtype,
-                           kv_dtype=args.kv_dtype)
+                           kv_dtype=args.kv_dtype,
+                           tracer=tracer)
 
 
-def mixed_workload(cfg, params, args) -> dict:
+def _scenario_tracer(args):
+    """Per-scenario Tracer when --trace-dir is set, else None (the no-op
+    fast path — scenario engines then carry zero tracing branches)."""
+    return Tracer(capacity=args.trace_buffer) if args.trace_dir else None
+
+
+def _write_trace(tracer, args, name: str) -> None:
+    if tracer is None:
+        return
+    os.makedirs(args.trace_dir, exist_ok=True)
+    path = os.path.join(args.trace_dir, f"TRACE_{name}.json")
+    n = tracer.write(path)
+    print(f"  trace[{name}]: {n} events -> {path}")
+
+
+def mixed_workload(cfg, params, args, tracer=None) -> dict:
     """Encode + generate through one engine: half the trace becomes
     EncodeTasks.  Reports the per-task-class split."""
     def submit_all(engine):
@@ -120,10 +147,12 @@ def mixed_workload(cfg, params, args) -> dict:
                 engine.submit(Request(uid=uid, prompt=prompt,
                                       max_new_tokens=args.max_new))
 
-    engine = _mk_engine(cfg, params, args)
+    engine = _mk_engine(cfg, params, args, tracer=tracer)
     submit_all(engine)                            # warmup: compile buckets
     engine.run()
     engine.reset_stats()
+    if tracer:
+        tracer.clear()
     t0 = time.perf_counter()
     submit_all(engine)
     done = engine.run()
@@ -142,7 +171,7 @@ def mixed_workload(cfg, params, args) -> dict:
     }
 
 
-def long_admission(cfg, params, args, scheduler) -> dict:
+def long_admission(cfg, params, args, scheduler, tracer=None) -> dict:
     """Long prompts arrive one at a time while a long-running request
     decodes: each admission's prefill work lands between that request's AR
     steps, and decode-stall p95 captures how long it sat idle behind it
@@ -200,9 +229,11 @@ def long_admission(cfg, params, args, scheduler) -> dict:
 
     engine = InferenceEngine(cfg, params, batch_size=n_slots, max_seq=seq,
                              block_size=args.block_size,
-                             scheduler=scheduler)
+                             scheduler=scheduler, tracer=tracer)
     run_once(engine)                              # warmup: compile
     engine.reset_stats()
+    if tracer:
+        tracer.clear()
     run_once(engine)
     st = engine.stats()
     return {
@@ -215,7 +246,8 @@ def long_admission(cfg, params, args, scheduler) -> dict:
     }
 
 
-def spec_workload(cfg, params, args, baseline_ar_tok_s: float) -> dict:
+def spec_workload(cfg, params, args, baseline_ar_tok_s: float,
+                  tracer=None) -> dict:
     """The base trace with speculative decoding on.  AR tok/s here is
     tokens committed per second of TARGET decode (verify) time — the
     quantity speculation amortizes the per-step weight read over; the
@@ -229,13 +261,15 @@ def spec_workload(cfg, params, args, baseline_ar_tok_s: float) -> dict:
                              max_seq=args.max_seq,
                              block_size=args.block_size,
                              kv_pool_blocks=args.kv_pool_blocks or None,
-                             spec=spec)
+                             spec=spec, tracer=tracer)
     trace_kw = dict(requests=args.requests, min_len=args.min_prompt_len,
                     max_len=args.max_prompt_len, max_new=args.max_new)
     for req in build_trace(cfg, seed=args.seed, **trace_kw):
         engine.submit(req)                        # warmup: compile
     engine.run()
     engine.reset_stats()
+    if tracer:
+        tracer.clear()
     t0 = time.perf_counter()
     for req in build_trace(cfg, seed=args.seed, **trace_kw):
         engine.submit(req)
@@ -380,7 +414,7 @@ def check_tree_spec(rec: dict) -> list:
     return problems
 
 
-def shared_prefix_workload(cfg, params, args) -> dict:
+def shared_prefix_workload(cfg, params, args, tracer=None) -> dict:
     """N requests share a long system prompt (each with a short unique
     tail): prefix cache off (cold) vs on (warm).  The warm engine runs two
     populating passes first — pass 1 fills the radix index (and picks up
@@ -427,11 +461,14 @@ def shared_prefix_workload(cfg, params, args) -> dict:
         return {r.uid - uid0: list(r.output) for r in done}, wall
 
     def mk(prefix_cache):
+        # only the warm engine traces: its spans carry the warm_hit /
+        # cow_copy instants the observability layer exists to surface
         return InferenceEngine(
             cfg, params, batch_size=batch, max_seq=seq,
             block_size=args.block_size, kv_pool_blocks=blocks,
             scheduler=make_policy("fcfs", cache_aware=prefix_cache),
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache,
+            tracer=tracer if prefix_cache else None)
 
     cold = mk(False)
     run_pass(cold, 0)                             # warmup: compile buckets
@@ -446,6 +483,8 @@ def shared_prefix_workload(cfg, params, args) -> dict:
     run_pass(warm, 200)                           # populate the index
     run_pass(warm, 300)                           # compile warm buckets
     warm.reset_stats()
+    if tracer:
+        tracer.clear()
     warm_out, warm_wall = run_pass(warm, 400)
     wst = warm.stats()
 
@@ -546,14 +585,14 @@ def goodput_workload(cfg, params, args) -> dict:
     prompts = PromptSpec(min_len=args.min_prompt_len,
                          max_len=args.max_prompt_len, sampled_frac=0.5)
 
-    def mk(policy):
+    def mk(policy, tracer=None):
         return InferenceEngine(cfg, params, batch_size=args.batch,
                                max_seq=args.max_seq,
                                block_size=args.block_size,
                                kv_pool_blocks=args.kv_pool_blocks or None,
                                scheduler=policy, overlap=True,
                                weight_dtype=args.weight_dtype,
-                               kv_dtype=args.kv_dtype)
+                               kv_dtype=args.kv_dtype, tracer=tracer)
 
     def trace(slo, uid0, rps):
         spec = LoadSpec(requests=n, vocab=cfg.vocab,
@@ -599,6 +638,33 @@ def goodput_workload(cfg, params, args) -> dict:
             "host_overlap_ratio": st.host_overlap_ratio,
             "overlapped_steps": st.overlapped_steps,
         }
+
+    # traced re-run of the winning policy: the CI trace artifact, plus the
+    # overhead gate's evidence that tracing rides along for free.  Same
+    # arrival/prompt seeds as the measured deadline run (uid offsets only
+    # re-key per-uid sampling seeds — shapes and arrivals are identical).
+    tracer = Tracer(capacity=args.trace_buffer)
+    engine = mk(DeadlinePolicy(), tracer=tracer)
+    replay(engine, trace(SLOSpec(), 40_000, 1.0), time_scale=0)   # warmup
+    engine.reset_stats()
+    tracer.clear()
+    done, wall = replay(engine, trace(slo, 50_000, rate))
+    st = engine.stats()
+    if args.trace_out:
+        os.makedirs(os.path.dirname(args.trace_out) or ".", exist_ok=True)
+        tracer.write(args.trace_out)
+    out["traced"] = {
+        "policy": "deadline",
+        "trace_out": args.trace_out,
+        "trace_events": len(tracer.events),
+        "trace_dropped": tracer.dropped,
+        "trace_problems": validate_chrome_trace(tracer.chrome_trace()),
+        "completed": len(done),
+        "slo_met": st.slo_met,
+        "wall_s": wall,
+        "goodput_rps": st.slo_met / wall if wall else 0.0,
+        "phase_util": st.phase_util(),
+    }
     return out
 
 
@@ -619,6 +685,25 @@ def check_goodput(rec: dict) -> list:
             f"deadline policy met 0 of {rec['requests']} SLOs — the TTFT "
             f"budget {rec['ttft_slo_ms']:.0f}ms is unattainable on this "
             f"host (calibration broke) or shedding ate the whole trace")
+    tr = rec.get("traced")
+    if tr:
+        if tr["trace_problems"]:
+            problems.append(
+                f"trace artifact failed schema validation: "
+                f"{tr['trace_problems'][:3]}")
+        if not tr["trace_events"] > 0:
+            problems.append("traced goodput run emitted an empty trace")
+        # the overhead gate: tracing must cost < 5% goodput.  slo_met is
+        # integer-valued, so on short smoke traces one request stepping
+        # over its deadline can alone exceed 5% — forgive the gap only
+        # when a single-request discretization step fully explains it.
+        if (tr["goodput_rps"] < 0.95 * d["goodput_rps"]
+                and tr["slo_met"] < d["slo_met"] - 1):
+            problems.append(
+                f"traced goodput {tr['goodput_rps']:.2f} req/s fell more "
+                f"than 5% below untraced {d['goodput_rps']:.2f} req/s "
+                f"({tr['slo_met']} vs {d['slo_met']} SLOs met) — tracing "
+                f"is not riding along for free")
     return problems
 
 
@@ -673,6 +758,19 @@ def main(argv=None) -> int:
     ap.add_argument("--goodput-ttft-slo-ms", type=float, default=0.0,
                     help="goodput scenario per-request TTFT budget (0 => "
                          "auto: 3x the calibrated service time)")
+    ap.add_argument("--trace-out",
+                    default=os.path.join(ART, "TRACE_goodput.json"),
+                    help="Chrome trace artifact from the traced goodput "
+                         "run (Perfetto-viewable; '' disables the write "
+                         "but the traced run and overhead gate still "
+                         "execute)")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="tracer ring capacity (events); the oldest are "
+                         "evicted beyond it")
+    ap.add_argument("--trace-dir", default="",
+                    help="also trace the base run and each scenario, "
+                         "writing TRACE_<name>.json per scenario here "
+                         "(default: off — scenarios run untraced)")
     ap.add_argument("--skip-scenarios", action="store_true",
                     help="base trace only (no mixed / chunked scenarios)")
     ap.add_argument("--seed", type=int, default=0)
@@ -686,7 +784,8 @@ def main(argv=None) -> int:
     if not args.full:
         cfg = cfg.reduced()
     params = lm.init_lm(jax.random.key(args.seed), cfg, jnp.bfloat16)
-    engine = _mk_engine(cfg, params, args)
+    base_tracer = _scenario_tracer(args)
+    engine = _mk_engine(cfg, params, args, tracer=base_tracer)
 
     trace_kw = dict(requests=args.requests, min_len=args.min_prompt_len,
                     max_len=args.max_prompt_len, max_new=args.max_new)
@@ -698,6 +797,8 @@ def main(argv=None) -> int:
     engine.run()
     warm_compiles = engine.stats().prefill_compiles
     engine.reset_stats()
+    if base_tracer:
+        base_tracer.clear()
 
     # measured run
     t0 = time.perf_counter()
@@ -720,14 +821,27 @@ def main(argv=None) -> int:
         **stats.to_dict(),
     }
 
+    _write_trace(base_tracer, args, "base")
+
     if not args.skip_scenarios:
-        mixed = mixed_workload(cfg, params, args)
+        tr_mixed = _scenario_tracer(args)
+        mixed = mixed_workload(cfg, params, args, tracer=tr_mixed)
+        _write_trace(tr_mixed, args, "mixed")
         unchunked = long_admission(cfg, params, args, FCFSPolicy())
+        tr_chunk = _scenario_tracer(args)
         chunked = long_admission(cfg, params, args,
-                                 ChunkedPrefillPolicy(args.prefill_chunk))
-        spec_rec = spec_workload(cfg, params, args, stats.ar_tok_s)
+                                 ChunkedPrefillPolicy(args.prefill_chunk),
+                                 tracer=tr_chunk)
+        _write_trace(tr_chunk, args, "chunked_prefill")
+        tr_spec = _scenario_tracer(args)
+        spec_rec = spec_workload(cfg, params, args, stats.ar_tok_s,
+                                 tracer=tr_spec)
+        _write_trace(tr_spec, args, "spec_decode")
         tree_rec = tree_spec_workload(cfg, params, args)
-        prefix_rec = shared_prefix_workload(cfg, params, args)
+        tr_warm = _scenario_tracer(args)
+        prefix_rec = shared_prefix_workload(cfg, params, args,
+                                            tracer=tr_warm)
+        _write_trace(tr_warm, args, "shared_prefix")
         goodput_rec = goodput_workload(cfg, params, args)
         record["scenarios"] = {
             "mixed": mixed,
@@ -815,6 +929,15 @@ def main(argv=None) -> int:
               f"({gp['deadline']['slo_met']}/{goodput_rec['requests']} met, "
               f"{gp['deadline']['requests_shed']} shed, "
               f"{gp['deadline']['requests_degraded']} degraded)")
+        tr = goodput_rec["traced"]
+        print(f"  goodput traced (deadline): {tr['goodput_rps']:.2f} req/s "
+              f"({tr['slo_met']} met), {tr['trace_events']} events"
+              f"{', ' + str(tr['trace_dropped']) + ' dropped' if tr['trace_dropped'] else ''}"
+              f" -> {tr['trace_out'] or '(unwritten)'}")
+        for ph, row in tr["phase_util"].items():
+            print(f"    {ph}: MFU {row['mfu']:.2e} MBU {row['mbu']:.2e} "
+                  f"({row['time_s'] * 1e3:.0f}ms, {row['tokens']:.0f} tok, "
+                  f"{row['passes']:.0f} passes)")
         problems = check_spec(spec_rec)
         problems += [f"TREE: {p}" for p in check_tree_spec(tree_rec)]
         problems += [f"PREFIX: {p}" for p in check_shared_prefix(prefix_rec)]

@@ -12,7 +12,7 @@ fraction = compute_term / max(all terms) is the MFU-style score (§Perf).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Tuple
 
 from repro.analysis.hlo import HloSummary
 
@@ -94,13 +94,35 @@ def roofline_from_summary(s: HloSummary) -> Roofline:
         mem_bytes_elided=s.elided_bytes)
 
 
+def decoder_flops_per_token(cfg) -> float:
+    """Analytic forward FLOPs per token position: 2 * N_active, embedding
+    tables excluded — the per-token factor `model_flops` scales by token
+    count, exposed on its own for the serving engine's per-phase MFU
+    attribution (serving/trace.py, EngineStats.phase_util)."""
+    n = cfg.n_active_params()
+    n -= cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return 2.0 * n
+
+
+def utilization(flops: float, mem_bytes: float, time_s: float, *,
+                peak_flops: float = PEAK_BF16,
+                hbm_bw: float = HBM_BW) -> Tuple[float, float]:
+    """(MFU, MBU) for an interval: achieved FLOP/s and HBM byte/s as a
+    fraction of the chip peaks.  MFU = model FLOPs utilization (analytic
+    useful FLOPs / peak compute); MBU = memory-bandwidth utilization
+    (weight + KV traffic / peak HBM bandwidth).  (0, 0) on empty
+    intervals."""
+    if time_s <= 0:
+        return 0.0, 0.0
+    return flops / (time_s * peak_flops), mem_bytes / (time_s * hbm_bw)
+
+
 def model_flops(cfg, shape) -> float:
     """Analytic 'useful' FLOPs for the whole step (all devices).
 
     train: 6*N_active*D tokens; prefill: 2*N_active*D; decode: 2*N_active*B
     (one token per sequence).  N excludes embedding tables."""
-    n = cfg.n_active_params()
-    n -= cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n = decoder_flops_per_token(cfg) / 2.0
     if shape.kind == "train":
         return 6.0 * n * shape.seq_len * shape.global_batch
     if shape.kind == "prefill":

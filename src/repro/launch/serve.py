@@ -51,6 +51,15 @@ Prefix caching (serving/prefix_cache.py, on by default):
                                      (default: bounded by pool pressure —
                                      lazy LRU eviction on alloc failure)
 
+Observability (serving/trace.py):
+  --trace-out PATH                   record a structured trace and write
+                                     it as Chrome trace-event JSON (open
+                                     at https://ui.perfetto.dev); tracing
+                                     is opt-in and token-identical
+  --trace-buffer N                   tracer ring-buffer capacity (events)
+  --metrics-out PATH                 write a Prometheus-style text
+                                     snapshot of the final engine stats
+
 Low-precision serving (models/quantize.py; both default to lossless bf16):
   --weight-dtype int8                weight-only int8: per-output-channel
                                      quantization, dequant fused into the
@@ -73,7 +82,8 @@ from repro.configs import get_config
 from repro.launch.mesh import make_mesh_for
 from repro.models import lm
 from repro.serving import (EncodeTask, InferenceEngine, Request,
-                           SamplingParams, SpecConfig, make_policy)
+                           SamplingParams, SpecConfig, Tracer, make_policy,
+                           prometheus_text)
 
 
 def build_trace(cfg, args) -> list:
@@ -174,6 +184,15 @@ def main(argv=None) -> int:
                     help="paged KV pool storage: int8 quantizes on write "
                          "with per-block-per-head scales (dense fallback "
                          "layouts stay bf16)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(Perfetto-viewable); empty = tracing off")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="tracer ring-buffer capacity in events "
+                         "(oldest dropped beyond it)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a Prometheus-style text snapshot of the "
+                         "final stats (empty = off)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable the fused prologue/epilogue GEMM "
                          "pipeline (A/B parity baseline)")
@@ -193,6 +212,7 @@ def main(argv=None) -> int:
     spec = (SpecConfig(draft=args.spec_draft, k=args.spec_k,
                        branches=args.spec_branches)
             if args.spec_draft else None)
+    tracer = Tracer(capacity=args.trace_buffer) if args.trace_out else None
     engine = InferenceEngine(
         cfg, params, batch_size=args.batch, max_seq=args.max_seq, mesh=mesh,
         block_size=args.block_size,
@@ -204,7 +224,7 @@ def main(argv=None) -> int:
         prefix_cache=args.prefix_cache,
         cache_blocks=args.cache_blocks or None,
         weight_dtype=args.weight_dtype, kv_dtype=args.kv_dtype,
-        overlap=args.overlap)
+        overlap=args.overlap, tracer=tracer)
     if (args.policy == "chunked"
             and not engine.runner.supports_chunked):
         print(f"note: {cfg.name} cannot chunk prefills "
@@ -241,6 +261,20 @@ def main(argv=None) -> int:
                   f"depth p50 {stats.spec_path_depth_p50:.1f} p95 "
                   f"{stats.spec_path_depth_p95:.1f}, branch utilization "
                   f"{stats.spec_branch_utilization:.0%}")
+    util = stats.phase_util()
+    if util:
+        print("  util: " + " | ".join(
+            f"{ph} MFU {row['mfu']:.2%} MBU {row['mbu']:.2%} "
+            f"({row['time_s'] * 1e3:.0f}ms)"
+            for ph, row in util.items()))
+    if tracer is not None:
+        n_ev = tracer.write(args.trace_out)
+        print(f"  trace: {n_ev} events -> {args.trace_out} "
+              f"({tracer.dropped} dropped; open at https://ui.perfetto.dev)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(prometheus_text(stats.to_dict()))
+        print(f"  metrics: -> {args.metrics_out}")
     for r in sorted(done, key=lambda r: r.uid)[:3]:
         if isinstance(r, EncodeTask):
             e = np.asarray(r.embedding)

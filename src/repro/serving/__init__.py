@@ -11,6 +11,9 @@ from repro.serving.scheduler import (ChunkedPrefillPolicy, DeadlinePolicy,
                                      SchedulerPolicy, make_policy)
 from repro.serving.spec import (DraftState, SpecConfig, resolve_draft,
                                 spec_support_reason)
-from repro.serving.stats import EngineStats, percentile, percentiles
+from repro.serving.stats import (EngineStats, Reservoir, percentile,
+                                 percentiles)
 from repro.serving.tasks import (EncodeTask, GenerateTask, Rejection,
                                  Request, Task, TokenEvent, validate_task)
+from repro.serving.trace import (Tracer, derive_phase_metrics,
+                                 prometheus_text, validate_chrome_trace)

@@ -76,7 +76,8 @@ class InferenceEngine:
                  cache_blocks: Optional[int] = None,
                  weight_dtype: str = "bfloat16",
                  kv_dtype: Optional[str] = None,
-                 overlap: bool = False):
+                 overlap: bool = False,
+                 tracer=None):
         # `policy` is the PRECISION policy (pre-split name, kept for
         # back-compat); the scheduling policy is `scheduler`.  `spec`
         # turns on speculative decoding (serving/spec.py): the runner
@@ -96,6 +97,11 @@ class InferenceEngine:
         # channel (models/quantize); `kv_dtype="int8"` stores the paged KV
         # pools int8 with per-block-per-head scales.  Both default to
         # lossless bf16.
+        # `tracer` (serving/trace.py Tracer, or None) turns on opt-in
+        # structured tracing: request lifecycle spans and engine-step
+        # spans land in its ring buffer, exportable as a Chrome trace.
+        # Pure observer — with tracer=None every hook is one falsy
+        # branch and tokens are identical under all traffic.
         # `overlap=True` switches to the async overlapped host loop: the
         # engine dispatches a decode step and runs host-side scheduling /
         # admission (and, in steady state, even the NEXT dispatch) before
@@ -121,7 +127,9 @@ class InferenceEngine:
                                   prefix_cache=prefix_cache,
                                   cache_blocks=cache_blocks,
                                   weight_dtype=weight_dtype,
-                                  kv_dtype=kv_dtype)
+                                  kv_dtype=kv_dtype,
+                                  tracer=tracer)
+        self.tracer = tracer
         self.scheduler = scheduler or FCFSPolicy()
         self.encode_batch = encode_batch or batch_size
         self.queue: List[Task] = []
@@ -215,6 +223,23 @@ class InferenceEngine:
         st.kv_dtype = self.runner.kv_dtype
         st.weight_bytes_per_device = self.runner.weight_bytes_per_device()
         st.kv_pool_bytes = self.runner.kv_pool_bytes()
+        # per-token FLOP / byte constants for phase_util()'s MFU / MBU
+        # attribution (analysis/roofline.py); encoder-only topologies and
+        # configs without an active-param count leave them 0 (phase_util
+        # then reports {})
+        from repro.analysis.roofline import decoder_flops_per_token
+        try:
+            st.model_flops_per_token = decoder_flops_per_token(
+                self.runner.cfg)
+        except Exception:
+            st.model_flops_per_token = 0.0
+        if self.runner.paged:
+            denom = (self.runner.layout.num_blocks
+                     * self.runner.layout.block_size)
+        else:
+            denom = self.runner.B * self.runner.max_seq
+        if denom > 0:
+            st.kv_bytes_per_token = st.kv_pool_bytes / denom
         return st
 
     # -- admission -----------------------------------------------------
@@ -253,13 +278,25 @@ class InferenceEngine:
         task._t_submit = time.perf_counter()
         self.queue.append(task)
         self._stats.requests_submitted += 1
+        if self.tracer:
+            ann = {"prompt_len": n}
+            if getattr(task, "deadline_ms", None) is not None:
+                ann["deadline_ms"] = task.deadline_ms
+            self.tracer.instant("submit", task._t_submit, tid=task.uid,
+                                **ann)
 
     def _first_admission(self, task: Task):
         # fresh clock, not the step-start timestamp: blocking encode/prefill
         # calls (possibly compiles) may have run earlier in this same step,
         # and they are part of this task's wait
-        task.queue_wait_ms = (time.perf_counter() - task._t_submit) * 1e3
+        now = time.perf_counter()
+        task.queue_wait_ms = (now - task._t_submit) * 1e3
         self._stats.add_queue_wait_ms(task.queue_wait_ms)
+        if self.tracer:
+            self.tracer.request_span(
+                task.uid, "queue", task._t_submit, now,
+                queue_wait_ms=task.queue_wait_ms,
+                **self.scheduler.admission_annotation(task, now))
 
     def _chunk_budget(self) -> Optional[int]:
         """The per-step chunked-prefill token budget at the current
@@ -289,6 +326,9 @@ class InferenceEngine:
                 and self.runner.spec is not None and not task.degraded):
             task.degraded = True
             self._stats.requests_degraded += 1
+            if self.tracer:
+                self.tracer.instant("degrade", time.perf_counter(),
+                                    tid=task.uid, rung=self._degrade)
 
     def _shed_expired(self):
         """Drop queued requests whose SLO the policy proves unattainable:
@@ -308,6 +348,11 @@ class InferenceEngine:
             self.shed.append(task)
             self.completed.append(task)
             self._stats.record_shed(task)
+            if self.tracer:
+                self.tracer.request_span(
+                    task.uid, "shed", task._t_submit, time.perf_counter(),
+                    reason=task.rejection.kind,
+                    detail=task.rejection.detail)
 
     def _next_group(self, order: List[GenerateTask], max_n: int):
         """The next whole-prompt admission group: up to `max_n` tasks
@@ -437,10 +482,16 @@ class InferenceEngine:
             self.queue.remove(task)
             self._first_admission(task)
         runner.encode(group, self._stats)
+        now = time.perf_counter()
         for task in group:
             self._stats.record_slo(task)
             self.completed.append(task)
             self._stats.requests_completed += 1
+            if self.tracer:
+                self.tracer.request_span(
+                    task.uid, "request", task._t_submit, now,
+                    latency_ms=task.latency_ms,
+                    prompt_len=task.prompt_len, encode=True)
         return len(group)
 
     # -- retirement ------------------------------------------------------
@@ -469,6 +520,14 @@ class InferenceEngine:
                 self._stats.record_slo(task)
                 self.completed.append(task)
                 self._stats.requests_completed += 1
+                if self.tracer:
+                    self.tracer.request_span(
+                        task.uid, "request", task._t_submit, now,
+                        ttft_ms=task.ttft_ms, tpot_ms=task.tpot_ms,
+                        latency_ms=task.latency_ms, tokens=n,
+                        prompt_len=task.prompt_len,
+                        degraded=task.degraded,
+                        cached_prefix=task.cached_prefix)
                 runner.release_slot(b)
 
     # -- engine loop ------------------------------------------------------
@@ -479,6 +538,18 @@ class InferenceEngine:
         against retirement.  With overlap=True the AR step's token fetch
         is deferred into the NEXT iteration so host scheduling work runs
         while the device computes (token-identical either way)."""
+        if not self.tracer:
+            return self._step_inner()
+        t0 = time.perf_counter()
+        events = self._step_inner()
+        self.tracer.step_span(
+            "engine_step", t0, time.perf_counter(),
+            queued=len(self.queue), degrade=self._degrade,
+            running=sum(s is not None for s in self.runner.slots),
+            events=len(events))
+        return events
+
+    def _step_inner(self) -> List[TokenEvent]:
         self._shed_expired()
         self._degrade = self.scheduler.degrade_level(
             len(self._gen_queue()), self.runner.B)

@@ -56,7 +56,8 @@ from repro.serving.sampling import (device_lane, set_lane, stack_lanes,
                                     stack_prefill_lanes, zero_lane)
 from repro.serving.spec import (DraftState, SpecConfig, accept_length,
                                 accept_tree_path, build_tree, resolve_draft,
-                                spec_support_reason, trim_emitted)
+                                round_annotation, spec_support_reason,
+                                trim_emitted)
 from repro.serving.stats import EngineStats
 from repro.serving.tasks import EncodeTask, GenerateTask, Task
 
@@ -74,6 +75,10 @@ class DecodeHandle:
     decoding: List[Tuple[int, GenerateTask]]    # slots this step decoded
     live_tokens: int                            # post-step pos over decoding
     blocks_used: int                            # allocator.num_used at dispatch
+    t_disp: float = 0.0                         # dispatch-return wall-clock
+    #                                             (set only when tracing: the
+    #                                             commit-side overlap lag is
+    #                                             t_fetch - t_disp)
 
 
 def _device_nbytes(x) -> int:
@@ -98,11 +103,17 @@ class ModelRunner:
                  prefix_cache: bool = False,
                  cache_blocks: Optional[int] = None,
                  weight_dtype: str = "bfloat16",
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 tracer=None):
         assert min_bucket >= 1, f"min_bucket must be >= 1: {min_bucket}"
         assert weight_dtype in ("bfloat16", "int8"), weight_dtype
         assert kv_dtype in (None, "bfloat16", "int8"), kv_dtype
         self.cfg = cfg
+        # opt-in structured tracer (serving/trace.py).  Every hook below is
+        # behind one `if self.tracer:` branch — disabled tracing costs a
+        # single falsy check and observes nothing (token identity by
+        # construction: hooks never feed back into scheduling or sampling).
+        self.tracer = tracer
         # weight-only int8 (models/quantize): the dense GEMM weights are
         # quantized ONCE here, per output channel; every compiled step then
         # streams int8 tiles and dequantizes inside the fp32 epilogue.
@@ -444,6 +455,9 @@ class ModelRunner:
         released blocks stay indexed, so the recompute is itself a warm
         admission as long as the pool doesn't reclaim them first)."""
         task = self.slots[b]
+        if self.tracer:
+            self.tracer.instant("preempt", time.perf_counter(), tid=task.uid,
+                                recompute_tokens=self.full_len(task))
         self.release_slot(b)      # indexes [0, prefilled/pos) before reset
         task.prefilled = 0
         return task
@@ -506,6 +520,9 @@ class ModelRunner:
         self.prefilling[b] = True
         task.prefilled = hit
         task.cached_prefix = hit
+        if self.tracer:
+            self.tracer.instant("warm_hit", time.perf_counter(),
+                                tid=task.uid, cached_prefix=hit, cow=partial)
         return True
 
     def _index_slot(self, b: int):
@@ -611,6 +628,10 @@ class ModelRunner:
                     self._tables_dev = None
                     self.allocator.free([blk])
                     self.cow_copies += 1
+                    if self.tracer:
+                        self.tracer.instant(
+                            "cow_copy", time.perf_counter(),
+                            tid=self.slots[b].uid, block=blk)
                     break
                 cand = self.running()
                 if not cand:
@@ -691,6 +712,9 @@ class ModelRunner:
                 stats.nar_tokens += task.prompt_len
                 stats.padded_nar_tokens += bucket
                 stats.add_ttft_ms(task.ttft_ms)
+                if self.tracer:
+                    self.tracer.instant("first_token", now, tid=task.uid,
+                                        ttft_ms=task.ttft_ms)
             else:
                 stats.recompute_tokens += len(fulls[j])
         # preemption recomputes are overhead, not prompt-encoding goodput:
@@ -698,6 +722,13 @@ class ModelRunner:
         # preempting and non-preempting runs
         stats.nar_time_s += (now - t0) * n_first / n
         stats.recompute_time_s += (now - t0) * (n - n_first) / n
+        stats.prefill_batches += 1
+        if self.tracer:
+            self.tracer.step_span(
+                "prefill", t0, now, phase="prefill", bucket=bucket, group=n,
+                tokens=bucket * n, kv_positions=sum(len(f) for f in fulls),
+                passes=1, busy_ms=(now - t0) * 1e3,
+                uids=[t.uid for t in tasks])
         if self.spec is not None:
             self._draft_prefill(fulls, slots, stats)
         return fresh
@@ -796,6 +827,12 @@ class ModelRunner:
             stats.recompute_time_s += now - t0
         stats.prefill_chunks += 1
         stats.chunked_prefill_tokens += take
+        if self.tracer:
+            self.tracer.step_span(
+                "prefill_chunk", t0, now, phase="prefill", uid=task.uid,
+                tokens=C, true_tokens=take, kv_positions=take, passes=1,
+                busy_ms=(now - t0) * 1e3, pos0=start,
+                recompute=not first_admit)
         if task.prefilled < len(full):
             return None
         # final chunk: the sampled token is the prompt's first output and
@@ -813,6 +850,9 @@ class ModelRunner:
         if first_admit:
             task.ttft_ms = (now - task._t_submit) * 1e3
             stats.add_ttft_ms(task.ttft_ms)
+            if self.tracer:
+                self.tracer.instant("first_token", now, tid=task.uid,
+                                    ttft_ms=task.ttft_ms)
         if self.spec is not None:
             # the draft (being small) prefills whole even when the target
             # chunked — one cheap pass once the final chunk lands
@@ -849,9 +889,15 @@ class ModelRunner:
         self.steps_run += 1
         decoding = [(b, self.slots[b]) for b in self.decoding_slots()]
         live = sum(int(self.pos[b]) for b, _ in decoding)
-        return DecodeHandle(
+        handle = DecodeHandle(
             tok_d, t0, decoding, live,
             self.allocator.num_used if self.paged else 0)
+        if self.tracer:
+            handle.t_disp = time.perf_counter()
+            self.tracer.step_span(
+                "decode_dispatch", t0, handle.t_disp, slots=len(decoding),
+                uids=[t.uid for _, t in decoding])
+        return handle
 
     def decode_commit(self, handle: DecodeHandle, stats: EngineStats,
                       ) -> List[Tuple[GenerateTask, int]]:
@@ -859,6 +905,8 @@ class ModelRunner:
         the host mirrors, task outputs and stats.  Under the overlapped
         loop the elapsed-time sample is floored at the previous commit so
         back-to-back pipelined steps don't double-count wall time."""
+        tr = self.tracer
+        t_fetch = time.perf_counter() if tr else 0.0
         toks = np.asarray(handle.tok_d)           # blocks: honest timing
         now = time.perf_counter()
         floor = self._t_last_commit
@@ -882,6 +930,18 @@ class ModelRunner:
         if self.paged:
             stats.block_slot_steps += handle.blocks_used
             stats.token_slot_steps += handle.live_tokens
+        if tr:
+            ann = {}
+            if handle.t_disp:
+                # host wall between dispatch returning and the commit-side
+                # fetch starting: scheduling work the device step hid
+                ann["overlap_lag_ms"] = max(
+                    0.0, (t_fetch - handle.t_disp) * 1e3)
+            tr.step_span(
+                "decode_step", handle.t0, now, phase="decode",
+                slots=len(handle.decoding), tokens=len(handle.decoding),
+                kv_positions=handle.live_tokens, passes=1, busy_ms=dt * 1e3,
+                uids=[t.uid for _, t in handle.decoding], **ann)
         return fresh
 
     def decode(self, stats: EngineStats) -> List[Tuple[GenerateTask, int]]:
@@ -1042,6 +1102,10 @@ class ModelRunner:
         t_draft = time.perf_counter() - t0
         stats.spec_draft_time_s += t_draft
         stats.add_draft_time_ms(t_draft * 1e3)
+        if self.tracer:
+            self.tracer.step_span(
+                "spec_draft", t0, t0 + t_draft, phase="draft",
+                steps=n_steps, slots=len(active), busy_ms=t_draft * 1e3)
 
         # -- verify: target forwards [pending token, d_1..d_ke] into the
         # slot's paged blocks, returning its own choice at every position
@@ -1063,6 +1127,7 @@ class ModelRunner:
         # -- commit + rollback
         fresh: List[Tuple[GenerateTask, int]] = []
         occupied = live_tokens = emitted_total = 0
+        round_proposed = round_accepted = 0
         for b in active:
             task = self.slots[b]
             occupied += 1
@@ -1071,6 +1136,8 @@ class ModelRunner:
             j = accept_length(proposals[b], cand)
             stats.spec_proposed_tokens += ke
             stats.spec_accepted_tokens += j
+            round_proposed += ke
+            round_accepted += j
             # commit c_0..c_j, clamped to step-by-step retirement
             # semantics (max_new / max_seq budget, cut at the first EOS)
             room = min(task.max_new_tokens - len(task.output),
@@ -1113,6 +1180,16 @@ class ModelRunner:
         stats.occupied_slot_steps += occupied
         stats.block_slot_steps += self.allocator.num_used
         stats.token_slot_steps += live_tokens
+        executed = int(chunk_len.sum())
+        stats.verify_positions += executed
+        if self.tracer:
+            self.tracer.step_span(
+                "spec_verify", t1, t1 + dt, phase="verify", tokens=executed,
+                kv_positions=live_tokens, passes=1, busy_ms=dt * 1e3,
+                slots=occupied,
+                **round_annotation(proposed=round_proposed,
+                                   accepted=round_accepted,
+                                   emitted=emitted_total))
         return fresh
 
     def _spec_decode_tree(self, stats: EngineStats
@@ -1182,6 +1259,10 @@ class ModelRunner:
         t_draft = time.perf_counter() - t0
         stats.spec_draft_time_s += t_draft
         stats.add_draft_time_ms(t_draft * 1e3)
+        if self.tracer:
+            self.tracer.step_span(
+                "spec_draft", t0, t0 + t_draft, phase="draft",
+                steps=n_steps, slots=len(active), busy_ms=t_draft * 1e3)
 
         # -- verify: one tree-masked target pass over every slot's tree
         chunk = np.zeros((self.B, C), np.int32)
@@ -1209,6 +1290,8 @@ class ModelRunner:
         # -- commit + compact + rollback
         fresh: List[Tuple[GenerateTask, int]] = []
         occupied = live_tokens = emitted_total = 0
+        round_proposed = round_accepted = round_nodes = round_branch = 0
+        path_depths: List[int] = []
         bs = self.layout.block_size
         for b in active:
             task = self.slots[b]
@@ -1220,8 +1303,13 @@ class ModelRunner:
             stats.spec_accepted_tokens += len(path)
             stats.spec_tree_nodes += n
             stats.add_spec_path_depth(len(path))
+            round_proposed += n - 1
+            round_accepted += len(path)
+            round_nodes += n
+            path_depths.append(len(path))
             if any(not tree.chain[i] for i in path):
                 stats.spec_branch_hits += 1
+                round_branch += 1
             full = [0] + path
             cand = [int(choices[b, i]) for i in full]
             room = min(task.max_new_tokens - len(task.output),
@@ -1283,6 +1371,19 @@ class ModelRunner:
         stats.occupied_slot_steps += occupied
         stats.block_slot_steps += self.allocator.num_used
         stats.token_slot_steps += live_tokens
+        executed = int(chunk_len.sum())
+        stats.verify_positions += executed
+        if self.tracer:
+            self.tracer.step_span(
+                "spec_verify", t1, t1 + dt, phase="verify", tokens=executed,
+                kv_positions=live_tokens, passes=1, busy_ms=dt * 1e3,
+                slots=occupied,
+                **round_annotation(proposed=round_proposed,
+                                   accepted=round_accepted,
+                                   emitted=emitted_total,
+                                   tree_nodes=round_nodes,
+                                   path_depths=path_depths,
+                                   branch_hits=round_branch))
         return fresh
 
     # -- execution: encoder-only NAR -----------------------------------
@@ -1321,3 +1422,8 @@ class ModelRunner:
             stats.bucket_hits[bucket] = stats.bucket_hits.get(bucket, 0) + 1
         stats.encode_time_s += dt
         stats.encode_batches += 1
+        if self.tracer:
+            self.tracer.step_span(
+                "encode", t0, now, phase="encode", bucket=bucket, group=n,
+                tokens=bucket * n, kv_positions=0, passes=1,
+                busy_ms=dt * 1e3, uids=[t.uid for t in group])

@@ -100,6 +100,13 @@ class SchedulerPolicy(ABC):
         prefill regardless of level)."""
         return self.chunk_tokens
 
+    def admission_annotation(self, task: Task, now: float) -> dict:
+        """Trace-span args explaining WHY this task admits now (pure
+        observer for serving/trace.py — never consulted by admission
+        itself).  Policies add their ordering key: EDF its slack,
+        priority its effective priority."""
+        return {"policy": self.name}
+
 
 class FCFSPolicy(SchedulerPolicy):
     """First-come-first-served: today's (pre-split) engine behavior."""
@@ -145,6 +152,10 @@ class PriorityPolicy(SchedulerPolicy):
         # decode progress lost to recompute)
         return min(running, key=lambda t: (self.effective_priority(t, now),
                                            -t._seq))
+
+    def admission_annotation(self, task: Task, now: float) -> dict:
+        return {"policy": self.name,
+                "effective_priority": self.effective_priority(task, now)}
 
 
 class ChunkedPrefillPolicy(FCFSPolicy):
@@ -239,6 +250,13 @@ class DeadlinePolicy(SchedulerPolicy):
         # (levels 1 and 2 share the one halving — the ladder's second
         # rung is about speculation, not chunk width)
         return max(8, self.chunk_tokens // 2)
+
+    def admission_annotation(self, task: Task, now: float) -> dict:
+        ann = {"policy": self.name}
+        slack = task.slack_ms(now)
+        if slack != float("inf"):
+            ann["edf_slack_ms"] = slack
+        return ann
 
 
 POLICIES = {

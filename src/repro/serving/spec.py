@@ -282,6 +282,26 @@ def trim_emitted(emitted: List[int], *, room: int,
     return out
 
 
+def round_annotation(*, proposed: int, accepted: int, emitted: int,
+                     tree_nodes: int = 0,
+                     path_depths: Optional[Sequence[int]] = None,
+                     branch_hits: int = 0) -> dict:
+    """Trace-span args summarizing one propose->verify->commit round
+    (serving/trace.py): proposal volume, acceptance, and — under token
+    trees — node count, accepted root-path depths, and how many slots'
+    accepted paths left the draft's sampled chain.  Pure observer; the
+    commit loop computes these numbers either way."""
+    ann = {"proposed": int(proposed), "accepted": int(accepted),
+           "emitted": int(emitted),
+           "accept_rate": (accepted / proposed if proposed else 0.0)}
+    if tree_nodes:
+        ann["tree_nodes"] = int(tree_nodes)
+        ann["branch_hits"] = int(branch_hits)
+        if path_depths:
+            ann["accept_depths"] = [int(d) for d in path_depths]
+    return ann
+
+
 __all__ = ["SpecConfig", "DraftState", "TokenTree", "spec_support_reason",
            "resolve_draft", "accept_length", "accept_tree_path",
-           "build_tree", "trim_emitted"]
+           "build_tree", "trim_emitted", "round_annotation"]

@@ -12,6 +12,7 @@ print-scraping.
 """
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass, field
 from typing import Dict, List
 
@@ -38,12 +39,44 @@ def percentiles(values: List[float],
             for q in qs}
 
 
-# Latency samples kept per metric: percentiles are computed over a sliding
-# recent window so a long-lived engine doesn't grow its stats without bound.
+# Latency samples kept per metric, bounding a long-lived engine's memory.
 MAX_SAMPLES = 4096
 
 
+class Reservoir(List[float]):
+    """Uniform reservoir sample (Algorithm R) that IS a list — callers
+    that index, iterate, or len() a sample field keep working unchanged.
+
+    The previous bound kept a sliding window of the most recent
+    MAX_SAMPLES values, so long-run percentiles silently reflected only a
+    slice of history.  Algorithm R keeps every seen value with equal
+    probability capacity/seen: a late-arriving outlier is exactly as
+    likely to appear in p99 as an early one.  Seeded => deterministic
+    (two engines fed the same sample sequence hold identical
+    reservoirs)."""
+
+    def __init__(self, capacity: int = MAX_SAMPLES, seed: int = 0):
+        super().__init__()
+        assert capacity >= 1, capacity
+        self.capacity = capacity
+        self.seen = 0
+        self._rng = random.Random(seed)
+
+    def add(self, v: float) -> None:
+        self.seen += 1
+        if len(self) < self.capacity:
+            self.append(v)
+            return
+        j = self._rng.randrange(self.seen)
+        if j < self.capacity:
+            self[j] = v
+
+
 def _bounded_append(values: List[float], v: float) -> None:
+    if isinstance(values, Reservoir):
+        values.add(v)
+        return
+    # plain-list fallback (externally constructed stats): sliding window
     values.append(v)
     if len(values) > MAX_SAMPLES:
         del values[:len(values) - MAX_SAMPLES]
@@ -58,19 +91,20 @@ class EngineStats:
     nar_tokens: int = 0            # true prompt tokens encoded
     padded_nar_tokens: int = 0     # incl. length-bucket padding computed
     nar_time_s: float = 0.0
+    prefill_batches: int = 0       # whole-prompt prefill passes run
     # -- AR (decode) --------------------------------------------------------
     ar_tokens: int = 0             # tokens produced by decode steps
     ar_time_s: float = 0.0
     decode_steps: int = 0
     occupied_slot_steps: int = 0   # occupied decode-slot-steps (occupancy)
-    decode_step_ms: List[float] = field(default_factory=list)
+    decode_step_ms: List[float] = field(default_factory=Reservoir)
     # -- encoder-only (EncodeTask) ------------------------------------------
     encode_tokens: int = 0         # true tokens through pooled passes
     padded_encode_tokens: int = 0  # incl. length-bucket padding computed
     encode_time_s: float = 0.0
     encode_batches: int = 0        # batched pooled passes run
     encode_compiles: int = 0       # distinct (bucket, group, pooling) steps
-    encode_latency_ms: List[float] = field(default_factory=list)
+    encode_latency_ms: List[float] = field(default_factory=Reservoir)
     # -- chunked prefill ----------------------------------------------------
     prefill_chunks: int = 0        # chunk steps run
     chunked_prefill_tokens: int = 0  # true prompt tokens through chunks
@@ -80,20 +114,23 @@ class EngineStats:
     spec_proposed_tokens: int = 0  # draft tokens proposed
     spec_accepted_tokens: int = 0  # of those, accepted by the target
     spec_emitted_tokens: int = 0   # tokens committed by verify steps
+    verify_positions: int = 0      # target positions executed by verify
+    #                                passes (chain: sum of chunk lens;
+    #                                tree: nodes incl. root per slot-round)
     spec_draft_time_s: float = 0.0  # wall time in draft propose phases
-    draft_time_ms: List[float] = field(default_factory=list)
+    draft_time_ms: List[float] = field(default_factory=Reservoir)
     # token-tree speculation (spec.branches > 1; zero under chain rounds)
     spec_tree_nodes: int = 0       # tree nodes verified (incl. root)
     spec_branch_hits: int = 0      # slot-rounds whose accepted path left
     #                                the draft's sampled chain
-    spec_path_depth: List[float] = field(default_factory=list)  # accepted
+    spec_path_depth: List[float] = field(default_factory=Reservoir)  # accepted
     #                                root-path depth per slot-round
     # -- serving-level ------------------------------------------------------
-    ttft_ms: List[float] = field(default_factory=list)
-    queue_wait_ms: List[float] = field(default_factory=list)
+    ttft_ms: List[float] = field(default_factory=Reservoir)
+    queue_wait_ms: List[float] = field(default_factory=Reservoir)
     # gap between consecutive decode steps while slots were decoding: the
     # time running AR requests sat stalled behind admission work
-    decode_stall_ms: List[float] = field(default_factory=list)
+    decode_stall_ms: List[float] = field(default_factory=Reservoir)
     bucket_hits: Dict[int, int] = field(default_factory=dict)
     prefill_compiles: int = 0      # distinct (bucket, group-size) compiled
     # -- paged KV pool ------------------------------------------------------
@@ -125,8 +162,13 @@ class EngineStats:
     #                                chunk budget shrunk (tokens unchanged)
     # TTFT / deadline per SLO'd request (< 1.0 = met); attainment
     # percentiles come from this window
-    ttft_slo_ratio: List[float] = field(default_factory=list)
-    tpot_ms_samples: List[float] = field(default_factory=list)
+    ttft_slo_ratio: List[float] = field(default_factory=Reservoir)
+    tpot_ms_samples: List[float] = field(default_factory=Reservoir)
+    # -- utilization attribution (serving/trace.py, analysis/roofline.py) ----
+    # per-token constants the engine stamps at construction so phase_util()
+    # can turn phase (time, token) sums into achieved MFU / MBU
+    model_flops_per_token: float = 0.0  # analytic fwd FLOPs per position
+    kv_bytes_per_token: float = 0.0     # KV bytes read per attended position
     # -- async overlapped host loop (engine overlap=True) --------------------
     overlapped_steps: int = 0      # decode steps whose token fetch was
     #                                deferred past host scheduling work
@@ -235,12 +277,20 @@ class EngineStats:
         return percentile(self.draft_time_ms, 95)
 
     @property
+    def draft_time_ms_p99(self) -> float:
+        return percentile(self.draft_time_ms, 99)
+
+    @property
     def spec_path_depth_p50(self) -> float:
         return percentile(self.spec_path_depth, 50)
 
     @property
     def spec_path_depth_p95(self) -> float:
         return percentile(self.spec_path_depth, 95)
+
+    @property
+    def spec_path_depth_p99(self) -> float:
+        return percentile(self.spec_path_depth, 99)
 
     @property
     def spec_branch_utilization(self) -> float:
@@ -303,12 +353,20 @@ class EngineStats:
         return percentile(self.queue_wait_ms, 95)
 
     @property
+    def queue_wait_p99_ms(self) -> float:
+        return percentile(self.queue_wait_ms, 99)
+
+    @property
     def decode_step_p50_ms(self) -> float:
         return percentile(self.decode_step_ms, 50)
 
     @property
     def decode_step_p95_ms(self) -> float:
         return percentile(self.decode_step_ms, 95)
+
+    @property
+    def decode_step_p99_ms(self) -> float:
+        return percentile(self.decode_step_ms, 99)
 
     @property
     def decode_stall_p50_ms(self) -> float:
@@ -319,12 +377,20 @@ class EngineStats:
         return percentile(self.decode_stall_ms, 95)
 
     @property
+    def decode_stall_p99_ms(self) -> float:
+        return percentile(self.decode_stall_ms, 99)
+
+    @property
     def encode_latency_p50_ms(self) -> float:
         return percentile(self.encode_latency_ms, 50)
 
     @property
     def encode_latency_p95_ms(self) -> float:
         return percentile(self.encode_latency_ms, 95)
+
+    @property
+    def encode_latency_p99_ms(self) -> float:
+        return percentile(self.encode_latency_ms, 99)
 
     @property
     def prefix_cache_hit_rate(self) -> float:
@@ -350,6 +416,54 @@ class EngineStats:
         return (self.block_slot_steps * self.kv_block_size
                 / self.token_slot_steps)
 
+    def phase_util(self) -> Dict[str, Dict[str, float]]:
+        """Per-phase achieved MFU / MBU from the engine's own counters.
+
+        Joins each phase's (busy time, token positions, weight passes, KV
+        positions attended) with the per-token FLOP / byte constants the
+        engine stamps at construction (analysis/roofline.py): useful
+        FLOPs = flops_per_token * positions; HBM traffic = weight bytes *
+        passes + KV bytes per token * attended positions.  Phases mirror
+        the paper's NAR / AR split: "prefill" (whole-prompt + chunked +
+        recompute passes), then "verify" under speculation or "decode"
+        otherwise (an engine runs one AR mode per session), plus "encode"
+        for encoder-only traffic.  {} when the FLOP constant is unknown
+        (encoder-only config or externally built stats)."""
+        if not self.model_flops_per_token:
+            return {}
+        from repro.analysis.roofline import utilization
+        wbytes = float(self.weight_bytes_per_device)
+
+        def row(time_s, tokens, passes, kv_positions):
+            flops = self.model_flops_per_token * tokens
+            hbm = wbytes * passes + self.kv_bytes_per_token * kv_positions
+            mfu, mbu = utilization(flops, hbm, time_s)
+            return {"time_s": time_s, "tokens": float(tokens),
+                    "passes": float(passes),
+                    "kv_positions": float(kv_positions),
+                    "flops": flops, "hbm_bytes": hbm,
+                    "mfu": mfu, "mbu": mbu}
+
+        out: Dict[str, Dict[str, float]] = {}
+        pre_t = self.nar_time_s + self.recompute_time_s
+        if pre_t > 0:
+            out["prefill"] = row(
+                pre_t, self.padded_nar_tokens + self.recompute_tokens,
+                self.prefill_batches + self.prefill_chunks,
+                self.nar_tokens + self.recompute_tokens)
+        if self.ar_time_s > 0:
+            if self.spec_rounds:
+                out["verify"] = row(self.ar_time_s, self.verify_positions,
+                                    self.spec_rounds, self.token_slot_steps)
+            else:
+                out["decode"] = row(self.ar_time_s, self.ar_tokens,
+                                    self.decode_steps, self.token_slot_steps)
+        if self.encode_time_s > 0:
+            out["encode"] = row(self.encode_time_s,
+                                self.padded_encode_tokens,
+                                self.encode_batches, 0)
+        return out
+
     def to_dict(self) -> dict:
         """JSON-ready snapshot (benchmarks/serving_bench.py)."""
         return {
@@ -373,8 +487,9 @@ class EngineStats:
             "encode_batches": self.encode_batches,
             "encode_compiles": self.encode_compiles,
             "encode_completed": self.encode_completed,
-            "encode_latency_p50_ms": self.encode_latency_p50_ms,
-            "encode_latency_p95_ms": self.encode_latency_p95_ms,
+            **{f"encode_latency_{k}_ms": v
+               for k, v in percentiles(self.encode_latency_ms).items()},
+            "prefill_batches": self.prefill_batches,
             "prefill_chunks": self.prefill_chunks,
             "chunked_prefill_tokens": self.chunked_prefill_tokens,
             "spec_rounds": self.spec_rounds,
@@ -384,16 +499,16 @@ class EngineStats:
             "spec_acceptance_rate": self.spec_acceptance_rate,
             "spec_tokens_per_step": self.spec_tokens_per_step,
             "spec_draft_time_s": self.spec_draft_time_s,
-            "draft_time_ms_p50": self.draft_time_ms_p50,
-            "draft_time_ms_p95": self.draft_time_ms_p95,
+            "verify_positions": self.verify_positions,
+            **{f"draft_time_ms_{k}": v
+               for k, v in percentiles(self.draft_time_ms).items()},
             "spec_tree_nodes": self.spec_tree_nodes,
             "spec_branch_hits": self.spec_branch_hits,
             "spec_branch_utilization": self.spec_branch_utilization,
-            "spec_path_depth_p50": self.spec_path_depth_p50,
-            "spec_path_depth_p95": self.spec_path_depth_p95,
-            "ttft_p50_ms": self.ttft_p50_ms,
-            "ttft_p95_ms": self.ttft_p95_ms,
-            "ttft_p99_ms": self.ttft_p99_ms,
+            **{f"spec_path_depth_{k}": v
+               for k, v in percentiles(self.spec_path_depth).items()},
+            **{f"ttft_{k}_ms": v
+               for k, v in percentiles(self.ttft_ms).items()},
             "slo_requests": self.slo_requests,
             "slo_met": self.slo_met,
             "slo_attainment": self.slo_attainment,
@@ -406,12 +521,12 @@ class EngineStats:
             "overlapped_steps": self.overlapped_steps,
             "overlap_host_s": self.overlap_host_s,
             "host_overlap_ratio": self.host_overlap_ratio,
-            "queue_wait_p50_ms": self.queue_wait_p50_ms,
-            "queue_wait_p95_ms": self.queue_wait_p95_ms,
-            "decode_step_p50_ms": self.decode_step_p50_ms,
-            "decode_step_p95_ms": self.decode_step_p95_ms,
-            "decode_stall_p50_ms": self.decode_stall_p50_ms,
-            "decode_stall_p95_ms": self.decode_stall_p95_ms,
+            **{f"queue_wait_{k}_ms": v
+               for k, v in percentiles(self.queue_wait_ms).items()},
+            **{f"decode_step_{k}_ms": v
+               for k, v in percentiles(self.decode_step_ms).items()},
+            **{f"decode_stall_{k}_ms": v
+               for k, v in percentiles(self.decode_stall_ms).items()},
             "bucket_hits": {str(k): v
                             for k, v in sorted(self.bucket_hits.items())},
             "prefill_compiles": self.prefill_compiles,
@@ -434,6 +549,9 @@ class EngineStats:
             "kv_dtype": self.kv_dtype,
             "weight_bytes_per_device": self.weight_bytes_per_device,
             "kv_pool_bytes": self.kv_pool_bytes,
+            "model_flops_per_token": self.model_flops_per_token,
+            "kv_bytes_per_token": self.kv_bytes_per_token,
+            "phase_util": self.phase_util(),
         }
 
     def summary(self) -> str:
